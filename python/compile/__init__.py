@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 jax model + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — the rust coordinator only consumes the HLO
+text artifacts this package produces.
+"""

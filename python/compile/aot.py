@@ -1,0 +1,104 @@
+"""AOT export: lower the L2 jax functions (with their L1 Pallas kernels)
+to HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text — not `serialize()`d protos — is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids that the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import pipeline_stage_ref
+from .model import example_inputs, pipeline_stage, pipeline_stage_grad
+
+# (name, function, rows) — one artifact per workload shape. Rows cover the
+# record-batch sizes the examples use; d_in/d_out are fixed at 64/32.
+EXPORTS = [
+    ("pipeline_stage_r256", pipeline_stage, 256),
+    ("pipeline_stage_r1024", pipeline_stage, 1024),
+    ("pipeline_stage_grad_r256", pipeline_stage_grad, 256),
+]
+
+D_IN = 64
+D_OUT = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def rust_synthetic_input(shape, idx):
+    """Replicate the rust runtime's deterministic synthetic inputs
+    (`Engine::build_inputs`): data[i] = ((i*0.37 + idx) % 7)/7 - 0.4, all
+    in f32. Used to embed expected outputs in the manifest so the rust
+    integration test can check numerics end-to-end."""
+    n = int(np.prod(shape))
+    i = np.arange(n, dtype=np.float32)
+    vals = np.fmod(i * np.float32(0.37) + np.float32(idx), np.float32(7.0))
+    vals = vals / np.float32(7.0) - np.float32(0.4)
+    return vals.reshape(shape).astype(np.float32)
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, fn, rows in EXPORTS:
+        x, w = example_inputs(rows, D_IN, D_OUT)
+        spec_x = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        spec_w = jax.ShapeDtypeStruct(w.shape, w.dtype)
+        lowered = jax.jit(fn).lower(spec_x, spec_w)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"shape": list(x.shape), "dtype": "f32"},
+                {"shape": list(w.shape), "dtype": "f32"},
+            ],
+            "rows": rows,
+            "d_in": D_IN,
+            "d_out": D_OUT,
+        }
+        # Embed the expected column aggregate on the rust runtime's
+        # synthetic inputs (forward-only exports), for the end-to-end
+        # numeric check in rust/tests/runtime_artifacts.rs.
+        if fn is pipeline_stage:
+            xr = rust_synthetic_input(x.shape, 0)
+            wr = rust_synthetic_input(w.shape, 1)
+            _, agg = pipeline_stage_ref(xr, wr)
+            entry["expected_agg"] = [float(v) for v in np.asarray(agg).ravel()]
+        manifest["artifacts"].append(entry)
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+
+from .column_agg import column_agg
+from .fused_transform import fused_transform
+
+__all__ = ["column_agg", "fused_transform"]

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: column aggregation with grid accumulation.
+
+Reduces the activated projection `[rows, d_out]` to a column aggregate
+`[1, d_out]` by accumulating across row-block grid steps into a single
+output tile — the Pallas idiom for reductions larger than one block: the
+output BlockSpec maps every grid step to the same block, so the kernel
+can read-modify-write it (initializing on the first step).
+
+On a real TPU the accumulator tile lives in VMEM for the whole grid
+sweep; only the final `[1, d_out]` result is written back to HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(y_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def column_agg(y, *, block_rows=128):
+    """Sum over rows: y [rows, d_out] -> [1, d_out]."""
+    rows, d_out = y.shape
+    bm = min(block_rows, rows)
+    assert rows % bm == 0, f"rows={rows} not a multiple of block={bm}"
+    grid = (rows // bm,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d_out), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, d_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, d_out), jnp.float32),
+        interpret=True,
+    )(y)

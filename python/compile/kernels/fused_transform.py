@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused standardize -> matmul -> GELU.
+
+The archetypal feature-engineering stage of the data pipelines Airflow
+orchestrates, fused into a single kernel so the standardized activations
+never round-trip to HBM.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the row
+dimension; each grid step holds one `[block_rows, d_in]` tile of `x`, the
+full `[d_in, d_out]` weight panel, and the `[1, d_in]` column statistics
+in VMEM, feeds the MXU with the `[block_rows, d_in] @ [d_in, d_out]`
+matmul, and applies GELU on the VPU before writing the output tile. With
+the default shapes (block 128, d_in 64, d_out 32, f32) the working set is
+128*64*4 + 64*32*4 + 2*64*4 + 128*32*4 ≈ 57 KiB — far below the ~16 MiB
+VMEM budget, leaving room for double buffering of the streamed `x` tiles.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is what the AOT
+path ships to the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu(v):
+    return 0.5 * v * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (v + 0.044715 * v**3)))
+
+
+def _kernel(x_ref, w_ref, mu_ref, sigma_ref, o_ref):
+    """One grid step: one row block."""
+    z = (x_ref[...] - mu_ref[...]) / sigma_ref[...]
+    # MXU matmul in f32 (bf16 on real TPUs would halve the VMEM footprint;
+    # we keep f32 so the CPU interpret path matches the oracle bitwise-ish).
+    y = jnp.dot(z, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _gelu(y)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fused_transform(x, w, mu, sigma, *, block_rows=128):
+    """Fused standardize+project+GELU over row blocks.
+
+    x: [rows, d_in] (rows must be a multiple of block_rows, or smaller
+    than it), w: [d_in, d_out], mu/sigma: [1, d_in] -> [rows, d_out].
+    """
+    rows, d_in = x.shape
+    d_out = w.shape[1]
+    bm = min(block_rows, rows)
+    assert rows % bm == 0, f"rows={rows} not a multiple of block={bm}"
+    grid = (rows // bm,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((1, d_in), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), jnp.float32),
+        interpret=True,
+    )(x, w, mu, sigma)

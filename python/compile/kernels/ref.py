@@ -1,0 +1,48 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+The Pallas kernels in this package must agree with these functions to
+float32 tolerance; `python/tests/test_kernels.py` sweeps shapes with
+hypothesis and asserts closeness. The rust runtime's numeric smoke test
+(`rust/tests/runtime_artifacts.rs`) executes the AOT artifacts on the same
+synthetic inputs and checks the same numbers.
+"""
+
+import jax.numpy as jnp
+
+
+def standardize_ref(x, mu, sigma):
+    """Column-wise standardization: (x - mu) / sigma."""
+    return (x - mu) / sigma
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (matches the kernel's formula exactly)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_transform_ref(x, w, mu, sigma):
+    """The feature-engineering stage: standardize -> project -> GELU.
+
+    x: [rows, d_in], w: [d_in, d_out], mu/sigma: [1, d_in]
+    returns [rows, d_out]
+    """
+    z = standardize_ref(x, mu, sigma)
+    return gelu_ref(z @ w)
+
+
+def column_agg_ref(y):
+    """Column aggregation of the activated projection: sum over rows.
+
+    y: [rows, d_out] -> [1, d_out]
+    """
+    return jnp.sum(y, axis=0, keepdims=True)
+
+
+def pipeline_stage_ref(x, w):
+    """The full L2 stage on raw data: compute column stats, transform,
+    aggregate. Returns (activations [rows, d_out], aggregate [1, d_out])."""
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sigma = jnp.std(x, axis=0, keepdims=True) + 1e-6
+    y = fused_transform_ref(x, w, mu, sigma)
+    return y, column_agg_ref(y)

@@ -1,0 +1,85 @@
+"""L2: the data-plane compute graph, in jax, calling the L1 kernels.
+
+A *pipeline stage* is the unit of work a workflow task executes: given a
+raw record batch `x` and a projection `w`, it computes column statistics,
+applies the fused standardize+project+GELU kernel, and aggregates columns
+— the classic feature-engineering stage of the ETL pipelines Airflow
+schedules (the paper's motivating workload).
+
+Two variants are exported:
+
+* `pipeline_stage`  — forward only (a serving/ETL task);
+* `pipeline_stage_grad` — value+grad w.r.t. `w` (a training-style task),
+  demonstrating that the AOT path carries backward graphs too.
+
+Everything here runs at build time only; `aot.py` lowers these functions
+to HLO text for the rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import column_agg, fused_transform
+from .kernels.ref import fused_transform_ref
+
+
+@jax.custom_vjp
+def fused_transform_diff(x, w, mu, sigma):
+    """Differentiable wrapper: Pallas kernel forward, reference backward.
+
+    `pallas_call` has no reverse-mode rule (and interpret-mode kernels
+    are forward-only), so the VJP is derived from the numerically
+    identical pure-jnp oracle — the standard custom_vjp pattern for
+    Pallas kernels.
+    """
+    return fused_transform(x, w, mu, sigma)
+
+
+def _ft_fwd(x, w, mu, sigma):
+    return fused_transform(x, w, mu, sigma), (x, w, mu, sigma)
+
+
+def _ft_bwd(res, g):
+    x, w, mu, sigma = res
+    _, vjp = jax.vjp(fused_transform_ref, x, w, mu, sigma)
+    return vjp(g)
+
+
+fused_transform_diff.defvjp(_ft_fwd, _ft_bwd)
+
+
+def pipeline_stage(x, w):
+    """Full stage: stats -> fused transform (L1) -> column agg (L1).
+
+    Returns (activations [rows, d_out], aggregate [1, d_out]).
+    """
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sigma = jnp.std(x, axis=0, keepdims=True) + 1e-6
+    y = fused_transform(x, w, mu, sigma)
+    agg = column_agg(y)
+    return y, agg
+
+
+def stage_loss(x, w):
+    """Scalar summary of a stage (for the training-style variant): the
+    mean squared column aggregate. Uses the differentiable kernel wrapper
+    (Pallas forward, oracle backward) and a jnp reduction."""
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sigma = jnp.std(x, axis=0, keepdims=True) + 1e-6
+    y = fused_transform_diff(x, w, mu, sigma)
+    agg = jnp.sum(y, axis=0, keepdims=True)
+    return jnp.mean(agg**2)
+
+
+def pipeline_stage_grad(x, w):
+    """Value + gradient w.r.t. the projection weights."""
+    loss, grad_w = jax.value_and_grad(stage_loss, argnums=1)(x, w)
+    return loss, grad_w
+
+
+def example_inputs(rows, d_in=64, d_out=32, seed=0):
+    """Deterministic, well-conditioned synthetic record batch."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (rows, d_in), jnp.float32) * 2.0 + 0.5
+    w = jax.random.normal(kw, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
+    return x, w

@@ -1,0 +1,94 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (rows, d_in, d_out, block size) and checks
+`assert_allclose` against `ref.py` — the core correctness signal of the
+data plane.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import column_agg, fused_transform
+from compile.kernels.ref import (
+    column_agg_ref,
+    fused_transform_ref,
+    pipeline_stage_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _inputs(rows, d_in, d_out, seed):
+    k = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(k)
+    x = jax.random.normal(kx, (rows, d_in), jnp.float32) * 3.0 + 1.0
+    w = jax.random.normal(kw, (d_in, d_out), jnp.float32)
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sigma = jnp.std(x, axis=0, keepdims=True) + 1e-6
+    return x, w, mu, sigma
+
+
+# Block-divisible row counts: rows must be a multiple of the block size.
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    block_rows=st.sampled_from([8, 32, 128]),
+    d_in=st.sampled_from([4, 16, 64]),
+    d_out=st.sampled_from([1, 8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_transform_matches_ref(blocks, block_rows, d_in, d_out, seed):
+    rows = blocks * block_rows
+    x, w, mu, sigma = _inputs(rows, d_in, d_out, seed)
+    got = fused_transform(x, w, mu, sigma, block_rows=block_rows)
+    want = fused_transform_ref(x, w, mu, sigma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    block_rows=st.sampled_from([8, 64, 128]),
+    d_out=st.sampled_from([1, 8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_column_agg_matches_ref(blocks, block_rows, d_out, seed):
+    rows = blocks * block_rows
+    y = jax.random.normal(jax.random.PRNGKey(seed), (rows, d_out), jnp.float32)
+    got = column_agg(y, block_rows=block_rows)
+    want = column_agg_ref(y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rows_smaller_than_block():
+    x, w, mu, sigma = _inputs(16, 8, 4, 0)
+    got = fused_transform(x, w, mu, sigma, block_rows=128)
+    want = fused_transform_ref(x, w, mu, sigma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_non_divisible_rows_rejected():
+    x, w, mu, sigma = _inputs(100, 8, 4, 0)
+    with pytest.raises(AssertionError):
+        fused_transform(x, w, mu, sigma, block_rows=64)
+
+
+def test_gelu_extremes_finite():
+    # Large magnitudes must not produce NaNs through the tanh approximation.
+    x = jnp.array([[-50.0, 0.0, 50.0, 1e3]], jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    mu = jnp.zeros((1, 4), jnp.float32)
+    sigma = jnp.ones((1, 4), jnp.float32)
+    out = fused_transform(x, w, mu, sigma, block_rows=1)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_pipeline_stage_ref_consistency():
+    # The composed oracle agrees with composing the kernel oracles.
+    x, w, mu, sigma = _inputs(64, 16, 8, 3)
+    y, agg = pipeline_stage_ref(x, w)
+    np.testing.assert_allclose(y, fused_transform_ref(x, w, mu, sigma), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(agg, column_agg_ref(y), rtol=1e-4, atol=1e-4)

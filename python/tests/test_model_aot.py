@@ -1,0 +1,78 @@
+"""L2 model shape/grad tests and AOT export checks."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.model import (
+    example_inputs,
+    pipeline_stage,
+    pipeline_stage_grad,
+    stage_loss,
+)
+from compile.kernels.ref import pipeline_stage_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_pipeline_stage_shapes_and_values():
+    x, w = example_inputs(256)
+    y, agg = pipeline_stage(x, w)
+    assert y.shape == (256, 32)
+    assert agg.shape == (1, 32)
+    y_ref, agg_ref = pipeline_stage_ref(x, w)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(agg, agg_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_grad_matches_finite_difference():
+    x, w = example_inputs(64, d_in=8, d_out=4)
+    loss, grad = pipeline_stage_grad(x, w)
+    assert grad.shape == w.shape
+    # Finite-difference check on a few coordinates.
+    eps = 1e-3
+    for i, j in [(0, 0), (3, 2), (7, 3)]:
+        dw = w.at[i, j].add(eps)
+        lp = stage_loss(x, dw)
+        dw = w.at[i, j].add(-eps)
+        lm = stage_loss(x, dw)
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(grad[i, j], fd, rtol=5e-2, atol=5e-3)
+
+
+def test_aot_export_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = aot.export_all(d)
+        assert len(manifest["artifacts"]) == len(aot.EXPORTS)
+        # Manifest parses and files exist with plausible HLO text.
+        with open(os.path.join(d, "manifest.json")) as f:
+            parsed = json.load(f)
+        assert parsed == manifest
+        for art in manifest["artifacts"]:
+            path = os.path.join(d, art["file"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert "HloModule" in text, f"{art['name']} not HLO text"
+            assert len(art["inputs"]) == 2
+            assert art["inputs"][0]["shape"][0] == art["rows"]
+
+
+def test_exported_fn_is_deterministic():
+    x, w = example_inputs(256)
+    y1, a1 = pipeline_stage(x, w)
+    y2, a2 = pipeline_stage(x, w)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_stage_loss_scalar_and_positive():
+    x, w = example_inputs(128, d_in=16, d_out=8)
+    loss = stage_loss(x, w)
+    assert loss.shape == ()
+    assert float(loss) >= 0.0
+    assert jnp.isfinite(loss)

@@ -1,0 +1,38 @@
+//! Fig. 16 (Appendix E.1): a single-task DAG on the **container executor**
+//! (chain n = 1, p = 10, T = 5).
+//!
+//! Paper result: replacing Lambda with Batch/Fargate raises the median
+//! task wait from ~2.5 s to ~100.5 s (provisioning + image start-up), but
+//! the task *duration* is ~1 s shorter (0.5 vCPU vs ~0.2 vCPU).
+
+mod common;
+
+use sairflow::exp::SystemKind;
+use sairflow::util::json::Json;
+use sairflow::workloads::synthetic::{chain_dag, chain_dag_caas};
+
+fn main() {
+    println!("== Fig 16: single-task DAG on CaaS (p=10, T=5) ==");
+    let caas = vec![chain_dag_caas("cc", 1, 10.0, 5.0)];
+    let faas = vec![chain_dag("cf", 1, 10.0, 5.0)];
+
+    let (caas_rep, _) = common::run_cell("sairflow caas", SystemKind::Sairflow, caas, 5.0, false);
+    let (faas_rep, _) = common::run_cell("sairflow faas", SystemKind::Sairflow, faas.clone(), 5.0, true);
+    let (mwaa_rep, _) = common::run_cell("mwaa", SystemKind::Mwaa { warm: true }, faas, 5.0, true);
+
+    println!(
+        "task wait med  : CaaS {:>8.2} s | FaaS {:>8.2} s | MWAA {:>8.2} s  (paper: 100.5 / 2.5 / ~1.5)",
+        caas_rep.task_wait.median, faas_rep.task_wait.median, mwaa_rep.task_wait.median
+    );
+    println!(
+        "task dur med   : CaaS {:>8.2} s | FaaS {:>8.2} s | MWAA {:>8.2} s  (paper: CaaS ~1 s shorter than FaaS)",
+        caas_rep.task_duration.median, faas_rep.task_duration.median, mwaa_rep.task_duration.median
+    );
+    common::save(
+        "fig16_caas_chain",
+        Json::obj()
+            .set("caas", caas_rep.to_json())
+            .set("faas", faas_rep.to_json())
+            .set("mwaa", mwaa_rep.to_json()),
+    );
+}

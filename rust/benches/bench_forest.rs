@@ -1,0 +1,49 @@
+//! Fig. 10 / Fig. 11 (Appendix C): parallel forests — k ∈ {1, 2, 4, 8}
+//! copies of a parallel DAG (n = 8, p = 10, T = 5) running concurrently.
+//!
+//! Paper result: both systems degrade similarly as k grows (k=1: ~20.9 s
+//! sAirflow vs 19.6 s MWAA; k=8: ~28.2 vs 23.9); and a forest of k DAGs
+//! of n tasks behaves like one DAG with k*n tasks (Fig. 11).
+
+mod common;
+
+use sairflow::exp::SystemKind;
+use sairflow::util::json::Json;
+use sairflow::workloads::synthetic::{parallel_dag, parallel_forest};
+
+fn main() {
+    println!("== Fig 10: parallel forest (n=8, p=10, T=5, k copies) ==");
+    let mut out = Json::obj();
+    for k in [1u32, 2, 4, 8] {
+        let dags = parallel_forest("forest", k, 8, 10.0, 5.0);
+        let (s_rep, _) =
+            common::run_cell(&format!("sairflow k={k}"), SystemKind::Sairflow, dags.clone(), 5.0, true);
+        let (m_rep, _) =
+            common::run_cell(&format!("mwaa k={k}"), SystemKind::Mwaa { warm: true }, dags, 5.0, true);
+        common::print_pair(&format!("forest k={k}"), &s_rep, &m_rep);
+        out = out.set(&format!("k{k}"), common::pair_json(&s_rep, &m_rep));
+    }
+
+    println!("\n== Fig 11: forest k DAGs × 8 tasks vs single DAG of 8k tasks (sAirflow) ==");
+    for k in [2u32, 4, 8] {
+        let forest = parallel_forest("forest", k, 8, 10.0, 5.0);
+        let single = vec![parallel_dag("single", 8 * k, 10.0, 5.0)];
+        let (f_rep, _) =
+            common::run_cell(&format!("forest k={k}"), SystemKind::Sairflow, forest, 5.0, true);
+        let (s_rep, _) =
+            common::run_cell(&format!("single n={}", 8 * k), SystemKind::Sairflow, single, 5.0, true);
+        println!(
+            "total {:>3} tasks: forest med {:>7.2} s | single-DAG med {:>7.2} s | wait med {:>5.2} vs {:>5.2} s",
+            8 * k,
+            f_rep.makespan.median,
+            s_rep.makespan.median,
+            f_rep.task_wait.median,
+            s_rep.task_wait.median
+        );
+        out = out.set(
+            &format!("fig11_k{k}"),
+            Json::obj().set("forest", f_rep.to_json()).set("single", s_rep.to_json()),
+        );
+    }
+    common::save("fig10_fig11_forest", out);
+}

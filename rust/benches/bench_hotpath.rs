@@ -1,0 +1,161 @@
+//! L3 performance harness (§Perf in EXPERIMENTS.md): wall-clock profiling
+//! of the coordinator hot paths. Not a paper figure — this is the
+//! performance-optimization deliverable's measurement tool.
+//!
+//! Measures (all wall-clock, release build):
+//!   1. raw DES event throughput (events/s);
+//!   2. metadata-DB commit throughput under a burst;
+//!   3. scheduling-pass latency on a large database snapshot;
+//!   4. end-to-end simulated experiment wall time (the n=125 cold cell)
+//!      and its events/s;
+//!   5. PJRT artifact execution latency (if artifacts are built).
+
+mod common;
+
+use sairflow::cloud::db::{DagRow, MetaDb, Txn, Write};
+use sairflow::exp::{self, ExperimentSpec, SystemKind};
+use sairflow::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
+use sairflow::sim::engine::Sim;
+use sairflow::util::json::Json;
+use sairflow::workloads::synthetic::parallel_dag;
+use std::time::Instant;
+
+fn bench_des_throughput() -> f64 {
+    struct W {
+        count: u64,
+    }
+    let mut sim: Sim<W> = Sim::new(1);
+    let mut w = W { count: 0 };
+    fn tick(sim: &mut Sim<W>, w: &mut W) {
+        w.count += 1;
+        if w.count < 2_000_000 {
+            sim.after(1, "tick", tick);
+        }
+    }
+    // 8 interleaved self-scheduling chains.
+    for _ in 0..8 {
+        sim.soon("start", tick);
+    }
+    let t0 = Instant::now();
+    sim.run(&mut w, 10_000_000);
+    let dt = t0.elapsed().as_secs_f64();
+    w.count as f64 / dt
+}
+
+fn bench_db_commits() -> f64 {
+    struct W {
+        db: sairflow::cloud::db::DbService,
+    }
+    impl sairflow::cloud::db::DbHost for W {
+        fn db(&mut self) -> &mut sairflow::cloud::db::DbService {
+            &mut self.db
+        }
+        fn on_committed(_s: &mut Sim<Self>, _w: &mut Self, _c: Vec<sairflow::cloud::db::Change>) {}
+    }
+    let mut sim: Sim<W> = Sim::new(2);
+    let mut w = W { db: sairflow::cloud::db::DbService::new(Default::default()) };
+    let n = 100_000u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let mut t = Txn::new();
+        t.push(Write::InsertTi(sairflow::cloud::db::TiRow {
+            dag_id: format!("d{}", i % 64),
+            run_id: i % 16,
+            task_id: (i % 1000) as u32,
+            state: sairflow::dag::TiState::None,
+            try_number: 0,
+            ready: None,
+            start: None,
+            end: None,
+            host: None,
+        }));
+        sairflow::cloud::db::commit(&mut sim, &mut w, t, |_s, _w| {});
+    }
+    sim.run(&mut w, 10_000_000);
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn bench_scheduling_pass() -> (f64, usize) {
+    // Large snapshot: 40 DAGs x 80 tasks, half-finished runs.
+    let mut db = MetaDb::new();
+    let mut msgs = Vec::new();
+    for d in 0..40 {
+        let spec = parallel_dag(&format!("d{d}"), 80, 10.0, 5.0);
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: spec.dag_id.clone(),
+            fileloc: String::new(),
+            period: spec.period,
+            is_paused: false,
+        }));
+        txn.push(Write::PutSerializedDag(spec.clone()));
+        db.apply(txn, 0);
+        let out = scheduling_pass(
+            &db,
+            0,
+            &[SchedMsg::Periodic { dag_id: spec.dag_id.clone(), logical_ts: 0 }],
+            &SchedLimits { parallelism: 10_000 },
+        );
+        db.apply(out.txn, 0);
+        msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
+    }
+    let iters = 200;
+    let t0 = Instant::now();
+    let mut total_writes = 0;
+    for _ in 0..iters {
+        let out = scheduling_pass(&db, 1, &msgs, &SchedLimits { parallelism: 10_000 });
+        total_writes += out.txn.writes.len();
+    }
+    let per_pass = t0.elapsed().as_secs_f64() / iters as f64;
+    (per_pass * 1e3, total_writes / iters)
+}
+
+fn bench_e2e() -> (f64, f64) {
+    let spec = ExperimentSpec {
+        label: "hotpath-e2e".into(),
+        system: SystemKind::Sairflow,
+        dags: vec![parallel_dag("p", 125, 10.0, 30.0)],
+        seed: 7,
+        horizon: ExperimentSpec::paper_horizon(30.0),
+        skip_first_run: false,
+    };
+    let t0 = Instant::now();
+    let res = exp::run(&spec);
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(res.report.n_runs >= 3);
+    (wall, res.report.makespan.mean)
+}
+
+fn main() {
+    println!("== L3 hot-path performance ==");
+    let des = bench_des_throughput();
+    println!("DES event throughput      : {:>12.0} events/s", des);
+    let db = bench_db_commits();
+    println!("DB commit throughput      : {:>12.0} commits/s", db);
+    let (pass_ms, writes) = bench_scheduling_pass();
+    println!("scheduling pass (40x80)   : {pass_ms:>9.3} ms/pass ({writes} writes)");
+    let (e2e_wall, mk) = bench_e2e();
+    println!("e2e n=125 cold experiment : {e2e_wall:>9.3} s wall (sim makespan {mk:.1} s)");
+
+    let mut json = Json::obj()
+        .set("des_events_per_sec", des)
+        .set("db_commits_per_sec", db)
+        .set("sched_pass_ms", pass_ms)
+        .set("e2e_wall_secs", e2e_wall);
+
+    // L1/L2: PJRT execution latency (skipped without artifacts).
+    match sairflow::runtime::Engine::load_dir(&sairflow::runtime::default_artifacts_dir()) {
+        Ok(mut engine) => {
+            for name in engine.artifact_names() {
+                // Warm up (compile caches, first-touch), then measure.
+                let _ = engine.execute_timed(&name, 3, 0);
+                let wall = engine.execute_timed(&name, 50, 0).unwrap_or(f64::NAN);
+                let per = wall / 50.0 * 1e6;
+                println!("PJRT {name:<28}: {per:>9.1} µs/exec");
+                json = json.set(&format!("pjrt_{name}_us"), per);
+            }
+        }
+        Err(_) => println!("PJRT artifacts not built; run `make artifacts`"),
+    }
+    common::save("perf_hotpath", json);
+}

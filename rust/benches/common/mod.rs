@@ -1,0 +1,79 @@
+#![allow(dead_code)]
+
+//! Shared bench scaffolding: run (system × workload) cells, print
+//! paper-style rows, save JSON reports.
+
+use sairflow::exp::{self, ExperimentSpec, SystemKind};
+use sairflow::metrics::MetricsReport;
+use sairflow::util::json::Json;
+
+/// Seeds used for every bench (paper-style repetitions).
+pub const SEEDS: [u64; 3] = [11, 23, 47];
+
+/// Run one cell for each seed and pool the reports into one.
+pub fn run_cell(
+    label: &str,
+    system: SystemKind,
+    dags: Vec<sairflow::dag::DagSpec>,
+    t_minutes: f64,
+    warm: bool,
+) -> (MetricsReport, Vec<exp::ExperimentResult>) {
+    let mut pooled = sairflow::metrics::MetricsSink::new();
+    let mut results = Vec::new();
+    for seed in SEEDS {
+        let spec = ExperimentSpec {
+            label: format!("{label} seed={seed}"),
+            system: system.clone(),
+            dags: dags.clone(),
+            seed,
+            horizon: ExperimentSpec::paper_horizon(t_minutes),
+            skip_first_run: warm,
+        };
+        let res = exp::run(&spec);
+        // Pool observations across seeds (offset run ids to keep them
+        // distinct per seed).
+        for mut t in res.sink.tasks.clone() {
+            t.run_id += seed * 10_000;
+            pooled.tasks.push(t);
+        }
+        for mut r in res.sink.runs.clone() {
+            r.run_id += seed * 10_000;
+            pooled.runs.push(r);
+        }
+        results.push(res);
+    }
+    // skip_first_run was already applied per seed inside exp::run's report;
+    // for the pooled report, drop each seed's first run the same way.
+    let report = MetricsReport::build(label, &pooled, warm);
+    (report, results)
+}
+
+/// Paper-style comparison row.
+pub fn print_pair(tag: &str, sairflow: &MetricsReport, mwaa: &MetricsReport) {
+    println!(
+        "{tag:<22} makespan med  sAirflow {:>8.2} s   MWAA {:>8.2} s   ratio {:>5.2}x",
+        sairflow.makespan.median,
+        mwaa.makespan.median,
+        mwaa.makespan.median / sairflow.makespan.median.max(1e-9),
+    );
+    println!(
+        "{:<22} task wait med sAirflow {:>8.2} s   MWAA {:>8.2} s",
+        "", sairflow.task_wait.median, mwaa.task_wait.median
+    );
+    println!(
+        "{:<22} task dur med  sAirflow {:>8.2} s   MWAA {:>8.2} s",
+        "", sairflow.task_duration.median, mwaa.task_duration.median
+    );
+}
+
+/// Save a bench report under reports/.
+pub fn save(name: &str, body: Json) {
+    match exp::save_report(name, &body) {
+        Ok(p) => println!("-> {}", p.display()),
+        Err(e) => eprintln!("report write failed: {e}"),
+    }
+}
+
+pub fn pair_json(s: &MetricsReport, m: &MetricsReport) -> Json {
+    Json::obj().set("sairflow", s.to_json()).set("mwaa", m.to_json())
+}

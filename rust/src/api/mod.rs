@@ -1,0 +1,277 @@
+//! The web-UI / API surface (Fig. 1 (14)).
+//!
+//! Airflow's web server lets users inspect DAGs and runs, trigger runs,
+//! and pause/unpause workflows; in sAirflow those actions flow through
+//! the same event fabric as everything else (a trigger is a scheduler-feed
+//! message; a DAG edit is a blob upload). This module exposes that surface
+//! as a typed request/response API over the deployed [`World`] — the
+//! `serving` example drives it as a long-running service.
+
+use crate::dag::state::RunState;
+use crate::sairflow::{trigger_dag, upload_dag, World};
+use crate::sim::engine::Sim;
+use crate::sim::time::as_secs;
+use crate::util::json::Json;
+
+/// An API request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// List registered DAGs with their schedule and pause state.
+    ListDags,
+    /// List runs of one DAG (most recent first).
+    ListRuns { dag_id: String },
+    /// List task instances of one run.
+    ListTasks { dag_id: String, run_id: u64 },
+    /// Trigger a manual run (the web-UI flow of §4.1).
+    Trigger { dag_id: String },
+    /// Pause / unpause a DAG (stops periodic runs; cron fires are ignored
+    /// by the scheduler while paused).
+    SetPaused { dag_id: String, paused: bool },
+    /// Upload (create/update) a DAG file.
+    UploadDag { file_text: String },
+    /// Control-plane health: queue depths, in-flight work, event counts.
+    Health,
+}
+
+/// Parse a request from a JSON document (the wire format of the serving
+/// example).
+pub fn parse_request(doc: &Json) -> Result<Request, String> {
+    match doc.str_field("op")? {
+        "list_dags" => Ok(Request::ListDags),
+        "list_runs" => Ok(Request::ListRuns { dag_id: doc.str_field("dag_id")?.to_string() }),
+        "list_tasks" => Ok(Request::ListTasks {
+            dag_id: doc.str_field("dag_id")?.to_string(),
+            run_id: doc.num_field("run_id")? as u64,
+        }),
+        "trigger" => Ok(Request::Trigger { dag_id: doc.str_field("dag_id")?.to_string() }),
+        "set_paused" => Ok(Request::SetPaused {
+            dag_id: doc.str_field("dag_id")?.to_string(),
+            paused: doc.get("paused").and_then(|p| p.as_bool()).unwrap_or(true),
+        }),
+        "upload_dag" => {
+            Ok(Request::UploadDag { file_text: doc.str_field("file_text")?.to_string() })
+        }
+        "health" => Ok(Request::Health),
+        op => Err(format!("unknown op '{op}'")),
+    }
+}
+
+/// Handle a request against the deployed world. Mutating requests inject
+/// events; reads are served from the metadata DB (like Airflow's
+/// webserver, which reads the DB directly).
+pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
+    match req {
+        Request::ListDags => {
+            let db = w.db.read();
+            let dags: Vec<Json> = db
+                .dags
+                .values()
+                .map(|d| {
+                    Json::obj()
+                        .set("dag_id", d.dag_id.as_str())
+                        .set(
+                            "period_secs",
+                            d.period.map(|p| Json::Num(p as f64 / 1e6)).unwrap_or(Json::Null),
+                        )
+                        .set("paused", d.is_paused)
+                        .set(
+                            "n_tasks",
+                            db.serialized.get(&d.dag_id).map(|s| s.n_tasks()).unwrap_or(0),
+                        )
+                })
+                .collect();
+            Json::obj().set("ok", true).set("dags", Json::Arr(dags))
+        }
+        Request::ListRuns { dag_id } => {
+            let db = w.db.read();
+            let runs: Vec<Json> = db
+                .dag_runs
+                .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                .rev()
+                .map(|(_, r)| {
+                    Json::obj()
+                        .set("run_id", r.run_id)
+                        .set("state", r.state.to_string())
+                        .set("start", r.start.map(|t| Json::Num(as_secs(t))).unwrap_or(Json::Null))
+                        .set("end", r.end.map(|t| Json::Num(as_secs(t))).unwrap_or(Json::Null))
+                })
+                .collect();
+            Json::obj().set("ok", true).set("dag_id", dag_id).set("runs", Json::Arr(runs))
+        }
+        Request::ListTasks { dag_id, run_id } => {
+            let db = w.db.read();
+            let tasks: Vec<Json> = db
+                .tis_of_run(&dag_id, run_id)
+                .iter()
+                .map(|t| {
+                    Json::obj()
+                        .set("task_id", t.task_id)
+                        .set("state", t.state.to_string())
+                        .set("try_number", t.try_number)
+                        .set("host", t.host.clone().map(Json::Str).unwrap_or(Json::Null))
+                        .set("ready", t.ready.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null))
+                        .set("start", t.start.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null))
+                        .set("end", t.end.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null))
+                })
+                .collect();
+            Json::obj().set("ok", true).set("tasks", Json::Arr(tasks))
+        }
+        Request::Trigger { dag_id } => {
+            if !w.db.read().serialized.contains_key(&dag_id) {
+                return Json::obj().set("ok", false).set("error", "unknown dag");
+            }
+            trigger_dag(sim, w, &dag_id);
+            Json::obj().set("ok", true).set("triggered", dag_id)
+        }
+        Request::SetPaused { dag_id, paused } => {
+            match w.db.meta.dags.get_mut(&dag_id) {
+                Some(row) => {
+                    row.is_paused = paused;
+                    Json::obj().set("ok", true).set("dag_id", dag_id).set("paused", paused)
+                }
+                None => Json::obj().set("ok", false).set("error", "unknown dag"),
+            }
+        }
+        Request::UploadDag { file_text } => match crate::parser::parse_dag_file(&file_text) {
+            Ok(spec) => {
+                upload_dag(sim, w, &spec);
+                Json::obj().set("ok", true).set("uploaded", spec.dag_id.as_str())
+            }
+            Err(e) => Json::obj().set("ok", false).set("error", e),
+        },
+        Request::Health => {
+            Json::obj()
+                .set("ok", true)
+                .set("sched_queue_depth", w.sched_q.len())
+                .set("fexec_queue_depth", w.fexec_q.len())
+                .set("cexec_queue_depth", w.cexec_q.len())
+                .set("worker_inflight", w.faas.inflight(w.fns.worker) as u64)
+                .set("worker_warm_pool", w.faas.warm_pool(w.fns.worker))
+                .set("containers_inflight", w.caas.inflight() as u64)
+                .set("router_events", w.router.stats.events_in)
+                .set("cdc_records", w.cdc.stats.records)
+                .set("db_txns", w.db.read().stats.txns)
+                .set(
+                    "active_runs",
+                    w.db
+                        .read()
+                        .dag_runs
+                        .values()
+                        .filter(|r| !matches!(r.state, RunState::Success | RunState::Failed))
+                        .count(),
+                )
+                .set("active_tasks", w.db.read().active_ti_count())
+        }
+    }
+}
+
+/// Convenience: handle a JSON request string end-to-end.
+pub fn handle_text(sim: &mut Sim<World>, w: &mut World, text: &str) -> Json {
+    match Json::parse(text).map_err(|e| e.to_string()).and_then(|d| parse_request(&d)) {
+        Ok(req) => handle(sim, w, req),
+        Err(e) => Json::obj().set("ok", false).set("error", e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sairflow::Config;
+    use crate::sim::time::MINUTE;
+    use crate::workloads::synthetic::chain_dag;
+
+    fn deployed() -> (Sim<World>, World) {
+        let w = World::new(Config::seeded(123));
+        let mut sim = w.sim();
+        let mut w = w;
+        let spec = chain_dag("api_dag", 2, 1.0, 5.0);
+        crate::sairflow::upload_dag(&mut sim, &mut w, &spec);
+        sim.run_until(&mut w, MINUTE, 1_000_000);
+        (sim, w)
+    }
+
+    #[test]
+    fn list_dags_after_upload() {
+        let (mut sim, mut w) = deployed();
+        let resp = handle(&mut sim, &mut w, Request::ListDags);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let dags = resp.get("dags").unwrap().as_arr().unwrap();
+        assert_eq!(dags.len(), 1);
+        assert_eq!(dags[0].get("dag_id").unwrap().as_str(), Some("api_dag"));
+        assert_eq!(dags[0].get("n_tasks").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn trigger_then_list_runs_and_tasks() {
+        let (mut sim, mut w) = deployed();
+        let resp = handle(&mut sim, &mut w, Request::Trigger { dag_id: "api_dag".into() });
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        sim.run_until(&mut w, 10 * MINUTE, 10_000_000);
+        let runs =
+            handle(&mut sim, &mut w, Request::ListRuns { dag_id: "api_dag".into() });
+        let runs = runs.get("runs").unwrap().as_arr().unwrap().to_vec();
+        assert!(!runs.is_empty());
+        assert_eq!(runs[0].get("state").unwrap().as_str(), Some("success"));
+        let run_id = runs[0].get("run_id").unwrap().as_u64().unwrap();
+        let tasks = handle(
+            &mut sim,
+            &mut w,
+            Request::ListTasks { dag_id: "api_dag".into(), run_id },
+        );
+        let tasks = tasks.get("tasks").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(tasks.len(), 2);
+        assert!(tasks.iter().all(|t| t.get("state").unwrap().as_str() == Some("success")));
+    }
+
+    #[test]
+    fn pause_blocks_periodic_runs() {
+        let (mut sim, mut w) = deployed();
+        handle(&mut sim, &mut w, Request::SetPaused { dag_id: "api_dag".into(), paused: true });
+        sim.run_until(&mut w, 20 * MINUTE, 10_000_000);
+        assert!(w.db.read().dag_runs.is_empty(), "paused DAG must not run on schedule");
+        // Unpause: the next cron fire runs.
+        handle(&mut sim, &mut w, Request::SetPaused { dag_id: "api_dag".into(), paused: false });
+        sim.run_until(&mut w, 40 * MINUTE, 10_000_000);
+        assert!(!w.db.read().dag_runs.is_empty());
+    }
+
+    #[test]
+    fn upload_via_api_and_errors() {
+        let (mut sim, mut w) = deployed();
+        let new_dag = chain_dag("from_api", 1, 1.0, 5.0);
+        let resp = handle(
+            &mut sim,
+            &mut w,
+            Request::UploadDag { file_text: new_dag.to_json().to_string_pretty() },
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        sim.run_until(&mut w, 62 * MINUTE, 10_000_000);
+        assert!(w.db.read().serialized.contains_key("from_api"));
+
+        let bad = handle(&mut sim, &mut w, Request::UploadDag { file_text: "not json".into() });
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        let unknown = handle(&mut sim, &mut w, Request::Trigger { dag_id: "ghost".into() });
+        assert_eq!(unknown.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn health_reports_counters() {
+        let (mut sim, mut w) = deployed();
+        let h = handle(&mut sim, &mut w, Request::Health);
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true));
+        assert!(h.get("db_txns").unwrap().as_u64().unwrap() > 0);
+        assert!(h.get("cdc_records").unwrap().as_u64().unwrap() > 0);
+    }
+
+    #[test]
+    fn wire_format_roundtrip() {
+        let (mut sim, mut w) = deployed();
+        let resp = handle_text(&mut sim, &mut w, r#"{"op": "list_dags"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let resp = handle_text(&mut sim, &mut w, r#"{"op": "bogus"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let resp =
+            handle_text(&mut sim, &mut w, r#"{"op": "trigger", "dag_id": "api_dag"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,109 @@
+//! Blob storage (S3-like).
+//!
+//! Holds DAG files, deployment configuration and task logs (components (1)
+//! and (13) in Fig. 1). Upload notifications are wired by the deployment
+//! (the store itself is pure state); request latencies are sampled by the
+//! caller from [`BlobStore::get_latency`]/[`BlobStore::put_latency`] so
+//! they appear on the simulation clock.
+
+use crate::sim::time::{secs, SimDuration};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Operation statistics (drive the S3 rows of the cost model).
+#[derive(Debug, Default, Clone)]
+pub struct BlobStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub bytes_stored: u64,
+}
+
+/// An S3-like key-value object store.
+#[derive(Debug, Default)]
+pub struct BlobStore {
+    objects: BTreeMap<String, String>,
+    pub stats: BlobStats,
+}
+
+impl BlobStore {
+    pub fn new() -> BlobStore {
+        BlobStore::default()
+    }
+
+    /// PUT an object. Returns true when the key already existed.
+    pub fn put(&mut self, key: &str, value: String) -> bool {
+        self.stats.puts += 1;
+        self.stats.bytes_stored += value.len() as u64;
+        self.objects.insert(key.to_string(), value).is_some()
+    }
+
+    /// GET an object.
+    pub fn get(&mut self, key: &str) -> Option<&str> {
+        self.stats.gets += 1;
+        self.objects.get(key).map(|s| s.as_str())
+    }
+
+    /// Check existence without counting a GET.
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.contains_key(key)
+    }
+
+    /// List keys under a prefix (S3 LIST).
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.objects.keys().filter(|k| k.starts_with(prefix)).cloned().collect()
+    }
+
+    /// Sampled latency of a GET request.
+    pub fn get_latency(rng: &mut Rng) -> SimDuration {
+        secs(rng.uniform(0.005, 0.025))
+    }
+
+    /// Sampled latency of a PUT request.
+    pub fn put_latency(rng: &mut Rng) -> SimDuration {
+        secs(rng.uniform(0.010, 0.040))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut b = BlobStore::new();
+        assert!(!b.put("dags/etl.json", "{}".into()));
+        assert_eq!(b.get("dags/etl.json"), Some("{}"));
+        assert_eq!(b.get("missing"), None);
+        assert_eq!(b.stats.puts, 1);
+        assert_eq!(b.stats.gets, 2);
+    }
+
+    #[test]
+    fn overwrite_reports_existing() {
+        let mut b = BlobStore::new();
+        b.put("k", "v1".into());
+        assert!(b.put("k", "v2".into()));
+        assert_eq!(b.get("k"), Some("v2"));
+    }
+
+    #[test]
+    fn list_by_prefix() {
+        let mut b = BlobStore::new();
+        b.put("dags/a.json", "1".into());
+        b.put("dags/b.json", "2".into());
+        b.put("logs/x", "3".into());
+        assert_eq!(b.list("dags/").len(), 2);
+        assert_eq!(b.list("logs/"), vec!["logs/x".to_string()]);
+    }
+
+    #[test]
+    fn latencies_in_reasonable_band() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let g = BlobStore::get_latency(&mut rng);
+            let p = BlobStore::put_latency(&mut rng);
+            assert!((5_000..=25_000).contains(&g));
+            assert!((10_000..=40_000).contains(&p));
+        }
+    }
+}

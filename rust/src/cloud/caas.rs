@@ -1,0 +1,299 @@
+//! Container-as-a-Service platform (AWS Batch on Fargate, §4.4, App. E).
+//!
+//! The container executor launches workers as one-off containers: jobs
+//! queue in Batch, Fargate provisions capacity (the paper measures
+//! 60–90 s of provisioning plus ~30 s of container start-up — image pull
+//! and dependency loading), the container runs the task, then terminates.
+//! Containers are **never reused** (no warm starts, in sharp contrast to
+//! the FaaS executor), and Batch queueing adds heavy variance (§E.2).
+
+use crate::sim::engine::Sim;
+use crate::sim::time::{secs, SimDuration, SimTime};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Job handle.
+pub type JobId = u64;
+
+/// Platform configuration, calibrated to the paper's Appendix E setup:
+/// 0.5 vCPU / 512 MB per container (the smallest Fargate shape).
+#[derive(Debug, Clone)]
+pub struct CaasConfig {
+    pub vcpu: f64,
+    pub memory_mb: u32,
+    /// Fargate capacity provisioning, seconds (uniform).
+    pub provision: (f64, f64),
+    /// Container start-up (image pull + init): mean/std of a normal,
+    /// floored at `startup_min`.
+    pub startup_mean: f64,
+    pub startup_std: f64,
+    pub startup_min: f64,
+    /// Extra Batch queue jitter: lognormal sigma applied as a multiplier
+    /// tail on provisioning ("this number might vary depending on the
+    /// queuing in AWS Batch").
+    pub queue_jitter_sigma: f64,
+    /// Maximum concurrently-running containers (compute environment size).
+    pub max_concurrent: u32,
+}
+
+impl Default for CaasConfig {
+    fn default() -> CaasConfig {
+        CaasConfig {
+            vcpu: 0.5,
+            memory_mb: 512,
+            provision: (55.0, 82.0),
+            startup_mean: 27.0,
+            startup_std: 4.0,
+            startup_min: 15.0,
+            queue_jitter_sigma: 0.10,
+            max_concurrent: 125,
+        }
+    }
+}
+
+/// Platform statistics (drive the Batch rows of the cost model).
+#[derive(Debug, Default, Clone)]
+pub struct CaasStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub vcpu_seconds: f64,
+    pub gb_seconds: f64,
+    /// Peak concurrently-running containers.
+    pub concurrent_peak: u32,
+    /// Total provisioning+startup latency (for mean reporting).
+    pub startup_latency_total: SimDuration,
+}
+
+/// Context handed to the container body; the body MUST eventually call
+/// [`complete`].
+pub struct JobCtx<J> {
+    pub job: JobId,
+    pub payload: J,
+}
+
+type Body<W> = Rc<dyn Fn(&mut Sim<W>, &mut W, JobCtx<<W as CaasHost>::Job>)>;
+type OnDone<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W, bool)>;
+
+struct RunningJob<W: CaasHost> {
+    started: SimTime,
+    on_done: Option<OnDone<W>>,
+}
+
+/// The container platform.
+pub struct CaasPlatform<W: CaasHost> {
+    pub cfg: CaasConfig,
+    body: Option<Body<W>>,
+    queue: VecDeque<(W::Job, Option<OnDone<W>>)>,
+    running: std::collections::HashMap<JobId, RunningJob<W>>,
+    inflight: u32,
+    next_job: JobId,
+    pub stats: CaasStats,
+}
+
+/// World types hosting a container platform.
+pub trait CaasHost: Sized + 'static {
+    type Job: 'static;
+    fn caas(&mut self) -> &mut CaasPlatform<Self>;
+}
+
+impl<W: CaasHost> CaasPlatform<W> {
+    pub fn new(cfg: CaasConfig) -> CaasPlatform<W> {
+        CaasPlatform {
+            cfg,
+            body: None,
+            queue: VecDeque::new(),
+            running: std::collections::HashMap::new(),
+            inflight: 0,
+            next_job: 0,
+            stats: CaasStats::default(),
+        }
+    }
+
+    pub fn set_body(&mut self, body: impl Fn(&mut Sim<W>, &mut W, JobCtx<W::Job>) + 'static) {
+        self.body = Some(Rc::new(body));
+    }
+
+    pub fn inflight(&self) -> u32 {
+        self.inflight
+    }
+
+    /// Whether a job is still alive (container running).
+    pub fn is_live(&self, job: JobId) -> bool {
+        self.running.contains_key(&job)
+    }
+}
+
+/// Submit a job to the Batch queue.
+pub fn submit<W: CaasHost>(sim: &mut Sim<W>, w: &mut W, job: W::Job) {
+    submit_inner(sim, w, job, None)
+}
+
+/// Submit with a completion callback (used by Step Functions to monitor).
+pub fn submit_cb<W: CaasHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    job: W::Job,
+    on_done: impl FnOnce(&mut Sim<W>, &mut W, bool) + 'static,
+) {
+    submit_inner(sim, w, job, Some(Box::new(on_done)))
+}
+
+fn submit_inner<W: CaasHost>(sim: &mut Sim<W>, w: &mut W, job: W::Job, on_done: Option<OnDone<W>>) {
+    let caas = w.caas();
+    caas.stats.submitted += 1;
+    caas.queue.push_back((job, on_done));
+    try_launch(sim, w);
+}
+
+fn try_launch<W: CaasHost>(sim: &mut Sim<W>, w: &mut W) {
+    let caas = w.caas();
+    if caas.inflight >= caas.cfg.max_concurrent || caas.queue.is_empty() {
+        return;
+    }
+    let (job, on_done) = caas.queue.pop_front().unwrap();
+    caas.inflight += 1;
+    caas.stats.concurrent_peak = caas.stats.concurrent_peak.max(caas.inflight);
+    let job_id = caas.next_job;
+    caas.next_job += 1;
+
+    // Provisioning + start-up latency.
+    let cfg = caas.cfg.clone();
+    let provision = sim.rng.uniform(cfg.provision.0, cfg.provision.1);
+    let jitter = sim.rng.lognormal_median(1.0, cfg.queue_jitter_sigma);
+    let startup = sim
+        .rng
+        .normal(cfg.startup_mean, cfg.startup_std)
+        .max(cfg.startup_min);
+    let delay = secs(provision * jitter + startup);
+    w.caas().stats.startup_latency_total += delay;
+
+    sim.after(delay, "caas.start", move |sim, w| {
+        let started = sim.now();
+        w.caas().running.insert(job_id, RunningJob { started, on_done });
+        let body = Rc::clone(w.caas().body.as_ref().expect("caas body registered"));
+        body(sim, w, JobCtx { job: job_id, payload: job });
+    });
+}
+
+/// Complete a job: the container terminates (never returned to a pool) and
+/// queued jobs may launch.
+pub fn complete<W: CaasHost>(sim: &mut Sim<W>, w: &mut W, job: JobId, success: bool) {
+    let caas = w.caas();
+    let run = match caas.running.remove(&job) {
+        Some(r) => r,
+        None => return,
+    };
+    let dur_secs = (sim.now().saturating_sub(run.started)) as f64 / 1_000_000.0;
+    caas.stats.vcpu_seconds += caas.cfg.vcpu * dur_secs;
+    caas.stats.gb_seconds += (caas.cfg.memory_mb as f64 / 1024.0) * dur_secs;
+    if success {
+        caas.stats.completed += 1;
+    } else {
+        caas.stats.failed += 1;
+    }
+    caas.inflight -= 1;
+    if let Some(cb) = run.on_done {
+        cb(sim, w, success);
+    }
+    try_launch(sim, w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{as_secs, SECOND};
+
+    struct World {
+        caas: CaasPlatform<World>,
+        done: Vec<(SimTime, bool)>,
+    }
+    impl CaasHost for World {
+        type Job = u64; // sleep seconds
+        fn caas(&mut self) -> &mut CaasPlatform<World> {
+            &mut self.caas
+        }
+    }
+
+    fn world(max: u32) -> World {
+        let mut cfg = CaasConfig::default();
+        cfg.max_concurrent = max;
+        let mut w = World { caas: CaasPlatform::new(cfg), done: Vec::new() };
+        w.caas.set_body(|sim, _w, ctx| {
+            let dur = ctx.payload * SECOND;
+            let job = ctx.job;
+            sim.after(dur, "job.work", move |sim, w| complete(sim, w, job, true));
+        });
+        w
+    }
+
+    #[test]
+    fn startup_latency_in_paper_band() {
+        // Provision 57–87 s (+jitter) + startup ≥15 s: first job starts
+        // roughly 70–130 s after submission.
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = world(10);
+        submit_cb(&mut sim, &mut w, 10, |sim, w, ok| {
+            let t = sim.now();
+            w.done.push((t, ok));
+        });
+        sim.run(&mut w, 1000);
+        let total = as_secs(w.done[0].0);
+        assert!(total > 70.0 && total < 220.0, "total={total}");
+        assert_eq!(w.caas.stats.completed, 1);
+    }
+
+    #[test]
+    fn no_container_reuse() {
+        let mut sim: Sim<World> = Sim::new(2);
+        let mut w = world(10);
+        submit(&mut sim, &mut w, 1);
+        sim.run(&mut w, 1000);
+        let first = w.caas.stats.startup_latency_total;
+        submit(&mut sim, &mut w, 1);
+        sim.run(&mut w, 1000);
+        // Second job pays full provisioning again.
+        assert!(w.caas.stats.startup_latency_total > first + secs(60.0));
+    }
+
+    #[test]
+    fn capacity_limits_concurrency() {
+        let mut sim: Sim<World> = Sim::new(3);
+        let mut w = world(2);
+        for _ in 0..5 {
+            submit(&mut sim, &mut w, 30);
+        }
+        sim.run(&mut w, 10_000);
+        assert_eq!(w.caas.stats.concurrent_peak, 2);
+        assert_eq!(w.caas.stats.completed, 5);
+    }
+
+    #[test]
+    fn resource_accounting() {
+        let mut sim: Sim<World> = Sim::new(4);
+        let mut w = world(10);
+        submit(&mut sim, &mut w, 100); // 100 s at 0.5 vCPU / 512 MB
+        sim.run(&mut w, 10_000);
+        assert!((w.caas.stats.vcpu_seconds - 50.0).abs() < 1.0);
+        assert!((w.caas.stats.gb_seconds - 50.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn failure_reported() {
+        let mut sim: Sim<World> = Sim::new(5);
+        let mut cfg = CaasConfig::default();
+        cfg.max_concurrent = 4;
+        let mut w = World { caas: CaasPlatform::new(cfg), done: Vec::new() };
+        w.caas.set_body(|sim, _w, ctx| {
+            let job = ctx.job;
+            sim.after(SECOND, "job.fail", move |sim, w| complete(sim, w, job, false));
+        });
+        submit_cb(&mut sim, &mut w, 1, |sim, w, ok| {
+            let t = sim.now();
+            w.done.push((t, ok));
+        });
+        sim.run(&mut w, 1000);
+        assert_eq!(w.caas.stats.failed, 1);
+        assert!(!w.done[0].1);
+    }
+}

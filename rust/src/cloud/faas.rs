@@ -1,0 +1,577 @@
+//! Function-as-a-Service platform (AWS-Lambda-like).
+//!
+//! Runs both sAirflow's control plane (parse, scheduler, CDC pre-parse,
+//! schedule updater, executors, failure handler) and the FaaS workers.
+//! Models the serverless behaviours the paper's evaluation hinges on (§3,
+//! §6.1–6.2):
+//!
+//! * **cold starts** — a new execution environment is provisioned when no
+//!   warm one is idle; the paper measures ~9.5 s extra wait for the
+//!   (container-image) worker function;
+//! * **warm reuse** — environments are kept alive after an invocation and
+//!   reused (sAirflow patches Airflow's log sinks so a single Lambda
+//!   instance can serve multiple invocations, §4.4);
+//! * **keep-alive eviction** — idle environments are reclaimed after
+//!   minutes, so `T = 30` min experiments always start cold while `T = 5`
+//!   min ones stay warm (§5);
+//! * **horizontal scaling** — invocations run concurrently up to a
+//!   reserved-concurrency cap (125 in the paper's setup), with per-
+//!   invocation environments rather than per-node slots;
+//! * **execution time limit** — 15 min in AWS; longer tasks must use the
+//!   container executor (§4.4).
+
+use crate::sim::engine::Sim;
+use crate::sim::time::{secs, SimDuration, SimTime};
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Function handle.
+pub type FnId = usize;
+/// Invocation handle.
+pub type InvId = u64;
+
+/// Static configuration of a registered function.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: &'static str,
+    pub memory_mb: u32,
+    /// Maximum execution time (AWS: 15 min).
+    pub timeout: SimDuration,
+    /// Reserved concurrency: max simultaneous executions.
+    pub concurrency: u32,
+    /// Cold-start duration, seconds (uniform range).
+    pub cold_start: (f64, f64),
+    /// Warm-start (re-use) initialization, seconds (uniform range).
+    pub warm_init: (f64, f64),
+    /// Idle environment keep-alive before eviction.
+    pub keep_alive: SimDuration,
+}
+
+impl FunctionSpec {
+    /// vCPU share AWS allocates for this memory size (1 vCPU per 1769 MB).
+    pub fn vcpu(&self) -> f64 {
+        self.memory_mb as f64 / 1769.0
+    }
+}
+
+/// Per-function statistics.
+#[derive(Debug, Default, Clone)]
+pub struct FnStats {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub timeouts: u64,
+    pub envs_created: u64,
+    /// GB-seconds billed (memory/1024 * execution seconds).
+    pub gb_seconds: f64,
+    /// Total execution time (excluding init) in sim ticks.
+    pub exec_total: SimDuration,
+    /// Peak concurrent executions observed.
+    pub concurrent_peak: u32,
+    /// Invocations that had to queue for a concurrency slot.
+    pub throttled: u64,
+}
+
+/// Context handed to a function body. The body owns the payload and MUST
+/// eventually call [`complete`] with this invocation's id.
+pub struct Invocation<P> {
+    pub inv: InvId,
+    pub fnid: FnId,
+    /// Environment identity (for Gantt rendering / reuse analysis).
+    pub env: u64,
+    pub cold: bool,
+    pub payload: P,
+}
+
+type Body<W> = Rc<dyn Fn(&mut Sim<W>, &mut W, Invocation<<W as FaasHost>::Payload>)>;
+type OnDone<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W, bool)>;
+
+struct Function<W: FaasHost> {
+    spec: FunctionSpec,
+    body: Body<W>,
+    /// Idle warm environments: (env id, idle since).
+    warm: Vec<(u64, SimTime)>,
+    inflight: u32,
+    /// Waiting for a concurrency slot.
+    queued: VecDeque<(W::Payload, Option<OnDone<W>>)>,
+    next_env: u64,
+    pub stats: FnStats,
+}
+
+struct Running<W: FaasHost> {
+    fnid: FnId,
+    env: u64,
+    /// When the body started executing (after init).
+    started: SimTime,
+    on_done: Option<OnDone<W>>,
+}
+
+/// The FaaS platform: function registry + execution state.
+pub struct FaasPlatform<W: FaasHost> {
+    funcs: Vec<Function<W>>,
+    running: HashMap<InvId, Running<W>>,
+    next_inv: InvId,
+}
+
+/// World types hosting a FaaS platform. `Payload` is the app's invocation
+/// payload type (typically an enum over all function inputs).
+pub trait FaasHost: Sized + 'static {
+    type Payload: 'static;
+    fn faas(&mut self) -> &mut FaasPlatform<Self>;
+}
+
+impl<W: FaasHost> Default for FaasPlatform<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W: FaasHost> FaasPlatform<W> {
+    pub fn new() -> FaasPlatform<W> {
+        FaasPlatform { funcs: Vec::new(), running: HashMap::new(), next_inv: 0 }
+    }
+
+    /// Register a function. The body receives every invocation and must
+    /// call [`complete`] when its work (including any scheduled
+    /// continuations) is finished.
+    pub fn register(
+        &mut self,
+        spec: FunctionSpec,
+        body: impl Fn(&mut Sim<W>, &mut W, Invocation<W::Payload>) + 'static,
+    ) -> FnId {
+        let id = self.funcs.len();
+        self.funcs.push(Function {
+            spec,
+            body: Rc::new(body),
+            warm: Vec::new(),
+            inflight: 0,
+            queued: VecDeque::new(),
+            next_env: 0,
+            stats: FnStats::default(),
+        });
+        id
+    }
+
+    pub fn stats(&self, f: FnId) -> &FnStats {
+        &self.funcs[f].stats
+    }
+
+    pub fn spec(&self, f: FnId) -> &FunctionSpec {
+        &self.funcs[f].spec
+    }
+
+    pub fn warm_pool(&self, f: FnId) -> usize {
+        self.funcs[f].warm.len()
+    }
+
+    pub fn inflight(&self, f: FnId) -> u32 {
+        self.funcs[f].inflight
+    }
+
+    /// Sum of GB-seconds across all functions (cost input).
+    pub fn total_gb_seconds(&self) -> f64 {
+        self.funcs.iter().map(|f| f.stats.gb_seconds).sum()
+    }
+
+    /// Whether an invocation is still alive (not completed or timed out).
+    /// Workers use this to avoid writing results from a killed environment.
+    pub fn is_live(&self, inv: InvId) -> bool {
+        self.running.contains_key(&inv)
+    }
+}
+
+/// Invoke a function asynchronously (fire-and-forget).
+pub fn invoke<W: FaasHost>(sim: &mut Sim<W>, w: &mut W, f: FnId, payload: W::Payload) {
+    invoke_inner(sim, w, f, payload, None);
+}
+
+/// Invoke a function with a completion callback: `on_done(sim, w, success)`
+/// runs when the invocation completes, fails, or times out. This is how
+/// Step Functions monitors worker executions (§4.4).
+pub fn invoke_cb<W: FaasHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    f: FnId,
+    payload: W::Payload,
+    on_done: impl FnOnce(&mut Sim<W>, &mut W, bool) + 'static,
+) {
+    invoke_inner(sim, w, f, payload, Some(Box::new(on_done)));
+}
+
+fn invoke_inner<W: FaasHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    f: FnId,
+    payload: W::Payload,
+    on_done: Option<OnDone<W>>,
+) {
+    let func = &mut w.faas().funcs[f];
+    func.stats.invocations += 1;
+    if func.inflight >= func.spec.concurrency {
+        func.stats.throttled += 1;
+        func.queued.push_back((payload, on_done));
+        return;
+    }
+    start_invocation(sim, w, f, payload, on_done);
+}
+
+fn start_invocation<W: FaasHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    f: FnId,
+    payload: W::Payload,
+    on_done: Option<OnDone<W>>,
+) {
+    let inv = {
+        let plat = w.faas();
+        let id = plat.next_inv;
+        plat.next_inv += 1;
+        id
+    };
+    let func = &mut w.faas().funcs[f];
+    func.inflight += 1;
+    func.stats.concurrent_peak = func.stats.concurrent_peak.max(func.inflight);
+
+    // Environment acquisition: reuse the most-recently-idle warm env
+    // (AWS reuses hot sandboxes first), else provision cold.
+    let (env, cold) = match func.warm.pop() {
+        Some((env, _)) => {
+            func.stats.warm_starts += 1;
+            (env, false)
+        }
+        None => {
+            func.stats.cold_starts += 1;
+            func.stats.envs_created += 1;
+            let env = func.next_env;
+            func.next_env += 1;
+            (env, true)
+        }
+    };
+    let (lo, hi) = if cold { func.spec.cold_start } else { func.spec.warm_init };
+    let timeout = func.spec.timeout;
+    let init = secs(sim.rng.uniform(lo, hi));
+
+    sim.after(init, "faas.start", move |sim, w| {
+        let started = sim.now();
+        w.faas().running.insert(inv, Running { fnid: f, env, started, on_done });
+        // Arm the timeout watchdog.
+        sim.after(timeout, "faas.timeout", move |sim, w| {
+            if w.faas().running.contains_key(&inv) {
+                let run = w.faas().running.remove(&inv).unwrap();
+                let func = &mut w.faas().funcs[run.fnid];
+                func.stats.timeouts += 1;
+                func.stats.failed += 1;
+                charge(func, run.started, sim.now());
+                // Environment is torn down (not returned to the pool).
+                func.inflight -= 1;
+                if let Some(cb) = run.on_done {
+                    cb(sim, w, false);
+                }
+                drain_queue(sim, w, f);
+            }
+        });
+        let body = Rc::clone(&w.faas().funcs[f].body);
+        body(sim, w, Invocation { inv, fnid: f, env, cold, payload });
+    });
+}
+
+fn charge<W: FaasHost>(func: &mut Function<W>, started: SimTime, ended: SimTime) {
+    let dur = ended.saturating_sub(started);
+    func.stats.exec_total += dur;
+    func.stats.gb_seconds +=
+        (func.spec.memory_mb as f64 / 1024.0) * (dur as f64 / 1_000_000.0);
+}
+
+/// Complete an invocation (called by the function body when its work is
+/// done). `success = false` triggers the failure path of any monitor
+/// callback. Completing an already-timed-out invocation is a no-op.
+pub fn complete<W: FaasHost>(sim: &mut Sim<W>, w: &mut W, inv: InvId, success: bool) {
+    let run = match w.faas().running.remove(&inv) {
+        Some(r) => r,
+        None => return, // timed out earlier
+    };
+    let f = run.fnid;
+    let func = &mut w.faas().funcs[f];
+    charge(func, run.started, sim.now());
+    if success {
+        func.stats.completed += 1;
+    } else {
+        func.stats.failed += 1;
+    }
+    func.inflight -= 1;
+    // Return the environment to the warm pool and arm an eviction probe.
+    let idle_since = sim.now();
+    func.warm.push((run.env, idle_since));
+    let keep_alive = func.spec.keep_alive;
+    let env = run.env;
+    sim.after(keep_alive, "faas.evict", move |_sim, w| {
+        let func = &mut w.faas().funcs[f];
+        // Evict only if the env is still idle since the same instant.
+        if let Some(pos) =
+            func.warm.iter().position(|&(e, since)| e == env && since == idle_since)
+        {
+            func.warm.swap_remove(pos);
+        }
+    });
+    if let Some(cb) = run.on_done {
+        cb(sim, w, success);
+    }
+    drain_queue(sim, w, f);
+}
+
+fn drain_queue<W: FaasHost>(sim: &mut Sim<W>, w: &mut W, f: FnId) {
+    let func = &mut w.faas().funcs[f];
+    if func.inflight < func.spec.concurrency {
+        if let Some((payload, on_done)) = func.queued.pop_front() {
+            start_invocation(sim, w, f, payload, on_done);
+        }
+    }
+}
+
+/// Convenience spec builders calibrated to the paper's deployment (§5).
+pub mod specs {
+    use super::FunctionSpec;
+    use crate::sim::time::{mins, secs};
+
+    /// The FaaS worker: 340 MB (≈0.2 vCPU, matching MWAA's per-task share),
+    /// 15-minute limit, 125 reserved concurrency. The container-image cold
+    /// start is the ~9.5 s the paper measures on single-task DAGs (12 s
+    /// cold wait vs 2.5 s warm median).
+    pub fn worker() -> FunctionSpec {
+        FunctionSpec {
+            name: "worker",
+            memory_mb: 340,
+            timeout: mins(15.0),
+            concurrency: 125,
+            cold_start: (8.0, 11.0),
+            warm_init: (0.05, 0.15),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// The scheduler function: 512 MB (≈0.35 vCPU).
+    pub fn scheduler() -> FunctionSpec {
+        FunctionSpec {
+            name: "scheduler",
+            memory_mb: 512,
+            timeout: mins(15.0),
+            concurrency: 1, // single serialized scheduler (§4.3)
+            cold_start: (2.0, 4.0),
+            warm_init: (0.01, 0.03),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// CDC pre-parse function (256–512 MB, ~1 s runtime in the cost model).
+    pub fn preparse() -> FunctionSpec {
+        FunctionSpec {
+            name: "cdc_preparse",
+            memory_mb: 512,
+            timeout: secs(60.0),
+            concurrency: 100,
+            cold_start: (0.3, 0.8),
+            warm_init: (0.005, 0.02),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// DAG-file parse function (component (3) in Fig. 1).
+    pub fn parser() -> FunctionSpec {
+        FunctionSpec {
+            name: "dag_parser",
+            memory_mb: 512,
+            timeout: mins(5.0),
+            concurrency: 10,
+            cold_start: (2.0, 4.0),
+            warm_init: (0.01, 0.03),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// Schedule updater (component (10)).
+    pub fn schedule_updater() -> FunctionSpec {
+        FunctionSpec {
+            name: "schedule_updater",
+            memory_mb: 256,
+            timeout: secs(60.0),
+            concurrency: 10,
+            cold_start: (0.3, 0.8),
+            warm_init: (0.005, 0.02),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// Executor forwarder (component (11)): SQS → Step Functions.
+    pub fn executor() -> FunctionSpec {
+        FunctionSpec {
+            name: "executor",
+            memory_mb: 256,
+            timeout: secs(60.0),
+            concurrency: 200,
+            cold_start: (0.3, 0.8),
+            warm_init: (0.005, 0.02),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// Failure handler (component (12.2)).
+    pub fn failure_handler() -> FunctionSpec {
+        FunctionSpec {
+            name: "failure_handler",
+            memory_mb: 256,
+            timeout: secs(60.0),
+            concurrency: 50,
+            cold_start: (0.3, 0.8),
+            warm_init: (0.005, 0.02),
+            keep_alive: mins(10.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{mins, SECOND};
+
+    struct World {
+        faas: FaasPlatform<World>,
+        done: Vec<(SimTime, InvId, bool)>,
+    }
+    impl FaasHost for World {
+        type Payload = u32;
+        fn faas(&mut self) -> &mut FaasPlatform<World> {
+            &mut self.faas
+        }
+    }
+
+    fn spec(conc: u32) -> FunctionSpec {
+        FunctionSpec {
+            name: "t",
+            memory_mb: 512,
+            timeout: mins(15.0),
+            concurrency: conc,
+            cold_start: (2.0, 2.0),
+            warm_init: (0.1, 0.1),
+            keep_alive: mins(10.0),
+        }
+    }
+
+    /// Body that sleeps `payload` seconds then completes.
+    fn sleeper(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<u32>) {
+        let dur = ctx.payload as u64 * SECOND;
+        let inv = ctx.inv;
+        sim.after(dur, "work", move |sim, w| complete(sim, w, inv, true));
+    }
+
+    fn world(conc: u32) -> (World, FnId) {
+        let mut w = World { faas: FaasPlatform::new(), done: Vec::new() };
+        let f = w.faas.register(spec(conc), sleeper);
+        (w, f)
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let (mut w, f) = world(10);
+        invoke(&mut sim, &mut w, f, 1);
+        sim.run_until(&mut w, 60 * SECOND, 1000);
+        assert_eq!(w.faas.stats(f).cold_starts, 1);
+        assert_eq!(w.faas.warm_pool(f), 1);
+        // Second invocation reuses the warm env.
+        invoke(&mut sim, &mut w, f, 1);
+        sim.run_until(&mut w, 120 * SECOND, 1000);
+        assert_eq!(w.faas.stats(f).cold_starts, 1);
+        assert_eq!(w.faas.stats(f).warm_starts, 1);
+        assert_eq!(w.faas.stats(f).envs_created, 1);
+    }
+
+    #[test]
+    fn keep_alive_eviction_forces_cold() {
+        let mut sim: Sim<World> = Sim::new(2);
+        let (mut w, f) = world(10);
+        invoke(&mut sim, &mut w, f, 1);
+        sim.run(&mut w, 1000); // completes ~3 s; eviction at ~13 min
+        assert_eq!(w.faas.warm_pool(f), 0, "evicted after keep-alive");
+        invoke(&mut sim, &mut w, f, 1);
+        sim.run(&mut w, 1000);
+        assert_eq!(w.faas.stats(f).cold_starts, 2, "T=30-style gap is cold");
+    }
+
+    #[test]
+    fn concurrency_cap_queues() {
+        let mut sim: Sim<World> = Sim::new(3);
+        let (mut w, f) = world(2);
+        for _ in 0..5 {
+            invoke(&mut sim, &mut w, f, 10);
+        }
+        // Immediately: only 2 running.
+        assert_eq!(w.faas.inflight(f), 2);
+        assert_eq!(w.faas.stats(f).throttled, 3);
+        sim.run(&mut w, 10_000);
+        assert_eq!(w.faas.stats(f).completed, 5);
+        assert_eq!(w.faas.stats(f).concurrent_peak, 2);
+    }
+
+    #[test]
+    fn parallel_burst_scales_out() {
+        // 125 concurrent invocations, concurrency 125: all run at once —
+        // the paper's "scales out in seconds to 125 workers".
+        let mut sim: Sim<World> = Sim::new(4);
+        let (mut w, f) = world(125);
+        for _ in 0..125 {
+            invoke(&mut sim, &mut w, f, 10);
+        }
+        // All done within cold start (2 s) + work (10 s) + slack — not
+        // 125 * 10 s.
+        sim.run_until(&mut w, 15 * SECOND, 100_000);
+        assert_eq!(w.faas.stats(f).concurrent_peak, 125);
+        assert_eq!(w.faas.stats(f).cold_starts, 125);
+        assert_eq!(w.faas.stats(f).completed, 125);
+        let _ = mins(0.0);
+    }
+
+    #[test]
+    fn timeout_kills_and_reports_failure() {
+        let mut sim: Sim<World> = Sim::new(5);
+        let mut w = World { faas: FaasPlatform::new(), done: Vec::new() };
+        let mut s = spec(10);
+        s.timeout = 5 * SECOND;
+        let f = w.faas.register(s, sleeper);
+        invoke_cb(&mut sim, &mut w, f, 60, |sim, w, ok| {
+            let t = sim.now();
+            w.done.push((t, 0, ok));
+        });
+        sim.run(&mut w, 10_000);
+        assert_eq!(w.faas.stats(f).timeouts, 1);
+        assert_eq!(w.done.len(), 1);
+        assert!(!w.done[0].2, "callback sees failure");
+        assert_eq!(w.faas.warm_pool(f), 0, "timed-out env not reused");
+    }
+
+    #[test]
+    fn gb_seconds_accounting() {
+        let mut sim: Sim<World> = Sim::new(6);
+        let (mut w, f) = world(10);
+        invoke(&mut sim, &mut w, f, 10); // 10 s at 512 MB = 5 GB-s
+        sim.run(&mut w, 10_000);
+        let gbs = w.faas.stats(f).gb_seconds;
+        assert!((gbs - 5.0).abs() < 0.01, "gb_seconds={gbs}");
+    }
+
+    #[test]
+    fn callback_fires_on_success() {
+        let mut sim: Sim<World> = Sim::new(7);
+        let (mut w, f) = world(10);
+        invoke_cb(&mut sim, &mut w, f, 2, |sim, w, ok| {
+            let t = sim.now();
+            w.done.push((t, 0, ok));
+        });
+        sim.run(&mut w, 1000);
+        assert_eq!(w.done.len(), 1);
+        assert!(w.done[0].2);
+        // cold 2 s + work 2 s.
+        assert!(w.done[0].0 >= 4 * SECOND);
+    }
+}

@@ -1,0 +1,31 @@
+//! The serverless cloud substrate, built from scratch on the DES core.
+//!
+//! Every AWS service in Fig. 1 of the paper has a simulator here, with
+//! behaviour and latency models calibrated to the numbers the paper itself
+//! reports (see DESIGN.md "Substitutions"):
+//!
+//! | Module        | AWS service                | Fig. 1 component |
+//! |---------------|----------------------------|------------------|
+//! | [`blob`]      | S3                         | (1), (13)        |
+//! | [`mq`]        | SQS (standard + FIFO)      | (2), (8)         |
+//! | [`db`]        | RDS PostgreSQL             | (4)              |
+//! | [`cdc`]       | DMS (capture + replication)| (5)              |
+//! | [`kinesis`]   | Kinesis Data Streams       | (5)→(6) transport|
+//! | [`eventbridge`]| EventBridge (rules + cron)| (6), (7)         |
+//! | [`faas`]      | Lambda                     | (3), (9)–(12)    |
+//! | [`caas`]      | Batch on Fargate           | (14)             |
+//! | [`stepfn`]    | Step Functions             | (11)–(12)        |
+//!
+//! Substrates are generic over the world type `W` through small `*Host`
+//! traits, so sAirflow, the MWAA baseline and unit tests each compose only
+//! what they need.
+
+pub mod blob;
+pub mod caas;
+pub mod cdc;
+pub mod db;
+pub mod eventbridge;
+pub mod faas;
+pub mod kinesis;
+pub mod mq;
+pub mod stepfn;

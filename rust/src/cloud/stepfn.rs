@@ -1,0 +1,102 @@
+//! Step Functions (serverless orchestrator, §4.4).
+//!
+//! sAirflow moves task-handling logic into a Step Functions state machine
+//! so no always-on worker polls the state of user tasks: the machine
+//! invokes the worker (Lambda or Batch), and on failure invokes a short
+//! failure-handler lambda. Each task execution performs 4 state
+//! transitions (the paper's cost model, Table 2).
+//!
+//! This module provides the transition-latency/accounting substrate; the
+//! executor module composes the actual machine over [`faas`]/[`caas`].
+
+use crate::sim::engine::Sim;
+use crate::sim::time::{secs, SimDuration};
+
+/// Statistics (drive the Step Functions row of the cost model).
+#[derive(Debug, Default, Clone)]
+pub struct StepFnStats {
+    pub executions: u64,
+    pub transitions: u64,
+    pub failure_paths: u64,
+}
+
+/// The Step Functions service.
+#[derive(Debug)]
+pub struct StepFunctions {
+    /// Latency of one state transition (seconds, uniform). AWS standard
+    /// workflows transition in the tens of milliseconds.
+    pub transition_latency: (f64, f64),
+    pub stats: StepFnStats,
+}
+
+impl Default for StepFunctions {
+    fn default() -> StepFunctions {
+        StepFunctions { transition_latency: (0.02, 0.05), stats: StepFnStats::default() }
+    }
+}
+
+/// World types hosting Step Functions.
+pub trait StepFnHost: Sized + 'static {
+    fn stepfn(&mut self) -> &mut StepFunctions;
+}
+
+/// Begin a state-machine execution (counts the execution and its first
+/// transition) and run `next` after the transition latency.
+pub fn begin<W: StepFnHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    next: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+) {
+    let sf = w.stepfn();
+    sf.stats.executions += 1;
+    transition(sim, w, next);
+}
+
+/// One state transition: accounting + latency, then `next`.
+pub fn transition<W: StepFnHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    next: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+) {
+    let sf = w.stepfn();
+    sf.stats.transitions += 1;
+    let (lo, hi) = sf.transition_latency;
+    let d: SimDuration = secs(sim.rng.uniform(lo, hi));
+    sim.after(d, "stepfn.transition", next);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct World {
+        sf: StepFunctions,
+        trace: Vec<&'static str>,
+    }
+    impl StepFnHost for World {
+        fn stepfn(&mut self) -> &mut StepFunctions {
+            &mut self.sf
+        }
+    }
+
+    #[test]
+    fn transitions_are_counted_and_delayed() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World { sf: StepFunctions::default(), trace: Vec::new() };
+        begin(&mut sim, &mut w, |sim, w| {
+            w.trace.push("invoke");
+            transition(sim, w, |sim, w| {
+                w.trace.push("check");
+                transition(sim, w, |sim, w| {
+                    w.trace.push("save");
+                    transition(sim, w, |_sim, w| w.trace.push("end"));
+                });
+            });
+        });
+        sim.run(&mut w, 100);
+        assert_eq!(w.trace, vec!["invoke", "check", "save", "end"]);
+        assert_eq!(w.sf.stats.executions, 1);
+        assert_eq!(w.sf.stats.transitions, 4); // the paper's 4 per task
+        assert!(sim.now() >= secs(0.08) && sim.now() <= secs(0.20));
+    }
+}

@@ -1,0 +1,180 @@
+//! Structural analysis of DAGs: adjacency, critical path, longest path,
+//! maximum parallelism.
+//!
+//! These quantities drive both scheduling (downstream adjacency, ready-set
+//! computation) and the paper's evaluation metrics: Appendix D normalizes
+//! the DAG overhead by `n_L / n_W` where `n_L` is the number of nodes on
+//! the longest path and `n_W` the maximum parallelism (Eq. 1).
+
+use crate::dag::spec::DagSpec;
+use crate::sim::time::SimDuration;
+
+/// Precomputed adjacency and per-node degree information for a [`DagSpec`].
+#[derive(Debug, Clone)]
+pub struct DagGraph {
+    pub n: usize,
+    /// `downstream[i]` = tasks that depend on `i`.
+    pub downstream: Vec<Vec<u32>>,
+    /// `upstream[i]` = dependencies of `i` (copy of spec deps).
+    pub upstream: Vec<Vec<u32>>,
+    /// In-degree of each node.
+    pub indegree: Vec<u32>,
+    /// Task durations (nominal payload duration), microseconds.
+    pub dur: Vec<SimDuration>,
+}
+
+impl DagGraph {
+    pub fn of(spec: &DagSpec) -> DagGraph {
+        let n = spec.tasks.len();
+        let mut downstream = vec![Vec::new(); n];
+        let mut upstream = vec![Vec::new(); n];
+        let mut indegree = vec![0u32; n];
+        let mut dur = vec![0; n];
+        for t in &spec.tasks {
+            dur[t.id as usize] = t.payload.nominal();
+            for &d in &t.deps {
+                downstream[d as usize].push(t.id);
+                upstream[t.id as usize].push(d);
+                indegree[t.id as usize] += 1;
+            }
+        }
+        DagGraph { n, downstream, upstream, indegree, dur }
+    }
+
+    /// Root tasks (no dependencies).
+    pub fn roots(&self) -> Vec<u32> {
+        (0..self.n as u32).filter(|&i| self.indegree[i as usize] == 0).collect()
+    }
+
+    /// Leaf tasks (nothing downstream).
+    pub fn leaves(&self) -> Vec<u32> {
+        (0..self.n as u32).filter(|&i| self.downstream[i as usize].is_empty()).collect()
+    }
+
+    /// A topological order (tasks are constructed deps-first, so identity
+    /// order is already topological; kept explicit for clarity and checks).
+    pub fn topo_order(&self) -> Vec<u32> {
+        (0..self.n as u32).collect()
+    }
+
+    /// Critical path *duration*: the maximum, over paths, of the sum of
+    /// task durations along the path (the paper's `p_d`).
+    pub fn critical_path_duration(&self) -> SimDuration {
+        let mut best = vec![0u64; self.n];
+        let mut overall = 0;
+        for i in 0..self.n {
+            let up_best =
+                self.upstream[i].iter().map(|&u| best[u as usize]).max().unwrap_or(0);
+            best[i] = up_best + self.dur[i];
+            overall = overall.max(best[i]);
+        }
+        overall
+    }
+
+    /// Longest path in *node count* (the paper's `n_L`).
+    pub fn longest_path_nodes(&self) -> u32 {
+        let mut best = vec![0u32; self.n];
+        let mut overall = 0;
+        for i in 0..self.n {
+            let up_best =
+                self.upstream[i].iter().map(|&u| best[u as usize]).max().unwrap_or(0);
+            best[i] = up_best + 1;
+            overall = overall.max(best[i]);
+        }
+        overall
+    }
+
+    /// Maximum parallelism `n_W`: the maximum number of tasks that would
+    /// run concurrently on an overhead-free system with unlimited
+    /// resources. Computed by simulating the ideal schedule: each task
+    /// starts the instant its last dependency finishes.
+    pub fn max_parallelism(&self) -> u32 {
+        // Ideal start/end times.
+        let mut end = vec![0u64; self.n];
+        let mut intervals = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let start = self.upstream[i].iter().map(|&u| end[u as usize]).max().unwrap_or(0);
+            end[i] = start + self.dur[i];
+            intervals.push((start, end[i]));
+        }
+        // Sweep over the endpoints of positive-duration intervals
+        // (half-open [s, e)): zero-duration tasks occupy no time, so they
+        // never overlap anything. A DAG of only zero-duration tasks still
+        // runs one task at a time.
+        let mut events: Vec<(u64, i32)> = Vec::with_capacity(self.n * 2);
+        for &(s, e) in &intervals {
+            if e > s {
+                events.push((s, 1));
+                events.push((e, -1));
+            }
+        }
+        events.sort_unstable();
+        let mut cur = 0i32;
+        let mut peak = 0i32;
+        for (_, delta) in events {
+            cur += delta;
+            peak = peak.max(cur);
+        }
+        peak.max(1) as u32
+    }
+
+    /// The paper's Eq. 1 normalization factor `n_L / n_W`.
+    pub fn parallelizability_factor(&self) -> f64 {
+        let nw = self.max_parallelism().max(1) as f64;
+        self.longest_path_nodes() as f64 / nw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::spec::DagSpec;
+    use crate::workloads::synthetic::{chain_dag, parallel_dag};
+
+    #[test]
+    fn chain_structure() {
+        let d = chain_dag("c", 5, 10.0, 5.0);
+        let g = DagGraph::of(&d);
+        assert_eq!(g.roots(), vec![0]);
+        assert_eq!(g.leaves(), vec![4]);
+        assert_eq!(g.longest_path_nodes(), 5);
+        assert_eq!(g.max_parallelism(), 1);
+        assert_eq!(g.critical_path_duration(), 5 * 10 * 1_000_000);
+        assert!((g.parallelizability_factor() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_structure() {
+        // Startup task + n parallel tasks (§5): optimal execution time is p.
+        let d = parallel_dag("p", 8, 10.0, 5.0);
+        let g = DagGraph::of(&d);
+        assert_eq!(g.roots(), vec![0]);
+        assert_eq!(g.leaves().len(), 8);
+        assert_eq!(g.longest_path_nodes(), 2);
+        assert_eq!(g.max_parallelism(), 8);
+        assert_eq!(g.critical_path_duration(), 10 * 1_000_000);
+    }
+
+    #[test]
+    fn diamond_parallelism() {
+        let mut d = DagSpec::new("diamond");
+        let a = d.sleep_task("a", 1.0, &[]);
+        let b = d.sleep_task("b", 1.0, &[a]);
+        let c = d.sleep_task("c", 1.0, &[a]);
+        let _e = d.sleep_task("e", 1.0, &[b, c]);
+        let g = DagGraph::of(&d);
+        assert_eq!(g.max_parallelism(), 2);
+        assert_eq!(g.longest_path_nodes(), 3);
+        assert_eq!(g.critical_path_duration(), 3_000_000);
+    }
+
+    #[test]
+    fn zero_duration_tasks_counted() {
+        let mut d = DagSpec::new("z");
+        let a = d.sleep_task("a", 0.0, &[]);
+        let _b = d.sleep_task("b", 0.0, &[a]);
+        let g = DagGraph::of(&d);
+        assert_eq!(g.max_parallelism(), 1);
+        assert_eq!(g.longest_path_nodes(), 2);
+    }
+}

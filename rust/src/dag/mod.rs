@@ -1,0 +1,10 @@
+//! DAG model: workflow definitions, task/run state machines, and
+//! structural graph analysis.
+
+pub mod graph;
+pub mod spec;
+pub mod state;
+
+pub use graph::DagGraph;
+pub use spec::{DagSpec, ExecKind, Payload, TaskSpec};
+pub use state::{RunState, TiState};

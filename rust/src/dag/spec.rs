@@ -1,0 +1,324 @@
+//! DAG definitions ("DAG files").
+//!
+//! In Airflow a workflow is a Python file; users upload it to blob storage
+//! and the parse function turns it into a *serialized DAG* in the metadata
+//! database. Our DAG files are JSON documents with the same roles: the
+//! [`DagSpec`] below is both the on-blob format (via
+//! [`DagSpec::to_json`]/[`DagSpec::parse`]) and the serialized form stored
+//! in the metadata DB.
+
+use crate::sim::time::{secs, SimDuration};
+use crate::util::json::Json;
+
+/// Which executor a task should run on (§4.4): FaaS (AWS-Lambda-like, up
+/// to 15 min) or CaaS (Batch/Fargate-like containers, unbounded duration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecKind {
+    Faas,
+    Caas,
+}
+
+impl ExecKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecKind::Faas => "faas",
+            ExecKind::Caas => "caas",
+        }
+    }
+}
+
+/// What a task does when it runs.
+///
+/// The paper's evaluation uses `sleep(p)` tasks (§5: "tasks in both
+/// realistic and synthetic DAGs sleep() for time p"). The `Compute` payload
+/// additionally exercises the data plane: an AOT-compiled JAX/Pallas
+/// artifact executed through PJRT by the worker (see `runtime`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Sleep for the given virtual duration.
+    Sleep(SimDuration),
+    /// Execute a compiled pipeline-stage artifact `iters` times over a
+    /// batch of `rows` rows. Wall time is measured and charged to the
+    /// task in virtual time.
+    Compute { artifact: String, iters: u32, rows: u32 },
+    /// Fail deterministically on the first `fail_tries` attempts, then
+    /// sleep. Used by failure-injection tests.
+    Flaky { sleep: SimDuration, fail_tries: u32 },
+}
+
+impl Payload {
+    /// Nominal duration (the paper's `p`) when known statically.
+    pub fn nominal(&self) -> SimDuration {
+        match self {
+            Payload::Sleep(d) => *d,
+            Payload::Compute { .. } => 0,
+            Payload::Flaky { sleep, .. } => *sleep,
+        }
+    }
+}
+
+/// One task in a DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// Task index, unique within the DAG; also its topological identity.
+    pub id: u32,
+    pub name: String,
+    pub payload: Payload,
+    /// Upstream dependencies (task ids that must succeed first).
+    pub deps: Vec<u32>,
+    pub executor: ExecKind,
+    /// Number of retries after a failure (Airflow `retries`).
+    pub retries: u32,
+}
+
+/// A workflow definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagSpec {
+    pub dag_id: String,
+    /// Schedule period (the paper's `T`); `None` = manual triggering only.
+    pub period: Option<SimDuration>,
+    /// Airflow's `max_active_runs`: concurrent non-terminal runs of this
+    /// DAG (the Appendix D protocol "prevents DAG runs from overlapping"
+    /// by choosing T > critical path; this enforces it structurally).
+    pub max_active_runs: u32,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl DagSpec {
+    /// Create an unscheduled DAG.
+    pub fn new(dag_id: &str) -> DagSpec {
+        DagSpec {
+            dag_id: dag_id.to_string(),
+            period: None,
+            max_active_runs: 16,
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Builder-style: set schedule period in minutes (the paper's `T`).
+    pub fn every_minutes(mut self, t: f64) -> DagSpec {
+        self.period = Some(secs(t * 60.0));
+        self
+    }
+
+    /// Builder-style: limit concurrent runs (Airflow `max_active_runs`).
+    pub fn max_active_runs(mut self, n: u32) -> DagSpec {
+        self.max_active_runs = n;
+        self
+    }
+
+    /// Builder-style: add a sleep task with dependencies; returns its id.
+    pub fn sleep_task(&mut self, name: &str, p_secs: f64, deps: &[u32]) -> u32 {
+        self.add_task(name, Payload::Sleep(secs(p_secs)), deps, ExecKind::Faas)
+    }
+
+    /// Builder-style: add an arbitrary task; returns its id.
+    pub fn add_task(
+        &mut self,
+        name: &str,
+        payload: Payload,
+        deps: &[u32],
+        executor: ExecKind,
+    ) -> u32 {
+        let id = self.tasks.len() as u32;
+        for &d in deps {
+            assert!(d < id, "dependency {d} of task {id} not yet defined");
+        }
+        self.tasks.push(TaskSpec {
+            id,
+            name: name.to_string(),
+            payload,
+            deps: deps.to_vec(),
+            executor,
+            retries: 0,
+        });
+        id
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Validate the DAG: ids dense and ordered, deps acyclic (guaranteed by
+    /// deps-precede-task), no self-deps, no duplicate deps.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id as usize != i {
+                return Err(format!("task id {} at position {i}", t.id));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &d in &t.deps {
+                if d >= t.id {
+                    return Err(format!("task {} depends on later/equal task {d}", t.id));
+                }
+                if !seen.insert(d) {
+                    return Err(format!("task {} has duplicate dep {d}", t.id));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize as a DAG file (JSON).
+    pub fn to_json(&self) -> Json {
+        let tasks: Vec<Json> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let payload = match &t.payload {
+                    Payload::Sleep(d) => {
+                        Json::obj().set("kind", "sleep").set("secs", *d as f64 / 1e6)
+                    }
+                    Payload::Compute { artifact, iters, rows } => Json::obj()
+                        .set("kind", "compute")
+                        .set("artifact", artifact.as_str())
+                        .set("iters", *iters as u64)
+                        .set("rows", *rows as u64),
+                    Payload::Flaky { sleep, fail_tries } => Json::obj()
+                        .set("kind", "flaky")
+                        .set("secs", *sleep as f64 / 1e6)
+                        .set("fail_tries", *fail_tries as u64),
+                };
+                Json::obj()
+                    .set("id", t.id as u64)
+                    .set("name", t.name.as_str())
+                    .set("payload", payload)
+                    .set("deps", t.deps.iter().map(|d| Json::from(*d as u64)).collect::<Vec<_>>())
+                    .set("executor", t.executor.name())
+                    .set("retries", t.retries as u64)
+            })
+            .collect();
+        let mut obj = Json::obj()
+            .set("dag_id", self.dag_id.as_str())
+            .set("max_active_runs", self.max_active_runs as u64)
+            .set("tasks", Json::Arr(tasks));
+        obj = match self.period {
+            Some(p) => obj.set("period_secs", p as f64 / 1e6),
+            None => obj.set("period_secs", Json::Null),
+        };
+        obj
+    }
+
+    /// Parse a DAG file. This is what the parse function (component (3) in
+    /// Fig. 1) runs on upload notifications.
+    pub fn parse(doc: &Json) -> Result<DagSpec, String> {
+        let dag_id = doc.str_field("dag_id")?.to_string();
+        let period = match doc.get("period_secs") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(secs(v.as_f64().ok_or("period_secs must be a number")?)),
+        };
+        let tasks_json =
+            doc.get("tasks").and_then(|t| t.as_arr()).ok_or("missing 'tasks' array")?;
+        let mut tasks = Vec::with_capacity(tasks_json.len());
+        for tj in tasks_json {
+            let id = tj.num_field("id")? as u32;
+            let name = tj.str_field("name")?.to_string();
+            let pj = tj.get("payload").ok_or("missing payload")?;
+            let payload = match pj.str_field("kind")? {
+                "sleep" => Payload::Sleep(secs(pj.num_field("secs")?)),
+                "compute" => Payload::Compute {
+                    artifact: pj.str_field("artifact")?.to_string(),
+                    iters: pj.num_field("iters")? as u32,
+                    rows: pj.num_field("rows")? as u32,
+                },
+                "flaky" => Payload::Flaky {
+                    sleep: secs(pj.num_field("secs")?),
+                    fail_tries: pj.num_field("fail_tries")? as u32,
+                },
+                k => return Err(format!("unknown payload kind '{k}'")),
+            };
+            let deps = tj
+                .get("deps")
+                .and_then(|d| d.as_arr())
+                .ok_or("missing deps")?
+                .iter()
+                .map(|d| d.as_f64().map(|f| f as u32).ok_or_else(|| "bad dep".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            let executor = match tj.str_field("executor")? {
+                "faas" => ExecKind::Faas,
+                "caas" => ExecKind::Caas,
+                e => return Err(format!("unknown executor '{e}'")),
+            };
+            let retries = tj.num_field("retries")? as u32;
+            tasks.push(TaskSpec { id, name, payload, deps, executor, retries });
+        }
+        let max_active_runs = doc
+            .get("max_active_runs")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u32)
+            .unwrap_or(16);
+        let spec = DagSpec { dag_id, period, max_active_runs, tasks };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SECOND;
+
+    fn sample() -> DagSpec {
+        let mut d = DagSpec::new("etl").every_minutes(5.0);
+        let a = d.sleep_task("extract", 10.0, &[]);
+        let b = d.sleep_task("transform", 5.0, &[a]);
+        let _c = d.add_task(
+            "load",
+            Payload::Compute { artifact: "fused_transform".into(), iters: 2, rows: 256 },
+            &[b],
+            ExecKind::Caas,
+        );
+        d
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let d = sample();
+        let j = d.to_json();
+        let back = DagSpec::parse(&j).unwrap();
+        assert_eq!(d, back);
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let d = sample();
+        let text = d.to_json().to_string_pretty();
+        let back = DagSpec::parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(d, back);
+    }
+
+    #[test]
+    fn validate_rejects_forward_deps() {
+        let mut d = DagSpec::new("bad");
+        d.tasks.push(TaskSpec {
+            id: 0,
+            name: "t".into(),
+            payload: Payload::Sleep(SECOND),
+            deps: vec![1],
+            executor: ExecKind::Faas,
+            retries: 0,
+        });
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_executor() {
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(tasks)) = m.get_mut("tasks") {
+                if let Json::Obj(t0) = &mut tasks[0] {
+                    t0.insert("executor".into(), Json::Str("gpu".into()));
+                }
+            }
+        }
+        assert!(DagSpec::parse(&j).is_err());
+    }
+
+    #[test]
+    fn unscheduled_dag_roundtrip() {
+        let mut d = DagSpec::new("manual");
+        d.sleep_task("only", 1.0, &[]);
+        let back = DagSpec::parse(&d.to_json()).unwrap();
+        assert_eq!(back.period, None);
+    }
+}

@@ -1,0 +1,147 @@
+//! Airflow state machines for DAG runs and task instances.
+//!
+//! We reproduce the subset of Airflow 2.4 states the paper's control flow
+//! exercises (§3, §4.1): a task instance goes
+//! `None → Scheduled → Queued → Running → {Success, Failed, UpForRetry}`,
+//! and `UpForRetry → Scheduled` again; a DAG run goes
+//! `Queued → Running → {Success, Failed}`.
+
+use std::fmt;
+
+/// State of a task instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TiState {
+    /// Created, waiting for dependencies.
+    None,
+    /// All upstream tasks done; picked by a scheduler pass.
+    Scheduled,
+    /// Handed to an executor queue.
+    Queued,
+    /// A worker is executing the task.
+    Running,
+    /// Finished successfully.
+    Success,
+    /// Finished with a failure; no retries left.
+    Failed,
+    /// Failed but will be rescheduled.
+    UpForRetry,
+    /// A dependency failed terminally; this task will never run
+    /// (Airflow's `upstream_failed`).
+    UpstreamFailed,
+}
+
+impl TiState {
+    /// Terminal states (no further transitions).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TiState::Success | TiState::Failed | TiState::UpstreamFailed)
+    }
+
+    /// States that occupy an executor slot.
+    pub fn is_active(self) -> bool {
+        matches!(self, TiState::Queued | TiState::Running)
+    }
+
+    /// Whether `self -> next` is a legal Airflow transition. Used by the
+    /// metadata DB to reject corrupted control flow, and by property tests.
+    pub fn can_transition_to(self, next: TiState) -> bool {
+        use TiState::*;
+        matches!(
+            (self, next),
+            (None, Scheduled)
+                | (Scheduled, Queued)
+                | (Queued, Running)
+                | (Running, Success)
+                | (Running, Failed)
+                | (Running, UpForRetry)
+                | (UpForRetry, Scheduled)
+                // Executor-level failure before the task starts:
+                | (Queued, Failed)
+                | (Queued, UpForRetry)
+                // Dependency failed terminally before this task started:
+                | (None, UpstreamFailed)
+                | (Scheduled, UpstreamFailed)
+        )
+    }
+}
+
+impl fmt::Display for TiState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            TiState::None => "none",
+            TiState::Scheduled => "scheduled",
+            TiState::Queued => "queued",
+            TiState::Running => "running",
+            TiState::Success => "success",
+            TiState::Failed => "failed",
+            TiState::UpForRetry => "up_for_retry",
+            TiState::UpstreamFailed => "upstream_failed",
+        };
+        f.write_str(s)
+    }
+}
+
+/// State of a DAG run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RunState {
+    Queued,
+    Running,
+    Success,
+    Failed,
+}
+
+impl RunState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, RunState::Success | RunState::Failed)
+    }
+}
+
+impl fmt::Display for RunState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            RunState::Queued => "queued",
+            RunState::Running => "running",
+            RunState::Success => "success",
+            RunState::Failed => "failed",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path_is_legal() {
+        use TiState::*;
+        let path = [None, Scheduled, Queued, Running, Success];
+        for w in path.windows(2) {
+            assert!(w[0].can_transition_to(w[1]), "{:?} -> {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn retry_loop_is_legal() {
+        use TiState::*;
+        assert!(Running.can_transition_to(UpForRetry));
+        assert!(UpForRetry.can_transition_to(Scheduled));
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        use TiState::*;
+        assert!(!Success.can_transition_to(Running));
+        assert!(!None.can_transition_to(Running));
+        assert!(!Failed.can_transition_to(Scheduled));
+        assert!(!Queued.can_transition_to(Success));
+    }
+
+    #[test]
+    fn terminal_flags() {
+        assert!(TiState::Success.is_terminal());
+        assert!(TiState::Failed.is_terminal());
+        assert!(!TiState::UpForRetry.is_terminal());
+        assert!(RunState::Success.is_terminal());
+        assert!(!RunState::Running.is_terminal());
+    }
+}

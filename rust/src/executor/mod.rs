@@ -1,0 +1,129 @@
+//! Executors (§4.4): forwarding queued tasks to workers via Step
+//! Functions, and handling worker failures.
+//!
+//! Both executors share the framework algorithm (invoke → pull config →
+//! pull DAG files → start task → push logs); they differ only in the
+//! service running the worker: the **function executor** uses FaaS (AWS
+//! Lambda, ≤15 min), the **container executor** uses CaaS (AWS Batch on
+//! Fargate, unbounded duration, cold every time).
+//!
+//! Step Functions wraps every task execution so that no sAirflow code
+//! waits on user work: the machine invokes the worker and, if the worker
+//! fails (crash or timeout), invokes a short failure-handler lambda that
+//! updates the metadata DB (which, through CDC, re-triggers the
+//! scheduler).
+
+use crate::cloud::db::{self, Txn, Write};
+use crate::cloud::{caas, faas, stepfn};
+use crate::dag::state::TiState;
+use crate::sairflow::world::{FnPayload, World};
+use crate::sim::engine::Sim;
+
+/// Reference to one task instance (queue/worker payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskRef {
+    pub dag_id: String,
+    pub run_id: u64,
+    pub task_id: u32,
+}
+
+impl TaskRef {
+    pub fn key(&self) -> crate::cloud::db::TiKey {
+        (self.dag_id.clone(), self.run_id, self.task_id)
+    }
+}
+
+/// Function executor (Fig. 1 (11)): start the Step Functions machine that
+/// invokes the FaaS worker and monitors it.
+///
+/// State machine (4 transitions per task, matching the paper's cost
+/// model): Start → InvokeWorker → (ok → Record → End) / (fail →
+/// FailureHandler → End).
+pub fn forward_function(sim: &mut Sim<World>, w: &mut World, tr: TaskRef) {
+    stepfn::begin(sim, w, move |sim, w| {
+        let worker_fn = w.fns.worker;
+        let tr2 = tr.clone();
+        faas::invoke_cb(sim, w, worker_fn, FnPayload::Worker(tr), move |sim, w, ok| {
+            stepfn::transition(sim, w, move |sim, w| {
+                if ok {
+                    // Record-result transition, then end.
+                    stepfn::transition(sim, w, |sim, w| {
+                        stepfn::transition(sim, w, |_sim, _w| {});
+                    });
+                } else {
+                    // Failure path: invoke the failure handler (12.2).
+                    w.stepfn.stats.failure_paths += 1;
+                    let f = w.fns.failure;
+                    faas::invoke(sim, w, f, FnPayload::FailureHandle(tr2));
+                    stepfn::transition(sim, w, |sim, w| {
+                        stepfn::transition(sim, w, |_sim, _w| {});
+                    });
+                }
+            });
+        });
+    });
+}
+
+/// Container executor (Fig. 1 (14)): same machine, worker on Batch/Fargate.
+pub fn forward_container(sim: &mut Sim<World>, w: &mut World, tr: TaskRef) {
+    stepfn::begin(sim, w, move |sim, w| {
+        let tr2 = tr.clone();
+        caas::submit_cb(sim, w, tr, move |sim, w, ok| {
+            stepfn::transition(sim, w, move |sim, w| {
+                if ok {
+                    stepfn::transition(sim, w, |sim, w| {
+                        stepfn::transition(sim, w, |_sim, _w| {});
+                    });
+                } else {
+                    w.stepfn.stats.failure_paths += 1;
+                    let f = w.fns.failure;
+                    faas::invoke(sim, w, f, FnPayload::FailureHandle(tr2));
+                    stepfn::transition(sim, w, |sim, w| {
+                        stepfn::transition(sim, w, |_sim, _w| {});
+                    });
+                }
+            });
+        });
+    });
+}
+
+/// The failure handler (Fig. 1 (12.2)): a short lambda that decides retry
+/// vs terminal failure from the task instance's try count and commits the
+/// state change (the CDC event then re-triggers the scheduler).
+pub fn handle_failure(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    tr: TaskRef,
+    done: impl FnOnce(&mut Sim<World>, &mut World) + 'static,
+) {
+    let key = tr.key();
+    let db_ = w.db.read();
+    let Some(row) = db_.task_instances.get(&key) else {
+        done(sim, w);
+        return;
+    };
+    let retries = db_
+        .serialized
+        .get(&tr.dag_id)
+        .and_then(|s| s.tasks.get(tr.task_id as usize))
+        .map(|t| t.retries)
+        .unwrap_or(0);
+    // try_number was incremented when the task entered Running. If the
+    // failure happened before Running (executor-level), count it as a try.
+    let tries = row.try_number.max(1);
+    let state = if tries <= retries { TiState::UpForRetry } else { TiState::Failed };
+    let mut txn = Txn::new();
+    txn.push(Write::SetTiState { key, state });
+    db::commit(sim, w, txn, done);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taskref_key_roundtrip() {
+        let tr = TaskRef { dag_id: "d".into(), run_id: 3, task_id: 7 };
+        assert_eq!(tr.key(), ("d".to_string(), 3, 7));
+    }
+}

@@ -1,0 +1,44 @@
+//! # sAirflow — a serverless workflow scheduler (paper reproduction)
+//!
+//! Reproduction of *"sAirflow: Adopting Serverless in a Legacy Workflow
+//! Scheduler"* (Mikina, Zuk, Rzadca — Euro-Par 2024).
+//!
+//! The library implements, from scratch:
+//!
+//! * a deterministic discrete-event simulation of the serverless cloud
+//!   ([`sim`], [`cloud`]): blob storage, SQS-like queues, a transactional
+//!   metadata database with a write-ahead log, DMS-like change data capture,
+//!   an EventBridge-like router + cron, a FaaS platform with cold/warm
+//!   environment pools, a Batch/Fargate-like container service, and a Step
+//!   Functions-like state machine runner;
+//! * the sAirflow system itself ([`dag`], [`parser`], [`scheduler`],
+//!   [`executor`], [`worker`], [`sairflow`]): an event-driven control plane
+//!   in which every control transition is triggered by a CDC event over the
+//!   metadata database — no component polls;
+//! * the MWAA baseline ([`mwaa`]): classic Airflow with an always-on polling
+//!   scheduler, Celery-style workers and a slow autoscaler;
+//! * workload generators ([`workloads`]) for chain / parallel /
+//!   parallel-forest DAGs and Alibaba-trace-like DAGs;
+//! * metrics ([`metrics`]) and the monetary cost model ([`cost`]);
+//! * an experiment harness ([`exp`]) regenerating every table and figure of
+//!   the paper's evaluation;
+//! * a PJRT runtime ([`runtime`]) that loads JAX/Pallas-authored,
+//!   AOT-compiled HLO artifacts and executes them as task payloads — the
+//!   data-plane compute of the pipelines the scheduler orchestrates.
+
+pub mod api;
+pub mod cloud;
+pub mod cost;
+pub mod dag;
+pub mod executor;
+pub mod exp;
+pub mod metrics;
+pub mod mwaa;
+pub mod parser;
+pub mod runtime;
+pub mod sairflow;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod worker;
+pub mod workloads;

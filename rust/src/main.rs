@@ -1,0 +1,221 @@
+//! sAirflow CLI: run experiments, print cost tables, inspect workloads.
+//!
+//! ```text
+//! sairflow run    --system sairflow|mwaa --workload chain|parallel|forest|alibaba \
+//!                 [--n 16] [--p 10] [--t 5] [--k 4] [--seed 7] [--warm] [--gantt]
+//! sairflow cost   [--scenario heavy|distributed|sporadic|constant]
+//! sairflow dags   [--seed 20240501]          # Alibaba-like workload inventory
+//! sairflow artifacts [--dir artifacts]       # list + smoke-run PJRT artifacts
+//! ```
+
+use sairflow::cost;
+use sairflow::exp::{self, ExperimentSpec, SystemKind};
+use sairflow::metrics::gantt;
+use sairflow::util::cli::Args;
+use sairflow::workloads::{alibaba, synthetic};
+
+fn main() {
+    let args = Args::from_env(&["warm", "gantt", "caas", "ha"]);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("dags") => cmd_dags(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: sairflow <run|cost|dags|artifacts> [options]\n\
+                 \n\
+                 run:       --system sairflow|mwaa --workload chain|parallel|forest|alibaba\n\
+                 \u{20}          --n <tasks> --p <secs> --t <minutes> --k <copies> --seed <n>\n\
+                 \u{20}          --warm (skip first run / pin MWAA workers) --gantt --caas\n\
+                 cost:      print the paper's cost tables (1-6)\n\
+                 dags:      print the Alibaba-like workload inventory\n\
+                 artifacts: list and smoke-run the AOT artifacts (--dir artifacts)"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let system = args.get_or("system", "sairflow");
+    let workload = args.get_or("workload", "parallel");
+    let n = args.get_u64("n", 16) as u32;
+    let p = args.get_f64("p", 10.0);
+    let t = args.get_f64("t", if args.flag("warm") { 5.0 } else { 30.0 });
+    let k = args.get_u64("k", 4) as u32;
+    let seed = args.get_u64("seed", 7);
+    let warm = args.flag("warm");
+    let caas = args.flag("caas");
+
+    let dags = match workload {
+        "chain" => {
+            if caas {
+                vec![synthetic::chain_dag_caas("chain", n, p, t)]
+            } else {
+                vec![synthetic::chain_dag("chain", n, p, t)]
+            }
+        }
+        "parallel" => {
+            if caas {
+                vec![synthetic::parallel_dag_caas("parallel", n, p, t)]
+            } else {
+                vec![synthetic::parallel_dag("parallel", n, p, t)]
+            }
+        }
+        "forest" => synthetic::parallel_forest("forest", k, n, p, t),
+        "alibaba" => {
+            let mut set = alibaba::alibaba_set(seed, 30);
+            for d in &mut set {
+                let tm = alibaba::period_minutes_for(d);
+                *d = d.clone().every_minutes(tm);
+            }
+            set
+        }
+        other => {
+            eprintln!("unknown workload '{other}'");
+            std::process::exit(2);
+        }
+    };
+
+    let sys = match system {
+        "sairflow" => SystemKind::Sairflow,
+        "mwaa" => SystemKind::Mwaa { warm },
+        other => {
+            eprintln!("unknown system '{other}'");
+            std::process::exit(2);
+        }
+    };
+
+    let spec = ExperimentSpec {
+        label: format!("{system}/{workload} n={n} p={p} T={t} seed={seed} warm={warm}"),
+        system: sys,
+        dags,
+        seed,
+        horizon: ExperimentSpec::paper_horizon(t),
+        skip_first_run: warm,
+    };
+    let res = exp::run(&spec);
+    println!("{}", res.report.text());
+    println!("platform: {}", res.extras.to_string_compact());
+
+    if args.flag("gantt") {
+        // Render the busiest run of the first DAG.
+        if let Some(run) = res
+            .sink
+            .runs
+            .iter()
+            .max_by(|a, b| a.makespan().partial_cmp(&b.makespan()).unwrap())
+        {
+            let tasks = res.sink.tasks_of(&run.dag_id, run.run_id);
+            println!(
+                "\nGantt of {} run {} (makespan {:.1} s):",
+                run.dag_id,
+                run.run_id,
+                run.makespan()
+            );
+            println!("{}", gantt::render(&tasks, 100));
+        }
+    }
+
+    let body = res
+        .report
+        .to_json()
+        .set("extras", res.extras.clone())
+        .set("label", spec.label.as_str());
+    match exp::save_report(&format!("run_{system}_{workload}_n{n}_seed{seed}"), &body) {
+        Ok(path) => println!("report: {}", path.display()),
+        Err(e) => eprintln!("report write failed: {e}"),
+    }
+}
+
+fn cmd_cost(args: &Args) {
+    let p = cost::Pricing::default();
+    let filter = args.get("scenario");
+
+    println!("== Table 6: sAirflow fixed components (daily $) ==");
+    for (name, spec, daily, ha) in cost::fixed_components() {
+        println!("  {name:<10} {daily:>6.2}  (HA {ha:>5.2})  {spec}");
+    }
+    println!(
+        "  {:<10} {:>6.2}  (HA {:>5.2})\n",
+        "TOTAL",
+        cost::sairflow_fixed_daily(false),
+        cost::sairflow_fixed_daily(true)
+    );
+
+    println!("== Tables 2-5: per-scenario serverless breakdown ==");
+    for s in cost::scenarios() {
+        if let Some(f) = filter {
+            if s.name != f {
+                continue;
+            }
+        }
+        println!("-- scenario: {} --", s.name);
+        println!("{}", cost::render(&cost::sairflow_breakdown(&s, &p)));
+    }
+
+    println!("== Table 1: MWAA vs sAirflow (daily $) ==");
+    println!(
+        "  {:<14} {:>4}  {:>7} {:>7} {:>7}   {:>7} {:>7} {:>7}  {:>6}",
+        "scenario", "exec", "M.fix", "M.work", "M.tot", "s.fix", "s.exec", "s.tot", "saving"
+    );
+    for r in cost::table1(&p) {
+        println!(
+            "  {:<14} {:>4}  {:>7.2} {:>7.2} {:>7.2}   {:>7.2} {:>7.2} {:>7.2}  {:>5.0}%",
+            r.scenario,
+            r.executor.name(),
+            r.mwaa_fixed,
+            r.mwaa_workers,
+            r.mwaa_total,
+            r.sairflow_fixed,
+            r.sairflow_exec,
+            r.sairflow_total,
+            r.saving * 100.0
+        );
+    }
+}
+
+fn cmd_dags(args: &Args) {
+    let seed = args.get_u64("seed", 20240501);
+    let set = alibaba::alibaba_set(seed, 30);
+    println!(
+        "{:<14} {:>6} {:>10} {:>8} {:>8} {:>8} {:>10}",
+        "dag", "tasks", "crit[s]", "nodesLP", "maxPar", "capped", "work[s]"
+    );
+    for d in &set {
+        let s = alibaba::dag_stats(d);
+        println!(
+            "{:<14} {:>6} {:>10.1} {:>8} {:>8} {:>8} {:>10.1}",
+            s.dag_id,
+            s.n_tasks,
+            s.critical_path_secs,
+            s.longest_path_nodes,
+            s.max_parallelism,
+            s.capped_tasks,
+            s.total_work_secs
+        );
+    }
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = std::path::PathBuf::from(args.get_or("dir", "artifacts"));
+    match sairflow::runtime::Engine::load_dir(&dir) {
+        Ok(mut engine) => {
+            println!("platform: {}", engine.platform());
+            for name in engine.artifact_names() {
+                match engine.execute_timed(&name, 3, 0) {
+                    Ok(wall) => println!("  {name}: 3 iters in {:.1} ms", wall * 1e3),
+                    Err(e) => println!("  {name}: FAILED: {e:#}"),
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!(
+                "cannot load artifacts from {}: {e:#}\n(run `make artifacts` first)",
+                dir.display()
+            );
+            std::process::exit(1);
+        }
+    }
+}

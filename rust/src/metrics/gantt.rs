@@ -1,0 +1,139 @@
+//! ASCII Gantt charts — the textual equivalent of the paper's Gantt
+//! figures (Figs. 3, 7, 9, 17 right panels), which show when each task of
+//! a DAG run executed and on which worker.
+
+use crate::metrics::TaskObs;
+use crate::sim::time::as_secs;
+use std::collections::BTreeMap;
+
+/// Render a Gantt chart of one DAG run's tasks, one row per worker,
+/// `width` character columns spanning [t0, t1].
+pub fn render(tasks: &[&TaskObs], width: usize) -> String {
+    if tasks.is_empty() {
+        return "(no tasks)".to_string();
+    }
+    let t0 = tasks.iter().map(|t| t.ready).min().unwrap();
+    let t1 = tasks.iter().map(|t| t.end).max().unwrap().max(t0 + 1);
+    let span = (t1 - t0) as f64;
+    let col = |t: u64| -> usize {
+        (((t.saturating_sub(t0)) as f64 / span) * (width.saturating_sub(1)) as f64) as usize
+    };
+
+    // Group by worker, keep stable order of first appearance.
+    let mut by_worker: BTreeMap<&str, Vec<&TaskObs>> = BTreeMap::new();
+    for t in tasks {
+        by_worker.entry(t.worker.as_str()).or_default().push(t);
+    }
+
+    let name_w = by_worker.keys().map(|w| w.len()).max().unwrap_or(6).max(6);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:name_w$} |{}| 0 .. {:.1}s\n",
+        "worker",
+        "-".repeat(width),
+        as_secs(t1 - t0)
+    ));
+    for (worker, ts) in &by_worker {
+        let mut row = vec![b' '; width];
+        for t in ts {
+            let a = col(t.start).min(width - 1);
+            let b = col(t.end).min(width - 1).max(a);
+            // Wait portion rendered as dots.
+            let r = col(t.ready).min(a);
+            for c in &mut row[r..a] {
+                if *c == b' ' {
+                    *c = b'.';
+                }
+            }
+            for c in &mut row[a..=b] {
+                *c = b'#';
+            }
+        }
+        out.push_str(&format!(
+            "{:name_w$} |{}|\n",
+            worker,
+            String::from_utf8(row).unwrap()
+        ));
+    }
+    out
+}
+
+/// Render a per-task listing (start/end/wait/duration), sorted by start.
+pub fn listing(tasks: &[&TaskObs]) -> String {
+    let mut ts: Vec<&&TaskObs> = tasks.iter().collect();
+    ts.sort_by_key(|t| t.start);
+    let mut out = String::from("task             ready     start       end    wait     dur  worker\n");
+    for t in ts {
+        out.push_str(&format!(
+            "{:<14} {:>8.2} {:>9.2} {:>9.2} {:>7.2} {:>7.2}  {}\n",
+            t.name,
+            as_secs(t.ready),
+            as_secs(t.start),
+            as_secs(t.end),
+            t.wait(),
+            t.duration(),
+            t.worker
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SECOND;
+
+    fn obs(task: u32, worker: &str, ready: u64, start: u64, end: u64) -> TaskObs {
+        TaskObs {
+            dag_id: "d".into(),
+            run_id: 1,
+            task_id: task,
+            name: format!("t{task}"),
+            ready: ready * SECOND,
+            start: start * SECOND,
+            end: end * SECOND,
+            p_secs: 10.0,
+            worker: worker.into(),
+            success: true,
+            tries: 1,
+        }
+    }
+
+    #[test]
+    fn renders_rows_per_worker() {
+        let a = obs(0, "env-0", 0, 2, 12);
+        let b = obs(1, "env-1", 0, 3, 13);
+        let tasks = vec![&a, &b];
+        let g = render(&tasks, 40);
+        assert!(g.contains("env-0"));
+        assert!(g.contains("env-1"));
+        assert!(g.lines().count() >= 3);
+        assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn wait_shown_as_dots() {
+        let a = obs(0, "w", 0, 30, 40);
+        let tasks = vec![&a];
+        let g = render(&tasks, 40);
+        let row = g.lines().nth(1).unwrap();
+        assert!(row.contains('.'), "{row}");
+        assert!(row.contains('#'));
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert_eq!(render(&[], 10), "(no tasks)");
+    }
+
+    #[test]
+    fn listing_sorted_by_start() {
+        let a = obs(0, "w", 0, 5, 10);
+        let b = obs(1, "w", 0, 2, 4);
+        let tasks = vec![&a, &b];
+        let l = listing(&tasks);
+        let t1_pos = l.find("t1").unwrap();
+        let t0_pos = l.find("t0").unwrap();
+        assert!(t1_pos < t0_pos);
+    }
+}

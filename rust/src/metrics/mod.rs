@@ -1,0 +1,281 @@
+//! Metrics collection and reporting (§5 "Metrics").
+//!
+//! The paper's key metric is the DAG **makespan**
+//! `C_max(D) = max_i c_i − min_i v_i`; it also reports per-task
+//! **duration** `(c_i − s_i)` (duration minus the workload `p_i` is the
+//! per-task system overhead) and **wait time** `(s_i − v_i)` (start-up
+//! overhead). This module collects task/run observations from either
+//! system, computes those metrics, renders Gantt charts, and serializes
+//! reports to JSON.
+
+pub mod gantt;
+
+use crate::sim::time::{as_secs, SimTime};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+/// One completed task-instance observation.
+#[derive(Debug, Clone)]
+pub struct TaskObs {
+    pub dag_id: String,
+    pub run_id: u64,
+    pub task_id: u32,
+    pub name: String,
+    /// Ready time `v_i` (all dependencies completed / run started).
+    pub ready: SimTime,
+    /// Start time `s_i` (worker began executing the payload).
+    pub start: SimTime,
+    /// Completion time `c_i`.
+    pub end: SimTime,
+    /// The nominal workload `p_i` in seconds.
+    pub p_secs: f64,
+    /// Worker identity (FaaS env id / container job id / MWAA slot).
+    pub worker: String,
+    pub success: bool,
+    pub tries: u32,
+}
+
+impl TaskObs {
+    /// Task duration `c_i − s_i`, seconds.
+    pub fn duration(&self) -> f64 {
+        as_secs(self.end.saturating_sub(self.start))
+    }
+
+    /// Task wait `s_i − v_i`, seconds.
+    pub fn wait(&self) -> f64 {
+        as_secs(self.start.saturating_sub(self.ready))
+    }
+
+    /// Per-task overhead: duration minus nominal workload, seconds.
+    pub fn duration_overhead(&self) -> f64 {
+        self.duration() - self.p_secs
+    }
+}
+
+/// One completed DAG-run observation.
+#[derive(Debug, Clone)]
+pub struct RunObs {
+    pub dag_id: String,
+    pub run_id: u64,
+    /// First task ready time (`min v_i`).
+    pub first_ready: SimTime,
+    /// Last task completion (`max c_i`).
+    pub last_end: SimTime,
+    pub success: bool,
+    pub n_tasks: usize,
+}
+
+impl RunObs {
+    /// DAG makespan `C_max`, seconds.
+    pub fn makespan(&self) -> f64 {
+        as_secs(self.last_end.saturating_sub(self.first_ready))
+    }
+}
+
+/// Collector stored in each world; workers/schedulers push observations.
+#[derive(Debug, Default)]
+pub struct MetricsSink {
+    pub tasks: Vec<TaskObs>,
+    pub runs: Vec<RunObs>,
+}
+
+impl MetricsSink {
+    pub fn new() -> MetricsSink {
+        MetricsSink::default()
+    }
+
+    pub fn record_task(&mut self, obs: TaskObs) {
+        self.tasks.push(obs);
+    }
+
+    pub fn record_run(&mut self, obs: RunObs) {
+        self.runs.push(obs);
+    }
+
+    /// Tasks of a particular run.
+    pub fn tasks_of(&self, dag_id: &str, run_id: u64) -> Vec<&TaskObs> {
+        self.tasks.iter().filter(|t| t.dag_id == dag_id && t.run_id == run_id).collect()
+    }
+
+    /// Build the derived run observations from task observations (used when
+    /// the system under test does not record runs directly).
+    pub fn derive_runs(&mut self) {
+        let mut by_run: BTreeMap<(String, u64), (SimTime, SimTime, usize, bool)> =
+            BTreeMap::new();
+        for t in &self.tasks {
+            let e = by_run
+                .entry((t.dag_id.clone(), t.run_id))
+                .or_insert((SimTime::MAX, 0, 0, true));
+            e.0 = e.0.min(t.ready);
+            e.1 = e.1.max(t.end);
+            e.2 += 1;
+            e.3 &= t.success;
+        }
+        self.runs = by_run
+            .into_iter()
+            .map(|((dag_id, run_id), (first_ready, last_end, n, ok))| RunObs {
+                dag_id,
+                run_id,
+                first_ready,
+                last_end,
+                success: ok,
+                n_tasks: n,
+            })
+            .collect();
+    }
+}
+
+/// Aggregated report over a set of observations — what the benches print
+/// and what EXPERIMENTS.md records.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub label: String,
+    pub makespan: Summary,
+    pub task_duration: Summary,
+    pub task_wait: Summary,
+    pub duration_overhead: Summary,
+    pub n_runs: usize,
+    pub n_tasks: usize,
+    pub failures: usize,
+}
+
+impl MetricsReport {
+    /// Build a report. `skip_first_run` implements the paper's warm-start
+    /// protocol ("the first DAG run is not reported", §6.2), applied per
+    /// DAG id.
+    pub fn build(label: &str, sink: &MetricsSink, skip_first_run: bool) -> MetricsReport {
+        let mut first_run: BTreeMap<&str, u64> = BTreeMap::new();
+        for r in &sink.runs {
+            let e = first_run.entry(r.dag_id.as_str()).or_insert(r.run_id);
+            *e = (*e).min(r.run_id);
+        }
+        let keep_run = |dag_id: &str, run_id: u64| {
+            !skip_first_run || first_run.get(dag_id).map(|&f| run_id != f).unwrap_or(true)
+        };
+        let runs: Vec<&RunObs> =
+            sink.runs.iter().filter(|r| keep_run(&r.dag_id, r.run_id)).collect();
+        let tasks: Vec<&TaskObs> =
+            sink.tasks.iter().filter(|t| keep_run(&t.dag_id, t.run_id)).collect();
+        MetricsReport {
+            label: label.to_string(),
+            makespan: Summary::of(&runs.iter().map(|r| r.makespan()).collect::<Vec<_>>()),
+            task_duration: Summary::of(&tasks.iter().map(|t| t.duration()).collect::<Vec<_>>()),
+            task_wait: Summary::of(&tasks.iter().map(|t| t.wait()).collect::<Vec<_>>()),
+            duration_overhead: Summary::of(
+                &tasks.iter().map(|t| t.duration_overhead()).collect::<Vec<_>>(),
+            ),
+            n_runs: runs.len(),
+            n_tasks: tasks.len(),
+            failures: tasks.iter().filter(|t| !t.success).count(),
+        }
+    }
+
+    /// Render as aligned text rows (the figures' series).
+    pub fn text(&self) -> String {
+        format!(
+            "{label}\n  makespan [s]       {m}\n  task duration [s]  {d}\n  task wait [s]      {w}\n  dur overhead [s]   {o}\n  runs={r} tasks={t} failures={f}",
+            label = self.label,
+            m = self.makespan.line(),
+            d = self.task_duration.line(),
+            w = self.task_wait.line(),
+            o = self.duration_overhead.line(),
+            r = self.n_runs,
+            t = self.n_tasks,
+            f = self.failures,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn s(x: &Summary) -> Json {
+            Json::obj()
+                .set("n", x.n)
+                .set("mean", x.mean)
+                .set("median", x.median)
+                .set("p95", x.p95)
+                .set("min", x.min)
+                .set("max", x.max)
+                .set("std", x.std)
+        }
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set("makespan", s(&self.makespan))
+            .set("task_duration", s(&self.task_duration))
+            .set("task_wait", s(&self.task_wait))
+            .set("duration_overhead", s(&self.duration_overhead))
+            .set("n_runs", self.n_runs)
+            .set("n_tasks", self.n_tasks)
+            .set("failures", self.failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SECOND;
+
+    fn obs(run: u64, task: u32, ready: u64, start: u64, end: u64) -> TaskObs {
+        TaskObs {
+            dag_id: "d".into(),
+            run_id: run,
+            task_id: task,
+            name: format!("t{task}"),
+            ready: ready * SECOND,
+            start: start * SECOND,
+            end: end * SECOND,
+            p_secs: 10.0,
+            worker: "w0".into(),
+            success: true,
+            tries: 1,
+        }
+    }
+
+    #[test]
+    fn task_metrics() {
+        let t = obs(1, 0, 0, 3, 14);
+        assert!((t.wait() - 3.0).abs() < 1e-9);
+        assert!((t.duration() - 11.0).abs() < 1e-9);
+        assert!((t.duration_overhead() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derive_runs_and_makespan() {
+        let mut sink = MetricsSink::new();
+        sink.record_task(obs(1, 0, 0, 2, 12));
+        sink.record_task(obs(1, 1, 12, 14, 25));
+        sink.record_task(obs(2, 0, 100, 101, 111));
+        sink.derive_runs();
+        assert_eq!(sink.runs.len(), 2);
+        let r1 = sink.runs.iter().find(|r| r.run_id == 1).unwrap();
+        assert!((r1.makespan() - 25.0).abs() < 1e-9);
+        assert_eq!(r1.n_tasks, 2);
+    }
+
+    #[test]
+    fn skip_first_run_protocol() {
+        let mut sink = MetricsSink::new();
+        // Run 1: cold (huge waits); runs 2-3: warm.
+        sink.record_task(obs(1, 0, 0, 12, 22));
+        sink.record_task(obs(2, 0, 300, 302, 312));
+        sink.record_task(obs(3, 0, 600, 603, 613));
+        sink.derive_runs();
+        let all = MetricsReport::build("all", &sink, false);
+        let warm = MetricsReport::build("warm", &sink, true);
+        assert_eq!(all.n_runs, 3);
+        assert_eq!(warm.n_runs, 2);
+        assert!(warm.task_wait.max <= 3.0);
+        assert!(all.task_wait.max >= 12.0);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut sink = MetricsSink::new();
+        sink.record_task(obs(1, 0, 0, 1, 11));
+        sink.derive_runs();
+        let rep = MetricsReport::build("x", &sink, false);
+        let j = rep.to_json().to_string_pretty();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("x"));
+        assert!(parsed.get("makespan").unwrap().get("mean").unwrap().as_f64().is_some());
+    }
+}

@@ -1,0 +1,537 @@
+//! The MWAA baseline: classic managed Airflow (§5 "Managed Workflows for
+//! Apache Airflow").
+//!
+//! Everything sAirflow makes event-driven is *polling* here, which is
+//! exactly what the paper's comparison exercises:
+//!
+//! * an **always-on scheduler loop** (two schedulers in the HA setting)
+//!   runs the same [`scheduling_pass`] as sAirflow about once per second,
+//!   with a per-loop transition budget (Airflow's `max_tis_per_query`);
+//! * queued tasks go to a **Celery queue**; each worker node polls it and
+//!   runs up to 5 tasks concurrently (the paper's small environment:
+//!   1 vCPU / 2 GB per worker → ~0.2 vCPU per task);
+//! * an **autoscaler** checks load periodically and provisions additional
+//!   workers — taking the 4–5 minutes the paper measures ("MWAA needs up
+//!   to 5 minutes to add a new worker node", §6.1) — up to 25 workers
+//!   (125 task slots). It does not reliably scale down [29], so we never
+//!   remove workers during an experiment.
+//!
+//! The metadata database model is shared with sAirflow (same
+//! [`DbService`]); there is no CDC — `on_committed` is a no-op.
+
+use crate::cloud::db::{Change, DbHost, DbService, DbServiceConfig, Txn, Write};
+use crate::cloud::eventbridge::{self, CronHost, CronService};
+use crate::cloud::mq::SqsQueue;
+use crate::dag::spec::{DagSpec, Payload};
+use crate::dag::state::TiState;
+use crate::executor::TaskRef;
+use crate::parser::parse_batch_txn;
+use crate::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
+use crate::sim::engine::Sim;
+use crate::sim::time::{secs, SimDuration, SimTime, MINUTE};
+
+/// MWAA environment configuration (§5: the *small* environment).
+#[derive(Debug, Clone)]
+pub struct MwaaConfig {
+    pub seed: u64,
+    pub limits: SchedLimits,
+    /// Workers at start (MWAA keeps at least one).
+    pub min_workers: u32,
+    /// Autoscaling ceiling (25 → 125 concurrent tasks).
+    pub max_workers: u32,
+    /// Celery task slots per worker node.
+    pub slots_per_worker: u32,
+    /// Scheduler loop interval, seconds (uniform). Two HA schedulers ≈
+    /// half the effective interval.
+    pub scheduler_loop: (f64, f64),
+    /// Max task-instance transitions per scheduler loop
+    /// (`max_tis_per_query`).
+    pub max_tis_per_loop: usize,
+    /// Worker Celery poll interval, seconds (uniform).
+    pub worker_poll: (f64, f64),
+    /// Per-task launch overhead on a worker (fork + env), seconds.
+    pub task_launch: (f64, f64),
+    /// LocalTaskJob duration overhead at ~0.2 vCPU, seconds.
+    pub task_overhead: (f64, f64),
+    /// Autoscaler check period.
+    pub autoscale_check: SimDuration,
+    /// New-worker provisioning time, seconds (uniform). Paper: the cluster
+    /// takes ~4–5 minutes to add a node.
+    pub provision: (f64, f64),
+    /// Consecutive idle autoscaler checks before extra workers are
+    /// removed. MWAA's downscaling is slow and buggy [29], but over a
+    /// T=30 min gap it does de-provision (§6.1's protocol relies on it).
+    pub idle_downscale_checks: u32,
+    pub db: DbServiceConfig,
+    pub max_events: u64,
+}
+
+impl Default for MwaaConfig {
+    fn default() -> MwaaConfig {
+        MwaaConfig {
+            seed: 7,
+            limits: SchedLimits::default(),
+            min_workers: 1,
+            max_workers: 25,
+            slots_per_worker: 5,
+            scheduler_loop: (0.4, 0.7), // two HA schedulers interleaved
+            max_tis_per_loop: 16,
+            worker_poll: (0.6, 1.6),
+            task_launch: (0.8, 1.2),
+            task_overhead: (0.5, 0.9),
+            autoscale_check: MINUTE,
+            provision: (240.0, 300.0),
+            idle_downscale_checks: 5,
+            db: DbServiceConfig::default(),
+            max_events: 50_000_000,
+        }
+    }
+}
+
+impl MwaaConfig {
+    pub fn seeded(seed: u64) -> MwaaConfig {
+        MwaaConfig { seed, ..MwaaConfig::default() }
+    }
+
+    /// The warm configuration of §6.2: horizontal scaling disabled by
+    /// equating minimum and maximum workers (25 → 125 slots).
+    pub fn warm(seed: u64) -> MwaaConfig {
+        MwaaConfig { seed, min_workers: 25, ..MwaaConfig::default() }
+    }
+}
+
+/// State of one Celery worker node.
+#[derive(Debug, Clone)]
+pub struct WorkerNode {
+    pub id: u32,
+    /// Node is provisioning until this time.
+    pub ready_at: SimTime,
+    pub busy_slots: u32,
+    /// Consecutive empty polls (perf: long-idle workers back off).
+    pub idle_polls: u32,
+}
+
+/// Environment statistics.
+#[derive(Debug, Default, Clone)]
+pub struct MwaaStats {
+    pub scheduler_loops: u64,
+    pub tasks_executed: u64,
+    pub workers_added: u32,
+    pub peak_busy_slots: u32,
+    /// Worker-seconds of provisioned capacity (for the cost model).
+    pub worker_seconds: f64,
+}
+
+/// The MWAA environment.
+pub struct MwaaWorld {
+    pub cfg: MwaaConfig,
+    pub db: DbService,
+    pub cron: CronService,
+    pub celery_q: SqsQueue<TaskRef>,
+    pub workers: Vec<WorkerNode>,
+    /// Periodic triggers buffered for the next scheduler loop.
+    pending_msgs: Vec<SchedMsg>,
+    pub stats: MwaaStats,
+    /// Accounting anchor for worker-seconds.
+    last_account: SimTime,
+    /// Consecutive idle autoscaler checks (for downscale).
+    idle_checks: u32,
+}
+
+impl DbHost for MwaaWorld {
+    fn db(&mut self) -> &mut DbService {
+        &mut self.db
+    }
+    fn on_committed(_sim: &mut Sim<Self>, _w: &mut Self, _changes: Vec<Change>) {
+        // No CDC in classic Airflow: the scheduler loop polls the DB.
+    }
+}
+
+impl CronHost for MwaaWorld {
+    fn cron(&mut self) -> &mut CronService {
+        &mut self.cron
+    }
+    fn on_cron_fire(_sim: &mut Sim<Self>, w: &mut Self, dag_id: String, logical_ts: u64) {
+        w.pending_msgs.push(SchedMsg::Periodic { dag_id, logical_ts });
+    }
+}
+
+impl MwaaWorld {
+    pub fn new(cfg: MwaaConfig) -> MwaaWorld {
+        let workers = (0..cfg.min_workers)
+            .map(|id| WorkerNode { id, ready_at: 0, busy_slots: 0, idle_polls: 0 })
+            .collect();
+        MwaaWorld {
+            db: DbService::new(cfg.db.clone()),
+            cron: CronService::new(),
+            celery_q: SqsQueue::standard("celery"),
+            workers,
+            pending_msgs: Vec::new(),
+            stats: MwaaStats::default(),
+            last_account: 0,
+            idle_checks: 0,
+            cfg,
+        }
+    }
+
+    pub fn sim(&self) -> Sim<MwaaWorld> {
+        Sim::new(self.cfg.seed)
+    }
+
+    fn account_capacity(&mut self, now: SimTime) {
+        let ready = self.workers.iter().filter(|w| w.ready_at <= now).count() as f64;
+        let dt = (now.saturating_sub(self.last_account)) as f64 / 1e6;
+        self.stats.worker_seconds += ready * dt;
+        self.last_account = now;
+    }
+}
+
+/// Deploy: register the DAGs (MWAA's scheduler parses DAG files from the
+/// bucket directly — we model it as an immediate parse at deploy time) and
+/// start the three loops.
+pub fn deploy(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, specs: &[DagSpec]) {
+    let parsed: Vec<(String, DagSpec)> = specs
+        .iter()
+        .map(|s| (format!("dags/{}.json", s.dag_id), s.clone()))
+        .collect();
+    let txn = parse_batch_txn(&parsed);
+    crate::cloud::db::commit(sim, w, txn, |_sim, _w| {});
+    for s in specs {
+        if let Some(period) = s.period {
+            eventbridge::set_schedule(sim, w, &s.dag_id, period);
+        }
+    }
+    scheduler_loop(sim, w);
+    for i in 0..w.workers.len() {
+        worker_loop(sim, w, i as u32);
+    }
+    autoscaler_loop(sim, w);
+}
+
+/// Trigger a DAG manually (next loop picks it up).
+pub fn trigger_dag(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, dag_id: &str) {
+    w.pending_msgs.push(SchedMsg::Periodic { dag_id: dag_id.to_string(), logical_ts: sim.now() });
+}
+
+fn scheduler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {
+    let (lo, hi) = w.cfg.scheduler_loop;
+    let interval = secs(sim.rng.uniform(lo, hi));
+    sim.after(interval, "mwaa.sched_loop", move |sim, w| {
+        w.stats.scheduler_loops += 1;
+        // Poll: every non-terminal run is dirty, plus buffered triggers.
+        let mut batch: Vec<SchedMsg> = std::mem::take(&mut w.pending_msgs);
+        for ((dag_id, run_id), run) in &w.db.read().dag_runs {
+            if !run.state.is_terminal() {
+                batch.push(SchedMsg::RunChanged { dag_id: dag_id.clone(), run_id: *run_id });
+            }
+        }
+        let now = sim.now();
+        let mut out = scheduling_pass(w.db.read(), now, &batch, &w.cfg.limits);
+        // Airflow's per-loop budget (`max_tis_per_query`): at most N tasks
+        // move to `queued` per loop; the rest stay `scheduled` and are
+        // queued by subsequent loops. Run creation and other bookkeeping
+        // writes are never dropped.
+        let budget = w.cfg.max_tis_per_loop;
+        let mut queued_count = 0usize;
+        out.txn.writes.retain(|wr| match wr {
+            Write::SetTiState { state: TiState::Queued, .. } => {
+                queued_count += 1;
+                queued_count <= budget
+            }
+            _ => true,
+        });
+        // Collect the tasks this loop queued and hand them to Celery after
+        // the commit.
+        let queued: Vec<TaskRef> = out
+            .txn
+            .writes
+            .iter()
+            .filter_map(|wr| match wr {
+                Write::SetTiState { key, state: TiState::Queued } => Some(TaskRef {
+                    dag_id: key.0.clone(),
+                    run_id: key.1,
+                    task_id: key.2,
+                }),
+                _ => None,
+            })
+            .collect();
+        if out.txn.is_empty() {
+            scheduler_loop(sim, w);
+            return;
+        }
+        crate::cloud::db::commit(sim, w, out.txn, move |sim, w| {
+            for tr in queued {
+                w.celery_q.send(tr);
+            }
+            scheduler_loop(sim, w);
+        });
+    });
+}
+
+fn worker_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, worker_id: u32) {
+    let (lo, hi) = w.cfg.worker_poll;
+    // Long-idle workers back off to a slower poll (perf: an idle warm
+    // environment otherwise burns ~1 event/s/worker for hours of virtual
+    // time; 300 empty polls ≈ 5+ min idle, well past any warm gap, so
+    // measured latencies are unaffected).
+    let backoff = w
+        .workers
+        .iter()
+        .find(|n| n.id == worker_id)
+        .map(|n| if n.idle_polls > 300 { 3.0 } else { 1.0 })
+        .unwrap_or(1.0);
+    let interval = secs(sim.rng.uniform(lo, hi) * backoff);
+    sim.after(interval, "mwaa.worker_poll", move |sim, w| {
+        let now = sim.now();
+        let slots = w.cfg.slots_per_worker;
+        let Some(node) = w.workers.iter_mut().find(|n| n.id == worker_id) else { return };
+        if node.ready_at <= now {
+            let free = slots.saturating_sub(node.busy_slots) as usize;
+            if free > 0 {
+                let batch = w.celery_q.take_batch(free);
+                if batch.is_empty() {
+                    node.idle_polls += 1;
+                } else {
+                    node.idle_polls = 0;
+                }
+                for tr in batch {
+                    start_task(sim, w, worker_id, tr);
+                }
+            }
+        }
+        worker_loop(sim, w, worker_id);
+    });
+}
+
+fn start_task(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, worker_id: u32, tr: TaskRef) {
+    let node_busy;
+    {
+        let node = w.workers.iter_mut().find(|n| n.id == worker_id).unwrap();
+        node.busy_slots += 1;
+        node_busy = node.busy_slots;
+        let busy: u32 = w.workers.iter().map(|n| n.busy_slots).sum();
+        w.stats.peak_busy_slots = w.stats.peak_busy_slots.max(busy);
+    }
+    w.stats.tasks_executed += 1;
+    // CPU contention: a worker node has 1 vCPU for up to 5 concurrent task
+    // processes — Airflow's fork + imports + heartbeat slow down roughly
+    // linearly with co-resident tasks. This is why MWAA's saturated rounds
+    // take far longer than `p` (and why its warm single-task launches stay
+    // fast).
+    let contention = node_busy.max(1) as f64;
+    let key = tr.key();
+    let Some(task) = w
+        .db
+        .read()
+        .serialized
+        .get(&tr.dag_id)
+        .and_then(|s| s.tasks.get(tr.task_id as usize))
+        .cloned()
+    else {
+        release_slot(w, worker_id);
+        return;
+    };
+    let launch = secs(sim.rng.uniform(w.cfg.task_launch.0, w.cfg.task_launch.1) * contention);
+    sim.after(launch, "mwaa.task_launch", move |sim, w| {
+        let mut txn = Txn::new();
+        txn.push(Write::SetTiHost { key: key.clone(), host: format!("celery-{worker_id}") });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        crate::cloud::db::commit(sim, w, txn, move |sim, w| {
+            let overhead =
+                secs(sim.rng.uniform(w.cfg.task_overhead.0, w.cfg.task_overhead.1) * contention);
+            let (work, ok) = match &task.payload {
+                Payload::Sleep(d) => (*d, true),
+                Payload::Flaky { sleep, fail_tries } => {
+                    let tries = w
+                        .db
+                        .read()
+                        .task_instances
+                        .get(&key)
+                        .map(|r| r.try_number)
+                        .unwrap_or(1);
+                    if tries <= *fail_tries {
+                        (*sleep / 3, false)
+                    } else {
+                        (*sleep, true)
+                    }
+                }
+                // MWAA workers have no PJRT engine in our harness; use the
+                // same calibrated per-iteration model as engine-less
+                // sAirflow so comparisons stay apples-to-apples.
+                Payload::Compute { iters, .. } => (secs(0.05 * *iters as f64), true),
+            };
+            let retries = task.retries;
+            sim.after(overhead + work, "mwaa.task_done", move |sim, w| {
+                // Classic Airflow: the worker itself writes the terminal
+                // state (including retry bookkeeping).
+                let state = if ok {
+                    TiState::Success
+                } else {
+                    let tries = w
+                        .db
+                        .read()
+                        .task_instances
+                        .get(&key)
+                        .map(|r| r.try_number)
+                        .unwrap_or(1);
+                    if tries <= retries {
+                        TiState::UpForRetry
+                    } else {
+                        TiState::Failed
+                    }
+                };
+                let mut txn = Txn::new();
+                // Same completion-time mini-scheduler scan as sAirflow's
+                // worker — both run unmodified Airflow task code.
+                txn.scan_rows = w.db.read().tis_of_run(&key.0, key.1).len() as u32;
+                txn.push(Write::SetTiState { key, state });
+                crate::cloud::db::commit(sim, w, txn, move |_sim, w| {
+                    release_slot(w, worker_id);
+                });
+            });
+        });
+    });
+}
+
+fn release_slot(w: &mut MwaaWorld, worker_id: u32) {
+    if let Some(node) = w.workers.iter_mut().find(|n| n.id == worker_id) {
+        node.busy_slots = node.busy_slots.saturating_sub(1);
+    }
+}
+
+fn autoscaler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {
+    let interval = w.cfg.autoscale_check;
+    sim.after(interval, "mwaa.autoscale", move |sim, w| {
+        let now = sim.now();
+        w.account_capacity(now);
+        // Demand: queued (Celery depth) + running tasks.
+        let running: u32 = w.workers.iter().map(|n| n.busy_slots).sum();
+        let demand = w.celery_q.len() as u32 + running;
+        let desired = demand
+            .div_ceil(w.cfg.slots_per_worker)
+            .clamp(w.cfg.min_workers, w.cfg.max_workers);
+        let current = w.workers.len() as u32;
+        if desired > current {
+            let (lo, hi) = w.cfg.provision;
+            for _ in current..desired {
+                let ready_at = now + secs(sim.rng.uniform(lo, hi));
+                let id = w.workers.len() as u32;
+                w.workers.push(WorkerNode { id, ready_at, busy_slots: 0, idle_polls: 0 });
+                w.stats.workers_added += 1;
+                worker_loop(sim, w, id);
+            }
+        }
+        // Downscale only after a sustained idle period: MWAA cannot
+        // reliably remove workers under load [29], but an idle environment
+        // does eventually shed them (the paper's T=30 protocol relies on
+        // de-provisioning between runs).
+        if demand == 0 && w.workers.len() as u32 > w.cfg.min_workers {
+            w.idle_checks += 1;
+            if w.idle_checks >= w.cfg.idle_downscale_checks {
+                w.workers.truncate(w.cfg.min_workers as usize);
+                w.idle_checks = 0;
+            }
+        } else {
+            w.idle_checks = 0;
+        }
+        autoscaler_loop(sim, w);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::state::RunState;
+    use crate::sim::time::{as_secs, MINUTE};
+    use crate::workloads::synthetic::{chain_dag, parallel_dag};
+
+    #[test]
+    fn runs_chain_dag_to_completion() {
+        let mut w = MwaaWorld::new(MwaaConfig::seeded(1));
+        let mut sim = w.sim();
+        deploy(&mut sim, &mut w, &[chain_dag("c", 3, 5.0, 5.0)]);
+        let max_events = w.cfg.max_events;
+        sim.run_until(&mut w, 12 * MINUTE, max_events);
+        let db = w.db.read();
+        let done = db.dag_runs.values().filter(|r| r.state == RunState::Success).count();
+        assert!(done >= 1, "at least one run done, got {done}");
+        let ti = db.task_instances.values().next().unwrap();
+        assert!(ti.host.as_deref().unwrap().starts_with("celery-"));
+    }
+
+    #[test]
+    fn warm_task_wait_under_sairflow() {
+        // §6.2: MWAA launches tasks ~0.8 s faster than sAirflow on chains.
+        let mut w = MwaaWorld::new(MwaaConfig::warm(2));
+        let mut sim = w.sim();
+        deploy(&mut sim, &mut w, &[chain_dag("c", 5, 10.0, 5.0)]);
+        let max_events = w.cfg.max_events;
+        sim.run_until(&mut w, 30 * MINUTE, max_events);
+        let db = w.db.read();
+        let waits: Vec<f64> = db
+            .task_instances
+            .values()
+            .filter(|t| t.state == TiState::Success)
+            .map(|t| as_secs(t.start.unwrap().saturating_sub(t.ready.unwrap())))
+            .collect();
+        assert!(waits.len() > 10);
+        let med = crate::util::stats::percentile(&waits, 0.5);
+        assert!(med > 0.8 && med < 3.0, "median wait {med}");
+    }
+
+    #[test]
+    fn cold_parallel_is_slow_autoscaler_lags() {
+        // §6.1 / Fig. 3: one worker, 5 slots; 125 tasks of 10 s → several
+        // minutes.
+        let mut w = MwaaWorld::new(MwaaConfig::seeded(3));
+        let mut sim = w.sim();
+        deploy(&mut sim, &mut w, &[parallel_dag("p", 125, 10.0, 30.0)]);
+        let max_events = w.cfg.max_events;
+        sim.run_until(&mut w, 50 * MINUTE, max_events);
+        let db = w.db.read();
+        let run = db.dag_runs.get(&("p".into(), 1)).expect("run");
+        assert_eq!(run.state, RunState::Success);
+        let makespan = as_secs(run.end.unwrap() - run.start.unwrap());
+        assert!(
+            makespan > 150.0 && makespan < 500.0,
+            "cold MWAA n=125 makespan {makespan}"
+        );
+        assert!(w.stats.workers_added > 0, "autoscaler kicked in");
+    }
+
+    #[test]
+    fn warm_parallel_is_fast() {
+        let mut w = MwaaWorld::new(MwaaConfig::warm(4));
+        let mut sim = w.sim();
+        deploy(&mut sim, &mut w, &[parallel_dag("p", 125, 10.0, 30.0)]);
+        let max_events = w.cfg.max_events;
+        sim.run_until(&mut w, 40 * MINUTE, max_events);
+        let db = w.db.read();
+        let run = db.dag_runs.get(&("p".into(), 1)).expect("run");
+        assert_eq!(run.state, RunState::Success);
+        let makespan = as_secs(run.end.unwrap() - run.start.unwrap());
+        assert!(makespan < 40.0, "warm MWAA n=125 makespan {makespan}");
+    }
+
+    #[test]
+    fn retry_semantics_match() {
+        let mut spec = crate::dag::spec::DagSpec::new("flaky");
+        spec.add_task(
+            "t",
+            Payload::Flaky { sleep: 2_000_000, fail_tries: 1 },
+            &[],
+            crate::dag::spec::ExecKind::Faas,
+        );
+        spec.tasks[0].retries = 2;
+        spec = spec.every_minutes(5.0);
+        let mut w = MwaaWorld::new(MwaaConfig::seeded(5));
+        let mut sim = w.sim();
+        deploy(&mut sim, &mut w, &[spec]);
+        let max_events = w.cfg.max_events;
+        sim.run_until(&mut w, 9 * MINUTE, max_events);
+        let db = w.db.read();
+        let ti = db.task_instances.values().next().unwrap();
+        assert_eq!(ti.state, TiState::Success);
+        assert_eq!(ti.try_number, 2);
+    }
+}

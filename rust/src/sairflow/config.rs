@@ -1,0 +1,92 @@
+//! Deployment configuration for sAirflow (§5 "sAirflow" paragraph).
+//!
+//! Defaults match the paper's setup: worker functions with 340 MB
+//! (≈0.2 vCPU, mirroring MWAA's per-task share), a 512 MB scheduler,
+//! a db.t3.small-like database, 125-task parallelism, CDC delivering in
+//! 1–1.5 s, and the smallest Fargate shape for the container executor.
+
+use crate::cloud::caas::CaasConfig;
+use crate::cloud::db::DbServiceConfig;
+use crate::cloud::faas::{specs, FunctionSpec};
+use crate::scheduler::SchedLimits;
+use crate::sim::time::SimDuration;
+
+/// Full sAirflow deployment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub seed: u64,
+    pub limits: SchedLimits,
+    /// FaaS worker function (Fig. 1 (12.1) on Lambda).
+    pub worker: FunctionSpec,
+    /// Scheduler function (Fig. 1 (9)).
+    pub scheduler: FunctionSpec,
+    /// CDC pre-parse function.
+    pub preparse: FunctionSpec,
+    /// DAG parse function (Fig. 1 (3)).
+    pub parser: FunctionSpec,
+    /// Schedule updater (Fig. 1 (10)).
+    pub updater: FunctionSpec,
+    /// Executor forwarder (Fig. 1 (11)).
+    pub executor: FunctionSpec,
+    /// Failure handler (Fig. 1 (12.2)).
+    pub failure: FunctionSpec,
+    /// Container platform (Fig. 1 (14): Batch on Fargate).
+    pub caas: CaasConfig,
+    pub db: DbServiceConfig,
+    /// CDC delivery delay in seconds (uniform). Paper: 1–1.5 s typical.
+    pub cdc_delay: (f64, f64),
+    /// CPU time of one scheduling pass inside the scheduler lambda
+    /// (seconds, uniform).
+    pub sched_cpu: (f64, f64),
+    /// LocalTaskJob overhead added to the payload on the FaaS worker
+    /// (fork + heartbeat + Airflow imports at ≈0.2 vCPU), seconds.
+    pub faas_task_overhead: (f64, f64),
+    /// Same on the container worker (0.5 vCPU → lower; the paper measures
+    /// CaaS task durations almost 1 s shorter than FaaS, App. E.1).
+    pub caas_task_overhead: (f64, f64),
+    /// Virtual-time horizon guard for experiment loops.
+    pub max_events: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            seed: 7,
+            limits: SchedLimits::default(),
+            worker: specs::worker(),
+            scheduler: specs::scheduler(),
+            preparse: specs::preparse(),
+            parser: specs::parser(),
+            updater: specs::schedule_updater(),
+            executor: specs::executor(),
+            failure: specs::failure_handler(),
+            caas: CaasConfig::default(),
+            db: DbServiceConfig::default(),
+            cdc_delay: (0.8, 1.25),
+            sched_cpu: (0.08, 0.18),
+            faas_task_overhead: (0.7, 1.2),
+            caas_task_overhead: (0.1, 0.4),
+            max_events: 50_000_000,
+        }
+    }
+}
+
+impl Config {
+    /// Configuration with a fixed seed.
+    pub fn seeded(seed: u64) -> Config {
+        Config { seed, ..Config::default() }
+    }
+
+    /// Builder-style: cap worker concurrency (the paper limits sAirflow to
+    /// 125 concurrent FaaS invocations to match MWAA's 125 task slots).
+    pub fn worker_concurrency(mut self, c: u32) -> Config {
+        self.worker.concurrency = c;
+        self
+    }
+
+    /// Builder-style: keep-alive for worker environments.
+    pub fn keep_alive(mut self, d: SimDuration) -> Config {
+        self.worker.keep_alive = d;
+        self
+    }
+}

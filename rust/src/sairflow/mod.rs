@@ -1,0 +1,243 @@
+//! sAirflow: the serverless Airflow system (§4).
+//!
+//! * [`config::Config`] — deployment configuration (function specs,
+//!   database/CDC/container models), defaults matching §5;
+//! * [`world::World`] — the deployed system: every component of Fig. 1
+//!   wired together on the simulation clock;
+//! * [`world::upload_dag`] / [`world::trigger_dag`] — the user-facing
+//!   entry points (DAG upload and manual trigger).
+//!
+//! See the module docs of [`world`] for the end-to-end control flow.
+
+pub mod config;
+pub mod world;
+
+pub use config::Config;
+pub use world::{trigger_dag, upload_dag, FnPayload, Target, World};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::mq;
+    use crate::dag::state::{RunState, TiState};
+    use crate::sim::time::{as_secs, mins, MINUTE, SECOND};
+    use crate::workloads::synthetic::{chain_dag, parallel_dag};
+
+    fn run_to_idle(sim: &mut crate::sim::Sim<World>, w: &mut World, horizon: u64) {
+        sim.run_until(w, horizon, w.cfg.max_events);
+    }
+
+    #[test]
+    fn upload_parse_schedule_execute_single_task() {
+        // End-to-end through every component: upload → parse → CDC →
+        // updater → cron → scheduler → CDC → executor → stepfn → worker →
+        // CDC → scheduler → run complete.
+        let cfg = Config::seeded(42);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let spec = chain_dag("solo", 1, 10.0, 5.0);
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, 20 * MINUTE);
+
+        let db = w.db.read();
+        assert!(db.serialized.contains_key("solo"), "DAG parsed");
+        assert!(w.cron.is_registered("solo"), "schedule registered");
+        // T=5 min, horizon 20 min → runs at ~5, ~10, ~15 min: 3 runs.
+        let done: Vec<_> =
+            db.dag_runs.values().filter(|r| r.state == RunState::Success).collect();
+        assert!(
+            (2..=4).contains(&done.len()),
+            "expected ~3 completed runs, got {}",
+            done.len()
+        );
+        let ti = db.task_instances.values().next().unwrap();
+        assert_eq!(ti.state, TiState::Success);
+        assert!(ti.ready.is_some() && ti.start.is_some() && ti.end.is_some());
+        assert!(ti.host.as_deref().unwrap_or("").starts_with("lambda-"));
+    }
+
+    #[test]
+    fn warm_task_wait_near_paper_2_5s() {
+        // §6.2 / Fig. 6: warm single-task wait median ≈ 2.5 s, first
+        // (cold) run ≈ 12 s.
+        let cfg = Config::seeded(1);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let spec = chain_dag("one", 1, 10.0, 5.0);
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, 62 * MINUTE); // ~12 runs at T=5
+        let db = w.db.read();
+        let mut waits: Vec<(u64, f64)> = db
+            .task_instances
+            .values()
+            .filter(|t| t.state == TiState::Success)
+            .map(|t| {
+                (t.run_id, as_secs(t.start.unwrap().saturating_sub(t.ready.unwrap())))
+            })
+            .collect();
+        waits.sort_by_key(|(r, _)| *r);
+        assert!(waits.len() >= 8, "got {} runs", waits.len());
+        let cold = waits[0].1;
+        let warm: Vec<f64> = waits[1..].iter().map(|(_, w)| *w).collect();
+        let warm_med = crate::util::stats::percentile(&warm, 0.5);
+        assert!(cold > 8.0 && cold < 16.0, "cold wait {cold}");
+        assert!(warm_med > 1.5 && warm_med < 4.0, "warm median {warm_med}");
+    }
+
+    #[test]
+    fn parallel_dag_scales_out() {
+        // §6.1: all fan-out tasks run concurrently on FaaS.
+        let cfg = Config::seeded(3);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let spec = parallel_dag("fan", 32, 10.0, 30.0);
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, 35 * MINUTE);
+        let db = w.db.read();
+        let run = db.dag_runs.get(&("fan".into(), 1)).expect("run exists");
+        assert_eq!(run.state, RunState::Success);
+        let makespan = as_secs(run.end.unwrap() - run.start.unwrap());
+        // Cold: ~2.5 CDC+sched for root + root exec ~12 (cold) + CDC ~2.5 +
+        // fan-out cold start ~10 + work 10 + tail ≈ well under a minute.
+        assert!(makespan < 60.0, "makespan={makespan}");
+        assert_eq!(w.faas.stats(w.fns.worker).concurrent_peak.max(32), 32);
+    }
+
+    #[test]
+    fn manual_trigger_runs_immediately() {
+        let cfg = Config::seeded(4);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let mut spec = chain_dag("manual", 2, 1.0, 5.0);
+        spec.period = None; // not scheduled
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, MINUTE);
+        assert!(!w.cron.is_registered("manual"));
+        trigger_dag(&mut sim, &mut w, "manual");
+        run_to_idle(&mut sim, &mut w, 5 * MINUTE);
+        let db = w.db.read();
+        assert_eq!(
+            db.dag_runs.values().filter(|r| r.state == RunState::Success).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn flaky_task_retried_through_failure_handler() {
+        let cfg = Config::seeded(5);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let mut spec = crate::dag::spec::DagSpec::new("flaky");
+        spec.add_task(
+            "t",
+            crate::dag::spec::Payload::Flaky { sleep: 5 * SECOND, fail_tries: 1 },
+            &[],
+            crate::dag::spec::ExecKind::Faas,
+        );
+        spec.tasks[0].retries = 2;
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, MINUTE);
+        trigger_dag(&mut sim, &mut w, "flaky");
+        run_to_idle(&mut sim, &mut w, 10 * MINUTE);
+        let db = w.db.read();
+        let ti = db.task_instances.values().next().unwrap();
+        assert_eq!(ti.state, TiState::Success, "retried to success");
+        assert_eq!(ti.try_number, 2);
+        assert!(w.stepfn.stats.failure_paths >= 1);
+        let run = db.dag_runs.values().next().unwrap();
+        assert_eq!(run.state, RunState::Success);
+    }
+
+    #[test]
+    fn flaky_task_exhausts_retries_fails_run() {
+        let cfg = Config::seeded(6);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let mut spec = crate::dag::spec::DagSpec::new("doomed");
+        spec.add_task(
+            "t",
+            crate::dag::spec::Payload::Flaky { sleep: 5 * SECOND, fail_tries: 99 },
+            &[],
+            crate::dag::spec::ExecKind::Faas,
+        );
+        spec.tasks[0].retries = 1;
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, MINUTE);
+        trigger_dag(&mut sim, &mut w, "doomed");
+        run_to_idle(&mut sim, &mut w, 10 * MINUTE);
+        let db = w.db.read();
+        let ti = db.task_instances.values().next().unwrap();
+        assert_eq!(ti.state, TiState::Failed);
+        let run = db.dag_runs.values().next().unwrap();
+        assert_eq!(run.state, RunState::Failed);
+    }
+
+    #[test]
+    fn caas_task_waits_fargate_provisioning() {
+        // App. E.1: container worker median wait ≈ 100 s.
+        let cfg = Config::seeded(7);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let spec = crate::workloads::synthetic::chain_dag_caas("cc", 1, 10.0, 5.0);
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, 30 * MINUTE);
+        let db = w.db.read();
+        let ti = db
+            .task_instances
+            .values()
+            .find(|t| t.state == TiState::Success)
+            .expect("completed task");
+        let wait = as_secs(ti.start.unwrap() - ti.ready.unwrap());
+        assert!(wait > 70.0 && wait < 160.0, "caas wait {wait}");
+        assert!(ti.host.as_deref().unwrap().starts_with("fargate-"));
+    }
+
+    #[test]
+    fn no_background_polling_when_idle() {
+        // "No sAirflow code continuously pulls or runs in the background":
+        // after runs complete and with cron unregistered, the event heap
+        // drains except cron + env-eviction probes.
+        let cfg = Config::seeded(8);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let mut spec = chain_dag("idle", 1, 1.0, 5.0);
+        spec.period = None;
+        upload_dag(&mut sim, &mut w, &spec);
+        trigger_dag(&mut sim, &mut w, "idle");
+        let max_events = w.cfg.max_events;
+        sim.run(&mut w, max_events); // runs to FULL drain
+        assert_eq!(sim.pending(), 0, "event loop fully idle");
+        let db = w.db.read();
+        assert!(db.dag_runs.values().all(|r| r.state.is_terminal()));
+    }
+
+    #[test]
+    fn keep_alive_controls_cold_vs_warm_runs() {
+        // T=30 min with 10-min keep-alive: every run is cold (§5).
+        let cfg = Config::seeded(9);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let spec = chain_dag("cold", 1, 10.0, 30.0);
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, mins(95.0)); // 3 runs
+        let stats = w.faas.stats(w.fns.worker);
+        assert_eq!(stats.cold_starts as usize, 3, "every run cold");
+        assert_eq!(stats.warm_starts, 0);
+    }
+
+    #[test]
+    fn fifo_scheduler_feed_is_serialized() {
+        // The scheduler ESM must never run two passes concurrently.
+        let cfg = Config::seeded(10);
+        let mut w = World::new(cfg);
+        let mut sim = w.sim();
+        let spec = parallel_dag("burst", 64, 5.0, 30.0);
+        upload_dag(&mut sim, &mut w, &spec);
+        run_to_idle(&mut sim, &mut w, 40 * MINUTE);
+        // inflight never exceeded 1 by construction; verify the gate closed
+        // and reopened consistently (final state: no stuck batches).
+        assert_eq!(w.sched_esm.inflight, 0, "gate released");
+        assert!(w.sched_q.is_empty(), "feed drained");
+        let _ = mq::pump::<World, crate::scheduler::SchedMsg>; // (type check)
+    }
+}

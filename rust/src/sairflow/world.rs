@@ -1,0 +1,490 @@
+//! The deployed sAirflow system: all substrates wired per Fig. 1.
+//!
+//! [`World`] owns every component; free functions implement the function
+//! bodies and queue pumps. The control flow is exactly §4.1:
+//!
+//! 1. a DAG file lands in blob storage → notification queue → **parse
+//!    function** (batched) → metadata-DB write;
+//! 2. the CDC captures the serialized-DAG change → **pre-parse function**
+//!    → event router → **schedule updater** → cron entry;
+//! 3. a cron fire → router → FIFO scheduler feed → **scheduler function**
+//!    (one pass, §4.3) → DAG run + queued tasks in the DB;
+//! 4. CDC captures `queued` task instances → router → executor feed →
+//!    **executor function** → Step Functions → **worker** (Lambda or
+//!    Batch container);
+//! 5. the worker runs LocalTaskJob, updates the DB; CDC captures the
+//!    terminal state → router → scheduler feed → next pass.
+//!
+//! No sAirflow code polls or runs in the background: every arrow above is
+//! an event.
+
+use crate::cloud::blob::BlobStore;
+use crate::cloud::caas::{CaasHost, CaasPlatform};
+use crate::cloud::cdc::{self, Cdc, CdcHost};
+use crate::cloud::db::{self, Change, DbHost, DbService};
+use crate::cloud::eventbridge::{
+    self, BusEvent, CronHost, CronService, EventRouter, Matcher,
+};
+use crate::cloud::faas::{self, FaasHost, FaasPlatform, FnId, Invocation};
+use crate::cloud::kinesis::{self, KinesisHost, KinesisStream};
+use crate::cloud::mq::{self, Esm, EsmConfig, SqsQueue};
+use crate::cloud::stepfn::{StepFnHost, StepFunctions};
+use crate::dag::spec::{DagSpec, ExecKind};
+use crate::dag::state::{RunState, TiState};
+use crate::executor::{self, TaskRef};
+use crate::parser::{self, UploadEvent};
+use crate::sairflow::config::Config;
+use crate::scheduler::{scheduling_pass, SchedMsg};
+use crate::sim::engine::Sim;
+use crate::sim::time::secs;
+use crate::worker;
+
+/// Routing targets of the event router (Fig. 1 (6)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// The FIFO scheduler feed.
+    Scheduler,
+    /// An executor feed (function or container, resolved per task).
+    Executor,
+    /// The schedule-updater function.
+    Updater,
+}
+
+/// Payloads of all FaaS functions in the deployment.
+pub enum FnPayload {
+    ParseBatch(Vec<UploadEvent>),
+    SchedBatch(Vec<SchedMsg>),
+    CdcBatch { shard: usize, changes: Vec<Change> },
+    ScheduleUpdate { dag_id: String },
+    ExecForward(TaskRef),
+    Worker(TaskRef),
+    FailureHandle(TaskRef),
+}
+
+/// Handles of the registered functions.
+#[derive(Debug, Clone, Copy)]
+pub struct Fns {
+    pub parser: FnId,
+    pub scheduler: FnId,
+    pub preparse: FnId,
+    pub updater: FnId,
+    pub executor: FnId,
+    pub worker: FnId,
+    pub failure: FnId,
+}
+
+/// The deployed sAirflow system.
+pub struct World {
+    pub cfg: Config,
+    pub faas: FaasPlatform<World>,
+    pub caas: CaasPlatform<World>,
+    pub db: DbService,
+    pub cdc: Cdc,
+    pub kinesis: KinesisStream<Change>,
+    pub router: EventRouter<Target>,
+    pub cron: CronService,
+    pub blob: BlobStore,
+    pub stepfn: StepFunctions,
+    pub upload_q: SqsQueue<UploadEvent>,
+    pub upload_esm: Esm,
+    pub sched_q: SqsQueue<SchedMsg>,
+    pub sched_esm: Esm,
+    pub fexec_q: SqsQueue<TaskRef>,
+    pub fexec_esm: Esm,
+    pub cexec_q: SqsQueue<TaskRef>,
+    pub cexec_esm: Esm,
+    pub fns: Fns,
+    /// Optional PJRT engine for `Compute` task payloads (the data plane).
+    pub engine: Option<crate::runtime::Engine>,
+}
+
+// ---- substrate host impls ------------------------------------------------
+
+impl FaasHost for World {
+    type Payload = FnPayload;
+    fn faas(&mut self) -> &mut FaasPlatform<World> {
+        &mut self.faas
+    }
+}
+
+impl CaasHost for World {
+    type Job = TaskRef;
+    fn caas(&mut self) -> &mut CaasPlatform<World> {
+        &mut self.caas
+    }
+}
+
+impl DbHost for World {
+    fn db(&mut self) -> &mut DbService {
+        &mut self.db
+    }
+    fn on_committed(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>) {
+        // Fig. 1 (5): the only event source of the control plane.
+        cdc::on_commit(sim, w, changes);
+    }
+}
+
+impl CdcHost for World {
+    fn cdc(&mut self) -> &mut Cdc {
+        &mut self.cdc
+    }
+    fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>) {
+        // DMS pushes captured changes into the Kinesis stream; sAirflow
+        // deploys a single shard so the control plane consumes changes in
+        // commit order.
+        kinesis::put_records(sim, w, 0, changes);
+    }
+}
+
+impl KinesisHost for World {
+    type Record = Change;
+    fn kinesis(&mut self) -> &mut KinesisStream<Change> {
+        &mut self.kinesis
+    }
+    fn on_records(sim: &mut Sim<Self>, w: &mut Self, shard: usize, records: Vec<Change>) {
+        // Each delivered batch invokes the pre-parse lambda (Fig. 1
+        // (5) → (6)); the lambda releases the shard when it completes.
+        faas::invoke(sim, w, w.fns.preparse, FnPayload::CdcBatch { shard, changes: records });
+    }
+}
+
+impl CronHost for World {
+    fn cron(&mut self) -> &mut CronService {
+        &mut self.cron
+    }
+    fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: String, logical_ts: u64) {
+        // A periodic event is routed like any other bus event (Fig. 1 (7)).
+        let ev = BusEvent::CronFire { dag_id: dag_id.clone(), logical_ts };
+        let targets = w.router.route(&ev);
+        for t in targets {
+            if t == Target::Scheduler {
+                w.sched_q.send(SchedMsg::Periodic { dag_id: dag_id.clone(), logical_ts });
+                mq::pump(sim, w, sched_acc, sched_handler);
+            }
+        }
+    }
+}
+
+impl StepFnHost for World {
+    fn stepfn(&mut self) -> &mut StepFunctions {
+        &mut self.stepfn
+    }
+}
+
+// ---- queue accessors + handlers (fn pointers for the pumps) --------------
+
+pub fn upload_acc(w: &mut World) -> (&mut SqsQueue<UploadEvent>, &mut Esm) {
+    (&mut w.upload_q, &mut w.upload_esm)
+}
+
+pub fn upload_handler(sim: &mut Sim<World>, w: &mut World, batch: Vec<UploadEvent>) {
+    let f = w.fns.parser;
+    faas::invoke(sim, w, f, FnPayload::ParseBatch(batch));
+    mq::done(sim, w, upload_acc, upload_handler);
+}
+
+pub fn sched_acc(w: &mut World) -> (&mut SqsQueue<SchedMsg>, &mut Esm) {
+    (&mut w.sched_q, &mut w.sched_esm)
+}
+
+pub fn sched_handler(sim: &mut Sim<World>, w: &mut World, batch: Vec<SchedMsg>) {
+    // The FIFO gate stays closed until the scheduler invocation completes —
+    // the §4.3 critical section. At-least-once semantics: if the
+    // invocation fails (crash/timeout), the batch goes back to the front
+    // of the feed and is redelivered — "sAirflow's reliability directly
+    // relies on the guarantees provided by FaaS" (§4.3); the pass is
+    // idempotent (it re-reads the DB snapshot), so redelivery is safe.
+    let f = w.fns.scheduler;
+    let retry = batch.clone();
+    faas::invoke_cb(sim, w, f, FnPayload::SchedBatch(batch), move |sim, w, ok| {
+        if !ok {
+            w.sched_q.stats.sent += retry.len() as u64; // redelivery
+            for m in retry.into_iter().rev() {
+                w.sched_q.send_front(m); // restore original order
+            }
+        }
+        // Reopen the FIFO gate (success or redelivery alike).
+        mq::done(sim, w, sched_acc, sched_handler);
+    });
+}
+
+pub fn fexec_acc(w: &mut World) -> (&mut SqsQueue<TaskRef>, &mut Esm) {
+    (&mut w.fexec_q, &mut w.fexec_esm)
+}
+
+pub fn fexec_handler(sim: &mut Sim<World>, w: &mut World, batch: Vec<TaskRef>) {
+    let f = w.fns.executor;
+    for tr in batch {
+        faas::invoke(sim, w, f, FnPayload::ExecForward(tr));
+    }
+    mq::done(sim, w, fexec_acc, fexec_handler);
+}
+
+pub fn cexec_acc(w: &mut World) -> (&mut SqsQueue<TaskRef>, &mut Esm) {
+    (&mut w.cexec_q, &mut w.cexec_esm)
+}
+
+pub fn cexec_handler(sim: &mut Sim<World>, w: &mut World, batch: Vec<TaskRef>) {
+    for tr in batch {
+        executor::forward_container(sim, w, tr);
+    }
+    mq::done(sim, w, cexec_acc, cexec_handler);
+}
+
+// ---- function bodies ------------------------------------------------------
+
+fn parser_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::ParseBatch(batch) = ctx.payload else { unreachable!("parser payload") };
+    // Per-file blob GET + parse CPU.
+    let mut delay = secs(sim.rng.uniform(0.05, 0.15));
+    for _ in &batch {
+        delay += BlobStore::get_latency(&mut sim.rng);
+    }
+    let inv = ctx.inv;
+    sim.after(delay, "parse.work", move |sim, w| {
+        let mut parsed = Vec::new();
+        for ev in &batch {
+            if let Some(text) = w.blob.get(&ev.path) {
+                match parser::parse_dag_file(text) {
+                    Ok(spec) => parsed.push((ev.path.clone(), spec)),
+                    Err(_) => {} // malformed DAG files are skipped (logged)
+                }
+            }
+        }
+        let txn = parser::parse_batch_txn(&parsed);
+        if txn.is_empty() {
+            faas::complete(sim, w, inv, true);
+            return;
+        }
+        db::commit(sim, w, txn, move |sim, w| {
+            faas::complete(sim, w, inv, true);
+        });
+    });
+}
+
+fn scheduler_body(sim: &mut Sim<World>, w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::SchedBatch(batch) = ctx.payload else { unreachable!("scheduler payload") };
+    let cpu = secs(sim.rng.uniform(w.cfg.sched_cpu.0, w.cfg.sched_cpu.1));
+    let inv = ctx.inv;
+    sim.after(cpu, "sched.pass", move |sim, w| {
+        let out = scheduling_pass(w.db.read(), sim.now(), &batch, &w.cfg.limits);
+        if out.txn.is_empty() {
+            faas::complete(sim, w, inv, true);
+            return;
+        }
+        db::commit(sim, w, out.txn, move |sim, w| {
+            // Completion releases the FIFO gate through the invocation
+            // callback in sched_handler (also the redelivery path).
+            faas::complete(sim, w, inv, true);
+        });
+    });
+}
+
+fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::CdcBatch { shard, changes } = ctx.payload else {
+        unreachable!("preparse payload")
+    };
+    let cpu = secs(sim.rng.uniform(0.005, 0.02));
+    let inv = ctx.inv;
+    sim.after(cpu, "preparse.work", move |sim, w| {
+        for change in changes {
+            let ev = BusEvent::Change(change.clone());
+            let targets = w.router.route(&ev);
+            for t in targets {
+                dispatch(sim, w, t, &change);
+            }
+        }
+        faas::complete(sim, w, inv, true);
+        // Release the Kinesis shard for its next batch.
+        kinesis::delivered(sim, w, shard);
+    });
+}
+
+/// Dispatch one routed event to its target (EventBridge → queue/function).
+fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: &Change) {
+    match (target, change) {
+        (Target::Updater, Change::SerializedDag { dag_id }) => {
+            let f = w.fns.updater;
+            faas::invoke(sim, w, f, FnPayload::ScheduleUpdate { dag_id: dag_id.clone() });
+        }
+        (Target::Scheduler, Change::DagRun { dag_id, run_id, .. }) => {
+            w.sched_q.send(SchedMsg::RunChanged { dag_id: dag_id.clone(), run_id: *run_id });
+            mq::pump(sim, w, sched_acc, sched_handler);
+        }
+        (Target::Scheduler, Change::Ti { dag_id, run_id, task_id, state }) => {
+            w.sched_q.send(SchedMsg::TaskFinished {
+                dag_id: dag_id.clone(),
+                run_id: *run_id,
+                task_id: *task_id,
+                state: *state,
+            });
+            mq::pump(sim, w, sched_acc, sched_handler);
+        }
+        (Target::Executor, Change::Ti { dag_id, run_id, task_id, .. }) => {
+            let tr = TaskRef {
+                dag_id: dag_id.clone(),
+                run_id: *run_id,
+                task_id: *task_id,
+            };
+            // Resolve the executor kind from the serialized DAG (§4.4).
+            let kind = w
+                .db
+                .read()
+                .serialized
+                .get(dag_id)
+                .and_then(|s| s.tasks.get(*task_id as usize))
+                .map(|t| t.executor)
+                .unwrap_or(ExecKind::Faas);
+            match kind {
+                ExecKind::Faas => {
+                    w.fexec_q.send(tr);
+                    mq::pump(sim, w, fexec_acc, fexec_handler);
+                }
+                ExecKind::Caas => {
+                    w.cexec_q.send(tr);
+                    mq::pump(sim, w, cexec_acc, cexec_handler);
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+fn updater_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::ScheduleUpdate { dag_id } = ctx.payload else { unreachable!("updater payload") };
+    let cpu = secs(sim.rng.uniform(0.01, 0.04));
+    let inv = ctx.inv;
+    sim.after(cpu, "updater.work", move |sim, w| {
+        if let Some(period) = w.db.read().serialized.get(&dag_id).and_then(|s| s.period) {
+            eventbridge::set_schedule(sim, w, &dag_id, period);
+        }
+        faas::complete(sim, w, inv, true);
+    });
+}
+
+fn executor_body(sim: &mut Sim<World>, w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::ExecForward(tr) = ctx.payload else { unreachable!("executor payload") };
+    let inv = ctx.inv;
+    executor::forward_function(sim, w, tr);
+    // The executor function only forwards — it does not wait for the task
+    // ("executors do not actively wait for the completion of the user
+    // work", §4.1).
+    let cpu = secs(sim.rng.uniform(0.02, 0.06));
+    sim.after(cpu, "exec.done", move |sim, w| faas::complete(sim, w, inv, true));
+}
+
+fn worker_body(sim: &mut Sim<World>, w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::Worker(tr) = ctx.payload else { unreachable!("worker payload") };
+    worker::run_faas_worker(sim, w, ctx.inv, ctx.env, tr);
+}
+
+fn failure_body(sim: &mut Sim<World>, w: &mut World, ctx: Invocation<FnPayload>) {
+    let FnPayload::FailureHandle(tr) = ctx.payload else { unreachable!("failure payload") };
+    let inv = ctx.inv;
+    executor::handle_failure(sim, w, tr, move |sim, w| {
+        faas::complete(sim, w, inv, true);
+    });
+}
+
+fn container_body(sim: &mut Sim<World>, w: &mut World, ctx: crate::cloud::caas::JobCtx<TaskRef>) {
+    worker::run_container_worker(sim, w, ctx.job, ctx.payload);
+}
+
+// ---- construction ----------------------------------------------------------
+
+impl World {
+    /// Build a deployment from configuration: register all functions,
+    /// install the routing rules of §4.1, create the queues.
+    pub fn new(cfg: Config) -> World {
+        let mut faas_platform: FaasPlatform<World> = FaasPlatform::new();
+        let fns = Fns {
+            parser: faas_platform.register(cfg.parser.clone(), parser_body),
+            scheduler: faas_platform.register(cfg.scheduler.clone(), scheduler_body),
+            preparse: faas_platform.register(cfg.preparse.clone(), preparse_body),
+            updater: faas_platform.register(cfg.updater.clone(), updater_body),
+            executor: faas_platform.register(cfg.executor.clone(), executor_body),
+            worker: faas_platform.register(cfg.worker.clone(), worker_body),
+            failure: faas_platform.register(cfg.failure.clone(), failure_body),
+        };
+
+        let mut caas_platform: CaasPlatform<World> = CaasPlatform::new(cfg.caas.clone());
+        caas_platform.set_body(container_body);
+
+        // Routing rules of §4.1 / Fig. 1 (6).
+        let mut router = EventRouter::new();
+        router.rule("dag-updated", Matcher::SerializedDagChanged, Target::Updater);
+        router.rule(
+            "dag-run-events",
+            Matcher::DagRunIn(vec![RunState::Queued, RunState::Running]),
+            Target::Scheduler,
+        );
+        router.rule(
+            "task-finished",
+            Matcher::TiIn(vec![
+                TiState::Success,
+                TiState::Failed,
+                TiState::UpForRetry,
+                TiState::UpstreamFailed,
+            ]),
+            Target::Scheduler,
+        );
+        router.rule("task-queued", Matcher::TiIn(vec![TiState::Queued]), Target::Executor);
+        router.rule("periodic", Matcher::CronFired, Target::Scheduler);
+
+        let mut cdc = Cdc::default();
+        cdc.delay = cfg.cdc_delay;
+
+        World {
+            db: DbService::new(cfg.db.clone()),
+            cdc,
+            kinesis: KinesisStream::new(1),
+            router,
+            cron: CronService::new(),
+            blob: BlobStore::new(),
+            stepfn: StepFunctions::default(),
+            upload_q: SqsQueue::standard("dag-uploads"),
+            upload_esm: Esm::new(EsmConfig {
+                batch_size: 10,
+                batch_window: secs(0.5),
+                delivery_latency: (0.02, 0.08),
+                max_concurrency: 8,
+            }),
+            sched_q: SqsQueue::fifo("scheduler-feed"),
+            sched_esm: Esm::new(EsmConfig::fifo_scheduler_feed()),
+            fexec_q: SqsQueue::standard("function-executor"),
+            fexec_esm: Esm::new(EsmConfig::executor_feed()),
+            cexec_q: SqsQueue::standard("container-executor"),
+            cexec_esm: Esm::new(EsmConfig::executor_feed()),
+            fns,
+            engine: None,
+            faas: faas_platform,
+            caas: caas_platform,
+            cfg,
+        }
+    }
+
+    /// Fresh simulation engine seeded from the configuration.
+    pub fn sim(&self) -> Sim<World> {
+        Sim::new(self.cfg.seed)
+    }
+}
+
+/// Upload a DAG file (the user action (1) of Fig. 1): write the file to
+/// blob storage and emit the storage notification.
+pub fn upload_dag(sim: &mut Sim<World>, _w: &mut World, spec: &DagSpec) {
+    let key = format!("dags/{}.json", spec.dag_id);
+    let text = spec.to_json().to_string_pretty();
+    let latency = BlobStore::put_latency(&mut sim.rng);
+    sim.after(latency, "blob.upload", move |sim, w| {
+        w.blob.put(&key, text);
+        w.upload_q.send(UploadEvent { path: key });
+        mq::pump(sim, w, upload_acc, upload_handler);
+    });
+}
+
+/// Trigger a DAG run manually (the web-UI flow (14) in Fig. 1): sends a
+/// periodic-style event directly to the scheduler feed.
+pub fn trigger_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
+    w.sched_q.send(SchedMsg::Periodic { dag_id: dag_id.to_string(), logical_ts: sim.now() });
+    mq::pump(sim, w, sched_acc, sched_handler);
+}

@@ -1,0 +1,530 @@
+//! The event-triggered scheduler (§4.3).
+//!
+//! Airflow runs the scheduler as an always-on thread; sAirflow executes a
+//! *single pass* of the same algorithm per FaaS invocation, triggered by
+//! events (a completed task, a new DAG run, a periodic cron fire). For
+//! consistency, passes are fed from a single-shard FIFO queue — the
+//! serverless surrogate of Airflow's scheduler critical section.
+//!
+//! The pass itself is a pure function from a metadata-database snapshot
+//! and an event batch to a transaction ([`scheduling_pass`]) — exactly the
+//! paper's three steps:
+//!
+//! 1. for each DAG ready to execute: create a DAG run;
+//! 2. for each task in each DAG run with all predecessors completed:
+//!    create a *scheduled* task instance;
+//! 3. for each scheduled task instance, label it *queued*.
+//!
+//! Being pure, the pass is directly property-testable (see
+//! `rust/tests/prop_scheduler.rs`). The MWAA baseline reuses this exact
+//! pass inside its polling loop — same Airflow semantics, different
+//! triggering model.
+
+use crate::cloud::db::{MetaDb, TiRow, Txn, Write};
+use crate::dag::graph::DagGraph;
+use crate::dag::state::{RunState, TiState};
+use crate::sim::time::SimTime;
+use std::collections::{BTreeSet, HashMap};
+
+/// Messages feeding the scheduler (the FIFO queue payload).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedMsg {
+    /// A periodic cron fire: a single launch of a scheduled workflow.
+    Periodic { dag_id: String, logical_ts: SimTime },
+    /// A DAG run row changed (e.g. the run was created).
+    RunChanged { dag_id: String, run_id: u64 },
+    /// A task instance reached a terminal-ish state
+    /// (success / failed / up-for-retry).
+    TaskFinished { dag_id: String, run_id: u64, task_id: u32, state: TiState },
+}
+
+/// Scheduler limits, matching the paper's deployment (§5): both systems
+/// support at most 125 concurrent task instances.
+#[derive(Debug, Clone)]
+pub struct SchedLimits {
+    /// Maximum queued+running task instances across all DAGs.
+    pub parallelism: usize,
+}
+
+impl Default for SchedLimits {
+    fn default() -> SchedLimits {
+        SchedLimits { parallelism: 125 }
+    }
+}
+
+/// Statistics of one pass (for reporting/tests).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct PassStats {
+    pub runs_created: usize,
+    /// Periodic triggers skipped by the `max_active_runs` gate.
+    pub runs_skipped: usize,
+    pub tis_scheduled: usize,
+    pub tis_queued: usize,
+    pub runs_completed: usize,
+    pub retries: usize,
+}
+
+/// Output of a scheduling pass: the transaction to commit plus statistics.
+#[derive(Debug, Default)]
+pub struct PassOutput {
+    pub txn: Txn,
+    pub stats: PassStats,
+}
+
+/// Next run id for a DAG (1-based, dense).
+fn next_run_id(db: &MetaDb, dag_id: &str) -> u64 {
+    db.dag_runs
+        .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
+        .map(|((_, r), _)| *r)
+        .max()
+        .unwrap_or(0)
+        + 1
+}
+
+/// Execute one scheduling pass over a database snapshot.
+///
+/// `now` is the pass time (used for run start and ready computation when a
+/// predecessor end time is unknown). The returned transaction must be
+/// committed by the caller; because passes are serialized by the FIFO
+/// feed, the snapshot cannot race with another pass.
+pub fn scheduling_pass(
+    db: &MetaDb,
+    now: SimTime,
+    batch: &[SchedMsg],
+    limits: &SchedLimits,
+) -> PassOutput {
+    let mut out = PassOutput::default();
+    // Runs that this pass must (re)examine.
+    let mut dirty_runs: BTreeSet<(String, u64)> = BTreeSet::new();
+
+    // Step 1: create DAG runs for periodic triggers.
+    let mut created_runs: Vec<(String, u64)> = Vec::new();
+    for msg in batch {
+        match msg {
+            SchedMsg::Periodic { dag_id, logical_ts } => {
+                let Some(spec) = db.serialized.get(dag_id) else { continue };
+                if db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false) {
+                    continue;
+                }
+                // Account for runs created earlier in this same pass.
+                let already =
+                    created_runs.iter().filter(|(d, _)| d == dag_id).count() as u64;
+                // Airflow `max_active_runs`: skip the trigger while too
+                // many runs of this DAG are still active.
+                let active_runs = db
+                    .dag_runs
+                    .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                    .filter(|(_, r)| !r.state.is_terminal())
+                    .count() as u64
+                    + already;
+                if active_runs >= spec.max_active_runs as u64 {
+                    out.stats.runs_skipped += 1;
+                    continue;
+                }
+                let run_id = next_run_id(db, dag_id) + already;
+                out.txn.push(Write::InsertDagRun(crate::cloud::db::DagRunRow {
+                    dag_id: dag_id.clone(),
+                    run_id,
+                    logical_ts: *logical_ts,
+                    state: RunState::Running,
+                    start: Some(now),
+                    end: None,
+                }));
+                for t in &spec.tasks {
+                    out.txn.push(Write::InsertTi(TiRow {
+                        dag_id: dag_id.clone(),
+                        run_id,
+                        task_id: t.id,
+                        state: TiState::None,
+                        try_number: 0,
+                        ready: None,
+                        start: None,
+                        end: None,
+                        host: None,
+                    }));
+                }
+                created_runs.push((dag_id.clone(), run_id));
+                out.stats.runs_created += 1;
+            }
+            SchedMsg::RunChanged { dag_id, run_id } => {
+                dirty_runs.insert((dag_id.clone(), *run_id));
+            }
+            SchedMsg::TaskFinished { dag_id, run_id, .. } => {
+                dirty_runs.insert((dag_id.clone(), *run_id));
+            }
+        }
+    }
+
+    // Current global active count for the parallelism limit; queue decisions
+    // in this pass immediately consume budget.
+    let mut active = db.active_ti_count();
+
+    // Runs created in this pass are NOT scheduled here: the DAG-run
+    // insertion flows through CDC back to the scheduler (§4.1 "A DAG run
+    // event is routed to the scheduler"), and the *next* pass schedules
+    // the roots. (MWAA's polling loop picks them up on its next
+    // iteration.) Root ready times are therefore the run's start.
+    let _ = &created_runs;
+
+    // Steps 2+3 for existing dirty runs, plus run-completion detection.
+    // Graphs are built once per DAG per pass (perf: a batch often carries
+    // many events of the same DAG).
+    let mut graphs: HashMap<&str, DagGraph> = HashMap::new();
+    for (dag_id, run_id) in &dirty_runs {
+        let Some(run) = db.dag_runs.get(&(dag_id.clone(), *run_id)) else { continue };
+        if run.state.is_terminal() {
+            continue;
+        }
+        let Some(spec) = db.serialized.get(dag_id) else { continue };
+        let graph = graphs
+            .entry(spec.dag_id.as_str())
+            .or_insert_with(|| DagGraph::of(spec));
+        let tis = db.tis_of_run(dag_id, *run_id);
+        if tis.is_empty() {
+            continue;
+        }
+        // Task ids are dense and `tis` is task-id-ordered (BTreeMap range
+        // order), so predecessors are O(1) indexes — no keyed lookups on
+        // the hot path.
+        debug_assert!(tis.iter().enumerate().all(|(i, t)| t.task_id as usize == i));
+
+        let mut all_terminal = true;
+        let mut any_failed = false;
+        for ti in &tis {
+            if !ti.state.is_terminal() {
+                all_terminal = false;
+            }
+            if matches!(ti.state, TiState::Failed | TiState::UpstreamFailed) {
+                any_failed = true;
+            }
+        }
+        if all_terminal {
+            out.txn.push(Write::SetRunState {
+                dag_id: dag_id.clone(),
+                run_id: *run_id,
+                state: if any_failed { RunState::Failed } else { RunState::Success },
+            });
+            out.stats.runs_completed += 1;
+            continue;
+        }
+
+        for ti in &tis {
+            match ti.state {
+                TiState::None => {
+                    // One pass over the predecessors decides everything:
+                    // a terminally-failed pred dooms this task (Airflow's
+                    // `upstream_failed` propagation); otherwise it becomes
+                    // ready once every pred succeeded (ready time = latest
+                    // pred end).
+                    let preds = &graph.upstream[ti.task_id as usize];
+                    let mut ready_at: SimTime = run.start.unwrap_or(now);
+                    let mut all_ok = true;
+                    let mut doomed = false;
+                    for &p in preds {
+                        match tis.get(p as usize).map(|r| (r.state, r.end)) {
+                            Some((TiState::Success, end)) => {
+                                ready_at = ready_at.max(end.unwrap_or(now));
+                            }
+                            Some((TiState::Failed | TiState::UpstreamFailed, _)) => {
+                                doomed = true;
+                                break;
+                            }
+                            _ => all_ok = false,
+                        }
+                    }
+                    if doomed {
+                        out.txn.push(Write::SetTiState {
+                            key: (dag_id.clone(), *run_id, ti.task_id),
+                            state: TiState::UpstreamFailed,
+                        });
+                        continue;
+                    }
+                    if all_ok {
+                        let key = (dag_id.clone(), *run_id, ti.task_id);
+                        out.txn.push(Write::SetTiReady { key: key.clone(), ts: ready_at });
+                        out.txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+                        out.stats.tis_scheduled += 1;
+                        if active < limits.parallelism {
+                            out.txn.push(Write::SetTiState {
+                                key,
+                                state: TiState::Queued,
+                            });
+                            out.stats.tis_queued += 1;
+                            active += 1;
+                        }
+                    }
+                }
+                TiState::Scheduled => {
+                    // Left over from an earlier pass that hit the
+                    // parallelism limit.
+                    if active < limits.parallelism {
+                        out.txn.push(Write::SetTiState {
+                            key: (dag_id.clone(), *run_id, ti.task_id),
+                            state: TiState::Queued,
+                        });
+                        out.stats.tis_queued += 1;
+                        active += 1;
+                    }
+                }
+                TiState::UpForRetry => {
+                    // Reschedule a failed-but-retryable task.
+                    let key = (dag_id.clone(), *run_id, ti.task_id);
+                    out.txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+                    out.stats.retries += 1;
+                    if active < limits.parallelism {
+                        out.txn.push(Write::SetTiState { key, state: TiState::Queued });
+                        out.stats.tis_queued += 1;
+                        active += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::db::{DagRow, MetaDb};
+    use crate::sim::time::SECOND;
+    use crate::workloads::synthetic::{chain_dag, parallel_dag};
+
+    fn db_with(spec: &crate::dag::spec::DagSpec) -> MetaDb {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: spec.dag_id.clone(),
+            fileloc: format!("dags/{}.json", spec.dag_id),
+            period: spec.period,
+            is_paused: false,
+        }));
+        txn.push(Write::PutSerializedDag(spec.clone()));
+        db.apply(txn, 0);
+        db
+    }
+
+    fn periodic(dag_id: &str) -> Vec<SchedMsg> {
+        vec![SchedMsg::Periodic { dag_id: dag_id.into(), logical_ts: 0 }]
+    }
+
+    /// Advance a run by one RunChanged pass (what the CDC DAG-run event
+    /// triggers in sAirflow, or the next polling iteration in MWAA).
+    fn advance(db: &mut MetaDb, dag_id: &str, run_id: u64, now: u64) -> PassStats {
+        let msg = vec![SchedMsg::RunChanged { dag_id: dag_id.into(), run_id }];
+        let out = scheduling_pass(db, now, &msg, &SchedLimits::default());
+        let stats = out.stats.clone();
+        db.apply(out.txn, now);
+        stats
+    }
+
+    #[test]
+    fn periodic_creates_run_then_next_pass_queues_roots() {
+        let spec = chain_dag("c", 3, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        // Pass 1 (periodic event): creates the run + TIs, queues nothing —
+        // the DAG-run event flows back through CDC (§4.1).
+        let out = scheduling_pass(&db, SECOND, &periodic("c"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 1);
+        assert_eq!(out.stats.tis_scheduled, 0);
+        db.apply(out.txn, SECOND);
+        assert_eq!(db.dag_runs.len(), 1);
+        assert_eq!(db.task_instances.len(), 3);
+        // Pass 2 (DAG-run event): schedules + queues the chain head.
+        let stats = advance(&mut db, "c", 1, 2 * SECOND);
+        assert_eq!(stats.tis_scheduled, 1);
+        assert_eq!(stats.tis_queued, 1);
+        let root = &db.task_instances[&("c".into(), 1, 0)];
+        assert_eq!(root.state, TiState::Queued);
+        // Root ready time = the run's start (creation commit), not pass 2.
+        assert_eq!(root.ready, Some(SECOND));
+    }
+
+    #[test]
+    fn parallel_queues_all_after_root_success() {
+        let spec = parallel_dag("p", 5, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let out = scheduling_pass(&db, 0, &periodic("p"), &SchedLimits::default());
+        db.apply(out.txn, 0);
+        advance(&mut db, "p", 1, 0); // queue the root
+        // Simulate root running + success.
+        let key = ("p".to_string(), 1, 0u32);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        db.apply(t, 2 * SECOND);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "p".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Success,
+        }];
+        let out = scheduling_pass(&db, 3 * SECOND, &msg, &SchedLimits::default());
+        assert_eq!(out.stats.tis_scheduled, 5);
+        assert_eq!(out.stats.tis_queued, 5);
+        db.apply(out.txn, 3 * SECOND);
+        // Successor ready time = predecessor end (2 s), not pass time (3 s).
+        let ti = &db.task_instances[&("p".into(), 1, 1)];
+        assert_eq!(ti.ready, Some(2 * SECOND));
+        assert_eq!(ti.state, TiState::Queued);
+    }
+
+    #[test]
+    fn parallelism_limit_enforced() {
+        let spec = parallel_dag("p", 50, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let out = scheduling_pass(&db, 0, &periodic("p"), &SchedLimits::default());
+        db.apply(out.txn, 0);
+        advance(&mut db, "p", 1, 0); // queue the root
+        // Root success.
+        let key = ("p".to_string(), 1, 0u32);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Success });
+        db.apply(t, 2);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "p".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Success,
+        }];
+        let limits = SchedLimits { parallelism: 10 };
+        let out = scheduling_pass(&db, 3, &msg, &limits);
+        assert_eq!(out.stats.tis_scheduled, 50);
+        assert_eq!(out.stats.tis_queued, 10, "only 10 slots");
+        db.apply(out.txn, 3);
+        // While saturated, later passes queue nothing more.
+        let out2 = scheduling_pass(
+            &db,
+            4,
+            &[SchedMsg::RunChanged { dag_id: "p".into(), run_id: 1 }],
+            &limits,
+        );
+        assert_eq!(out2.stats.tis_queued, 0, "still saturated");
+    }
+
+    #[test]
+    fn run_completion_detected() {
+        let spec = chain_dag("c", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let out = scheduling_pass(&db, 0, &periodic("c"), &SchedLimits::default());
+        db.apply(out.txn, 0);
+        advance(&mut db, "c", 1, 0); // queue the root
+        let key = ("c".to_string(), 1, 0u32);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Success });
+        db.apply(t, 11 * SECOND);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "c".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Success,
+        }];
+        let out = scheduling_pass(&db, 12 * SECOND, &msg, &SchedLimits::default());
+        assert_eq!(out.stats.runs_completed, 1);
+        db.apply(out.txn, 12 * SECOND);
+        let run = &db.dag_runs[&("c".into(), 1)];
+        assert_eq!(run.state, RunState::Success);
+        assert_eq!(run.end, Some(12 * SECOND));
+    }
+
+    #[test]
+    fn retry_rescheduled_then_failed_run() {
+        let mut spec = chain_dag("c", 1, 10.0, 5.0);
+        spec.tasks[0].retries = 1;
+        let mut db = db_with(&spec);
+        let out = scheduling_pass(&db, 0, &periodic("c"), &SchedLimits::default());
+        db.apply(out.txn, 0);
+        advance(&mut db, "c", 1, 0); // queue the root
+        let key = ("c".to_string(), 1, 0u32);
+        // First try fails -> UpForRetry.
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::UpForRetry });
+        db.apply(t, 2);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "c".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::UpForRetry,
+        }];
+        let out = scheduling_pass(&db, 3, &msg, &SchedLimits::default());
+        assert_eq!(out.stats.retries, 1);
+        db.apply(out.txn, 3);
+        assert_eq!(db.task_instances[&key].state, TiState::Queued);
+        // Second try fails terminally.
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Failed });
+        db.apply(t, 5);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "c".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Failed,
+        }];
+        let out = scheduling_pass(&db, 6, &msg, &SchedLimits::default());
+        assert_eq!(out.stats.runs_completed, 1);
+        db.apply(out.txn, 6);
+        assert_eq!(db.dag_runs[&("c".into(), 1)].state, RunState::Failed);
+    }
+
+    #[test]
+    fn unknown_dag_ignored() {
+        let db = MetaDb::new();
+        let out = scheduling_pass(&db, 0, &periodic("ghost"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 0);
+        assert!(out.txn.is_empty());
+    }
+
+    #[test]
+    fn paused_dag_not_run() {
+        let spec = chain_dag("c", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        db.dags.get_mut("c").unwrap().is_paused = true;
+        let out = scheduling_pass(&db, 0, &periodic("c"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 0);
+    }
+
+    #[test]
+    fn max_active_runs_gates_triggers() {
+        let spec = chain_dag("slow", 1, 10.0, 5.0).max_active_runs(1);
+        let mut db = db_with(&spec);
+        // First trigger creates a run.
+        let out = scheduling_pass(&db, 0, &periodic("slow"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 1);
+        db.apply(out.txn, 0);
+        // Second trigger while run 1 is active: skipped.
+        let out = scheduling_pass(&db, 1, &periodic("slow"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 0);
+        assert_eq!(out.stats.runs_skipped, 1);
+        // Complete run 1, then the next trigger goes through.
+        advance(&mut db, "slow", 1, 2);
+        let key = ("slow".to_string(), 1, 0u32);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Success });
+        db.apply(t, 3);
+        advance(&mut db, "slow", 1, 4); // marks run terminal
+        let out = scheduling_pass(&db, 5, &periodic("slow"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 1);
+    }
+
+    #[test]
+    fn two_periodics_same_pass_get_distinct_runs() {
+        let spec = chain_dag("c", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let batch = vec![
+            SchedMsg::Periodic { dag_id: "c".into(), logical_ts: 0 },
+            SchedMsg::Periodic { dag_id: "c".into(), logical_ts: 1 },
+        ];
+        let out = scheduling_pass(&db, 0, &batch, &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 2);
+        db.apply(out.txn, 0);
+        assert_eq!(db.dag_runs.len(), 2);
+        assert!(db.dag_runs.contains_key(&("c".into(), 1)));
+        assert!(db.dag_runs.contains_key(&("c".into(), 2)));
+    }
+}

@@ -1,0 +1,235 @@
+//! Discrete-event simulation engine.
+//!
+//! The whole serverless cloud (queues, functions, database, CDC, ...) runs
+//! on this engine in *virtual time*: components schedule closures to run at
+//! future instants; the engine pops them in time order. Ties are broken by
+//! scheduling sequence number, so execution is fully deterministic.
+//!
+//! The engine is generic over the world type `W` (the struct holding all
+//! component state). Event handlers receive `(&mut Sim<W>, &mut W)` so they
+//! can both mutate the world and schedule further events.
+
+use crate::sim::time::{SimDuration, SimTime};
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+type Handler<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+
+struct Scheduled<W> {
+    at: SimTime,
+    seq: u64,
+    label: &'static str,
+    run: Handler<W>,
+}
+
+impl<W> PartialEq for Scheduled<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<W> Eq for Scheduled<W> {}
+impl<W> PartialOrd for Scheduled<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Scheduled<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for earliest-first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// The simulation engine: virtual clock, event heap, and RNG.
+pub struct Sim<W> {
+    now: SimTime,
+    seq: u64,
+    heap: BinaryHeap<Scheduled<W>>,
+    /// Deterministic randomness for latency sampling. Seeded per experiment.
+    pub rng: Rng,
+    /// Number of events executed so far (for perf reporting).
+    pub executed: u64,
+    /// When set, every executed event is appended as `(time, label)`.
+    pub trace: Option<Vec<(SimTime, &'static str)>>,
+}
+
+impl<W> Sim<W> {
+    pub fn new(seed: u64) -> Self {
+        Sim {
+            now: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            rng: Rng::new(seed),
+            executed: 0,
+            trace: None,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `f` to run at absolute virtual time `at` (clamped to now).
+    pub fn at(&mut self, at: SimTime, label: &'static str, f: impl FnOnce(&mut Sim<W>, &mut W) + 'static) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, label, run: Box::new(f) });
+    }
+
+    /// Schedule `f` to run after `delay`.
+    pub fn after(
+        &mut self,
+        delay: SimDuration,
+        label: &'static str,
+        f: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+    ) {
+        let at = self.now.saturating_add(delay);
+        self.at(at, label, f);
+    }
+
+    /// Schedule `f` to run "now" (after currently-running handler returns,
+    /// ordered after already-queued events at the same instant).
+    pub fn soon(&mut self, label: &'static str, f: impl FnOnce(&mut Sim<W>, &mut W) + 'static) {
+        self.at(self.now, label, f);
+    }
+
+    fn step(&mut self, world: &mut W) -> bool {
+        match self.heap.pop() {
+            None => false,
+            Some(ev) => {
+                debug_assert!(ev.at >= self.now, "time went backwards");
+                self.now = ev.at;
+                self.executed += 1;
+                if let Some(tr) = &mut self.trace {
+                    tr.push((ev.at, ev.label));
+                }
+                (ev.run)(self, world);
+                true
+            }
+        }
+    }
+
+    /// Run until the event heap is empty. `max_events` guards against
+    /// runaway self-scheduling loops.
+    pub fn run(&mut self, world: &mut W, max_events: u64) {
+        let mut n = 0;
+        while self.step(world) {
+            n += 1;
+            assert!(n < max_events, "simulation exceeded {max_events} events — runaway loop?");
+        }
+    }
+
+    /// Run until virtual time `t` (events at exactly `t` are executed).
+    /// Advances the clock to `t` even if the heap empties earlier.
+    pub fn run_until(&mut self, world: &mut W, t: SimTime, max_events: u64) {
+        let mut n = 0;
+        while let Some(head) = self.heap.peek() {
+            if head.at > t {
+                break;
+            }
+            self.step(world);
+            n += 1;
+            assert!(n < max_events, "simulation exceeded {max_events} events — runaway loop?");
+        }
+        self.now = self.now.max(t);
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn next_event_at(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SECOND;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(SimTime, u32)>,
+    }
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        sim.after(3 * SECOND, "c", |s, w| w.log.push((s.now(), 3)));
+        sim.after(SECOND, "a", |s, w| w.log.push((s.now(), 1)));
+        sim.after(2 * SECOND, "b", |s, w| w.log.push((s.now(), 2)));
+        sim.run(&mut w, 100);
+        assert_eq!(w.log, vec![(SECOND, 1), (2 * SECOND, 2), (3 * SECOND, 3)]);
+    }
+
+    #[test]
+    fn ties_break_by_schedule_order() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        for i in 0..10 {
+            sim.at(SECOND, "tie", move |s, w| w.log.push((s.now(), i)));
+        }
+        sim.run(&mut w, 100);
+        let order: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule_more() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        fn tick(s: &mut Sim<World>, w: &mut World, left: u32) {
+            w.log.push((s.now(), left));
+            if left > 0 {
+                s.after(SECOND, "tick", move |s, w| tick(s, w, left - 1));
+            }
+        }
+        sim.soon("start", |s, w| tick(s, w, 4));
+        sim.run(&mut w, 100);
+        assert_eq!(w.log.len(), 5);
+        assert_eq!(w.log.last().unwrap().0, 4 * SECOND);
+    }
+
+    #[test]
+    fn run_until_stops_at_horizon() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        sim.after(SECOND, "a", |s, w| w.log.push((s.now(), 1)));
+        sim.after(10 * SECOND, "b", |s, w| w.log.push((s.now(), 2)));
+        sim.run_until(&mut w, 5 * SECOND, 100);
+        assert_eq!(w.log, vec![(SECOND, 1)]);
+        assert_eq!(sim.now(), 5 * SECOND);
+        assert_eq!(sim.pending(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "runaway loop")]
+    fn runaway_guard_fires() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        fn forever(s: &mut Sim<World>, _w: &mut World) {
+            s.soon("again", forever);
+        }
+        sim.soon("start", forever);
+        sim.run(&mut w, 1000);
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        sim.after(5 * SECOND, "late", |s, w| {
+            s.at(0, "past", |s, w| w.log.push((s.now(), 9)));
+            let _ = w;
+        });
+        sim.run(&mut w, 100);
+        assert_eq!(w.log, vec![(5 * SECOND, 9)]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-event simulation (DES) core.
+//!
+//! The paper evaluates sAirflow on AWS in wall-clock time; we reproduce the
+//! evaluation on a deterministic virtual-time simulation (see DESIGN.md
+//! "Substitutions"). All cloud latencies — cold starts, CDC propagation,
+//! queue polling, Fargate provisioning, autoscaler lag — are events on a
+//! single heap, so every experiment is reproducible from a seed and the
+//! full paper evaluation regenerates in seconds.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::Sim;
+pub use time::{as_secs, fmt_time, mins, secs, SimDuration, SimTime, HOUR, MILLI, MINUTE, SECOND};

@@ -1,0 +1,68 @@
+//! Virtual time. The simulator counts microseconds in a `u64`; helpers
+//! convert to/from seconds for configuration and reporting.
+
+/// A point in virtual time, microseconds since simulation start.
+pub type SimTime = u64;
+
+/// A duration in virtual time, microseconds.
+pub type SimDuration = u64;
+
+/// One second in simulation ticks.
+pub const SECOND: SimDuration = 1_000_000;
+/// One millisecond in simulation ticks.
+pub const MILLI: SimDuration = 1_000;
+/// One minute in simulation ticks.
+pub const MINUTE: SimDuration = 60 * SECOND;
+/// One hour in simulation ticks.
+pub const HOUR: SimDuration = 60 * MINUTE;
+
+/// Convert seconds (f64) to a duration, saturating at zero.
+pub fn secs(s: f64) -> SimDuration {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * SECOND as f64).round() as SimDuration
+    }
+}
+
+/// Convert a virtual time/duration to floating-point seconds.
+pub fn as_secs(t: SimTime) -> f64 {
+    t as f64 / SECOND as f64
+}
+
+/// Convert minutes to a duration.
+pub fn mins(m: f64) -> SimDuration {
+    secs(m * 60.0)
+}
+
+/// Render a time as `mm:ss.mmm` for logs and Gantt output.
+pub fn fmt_time(t: SimTime) -> String {
+    let total_ms = t / MILLI;
+    let ms = total_ms % 1000;
+    let s = (total_ms / 1000) % 60;
+    let m = total_ms / 60_000;
+    format!("{m:02}:{s:02}.{ms:03}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_secs() {
+        assert_eq!(secs(1.0), SECOND);
+        assert_eq!(secs(0.0015), 1500);
+        assert!((as_secs(secs(12.345)) - 12.345).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negative_seconds_clamp() {
+        assert_eq!(secs(-3.0), 0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_time(0), "00:00.000");
+        assert_eq!(fmt_time(61 * SECOND + 5 * MILLI), "01:01.005");
+    }
+}

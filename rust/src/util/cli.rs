@@ -1,0 +1,114 @@
+//! Tiny command-line argument parser (clap is not vendored in this
+//! environment). Supports `--flag`, `--key value`, `--key=value`, and
+//! positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else if let Some(v) = iter.peek() {
+                    if v.starts_with("--") {
+                        args.flags.push(rest.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        args.options.insert(rest.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--n 16,32,64`.
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> Vec<u64> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|p| p.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(sv(&["run", "--n", "125", "--warm", "--p=10.5", "extra"]), &["warm"]);
+        assert_eq!(a.positional, sv(&["run", "extra"]));
+        assert_eq!(a.get_u64("n", 0), 125);
+        assert!(a.flag("warm"));
+        assert!((a.get_f64("p", 0.0) - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_before_option_style() {
+        let a = Args::parse(sv(&["--cold", "--seed", "7"]), &[]);
+        assert!(a.flag("cold")); // inferred: next token is another option
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(sv(&["--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn u64_list() {
+        let a = Args::parse(sv(&["--n", "16,32,64,125"]), &[]);
+        assert_eq!(a.get_u64_list("n", &[]), vec![16, 32, 64, 125]);
+        assert_eq!(a.get_u64_list("m", &[1, 2]), vec![1, 2]);
+    }
+}

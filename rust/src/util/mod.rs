@@ -1,0 +1,12 @@
+//! Self-contained utility layer: deterministic RNG, JSON, CLI parsing,
+//! statistics, and a property-test driver.
+//!
+//! The build environment vendors only `xla` and `anyhow`; this module
+//! replaces the usual serde/clap/rand/proptest stack with minimal,
+//! fully-tested equivalents.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,146 @@
+//! Summary statistics over samples (latencies, makespans, durations).
+
+/// Summary of a set of f64 samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Returns a zeroed summary for an empty slice.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p25: 0.0,
+                median: 0.0,
+                p75: 0.0,
+                p95: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut xs: Vec<f64> = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p25: percentile_sorted(&xs, 0.25),
+            median: percentile_sorted(&xs, 0.50),
+            p75: percentile_sorted(&xs, 0.75),
+            p95: percentile_sorted(&xs, 0.95),
+            max: xs[n - 1],
+        }
+    }
+
+    /// One-line human-readable rendering (seconds-oriented).
+    pub fn line(&self) -> String {
+        format!(
+            "n={:<4} mean={:8.2} med={:8.2} p95={:8.2} min={:8.2} max={:8.2} std={:7.2}",
+            self.n, self.mean, self.median, self.p95, self.min, self.max, self.std
+        )
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&xs, q)
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+}
+
+/// Ordinary least-squares fit y = a + b*x. Returns (a, b).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    if den == 0.0 {
+        return (my, 0.0);
+    }
+    let b = num / den;
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_data() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+    }
+}

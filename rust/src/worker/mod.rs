@@ -1,0 +1,179 @@
+//! Workers (§4.4): the code that actually executes a task instance.
+//!
+//! Both worker kinds follow the paper's five steps:
+//!
+//! 1. **Invoke execution** — the platform (Lambda/Batch) starts the worker
+//!    in an isolated environment with the task metadata;
+//! 2. **Pull configuration** — download deployment config from blob
+//!    storage;
+//! 3. **Pull DAG files** — download the workflow definition;
+//! 4. **Start task** — LocalTaskJob: mark the task instance running,
+//!    execute the payload, and on completion write the terminal state to
+//!    the metadata DB (which triggers the next CDC event);
+//! 5. **Push logs** — upload collected logs to blob storage (sinks are
+//!    kept open so a warm Lambda instance can serve further invocations).
+//!
+//! A payload failure is modeled as a worker crash: the terminal DB write
+//! never happens and the Step Functions monitor invokes the failure
+//! handler instead (§4.4, component (12.2)).
+
+use crate::cloud::blob::BlobStore;
+use crate::cloud::db::{self, Txn, Write};
+use crate::cloud::{caas, faas};
+use crate::dag::spec::Payload;
+use crate::dag::state::TiState;
+use crate::executor::TaskRef;
+use crate::sairflow::world::World;
+use crate::sim::engine::Sim;
+use crate::sim::time::{secs, SimDuration};
+
+/// FaaS worker entry point (function executor, Lambda-like).
+pub fn run_faas_worker(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    inv: faas::InvId,
+    env: u64,
+    tr: TaskRef,
+) {
+    let host = format!("lambda-{env}");
+    let overhead = w.cfg.faas_task_overhead;
+    // Steps 2+3: pull configuration and DAG files.
+    let pulls = BlobStore::get_latency(&mut sim.rng) + BlobStore::get_latency(&mut sim.rng);
+    w.blob.stats.gets += 2;
+    sim.after(pulls, "worker.pulls", move |sim, w| {
+        local_task_job(
+            sim,
+            w,
+            tr.clone(),
+            host,
+            overhead,
+            move |w| w.faas.is_live(inv),
+            move |sim, w, ok| {
+                // Step 5: push logs.
+                let put = BlobStore::put_latency(&mut sim.rng);
+                let log_key = format!("logs/{}/{}/{}", tr.dag_id, tr.run_id, tr.task_id);
+                w.blob.put(&log_key, String::new());
+                sim.after(put, "worker.logs", move |sim, w| {
+                    faas::complete(sim, w, inv, ok);
+                });
+            },
+        );
+    });
+}
+
+/// Container worker entry point (container executor, Batch/Fargate-like).
+pub fn run_container_worker(sim: &mut Sim<World>, w: &mut World, job: caas::JobId, tr: TaskRef) {
+    let host = format!("fargate-{job}");
+    let overhead = w.cfg.caas_task_overhead;
+    let pulls = BlobStore::get_latency(&mut sim.rng) + BlobStore::get_latency(&mut sim.rng);
+    w.blob.stats.gets += 2;
+    sim.after(pulls, "worker.pulls", move |sim, w| {
+        local_task_job(
+            sim,
+            w,
+            tr.clone(),
+            host,
+            overhead,
+            move |w| w.caas.is_live(job),
+            move |sim, w, ok| {
+                let put = BlobStore::put_latency(&mut sim.rng);
+                let log_key = format!("logs/{}/{}/{}", tr.dag_id, tr.run_id, tr.task_id);
+                w.blob.put(&log_key, String::new());
+                sim.after(put, "worker.logs", move |sim, w| {
+                    caas::complete(sim, w, job, ok);
+                });
+            },
+        );
+    });
+}
+
+/// LocalTaskJob (step 4): the standard Airflow component that executes the
+/// task in the worker process and updates the metadata DB.
+///
+/// `alive` is polled before the terminal write: if the hosting environment
+/// was killed (FaaS timeout), the write must not happen — the failure
+/// handler owns the task's fate then.
+pub fn local_task_job(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    tr: TaskRef,
+    host: String,
+    overhead: (f64, f64),
+    alive: impl Fn(&World) -> bool + 'static,
+    on_exit: impl FnOnce(&mut Sim<World>, &mut World, bool) + 'static,
+) {
+    let key = tr.key();
+    let Some(task) = w
+        .db
+        .read()
+        .serialized
+        .get(&tr.dag_id)
+        .and_then(|s| s.tasks.get(tr.task_id as usize))
+        .cloned()
+    else {
+        on_exit(sim, w, false);
+        return;
+    };
+
+    // Mark running (sets s_i and increments try_number at commit time).
+    let mut txn = Txn::new();
+    txn.push(Write::SetTiHost { key: key.clone(), host });
+    txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+    db::commit(sim, w, txn, move |sim, w| {
+        // Decide the outcome and the payload runtime.
+        let launch = secs(sim.rng.uniform(overhead.0, overhead.1));
+        let (work, ok): (SimDuration, bool) = match &task.payload {
+            Payload::Sleep(d) => (*d, true),
+            Payload::Flaky { sleep, fail_tries } => {
+                let tries = w
+                    .db
+                    .read()
+                    .task_instances
+                    .get(&key)
+                    .map(|r| r.try_number)
+                    .unwrap_or(1);
+                if tries <= *fail_tries {
+                    // Crash partway through.
+                    (*sleep / 3, false)
+                } else {
+                    (*sleep, true)
+                }
+            }
+            Payload::Compute { artifact, iters, rows } => {
+                // Execute the AOT-compiled data-plane artifact through PJRT
+                // and charge its measured wall time to the task.
+                match w.engine.as_mut() {
+                    Some(engine) => match engine.execute_timed(artifact, *iters, *rows) {
+                        Ok(wall_secs) => (secs(wall_secs), true),
+                        Err(_) => (0, false),
+                    },
+                    // No engine attached (pure simulation): use the
+                    // calibrated per-iteration cost model instead.
+                    None => (secs(0.05 * *iters as f64), true),
+                }
+            }
+        };
+        let dur = launch + work;
+        sim.after(dur, "task.payload", move |sim, w| {
+            if !alive(w) {
+                // Environment was torn down (e.g. FaaS timeout): no write.
+                return;
+            }
+            if ok {
+                let mut txn = Txn::new();
+                // Airflow's completion path re-reads every TI of the run
+                // (the "mini scheduler") before writing success — this is
+                // what makes completion bursts contend superlinearly
+                // (§6.1's 10 s task taking 17 s at n=125).
+                txn.scan_rows =
+                    w.db.read().tis_of_run(&key.0, key.1).len() as u32;
+                txn.push(Write::SetTiState { key, state: TiState::Success });
+                db::commit(sim, w, txn, move |sim, w| on_exit(sim, w, true));
+            } else {
+                // Crash: the terminal write never happens; Step Functions'
+                // monitor sees the failure.
+                on_exit(sim, w, false);
+            }
+        });
+    });
+}

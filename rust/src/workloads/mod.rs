@@ -1,0 +1,9 @@
+//! Workload generators for the paper's evaluation (§5, Appendices C–D):
+//! synthetic chain / parallel / parallel-forest DAGs and the Alibaba-like
+//! 30-DAG benchmark set.
+
+pub mod alibaba;
+pub mod synthetic;
+
+pub use alibaba::{alibaba_set, dag_stats, period_minutes_for};
+pub use synthetic::{chain_dag, chain_dag_caas, parallel_dag, parallel_dag_caas, parallel_forest};

@@ -1,0 +1,115 @@
+//! Synthetic workloads from §5 of the paper: chain DAGs, parallel DAGs and
+//! parallel forests.
+
+use crate::dag::spec::{DagSpec, ExecKind, Payload};
+use crate::sim::time::secs;
+
+/// A *chain DAG* (§5): `n` tasks executing sequentially, each sleeping `p`
+/// seconds. Optimal execution time is `n * p`.
+pub fn chain_dag(dag_id: &str, n: u32, p_secs: f64, t_minutes: f64) -> DagSpec {
+    assert!(n >= 1);
+    let mut d = DagSpec::new(dag_id).every_minutes(t_minutes);
+    let mut prev: Option<u32> = None;
+    for i in 0..n {
+        let deps: Vec<u32> = prev.into_iter().collect();
+        prev = Some(d.sleep_task(&format!("t{i}"), p_secs, &deps));
+    }
+    d
+}
+
+/// A *parallel DAG* (§5): after a short startup task, `n` tasks execute in
+/// parallel, each sleeping `p` seconds. Optimal execution time is `p`
+/// (the startup task completes immediately).
+pub fn parallel_dag(dag_id: &str, n: u32, p_secs: f64, t_minutes: f64) -> DagSpec {
+    assert!(n >= 1);
+    let mut d = DagSpec::new(dag_id).every_minutes(t_minutes);
+    let root = d.sleep_task("startup", 0.0, &[]);
+    for i in 0..n {
+        d.sleep_task(&format!("t{i}"), p_secs, &[root]);
+    }
+    d
+}
+
+/// A parallel DAG whose fan-out tasks run on the container executor while
+/// the immediately-completing root runs on FaaS — the Appendix E.2
+/// configuration ("a short coordinating task followed by long-running
+/// processing").
+pub fn parallel_dag_caas(dag_id: &str, n: u32, p_secs: f64, t_minutes: f64) -> DagSpec {
+    assert!(n >= 1);
+    let mut d = DagSpec::new(dag_id).every_minutes(t_minutes);
+    let root = d.add_task("startup", Payload::Sleep(0), &[], ExecKind::Faas);
+    for i in 0..n {
+        d.add_task(&format!("t{i}"), Payload::Sleep(secs(p_secs)), &[root], ExecKind::Caas);
+    }
+    d
+}
+
+/// A chain DAG on the container executor (Appendix E.1).
+pub fn chain_dag_caas(dag_id: &str, n: u32, p_secs: f64, t_minutes: f64) -> DagSpec {
+    assert!(n >= 1);
+    let mut d = DagSpec::new(dag_id).every_minutes(t_minutes);
+    let mut prev: Option<u32> = None;
+    for i in 0..n {
+        let deps: Vec<u32> = prev.into_iter().collect();
+        prev = Some(d.add_task(
+            &format!("t{i}"),
+            Payload::Sleep(secs(p_secs)),
+            &deps,
+            ExecKind::Caas,
+        ));
+    }
+    d
+}
+
+/// A *parallel forest* (Appendix C): `k` independent copies of the same
+/// parallel DAG (each with `n` fan-out tasks of `p` seconds), run as
+/// separate DAGs scheduled at the same period.
+pub fn parallel_forest(base_id: &str, k: u32, n: u32, p_secs: f64, t_minutes: f64) -> Vec<DagSpec> {
+    (0..k).map(|i| parallel_dag(&format!("{base_id}_{i}"), n, p_secs, t_minutes)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::graph::DagGraph;
+
+    #[test]
+    fn chain_is_a_chain() {
+        let d = chain_dag("c", 10, 10.0, 5.0);
+        assert_eq!(d.n_tasks(), 10);
+        d.validate().unwrap();
+        let g = DagGraph::of(&d);
+        assert_eq!(g.max_parallelism(), 1);
+        assert_eq!(g.longest_path_nodes(), 10);
+    }
+
+    #[test]
+    fn parallel_has_startup_plus_n() {
+        let d = parallel_dag("p", 125, 10.0, 30.0);
+        assert_eq!(d.n_tasks(), 126);
+        d.validate().unwrap();
+        let g = DagGraph::of(&d);
+        assert_eq!(g.max_parallelism(), 125);
+    }
+
+    #[test]
+    fn forest_ids_distinct() {
+        let f = parallel_forest("f", 8, 8, 10.0, 5.0);
+        assert_eq!(f.len(), 8);
+        let ids: std::collections::HashSet<_> = f.iter().map(|d| d.dag_id.clone()).collect();
+        assert_eq!(ids.len(), 8);
+        for d in &f {
+            assert_eq!(d.n_tasks(), 9);
+        }
+    }
+
+    #[test]
+    fn caas_variants_use_container_executor() {
+        use crate::dag::spec::ExecKind;
+        let d = parallel_dag_caas("pc", 4, 10.0, 10.0);
+        assert_eq!(d.tasks[0].executor, ExecKind::Faas);
+        assert!(d.tasks[1..].iter().all(|t| t.executor == ExecKind::Caas));
+        let c = chain_dag_caas("cc", 3, 10.0, 5.0);
+        assert!(c.tasks.iter().all(|t| t.executor == ExecKind::Caas));
+    }
+}

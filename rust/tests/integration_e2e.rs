@@ -1,0 +1,228 @@
+//! Integration tests across the full sAirflow stack: multiple DAGs,
+//! failure injection, parallelism limits, executor mixing, determinism.
+
+use sairflow::dag::spec::{DagSpec, ExecKind, Payload};
+use sairflow::dag::state::{RunState, TiState};
+use sairflow::exp::{self, ExperimentSpec, SystemKind};
+use sairflow::sairflow::{trigger_dag, upload_dag, Config, World};
+use sairflow::sim::time::{mins, secs, MINUTE};
+use sairflow::workloads::synthetic::{chain_dag, parallel_dag};
+
+#[test]
+fn many_dags_share_the_control_plane() {
+    // 6 DAGs with different shapes and periods all run concurrently
+    // through one scheduler feed without interference.
+    let mut dags = vec![
+        chain_dag("c3", 3, 4.0, 5.0),
+        parallel_dag("p8", 8, 6.0, 5.0),
+        chain_dag("c1", 1, 2.0, 5.0),
+        parallel_dag("p16", 16, 3.0, 5.0),
+    ];
+    let mut diamond = DagSpec::new("diamond").every_minutes(5.0);
+    let a = diamond.sleep_task("a", 2.0, &[]);
+    let b = diamond.sleep_task("b", 3.0, &[a]);
+    let c = diamond.sleep_task("c", 4.0, &[a]);
+    diamond.sleep_task("d", 1.0, &[b, c]);
+    dags.push(diamond);
+
+    let res = exp::run(&ExperimentSpec {
+        label: "multi".into(),
+        system: SystemKind::Sairflow,
+        dags,
+        seed: 21,
+        horizon: mins(22.0),
+        skip_first_run: false,
+    });
+    // ~3 scheduled runs per DAG in 22 min at T=5 (first fire ~5 min).
+    assert!(res.report.n_runs >= 5 * 3, "runs={}", res.report.n_runs);
+    assert_eq!(res.report.failures, 0);
+}
+
+#[test]
+fn mixed_executors_in_one_dag() {
+    // FaaS root, CaaS heavy middle, FaaS tail — §E.2's pattern.
+    let mut dag = DagSpec::new("mixed");
+    let root = dag.add_task("root", Payload::Sleep(secs(1.0)), &[], ExecKind::Faas);
+    let heavy = dag.add_task("heavy", Payload::Sleep(secs(30.0)), &[root], ExecKind::Caas);
+    dag.add_task("tail", Payload::Sleep(secs(1.0)), &[heavy], ExecKind::Faas);
+
+    let mut w = World::new(Config::seeded(31));
+    let mut sim = w.sim();
+    upload_dag(&mut sim, &mut w, &dag);
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+    trigger_dag(&mut sim, &mut w, "mixed");
+    sim.run_until(&mut w, 20 * MINUTE, 10_000_000);
+
+    let db = w.db.read();
+    let run = db.dag_runs.values().next().expect("run");
+    assert_eq!(run.state, RunState::Success);
+    let hosts: Vec<String> = db
+        .task_instances
+        .values()
+        .map(|t| t.host.clone().unwrap_or_default())
+        .collect();
+    assert!(hosts.iter().any(|h| h.starts_with("lambda-")));
+    assert!(hosts.iter().any(|h| h.starts_with("fargate-")));
+    assert_eq!(w.caas.stats.completed, 1);
+}
+
+#[test]
+fn parallelism_limit_throttles_wide_dag() {
+    let mut cfg = Config::seeded(41);
+    cfg.limits.parallelism = 10;
+    let mut w = World::new(cfg);
+    let mut sim = w.sim();
+    let dag = parallel_dag("wide", 40, 5.0, 30.0);
+    upload_dag(&mut sim, &mut w, &dag);
+    sim.run_until(&mut w, 40 * MINUTE, 10_000_000);
+
+    let db = w.db.read();
+    let run = db.dag_runs.get(&("wide".into(), 1)).expect("run");
+    assert_eq!(run.state, RunState::Success);
+    // The worker pool never exceeded the scheduler's parallelism limit.
+    assert!(
+        w.faas.stats(w.fns.worker).concurrent_peak <= 10,
+        "peak={}",
+        w.faas.stats(w.fns.worker).concurrent_peak
+    );
+}
+
+#[test]
+fn failure_cascades_mark_downstream_upstream_failed() {
+    let mut dag = DagSpec::new("cascade");
+    let bad = dag.add_task(
+        "bad",
+        Payload::Flaky { sleep: secs(2.0), fail_tries: 99 },
+        &[],
+        ExecKind::Faas,
+    );
+    let mid = dag.add_task("mid", Payload::Sleep(secs(1.0)), &[bad], ExecKind::Faas);
+    dag.add_task("leaf", Payload::Sleep(secs(1.0)), &[mid], ExecKind::Faas);
+    // An independent branch still succeeds.
+    dag.add_task("independent", Payload::Sleep(secs(1.0)), &[], ExecKind::Faas);
+
+    let mut w = World::new(Config::seeded(51));
+    let mut sim = w.sim();
+    upload_dag(&mut sim, &mut w, &dag);
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+    trigger_dag(&mut sim, &mut w, "cascade");
+    sim.run_until(&mut w, 20 * MINUTE, 10_000_000);
+
+    let db = w.db.read();
+    let state_of = |id: u32| db.task_instances[&("cascade".into(), 1, id)].state;
+    assert_eq!(state_of(0), TiState::Failed);
+    assert_eq!(state_of(1), TiState::UpstreamFailed);
+    assert_eq!(state_of(2), TiState::UpstreamFailed);
+    assert_eq!(state_of(3), TiState::Success);
+    assert_eq!(db.dag_runs.values().next().unwrap().state, RunState::Failed);
+}
+
+#[test]
+fn identical_seeds_replay_identically_full_stack() {
+    let run = |seed| {
+        let res = exp::run(&ExperimentSpec {
+            label: "replay".into(),
+            system: SystemKind::Sairflow,
+            dags: vec![parallel_dag("p", 24, 7.0, 5.0)],
+            seed,
+            horizon: mins(25.0),
+            skip_first_run: false,
+        });
+        (
+            res.report.makespan.mean,
+            res.report.task_wait.mean,
+            res.extras.get("db_txns").unwrap().as_u64(),
+        )
+    };
+    assert_eq!(run(77), run(77));
+    assert_ne!(run(77).0, run(78).0);
+}
+
+#[test]
+fn paused_dag_does_not_run() {
+    let mut w = World::new(Config::seeded(61));
+    let mut sim = w.sim();
+    let dag = chain_dag("paused", 1, 1.0, 5.0);
+    upload_dag(&mut sim, &mut w, &dag);
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+    w.db.meta.dags.get_mut("paused").unwrap().is_paused = true;
+    sim.run_until(&mut w, 20 * MINUTE, 10_000_000);
+    assert!(w.db.read().dag_runs.is_empty(), "paused DAG must not run");
+}
+
+#[test]
+fn dag_update_reflows_through_cdc() {
+    // Re-uploading a DAG with a new schedule re-registers the cron entry
+    // through parse -> CDC -> updater.
+    let mut w = World::new(Config::seeded(71));
+    let mut sim = w.sim();
+    let dag = chain_dag("evolving", 1, 1.0, 30.0);
+    upload_dag(&mut sim, &mut w, &dag);
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+    assert!(w.cron.is_registered("evolving"));
+    // Update to a 2-minute schedule.
+    let faster = chain_dag("evolving", 1, 1.0, 2.0);
+    upload_dag(&mut sim, &mut w, &faster);
+    sim.run_until(&mut w, 12 * MINUTE, 10_000_000);
+    let runs = w.db.read().dag_runs.len();
+    assert!(runs >= 4, "fast schedule should have produced several runs, got {runs}");
+}
+
+#[test]
+fn mwaa_and_sairflow_agree_on_semantics() {
+    // Same workload, both systems: identical task outcomes (states and
+    // dependency order), different timings.
+    let mut dag = DagSpec::new("sem").every_minutes(5.0);
+    let a = dag.sleep_task("a", 2.0, &[]);
+    let b = dag.add_task(
+        "b",
+        Payload::Flaky { sleep: secs(3.0), fail_tries: 1 },
+        &[a],
+        ExecKind::Faas,
+    );
+    dag.tasks[b as usize].retries = 1;
+    dag.sleep_task("c", 1.0, &[b]);
+
+    for system in [SystemKind::Sairflow, SystemKind::Mwaa { warm: true }] {
+        let res = exp::run(&ExperimentSpec {
+            label: format!("{system:?}"),
+            system: system.clone(),
+            dags: vec![dag.clone()],
+            seed: 13,
+            horizon: mins(12.0),
+            skip_first_run: false,
+        });
+        assert!(res.report.n_runs >= 1, "{system:?}: no runs");
+        assert_eq!(res.report.failures, 0, "{system:?}: flaky must retry to success");
+        let retried = res.sink.tasks.iter().find(|t| t.name == "b").unwrap();
+        assert_eq!(retried.tries, 2, "{system:?}: b retried once");
+    }
+}
+
+#[test]
+fn scheduler_crashes_are_retried_without_losing_events() {
+    // Chaos: the scheduler lambda's timeout is shorter than many of its
+    // pass durations, so a large fraction of invocations are killed
+    // mid-pass. The FIFO feed redelivers the batch (at-least-once), the
+    // pass is idempotent, and every run still completes — §4.3's
+    // "reliability directly relies on the guarantees provided by FaaS".
+    let mut cfg = Config::seeded(91);
+    cfg.sched_cpu = (10.0, 20.0); // pass takes 10-20 s...
+    cfg.scheduler.timeout = secs(15.0); // ...but is killed at 15 s
+    let mut w = World::new(cfg);
+    let mut sim = w.sim();
+    let dag = chain_dag("chaos", 3, 2.0, 10.0);
+    upload_dag(&mut sim, &mut w, &dag);
+    sim.run_until(&mut w, 90 * MINUTE, 20_000_000);
+
+    let sched = w.faas.stats(w.fns.scheduler);
+    assert!(sched.timeouts > 0, "chaos must actually kill some passes");
+    let db = w.db.read();
+    let done = db.dag_runs.values().filter(|r| r.state == RunState::Success).count();
+    assert!(done >= 2, "runs complete despite scheduler crashes, got {done}");
+    assert!(
+        db.task_instances.values().all(|t| !t.state.is_active()),
+        "no task stuck in queued/running"
+    );
+    assert_eq!(w.sched_esm.inflight, 0, "FIFO gate released after crashes");
+}

@@ -1,0 +1,179 @@
+//! The paper's quantitative claims, asserted as integration tests.
+//!
+//! These are the "does the reproduction reproduce" tests: each checks one
+//! numbered claim of the paper against the simulated systems, with bands
+//! wide enough to absorb modeling noise but tight enough that a broken
+//! mechanism fails the test.
+
+use sairflow::cost::{self, Pricing};
+use sairflow::dag::ExecKind;
+use sairflow::exp::{self, ExperimentSpec, SystemKind};
+use sairflow::workloads::synthetic::{chain_dag, chain_dag_caas, parallel_dag};
+
+fn cell(system: SystemKind, dags: Vec<sairflow::dag::DagSpec>, t: f64, warm: bool, seed: u64) -> exp::ExperimentResult {
+    exp::run(&ExperimentSpec {
+        label: "claim".into(),
+        system,
+        dags,
+        seed,
+        horizon: ExperimentSpec::paper_horizon(t),
+        skip_first_run: warm,
+    })
+}
+
+/// §6.1 / Fig. 3: on cold parallel workloads sAirflow reduces makespan by
+/// ~2x (n=16) growing to ~7x (n=125); sAirflow finishes n=125 in <1 min.
+#[test]
+fn claim_cold_scaling_2x_to_7x() {
+    let mut ratios = Vec::new();
+    for n in [16u32, 32, 64, 125] {
+        let dags = vec![parallel_dag("p", n, 10.0, 30.0)];
+        let sa = cell(SystemKind::Sairflow, dags.clone(), 30.0, false, 7);
+        let mw = cell(SystemKind::Mwaa { warm: false }, dags, 30.0, false, 7);
+        ratios.push(mw.report.makespan.mean / sa.report.makespan.mean);
+        if n == 125 {
+            assert!(
+                sa.report.makespan.mean < 60.0,
+                "sAirflow n=125 must finish in <1 min, got {:.1}",
+                sa.report.makespan.mean
+            );
+            let peak =
+                sa.extras.get("worker_concurrent_peak").unwrap().as_u64().unwrap();
+            assert!(peak >= 100, "must scale out to ~125 workers, peak={peak}");
+        }
+    }
+    assert!(ratios[0] > 1.2 && ratios[0] < 3.0, "n=16 ratio {:.2}", ratios[0]);
+    assert!(ratios[3] > 5.0 && ratios[3] < 10.0, "n=125 ratio {:.2}", ratios[3]);
+    assert!(
+        ratios.windows(2).all(|w| w[1] > w[0]),
+        "speedup must grow with parallelism: {ratios:?}"
+    );
+}
+
+/// §6.2 / Fig. 6: warm single-task wait ≈ 2.5 s median; cold ≈ 12 s.
+#[test]
+fn claim_warm_wait_2_5s_cold_12s() {
+    let res = cell(SystemKind::Sairflow, vec![chain_dag("one", 1, 10.0, 5.0)], 5.0, false, 3);
+    let mut waits: Vec<(u64, f64)> =
+        res.sink.tasks.iter().map(|t| (t.run_id, t.wait())).collect();
+    waits.sort_by_key(|(r, _)| *r);
+    let cold = waits[0].1;
+    let warm: Vec<f64> = waits[1..].iter().map(|(_, w)| *w).collect();
+    let warm_med = sairflow::util::stats::percentile(&warm, 0.5);
+    assert!((8.0..16.0).contains(&cold), "cold wait {cold:.1} (paper ~12)");
+    assert!((1.8..3.5).contains(&warm_med), "warm wait {warm_med:.2} (paper ~2.5)");
+}
+
+/// §6.2 / Fig. 4a: on warm chains sAirflow launches tasks slower than
+/// MWAA (CDC tax ~1 s/task), so MWAA wins chains slightly.
+#[test]
+fn claim_chain_cdc_tax() {
+    let dags = vec![chain_dag("c", 10, 10.0, 5.0)];
+    let sa = cell(SystemKind::Sairflow, dags.clone(), 5.0, true, 5);
+    let mw = cell(SystemKind::Mwaa { warm: true }, dags, 5.0, true, 5);
+    let delta = sa.report.task_wait.median - mw.report.task_wait.median;
+    assert!(
+        (0.3..2.5).contains(&delta),
+        "per-task CDC tax {delta:.2} s (paper ~0.8 s)"
+    );
+    assert!(sa.report.makespan.median > mw.report.makespan.median, "MWAA wins warm chains");
+}
+
+/// §6.2 / Fig. 4c: on warm, highly parallel DAGs sAirflow is at least
+/// comparable (and wins at n=125) despite the CDC tax.
+#[test]
+fn claim_warm_parallel_comparable_sairflow_wins_large() {
+    let dags = vec![parallel_dag("p", 125, 10.0, 5.0)];
+    let sa = cell(SystemKind::Sairflow, dags.clone(), 5.0, true, 5);
+    let mw = cell(SystemKind::Mwaa { warm: true }, dags, 5.0, true, 5);
+    assert!(
+        sa.report.makespan.median < mw.report.makespan.median * 1.1,
+        "sAirflow {:.1} vs MWAA {:.1}",
+        sa.report.makespan.median,
+        mw.report.makespan.median
+    );
+}
+
+/// §6.1: duration inflation under the cold n=125 burst — the DB
+/// transaction bottleneck (10 s tasks take visibly longer than at n=16).
+#[test]
+fn claim_db_contention_inflates_durations() {
+    let small = cell(SystemKind::Sairflow, vec![parallel_dag("p", 16, 10.0, 30.0)], 30.0, false, 9);
+    let large = cell(SystemKind::Sairflow, vec![parallel_dag("p", 125, 10.0, 30.0)], 30.0, false, 9);
+    assert!(
+        large.report.task_duration.p95 > small.report.task_duration.p95 + 0.5,
+        "n=125 p95 {:.1} should exceed n=16 p95 {:.1}",
+        large.report.task_duration.p95,
+        small.report.task_duration.p95
+    );
+}
+
+/// App. E.1 / Fig. 16: container executor raises single-task wait from
+/// ~2.5 s to ~100 s.
+#[test]
+fn claim_caas_wait_about_100s() {
+    let res = cell(SystemKind::Sairflow, vec![chain_dag_caas("cc", 1, 10.0, 5.0)], 5.0, false, 5);
+    let med = res.report.task_wait.median;
+    assert!((80.0..130.0).contains(&med), "CaaS wait {med:.1} (paper 100.5)");
+}
+
+/// §6.4 / Table 1: fixed cost halved; totals 17-48% lower.
+#[test]
+fn claim_cost_savings_17_to_48_percent() {
+    let p = Pricing::default();
+    let fixed_ratio = cost::sairflow_fixed_daily(true) / cost::mwaa_fixed_daily(&p);
+    assert!((0.45..0.58).contains(&fixed_ratio), "fixed ratio {fixed_ratio:.2} (paper ~0.51)");
+    for row in cost::table1(&p) {
+        assert!(
+            (0.15..0.55).contains(&row.saving),
+            "{} saving {:.2} outside 17-48%",
+            row.scenario,
+            row.saving
+        );
+    }
+}
+
+/// Table 2: the heavy-scenario breakdown reproduces the paper's rows.
+#[test]
+fn claim_table2_breakdown() {
+    let p = Pricing::default();
+    let s = cost::scenarios().into_iter().find(|s| s.name == "heavy").unwrap();
+    let t = cost::total(&cost::sairflow_breakdown(&s, &p));
+    assert!((t - 1.2677).abs() < 0.02, "heavy total {t:.4} (paper 1.2677)");
+}
+
+/// §7: "sequential workflows ... highlight increased latencies stemming
+/// from propagating CDC events (approx. 2 s)" — the round-trip through
+/// the metadata DB and CDC costs ~2-3 s per hop pair.
+#[test]
+fn claim_cdc_roundtrip_2s() {
+    let res = cell(SystemKind::Sairflow, vec![chain_dag("c", 5, 10.0, 5.0)], 5.0, true, 5);
+    // Warm task wait is dominated by two CDC hops.
+    let med = res.report.task_wait.median;
+    assert!((1.8..3.5).contains(&med), "warm chain wait {med:.2} (≈2×CDC)");
+}
+
+/// The container executor still parallelizes: CaaS parallel n=32 lands in
+/// the same band as cold MWAA (§E.2: "can match MWAA scaling").
+#[test]
+fn claim_caas_parallel_matches_cold_mwaa_band() {
+    use sairflow::workloads::synthetic::parallel_dag_caas;
+    let ca = cell(SystemKind::Sairflow, vec![parallel_dag_caas("pc", 32, 10.0, 10.0)], 10.0, false, 5);
+    let mw = cell(SystemKind::Mwaa { warm: false }, vec![parallel_dag("pm", 32, 10.0, 10.0)], 10.0, false, 5);
+    let (c, m) = (ca.report.makespan.median, mw.report.makespan.median);
+    // Same order of magnitude; both in the 1.5-4 minute band.
+    assert!((90.0..240.0).contains(&c), "CaaS {c:.0}");
+    assert!((60.0..240.0).contains(&m), "cold MWAA {m:.0}");
+    assert!(c / m < 2.0 && m / c < 2.0, "same band: CaaS {c:.0} vs MWAA {m:.0}");
+}
+
+/// Table 5: 24-h container workload ≈ $29.62 of Batch compute.
+#[test]
+fn claim_table5_constant_load() {
+    let p = Pricing::default();
+    let s = cost::scenarios().into_iter().find(|s| s.name == "constant").unwrap();
+    assert_eq!(s.executor, ExecKind::Caas);
+    let rows = cost::sairflow_breakdown(&s, &p);
+    let batch = rows.iter().find(|r| r.component.contains("Batch")).unwrap().cost;
+    assert!((batch - 29.62).abs() < 0.1, "batch {batch:.2}");
+}

@@ -1,0 +1,232 @@
+//! Property-based tests of the scheduler invariants (§4.3).
+//!
+//! Random DAGs are driven through repeated (pass → commit → random task
+//! completions) cycles; at every step the Airflow semantics must hold:
+//! no task queues before all its predecessors succeed, the parallelism
+//! limit is never exceeded, every run eventually terminates with the
+//! correct state, and ready times equal the latest predecessor end.
+
+use sairflow::cloud::db::{DagRow, MetaDb, Txn, Write};
+use sairflow::dag::graph::DagGraph;
+use sairflow::dag::spec::DagSpec;
+use sairflow::dag::state::TiState;
+use sairflow::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
+use sairflow::util::prop::{check, Gen};
+
+/// Random DAG: tasks with random backward dependencies.
+fn gen_dag(g: &mut Gen, id: &str) -> DagSpec {
+    let n = g.sized(1, 24) as u32;
+    let mut d = DagSpec::new(id);
+    for i in 0..n {
+        let mut deps = Vec::new();
+        if i > 0 {
+            let k = g.u64_in(0, 3.min(i as u64)) as usize;
+            let mut cand: Vec<u32> = (0..i).collect();
+            g.rng.shuffle(&mut cand);
+            deps = cand[..k].to_vec();
+            deps.sort_unstable();
+        }
+        let p = g.f64_in(0.5, 20.0);
+        d.sleep_task(&format!("t{i}"), p, &deps);
+    }
+    d
+}
+
+fn db_with(spec: &DagSpec) -> MetaDb {
+    let mut db = MetaDb::new();
+    let mut txn = Txn::new();
+    txn.push(Write::UpsertDag(DagRow {
+        dag_id: spec.dag_id.clone(),
+        fileloc: String::new(),
+        period: spec.period,
+        is_paused: false,
+    }));
+    txn.push(Write::PutSerializedDag(spec.clone()));
+    db.apply(txn, 0);
+    db
+}
+
+/// Drive a run to completion with random completion order; validate
+/// invariants after every pass.
+fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> Result<(), String> {
+    let mut db = db_with(spec);
+    let graph = DagGraph::of(spec);
+    let mut now = 1u64;
+    let out = scheduling_pass(
+        &db,
+        now,
+        &[SchedMsg::Periodic { dag_id: spec.dag_id.clone(), logical_ts: 0 }],
+        limits,
+    );
+    db.apply(out.txn, now);
+    let mut pending_msgs = vec![SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 }];
+
+    for _ in 0..10_000 {
+        now += 1;
+        let batch = std::mem::take(&mut pending_msgs);
+        let out = scheduling_pass(&db, now, &batch, limits);
+        db.apply(out.txn, now);
+
+        // INVARIANT: parallelism limit respected.
+        let active = db.active_ti_count();
+        if active > limits.parallelism {
+            return Err(format!("{active} active > limit {}", limits.parallelism));
+        }
+        // INVARIANT: a started task has all preds Success.
+        for ti in db.task_instances.values() {
+            let started = !matches!(
+                ti.state,
+                TiState::None
+                    | TiState::Scheduled
+                    | TiState::UpForRetry
+                    | TiState::UpstreamFailed
+            );
+            if started {
+                for &p in &graph.upstream[ti.task_id as usize] {
+                    let pred = &db.task_instances[&(ti.dag_id.clone(), ti.run_id, p)];
+                    if pred.state != TiState::Success {
+                        return Err(format!(
+                            "task {} is {:?} but pred {p} is {:?}",
+                            ti.task_id, ti.state, pred.state
+                        ));
+                    }
+                }
+            }
+        }
+
+        // Complete queued tasks in random order (some may fail).
+        let queued: Vec<_> = db
+            .task_instances
+            .values()
+            .filter(|t| t.state == TiState::Queued)
+            .map(|t| (t.dag_id.clone(), t.run_id, t.task_id))
+            .collect();
+        if queued.is_empty() && pending_msgs.is_empty() {
+            let run = &db.dag_runs[&(spec.dag_id.clone(), 1)];
+            if run.state.is_terminal() {
+                break;
+            }
+            let waiting = db
+                .task_instances
+                .values()
+                .any(|t| matches!(t.state, TiState::Scheduled | TiState::UpForRetry));
+            let unreached = db.task_instances.values().any(|t| t.state == TiState::None);
+            // All TIs terminal but the run not yet marked: completion is
+            // detected by the *next* pass (one-event lag, as in the real
+            // system where the CDC event triggers it).
+            let all_term = db.task_instances.values().all(|t| t.state.is_terminal());
+            if !waiting && !unreached && !all_term {
+                return Err("stuck: no queued tasks, run not terminal".into());
+            }
+            pending_msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
+            continue;
+        }
+        for key in queued {
+            if !g.rng.chance(0.7) {
+                continue; // leave some queued for later cycles
+            }
+            now += 1;
+            let mut t = Txn::new();
+            t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+            db.apply(t, now);
+            now += 1;
+            let fail = fail_some && g.rng.chance(0.2);
+            let retries = spec.tasks[key.2 as usize].retries;
+            let tries = db.task_instances[&key].try_number;
+            let state = if !fail {
+                TiState::Success
+            } else if tries <= retries {
+                TiState::UpForRetry
+            } else {
+                TiState::Failed
+            };
+            let mut t = Txn::new();
+            t.push(Write::SetTiState { key: key.clone(), state });
+            db.apply(t, now);
+            pending_msgs.push(SchedMsg::TaskFinished {
+                dag_id: key.0.clone(),
+                run_id: key.1,
+                task_id: key.2,
+                state,
+            });
+        }
+        if pending_msgs.is_empty() {
+            pending_msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
+        }
+    }
+
+    // INVARIANT: the run terminated consistently.
+    let run = &db.dag_runs[&(spec.dag_id.clone(), 1)];
+    if !run.state.is_terminal() {
+        return Err("run did not terminate".into());
+    }
+    let any_failed = db.task_instances.values().any(|t| t.state == TiState::Failed);
+    let run_failed = run.state == sairflow::dag::RunState::Failed;
+    if any_failed != run_failed {
+        return Err(format!("run state {:?} vs any_failed {any_failed}", run.state));
+    }
+    if !run_failed {
+        // All succeeded: ready time must equal max pred end (or run start).
+        for ti in db.task_instances.values() {
+            let preds = &graph.upstream[ti.task_id as usize];
+            let expect = preds
+                .iter()
+                .map(|&p| db.task_instances[&(ti.dag_id.clone(), ti.run_id, p)].end.unwrap())
+                .max()
+                .unwrap_or(run.start.unwrap());
+            if ti.ready != Some(expect) {
+                return Err(format!(
+                    "task {}: ready {:?} != expected {expect}",
+                    ti.task_id, ti.ready
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_dags_complete_with_invariants() {
+    check("scheduler invariants (no failures)", 120, |g| {
+        let spec = gen_dag(g, "prop");
+        let limits = SchedLimits { parallelism: g.sized(1, 130) };
+        drive(g, &spec, &limits, false)
+    });
+}
+
+#[test]
+fn random_dags_with_failures_and_retries() {
+    check("scheduler invariants (failures+retries)", 80, |g| {
+        let mut spec = gen_dag(g, "prop");
+        for i in 0..spec.tasks.len() {
+            spec.tasks[i].retries = g.u64_in(0, 2) as u32;
+        }
+        let limits = SchedLimits { parallelism: g.sized(2, 130) };
+        drive(g, &spec, &limits, true)
+    });
+}
+
+#[test]
+fn tiny_parallelism_still_completes() {
+    check("parallelism=1 serializes but completes", 40, |g| {
+        let spec = gen_dag(g, "serial");
+        let limits = SchedLimits { parallelism: 1 };
+        drive(g, &spec, &limits, false)
+    });
+}
+
+#[test]
+fn pass_is_deterministic() {
+    check("pass determinism", 60, |g| {
+        let spec = gen_dag(g, "det");
+        let db = db_with(&spec);
+        let msgs = vec![SchedMsg::Periodic { dag_id: spec.dag_id.clone(), logical_ts: 0 }];
+        let a = scheduling_pass(&db, 5, &msgs, &SchedLimits::default());
+        let b = scheduling_pass(&db, 5, &msgs, &SchedLimits::default());
+        if a.stats == b.stats && a.txn.writes.len() == b.txn.writes.len() {
+            Ok(())
+        } else {
+            Err("same inputs, different pass output".into())
+        }
+    });
+}

@@ -1,0 +1,84 @@
+//! End-to-end numeric check of the AOT bridge: the JAX/Pallas-authored
+//! artifacts, compiled and executed through the rust PJRT runtime, must
+//! reproduce the Python reference's numbers on identical synthetic inputs
+//! (the expected column aggregates are embedded in the manifest by
+//! `python/compile/aot.py`).
+//!
+//! Tests are skipped (not failed) when `make artifacts` has not run.
+
+use sairflow::runtime::Engine;
+use sairflow::util::json::Json;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn artifacts_load_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load_dir(&dir).expect("load artifacts");
+    let names = engine.artifact_names();
+    assert!(names.iter().any(|n| n == "pipeline_stage_r256"), "{names:?}");
+    for name in &names {
+        let wall = engine.execute_timed(name, 2, 0).expect("execute");
+        assert!(wall > 0.0 && wall < 60.0, "{name}: wall={wall}");
+    }
+    assert_eq!(engine.stats.executions, 2 * names.len() as u64);
+}
+
+#[test]
+fn forward_outputs_match_python_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest: Json =
+        Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
+    let mut engine = Engine::load_dir(&dir).expect("load artifacts");
+    let mut checked = 0;
+    for art in manifest.get("artifacts").unwrap().as_arr().unwrap() {
+        let Some(expected) = art.get("expected_agg").and_then(|e| e.as_arr()) else {
+            continue;
+        };
+        let name = art.str_field("name").unwrap();
+        let outputs = engine.execute_values(name).expect("execute_values");
+        // pipeline_stage returns (activations, aggregate); the aggregate is
+        // the last output.
+        let agg = outputs.last().expect("outputs");
+        assert_eq!(agg.len(), expected.len(), "{name}: aggregate arity");
+        for (i, (got, want)) in agg.iter().zip(expected).enumerate() {
+            let want = want.as_f64().unwrap() as f32;
+            let tol = 1e-3_f32.max(want.abs() * 1e-3);
+            assert!(
+                (got - want).abs() <= tol,
+                "{name}[{i}]: got {got}, want {want}"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 2, "expected >=2 forward artifacts with references");
+}
+
+#[test]
+fn activations_are_finite_and_shaped() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load_dir(&dir).expect("load artifacts");
+    let outputs = engine.execute_values("pipeline_stage_r256").unwrap();
+    assert_eq!(outputs.len(), 2, "(activations, aggregate)");
+    assert_eq!(outputs[0].len(), 256 * 32);
+    assert_eq!(outputs[1].len(), 32);
+    assert!(outputs[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load_dir(&dir).expect("load artifacts");
+    let a = engine.execute_values("pipeline_stage_r1024").unwrap();
+    let b = engine.execute_values("pipeline_stage_r1024").unwrap();
+    assert_eq!(a, b);
+}

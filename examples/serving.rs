@@ -1,19 +1,25 @@
-//! Serving mode: the coordinator as a long-running, wall-clock service.
+//! Serving mode: the coordinator as a long-running, wall-clock service
+//! driven entirely through the v1 control-plane API.
 //!
 //! The DES normally runs in pure virtual time; here a real-time driver
 //! paces it against the wall clock (with a configurable speed-up) while
-//! Poisson-arriving trigger requests (the web-UI flow, Fig. 1 (14)) are
-//! injected — demonstrating the rust event loop as an actual service and
-//! reporting request→completion latency and throughput.
+//! Poisson-arriving requests hit the REST surface the way Airflow's
+//! webserver would: the DAG is uploaded with `POST /api/v1/dags`, every
+//! trigger is a `POST /api/v1/dags/{id}/dagRuns`, and the final report is
+//! assembled from `GET .../dagRuns` (a `limit=0` count probe) and
+//! `GET /api/v1/health` — demonstrating the rust event loop as an actual
+//! service and reporting request→completion latency and throughput.
 //!
 //! ```sh
 //! cargo run --release --example serving -- --rps 2 --duration 30 --speedup 20
 //! ```
 
+use sairflow::api::{dispatch, Method};
 use sairflow::exp::collect_sink;
-use sairflow::sairflow::{trigger_dag, upload_dag, Config, World};
+use sairflow::sairflow::{Config, World};
 use sairflow::sim::time::{as_secs, mins, secs, SimTime};
 use sairflow::util::cli::Args;
+use sairflow::util::json::Json;
 use sairflow::util::rng::Rng;
 use sairflow::util::stats::Summary;
 use sairflow::workloads::synthetic::parallel_dag;
@@ -28,10 +34,13 @@ fn main() {
     let mut world = World::new(Config::seeded(99));
     let mut sim = world.sim();
 
-    // A manually-triggered workflow (no cron schedule).
+    // A manually-triggered workflow (no cron schedule), uploaded through
+    // the API like any client would.
     let mut dag = parallel_dag("api_fanout", 8, 2.0, 5.0);
     dag.period = None;
-    upload_dag(&mut sim, &mut world, &dag);
+    let body = Json::obj().set("file_text", dag.to_json().to_string_pretty());
+    let resp = dispatch(&mut sim, &mut world, Method::Post, "/api/v1/dags", Some(&body));
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "upload failed: {resp}");
     sim.run_until(&mut world, mins(1.0), 1_000_000); // settle parse/CDC
 
     println!(
@@ -55,19 +64,30 @@ fn main() {
     println!("{} requests scheduled", arrivals.len());
 
     // Real-time pacing loop: advance virtual time in lockstep with the
-    // wall clock; inject triggers when their arrival time passes.
+    // wall clock; inject API triggers when their arrival time passes.
     let start_wall = Instant::now();
     let start_sim = sim.now();
     let mut next_arrival = 0usize;
     let mut request_starts: Vec<(u64, SimTime)> = Vec::new();
+    let mut rejected = 0u64;
     loop {
         let wall = start_wall.elapsed().as_secs_f64();
         let target_sim = start_sim + secs(wall * speedup);
         while next_arrival < arrivals.len() && arrivals[next_arrival] <= target_sim {
             let at = arrivals[next_arrival];
             sim.run_until(&mut world, at, 50_000_000);
-            trigger_dag(&mut sim, &mut world, "api_fanout");
-            request_starts.push((next_arrival as u64, at));
+            let resp = dispatch(
+                &mut sim,
+                &mut world,
+                Method::Post,
+                "/api/v1/dags/api_fanout/dagRuns",
+                None,
+            );
+            if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                request_starts.push((next_arrival as u64, at));
+            } else {
+                rejected += 1;
+            }
             next_arrival += 1;
         }
         sim.run_until(&mut world, target_sim, 50_000_000);
@@ -79,6 +99,17 @@ fn main() {
     // Drain in-flight work (virtual time only).
     sim.run_until(&mut world, sim.now() + mins(5.0), 50_000_000);
 
+    // Completion count straight from the API: a `limit=0` pagination probe
+    // returns `total_entries` without materializing the page.
+    let done = dispatch(
+        &mut sim,
+        &mut world,
+        Method::Get,
+        "/api/v1/dags/api_fanout/dagRuns?state=success&limit=0",
+        None,
+    );
+    let completed = done.get("total_entries").and_then(|v| v.as_u64()).unwrap_or(0);
+
     // Latency: trigger time -> run completion, matched in order.
     let sink = collect_sink(world.db.read());
     let mut runs: Vec<_> = sink.runs.iter().filter(|r| r.success).collect();
@@ -89,11 +120,23 @@ fn main() {
         .map(|(r, (_, t0))| as_secs(r.last_end.saturating_sub(*t0)))
         .collect();
     let lat = Summary::of(&latencies);
-    println!("\ncompleted {} / {} requests", runs.len(), request_starts.len());
+    println!(
+        "\ncompleted {completed} / {} requests ({rejected} rejected by the API)",
+        request_starts.len()
+    );
     println!("request latency [s, simulated]: {}", lat.line());
     println!(
         "throughput: {:.2} completed workflows / simulated minute",
-        runs.len() as f64 / (as_secs(sim.now() - start_sim) / 60.0)
+        completed as f64 / (as_secs(sim.now() - start_sim) / 60.0)
+    );
+
+    // Control-plane health, as a client would see it.
+    let health = dispatch(&mut sim, &mut world, Method::Get, "/api/v1/health", None);
+    println!(
+        "health: db_txns={} cdc_records={} run_states={}",
+        health.get("db_txns").unwrap(),
+        health.get("cdc_records").unwrap(),
+        health.get("run_states").unwrap()
     );
     println!(
         "worker pool: peak {} concurrent lambda workers, {} cold starts",

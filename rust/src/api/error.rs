@@ -1,0 +1,136 @@
+//! Structured error envelope of the v1 control-plane API.
+//!
+//! Every failure is an [`ApiError`]: an HTTP-style status (derived from
+//! the [`ErrorKind`]), a stable machine-readable kind, and a human
+//! detail string. Serialized it becomes the wire envelope
+//!
+//! ```json
+//! {"ok": false, "status": 404,
+//!  "error": {"kind": "not_found", "detail": "no dag 'etl'"}}
+//! ```
+//!
+//! Handlers return `Result<Json, ApiError>`; the dispatcher folds the
+//! error arm into this envelope so callers always receive one shape.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Machine-readable error classes (each maps to one HTTP status).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Malformed request: bad path parameter, bad query value, bad body.
+    BadRequest,
+    /// The addressed resource (DAG, run, task instance) does not exist.
+    NotFound,
+    /// The route exists but not for this HTTP method.
+    MethodNotAllowed,
+    /// The request is well-formed but conflicts with resource state
+    /// (e.g. clearing a task instance that is currently executing).
+    Conflict,
+}
+
+impl ErrorKind {
+    /// HTTP status code of this kind.
+    pub fn status(self) -> u16 {
+        match self {
+            ErrorKind::BadRequest => 400,
+            ErrorKind::NotFound => 404,
+            ErrorKind::MethodNotAllowed => 405,
+            ErrorKind::Conflict => 409,
+        }
+    }
+
+    /// Stable wire name of this kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::NotFound => "not_found",
+            ErrorKind::MethodNotAllowed => "method_not_allowed",
+            ErrorKind::Conflict => "conflict",
+        }
+    }
+}
+
+impl fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A failed API request: kind + detail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub kind: ErrorKind,
+    pub detail: String,
+}
+
+impl ApiError {
+    pub fn bad_request(detail: impl Into<String>) -> ApiError {
+        ApiError { kind: ErrorKind::BadRequest, detail: detail.into() }
+    }
+
+    pub fn not_found(detail: impl Into<String>) -> ApiError {
+        ApiError { kind: ErrorKind::NotFound, detail: detail.into() }
+    }
+
+    pub fn method_not_allowed(detail: impl Into<String>) -> ApiError {
+        ApiError { kind: ErrorKind::MethodNotAllowed, detail: detail.into() }
+    }
+
+    pub fn conflict(detail: impl Into<String>) -> ApiError {
+        ApiError { kind: ErrorKind::Conflict, detail: detail.into() }
+    }
+
+    /// Shorthand: 404 for a DAG id that is not registered.
+    pub fn unknown_dag(dag_id: &str) -> ApiError {
+        ApiError::not_found(format!("no dag '{dag_id}'"))
+    }
+
+    /// Shorthand: 404 for a (dag_id, run_id) pair with no DAG-run row.
+    pub fn unknown_run(dag_id: &str, run_id: u64) -> ApiError {
+        ApiError::not_found(format!("no run {run_id} of dag '{dag_id}'"))
+    }
+
+    /// The wire envelope of this error.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ok", false)
+            .set("status", self.kind.status() as u64)
+            .set(
+                "error",
+                Json::obj().set("kind", self.kind.as_str()).set("detail", self.detail.as_str()),
+            )
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ({}): {}", self.kind.status(), self.kind, self.detail)
+    }
+}
+
+/// Handler result: a JSON payload or a structured error.
+pub type ApiResult = Result<Json, ApiError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_map_to_http_statuses() {
+        assert_eq!(ErrorKind::BadRequest.status(), 400);
+        assert_eq!(ErrorKind::NotFound.status(), 404);
+        assert_eq!(ErrorKind::MethodNotAllowed.status(), 405);
+        assert_eq!(ErrorKind::Conflict.status(), 409);
+    }
+
+    #[test]
+    fn envelope_shape() {
+        let e = ApiError::unknown_dag("etl").to_json();
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+        let err = e.get("error").unwrap();
+        assert_eq!(err.get("kind").unwrap().as_str(), Some("not_found"));
+        assert!(err.get("detail").unwrap().as_str().unwrap().contains("etl"));
+    }
+}

@@ -1,19 +1,80 @@
-//! The web-UI / API surface (Fig. 1 (14)).
+//! The web-UI / API surface (Fig. 1 (14)): a versioned, resource-oriented
+//! control-plane API modeled on Airflow's stable REST API v1.
 //!
-//! Airflow's web server lets users inspect DAGs and runs, trigger runs,
-//! and pause/unpause workflows; in sAirflow those actions flow through
-//! the same event fabric as everything else (a trigger is a scheduler-feed
-//! message; a DAG edit is a blob upload). This module exposes that surface
-//! as a typed request/response API over the deployed [`World`] — the
-//! `serving` example drives it as a long-running service.
+//! The paper's claim is that sAirflow "maintains the same interface" as
+//! Airflow while every control action flows through the serverless event
+//! fabric (§4.1). This module is that interface: reads are served from
+//! the metadata-DB snapshot (like Airflow's webserver), and every
+//! mutation either injects an event (trigger, upload) or commits a
+//! metadata-DB transaction whose CDC change drives the control plane
+//! (pause, clear, mark, delete) — the API never mutates system state in
+//! place.
+//!
+//! # v1 surface
+//!
+//! | Method | Path | Action |
+//! |--------|------|--------|
+//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, run/task state breakdowns |
+//! | GET    | `/api/v1/dags` | list DAGs (`limit`, `offset`, `paused=true\|false`) |
+//! | POST   | `/api/v1/dags` | upload a DAG file (body `{"file_text": ...}`) |
+//! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
+//! | PATCH  | `/api/v1/dags/{dag_id}` | pause/unpause (body `{"is_paused": bool}`) |
+//! | DELETE | `/api/v1/dags/{dag_id}` | delete the DAG and all its rows |
+//! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `state=<run state>`) |
+//! | POST   | `/api/v1/dags/{dag_id}/dagRuns` | trigger a manual run |
+//! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | run detail |
+//! | PATCH  | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | mark run success/failed (body `{"state": ...}`) |
+//! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}/taskInstances` | list task instances (`limit`, `offset`, `state=<ti state>`) |
+//! | POST   | `/api/v1/dags/{dag_id}/clearTaskInstances` | clear task instances for re-execution (body `{"run_id": n, "task_ids": [...], "only_failed": bool}`) |
+//!
+//! Every list endpoint paginates (`limit` default 25, capped at 100;
+//! `offset` default 0) and reports `total_entries`. Every response is an
+//! envelope: `{"ok": true, "status": 200, ...}` on success, and on
+//! failure
+//!
+//! ```json
+//! {"ok": false, "status": 404,
+//!  "error": {"kind": "not_found", "detail": "no dag 'etl'"}}
+//! ```
+//!
+//! # Example
+//!
+//! `GET /api/v1/dags/etl/dagRuns?limit=2&state=success` →
+//!
+//! ```json
+//! {"ok": true, "status": 200, "dag_id": "etl",
+//!  "dag_runs": [{"run_id": 7, "state": "success", "logical_ts": 2100,
+//!                "start": 2100.3, "end": 2131.9}, ...],
+//!  "total_entries": 7, "limit": 2, "offset": 0}
+//! ```
+//!
+//! # Legacy wire format
+//!
+//! The original flat `{"op": ...}` JSON protocol of the serving example
+//! keeps working: [`parse_request`]/[`handle`] form a thin compatibility
+//! shim that maps each legacy op onto the corresponding v1 route
+//! (percent-encoding path parameters, and draining list pages so whole
+//! collections come back like the old handlers returned), renames the
+//! response collections back to their legacy keys (`dag_runs` → `runs`,
+//! `task_instances` → `tasks`), flattens the error envelope back to the
+//! legacy string shape (`"error": "<detail>"`), and keeps the legacy
+//! no-existence-check list behavior (unknown ids → empty collections).
 
-use crate::dag::state::RunState;
-use crate::sairflow::{trigger_dag, upload_dag, World};
+pub mod error;
+pub mod page;
+pub mod router;
+pub mod v1;
+
+pub use error::{ApiError, ApiResult, ErrorKind};
+pub use page::Page;
+pub use router::{Endpoint, Method, Query};
+pub use v1::{dispatch, handle_http};
+
+use crate::sairflow::World;
 use crate::sim::engine::Sim;
-use crate::sim::time::as_secs;
 use crate::util::json::Json;
 
-/// An API request.
+/// A legacy API request (the flat `{"op": ...}` wire format).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// List registered DAGs with their schedule and pause state.
@@ -33,8 +94,7 @@ pub enum Request {
     Health,
 }
 
-/// Parse a request from a JSON document (the wire format of the serving
-/// example).
+/// Parse a legacy request from a JSON document.
 pub fn parse_request(doc: &Json) -> Result<Request, String> {
     match doc.str_field("op")? {
         "list_dags" => Ok(Request::ListDags),
@@ -56,120 +116,152 @@ pub fn parse_request(doc: &Json) -> Result<Request, String> {
     }
 }
 
-/// Handle a request against the deployed world. Mutating requests inject
-/// events; reads are served from the metadata DB (like Airflow's
-/// webserver, which reads the DB directly).
-pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
-    match req {
-        Request::ListDags => {
-            let db = w.db.read();
-            let dags: Vec<Json> = db
-                .dags
-                .values()
-                .map(|d| {
-                    Json::obj()
-                        .set("dag_id", d.dag_id.as_str())
-                        .set(
-                            "period_secs",
-                            d.period.map(|p| Json::Num(p as f64 / 1e6)).unwrap_or(Json::Null),
-                        )
-                        .set("paused", d.is_paused)
-                        .set(
-                            "n_tasks",
-                            db.serialized.get(&d.dag_id).map(|s| s.n_tasks()).unwrap_or(0),
-                        )
-                })
-                .collect();
-            Json::obj().set("ok", true).set("dags", Json::Arr(dags))
-        }
-        Request::ListRuns { dag_id } => {
-            let db = w.db.read();
-            let runs: Vec<Json> = db
-                .dag_runs
-                .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
-                .rev()
-                .map(|(_, r)| {
-                    Json::obj()
-                        .set("run_id", r.run_id)
-                        .set("state", r.state.to_string())
-                        .set("start", r.start.map(|t| Json::Num(as_secs(t))).unwrap_or(Json::Null))
-                        .set("end", r.end.map(|t| Json::Num(as_secs(t))).unwrap_or(Json::Null))
-                })
-                .collect();
-            Json::obj().set("ok", true).set("dag_id", dag_id).set("runs", Json::Arr(runs))
-        }
-        Request::ListTasks { dag_id, run_id } => {
-            let db = w.db.read();
-            let tasks: Vec<Json> = db
-                .tis_of_run(&dag_id, run_id)
-                .iter()
-                .map(|t| {
-                    Json::obj()
-                        .set("task_id", t.task_id)
-                        .set("state", t.state.to_string())
-                        .set("try_number", t.try_number)
-                        .set("host", t.host.clone().map(Json::Str).unwrap_or(Json::Null))
-                        .set("ready", t.ready.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null))
-                        .set("start", t.start.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null))
-                        .set("end", t.end.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null))
-                })
-                .collect();
-            Json::obj().set("ok", true).set("tasks", Json::Arr(tasks))
-        }
-        Request::Trigger { dag_id } => {
-            if !w.db.read().serialized.contains_key(&dag_id) {
-                return Json::obj().set("ok", false).set("error", "unknown dag");
+/// Rename one top-level key of an object response (legacy key mapping).
+fn rename_key(resp: Json, from: &str, to: &str) -> Json {
+    match resp {
+        Json::Obj(mut map) => {
+            if let Some(v) = map.remove(from) {
+                map.insert(to.to_string(), v);
             }
-            trigger_dag(sim, w, &dag_id);
-            Json::obj().set("ok", true).set("triggered", dag_id)
+            Json::Obj(map)
         }
-        Request::SetPaused { dag_id, paused } => {
-            match w.db.meta.dags.get_mut(&dag_id) {
-                Some(row) => {
-                    row.is_paused = paused;
-                    Json::obj().set("ok", true).set("dag_id", dag_id).set("paused", paused)
-                }
-                None => Json::obj().set("ok", false).set("error", "unknown dag"),
-            }
+        other => other,
+    }
+}
+
+/// Drain a paginated v1 list endpoint into one full collection. The
+/// legacy protocol had no pagination and returned whole collections, so
+/// the shim follows `offset` pages until `total_entries` rows are
+/// gathered instead of truncating at the page-size cap. Errors propagate
+/// as their envelope unchanged.
+fn drain_pages(sim: &mut Sim<World>, w: &mut World, path: &str, key: &str) -> Json {
+    let mut items: Vec<Json> = Vec::new();
+    let mut offset = 0usize;
+    loop {
+        let target = format!("{path}?limit={}&offset={offset}", page::MAX_LIMIT);
+        let resp = v1::dispatch(sim, w, Method::Get, &target, None);
+        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return resp;
         }
-        Request::UploadDag { file_text } => match crate::parser::parse_dag_file(&file_text) {
-            Ok(spec) => {
-                upload_dag(sim, w, &spec);
-                Json::obj().set("ok", true).set("uploaded", spec.dag_id.as_str())
-            }
-            Err(e) => Json::obj().set("ok", false).set("error", e),
-        },
-        Request::Health => {
-            Json::obj()
-                .set("ok", true)
-                .set("sched_queue_depth", w.sched_q.len())
-                .set("fexec_queue_depth", w.fexec_q.len())
-                .set("cexec_queue_depth", w.cexec_q.len())
-                .set("worker_inflight", w.faas.inflight(w.fns.worker) as u64)
-                .set("worker_warm_pool", w.faas.warm_pool(w.fns.worker))
-                .set("containers_inflight", w.caas.inflight() as u64)
-                .set("router_events", w.router.stats.events_in)
-                .set("cdc_records", w.cdc.stats.records)
-                .set("db_txns", w.db.read().stats.txns)
-                .set(
-                    "active_runs",
-                    w.db
-                        .read()
-                        .dag_runs
-                        .values()
-                        .filter(|r| !matches!(r.state, RunState::Success | RunState::Failed))
-                        .count(),
-                )
-                .set("active_tasks", w.db.read().active_ti_count())
+        let page: Vec<Json> =
+            resp.get(key).and_then(|v| v.as_arr()).map(|a| a.to_vec()).unwrap_or_default();
+        let total = resp.get("total_entries").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+        let got = page.len();
+        items.extend(page);
+        offset += got;
+        if offset >= total || got == 0 {
+            let n = items.len();
+            return resp
+                .set(key, Json::Arr(items))
+                .set("total_entries", total)
+                .set("limit", n)
+                .set("offset", 0usize);
         }
     }
 }
 
-/// Convenience: handle a JSON request string end-to-end.
+/// Legacy responses exposed the pause flag as `paused`; v1 standardizes
+/// on Airflow's `is_paused`. Mirror the key (top-level and per-dag) so
+/// old clients keep reading it.
+fn mirror_paused_key(resp: Json) -> Json {
+    match resp {
+        Json::Obj(mut map) => {
+            if let Some(Json::Arr(dags)) = map.remove("dags") {
+                let dags: Vec<Json> = dags
+                    .into_iter()
+                    .map(|d| match d.get("is_paused").cloned() {
+                        Some(v) => d.set("paused", v),
+                        None => d,
+                    })
+                    .collect();
+                map.insert("dags".to_string(), Json::Arr(dags));
+            }
+            if let Some(v) = map.get("is_paused").cloned() {
+                map.insert("paused".to_string(), v);
+            }
+            Json::Obj(map)
+        }
+        other => other,
+    }
+}
+
+/// Whether a response is a 404 envelope (unknown dag/run).
+fn is_not_found(resp: &Json) -> bool {
+    resp.get("status").and_then(|s| s.as_u64()) == Some(404)
+}
+
+/// Fold the v1 error envelope back to the legacy shape: old clients read
+/// `error` as a flat string, not an object.
+fn legacy_error(resp: Json) -> Json {
+    let detail = resp
+        .get("error")
+        .and_then(|e| e.get("detail"))
+        .and_then(|d| d.as_str())
+        .map(|s| s.to_string());
+    match detail {
+        Some(d) => resp.set("error", d),
+        None => resp,
+    }
+}
+
+/// An ok envelope with one empty collection — what the legacy list ops
+/// returned for unknown ids (they had no existence checks).
+fn legacy_empty(key: &str) -> Json {
+    Json::obj().set("ok", true).set("status", 200u64).set(key, Json::Arr(Vec::new()))
+}
+
+/// Handle a legacy request: a thin shim over the v1 router. Each op maps
+/// to its v1 route (lists are drained across pages, since the legacy
+/// protocol had no pagination), path parameters are percent-encoded,
+/// collection keys are renamed back, errors are flattened to the legacy
+/// string shape, and unknown-id lists return empty collections like the
+/// old handlers did.
+pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
+    use router::encode_seg;
+    let resp = match req {
+        Request::ListDags => mirror_paused_key(drain_pages(sim, w, "/api/v1/dags", "dags")),
+        Request::ListRuns { dag_id } => {
+            let path = format!("/api/v1/dags/{}/dagRuns", encode_seg(&dag_id));
+            let resp = drain_pages(sim, w, &path, "dag_runs");
+            if is_not_found(&resp) {
+                legacy_empty("runs").set("dag_id", dag_id)
+            } else {
+                rename_key(resp, "dag_runs", "runs")
+            }
+        }
+        Request::ListTasks { dag_id, run_id } => {
+            let path =
+                format!("/api/v1/dags/{}/dagRuns/{run_id}/taskInstances", encode_seg(&dag_id));
+            let resp = drain_pages(sim, w, &path, "task_instances");
+            if is_not_found(&resp) {
+                legacy_empty("tasks").set("dag_id", dag_id).set("run_id", run_id)
+            } else {
+                rename_key(resp, "task_instances", "tasks")
+            }
+        }
+        Request::Trigger { dag_id } => {
+            let target = format!("/api/v1/dags/{}/dagRuns", encode_seg(&dag_id));
+            v1::dispatch(sim, w, Method::Post, &target, None)
+        }
+        Request::SetPaused { dag_id, paused } => {
+            let target = format!("/api/v1/dags/{}", encode_seg(&dag_id));
+            let body = Json::obj().set("is_paused", paused);
+            mirror_paused_key(v1::dispatch(sim, w, Method::Patch, &target, Some(&body)))
+        }
+        Request::UploadDag { file_text } => {
+            let body = Json::obj().set("file_text", file_text);
+            v1::dispatch(sim, w, Method::Post, "/api/v1/dags", Some(&body))
+        }
+        Request::Health => v1::dispatch(sim, w, Method::Get, "/api/v1/health", None),
+    };
+    legacy_error(resp)
+}
+
+/// Convenience: handle a legacy JSON request string end-to-end.
 pub fn handle_text(sim: &mut Sim<World>, w: &mut World, text: &str) -> Json {
-    match Json::parse(text).map_err(|e| e.to_string()).and_then(|d| parse_request(&d)) {
+    match Json::parse(text).and_then(|d| parse_request(&d)) {
         Ok(req) => handle(sim, w, req),
-        Err(e) => Json::obj().set("ok", false).set("error", e),
+        Err(e) => legacy_error(ApiError::bad_request(e).to_json()),
     }
 }
 
@@ -195,10 +287,15 @@ mod tests {
         let (mut sim, mut w) = deployed();
         let resp = handle(&mut sim, &mut w, Request::ListDags);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("status").unwrap().as_u64(), Some(200));
         let dags = resp.get("dags").unwrap().as_arr().unwrap();
         assert_eq!(dags.len(), 1);
         assert_eq!(dags[0].get("dag_id").unwrap().as_str(), Some("api_dag"));
         assert_eq!(dags[0].get("n_tasks").unwrap().as_u64(), Some(2));
+        // v1 field plus the mirrored legacy key.
+        assert_eq!(dags[0].get("is_paused").unwrap().as_bool(), Some(false));
+        assert_eq!(dags[0].get("paused").unwrap().as_bool(), Some(false));
+        assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(1));
     }
 
     #[test]
@@ -226,9 +323,13 @@ mod tests {
     #[test]
     fn pause_blocks_periodic_runs() {
         let (mut sim, mut w) = deployed();
-        handle(&mut sim, &mut w, Request::SetPaused { dag_id: "api_dag".into(), paused: true });
+        let resp =
+            handle(&mut sim, &mut w, Request::SetPaused { dag_id: "api_dag".into(), paused: true });
+        assert_eq!(resp.get("paused").unwrap().as_bool(), Some(true), "legacy key mirrored");
         sim.run_until(&mut w, 20 * MINUTE, 10_000_000);
         assert!(w.db.read().dag_runs.is_empty(), "paused DAG must not run on schedule");
+        // The pause itself went through the metadata DB as a transaction.
+        assert!(w.db.read().dags["api_dag"].is_paused);
         // Unpause: the next cron fire runs.
         handle(&mut sim, &mut w, Request::SetPaused { dag_id: "api_dag".into(), paused: false });
         sim.run_until(&mut w, 40 * MINUTE, 10_000_000);
@@ -250,8 +351,10 @@ mod tests {
 
         let bad = handle(&mut sim, &mut w, Request::UploadDag { file_text: "not json".into() });
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(bad.get("status").unwrap().as_u64(), Some(400));
         let unknown = handle(&mut sim, &mut w, Request::Trigger { dag_id: "ghost".into() });
         assert_eq!(unknown.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(unknown.get("status").unwrap().as_u64(), Some(404));
     }
 
     #[test]
@@ -261,6 +364,10 @@ mod tests {
         assert_eq!(h.get("ok").unwrap().as_bool(), Some(true));
         assert!(h.get("db_txns").unwrap().as_u64().unwrap() > 0);
         assert!(h.get("cdc_records").unwrap().as_u64().unwrap() > 0);
+        // New state-breakdown counters.
+        assert_eq!(h.get("n_dags").unwrap().as_u64(), Some(1));
+        assert!(h.get("run_states").unwrap().get("success").is_some());
+        assert!(h.get("task_states").unwrap().get("queued").is_some());
     }
 
     #[test]
@@ -270,6 +377,7 @@ mod tests {
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
         let resp = handle_text(&mut sim, &mut w, r#"{"op": "bogus"}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(resp.get("status").unwrap().as_u64(), Some(400));
         let resp =
             handle_text(&mut sim, &mut w, r#"{"op": "trigger", "dag_id": "api_dag"}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));

@@ -1,0 +1,110 @@
+//! `limit`/`offset` pagination of the v1 list endpoints.
+//!
+//! Mirrors Airflow's REST API: every list endpoint accepts `limit`
+//! (default [`DEFAULT_LIMIT`], capped at [`MAX_LIMIT`]) and `offset`
+//! (default 0), and every list response reports `total_entries` — the
+//! collection size *before* the window was applied — plus the effective
+//! `limit`/`offset`, so clients can page without a separate count call.
+//! `limit=0` is a valid probe: it returns no items but a correct
+//! `total_entries`.
+
+use crate::api::error::ApiError;
+use crate::api::router::Query;
+use crate::util::json::Json;
+
+/// Default page size when `limit` is absent.
+pub const DEFAULT_LIMIT: usize = 25;
+/// Hard cap on `limit` (requests above it are clamped, like Airflow's
+/// `maximum_page_limit`).
+pub const MAX_LIMIT: usize = 100;
+
+/// A resolved pagination window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Page {
+    pub limit: usize,
+    pub offset: usize,
+}
+
+impl Page {
+    /// Resolve the window from a query string; non-numeric values are a
+    /// 400 `bad_request`.
+    pub fn from_query(q: &Query) -> Result<Page, ApiError> {
+        let limit = match q.get("limit") {
+            None => DEFAULT_LIMIT,
+            Some(raw) => raw
+                .parse::<usize>()
+                .map_err(|_| ApiError::bad_request(format!("invalid limit '{raw}'")))?,
+        };
+        let offset = match q.get("offset") {
+            None => 0,
+            Some(raw) => raw
+                .parse::<usize>()
+                .map_err(|_| ApiError::bad_request(format!("invalid offset '{raw}'")))?,
+        };
+        Ok(Page { limit: limit.min(MAX_LIMIT), offset })
+    }
+
+    /// Apply the window to a fully-filtered collection; returns the page
+    /// plus the pre-window total.
+    pub fn apply<T>(&self, items: Vec<T>) -> (Vec<T>, usize) {
+        let total = items.len();
+        let page = items.into_iter().skip(self.offset).take(self.limit).collect();
+        (page, total)
+    }
+
+    /// Build the list-response envelope: items under `key`, plus
+    /// `total_entries` / `limit` / `offset`.
+    pub fn envelope(&self, key: &str, items: Vec<Json>, total: usize) -> Json {
+        Json::obj()
+            .set(key, Json::Arr(items))
+            .set("total_entries", total)
+            .set("limit", self.limit)
+            .set("offset", self.offset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::error::ErrorKind;
+
+    fn q(s: &str) -> Query {
+        Query::parse(s)
+    }
+
+    #[test]
+    fn defaults_and_clamp() {
+        let p = Page::from_query(&q("")).unwrap();
+        assert_eq!(p, Page { limit: DEFAULT_LIMIT, offset: 0 });
+        let p = Page::from_query(&q("limit=1000")).unwrap();
+        assert_eq!(p.limit, MAX_LIMIT);
+    }
+
+    #[test]
+    fn windowing() {
+        let p = Page { limit: 2, offset: 1 };
+        let (page, total) = p.apply(vec![10, 20, 30, 40]);
+        assert_eq!(page, vec![20, 30]);
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn limit_zero_probe_and_offset_past_end() {
+        let p = Page { limit: 0, offset: 0 };
+        let (page, total) = p.apply(vec![1, 2, 3]);
+        assert!(page.is_empty());
+        assert_eq!(total, 3);
+        let p = Page { limit: 10, offset: 99 };
+        let (page, total) = p.apply(vec![1, 2, 3]);
+        assert!(page.is_empty());
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn non_numeric_is_400() {
+        let e = Page::from_query(&q("limit=ten")).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        let e = Page::from_query(&q("offset=-1")).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+    }
+}

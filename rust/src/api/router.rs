@@ -1,0 +1,307 @@
+//! Route table of the v1 API: `(method, path)` → typed endpoint.
+//!
+//! Mirrors the resource layout of Airflow's stable REST API v1. Matching
+//! is purely syntactic — the router resolves path parameters and the
+//! query string; existence checks (404 on unknown DAG etc.) belong to the
+//! handlers in [`super::v1`]. A known path with the wrong method yields
+//! 405 `method_not_allowed`, an unknown path 404 `not_found`, and an
+//! unparsable path parameter 400 `bad_request`.
+
+use crate::api::error::ApiError;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// HTTP method subset the v1 surface uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+    Patch,
+    Delete,
+}
+
+impl Method {
+    /// Parse a method name (case-insensitive).
+    pub fn parse(s: &str) -> Result<Method, ApiError> {
+        match s.to_ascii_uppercase().as_str() {
+            "GET" => Ok(Method::Get),
+            "POST" => Ok(Method::Post),
+            "PATCH" => Ok(Method::Patch),
+            "DELETE" => Ok(Method::Delete),
+            other => Err(ApiError::bad_request(format!("unsupported method '{other}'"))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+            Method::Patch => "PATCH",
+            Method::Delete => "DELETE",
+        }
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A resolved endpoint with its typed path parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Endpoint {
+    /// `GET /api/v1/health`
+    Health,
+    /// `GET /api/v1/dags`
+    ListDags,
+    /// `POST /api/v1/dags` (DAG-file upload; body `{"file_text": ...}`)
+    UploadDag,
+    /// `GET /api/v1/dags/{dag_id}`
+    GetDag { dag_id: String },
+    /// `PATCH /api/v1/dags/{dag_id}` (body `{"is_paused": bool}`)
+    PatchDag { dag_id: String },
+    /// `DELETE /api/v1/dags/{dag_id}`
+    DeleteDag { dag_id: String },
+    /// `GET /api/v1/dags/{dag_id}/dagRuns`
+    ListDagRuns { dag_id: String },
+    /// `POST /api/v1/dags/{dag_id}/dagRuns` (manual trigger)
+    TriggerDagRun { dag_id: String },
+    /// `GET /api/v1/dags/{dag_id}/dagRuns/{run_id}`
+    GetDagRun { dag_id: String, run_id: u64 },
+    /// `PATCH /api/v1/dags/{dag_id}/dagRuns/{run_id}`
+    /// (body `{"state": "success"|"failed"}` — mark-success / mark-failed)
+    PatchDagRun { dag_id: String, run_id: u64 },
+    /// `GET /api/v1/dags/{dag_id}/dagRuns/{run_id}/taskInstances`
+    ListTaskInstances { dag_id: String, run_id: u64 },
+    /// `POST /api/v1/dags/{dag_id}/clearTaskInstances`
+    /// (body `{"run_id": n, "task_ids": [...], "only_failed": bool}`)
+    ClearTaskInstances { dag_id: String },
+}
+
+/// Parsed query string (`?limit=10&state=success`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Query {
+    params: BTreeMap<String, String>,
+}
+
+impl Query {
+    /// Parse the part after `?`. Pairs without `=` become empty-valued.
+    pub fn parse(qs: &str) -> Query {
+        let mut params = BTreeMap::new();
+        for pair in qs.split('&').filter(|p| !p.is_empty()) {
+            match pair.split_once('=') {
+                Some((k, v)) => params.insert(k.to_string(), v.to_string()),
+                None => params.insert(pair.to_string(), String::new()),
+            };
+        }
+        Query { params }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.params.get(key).map(|s| s.as_str())
+    }
+}
+
+fn parse_run_id(raw: &str) -> Result<u64, ApiError> {
+    raw.parse::<u64>().map_err(|_| ApiError::bad_request(format!("invalid run_id '{raw}'")))
+}
+
+/// Percent-encode one path segment. Callers that interpolate
+/// user-supplied ids into a target (the legacy shim, clients building
+/// URLs) must encode them: a raw '/', '?', '#' or '%' would change how
+/// the target splits into segments and query string.
+pub fn encode_seg(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '/' | '?' | '#' | '%' => out.push_str(&format!("%{:02X}", c as u32)),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Decode `%XX` escapes in one path segment (inverse of [`encode_seg`]).
+/// Escapes decode as *bytes*, then the whole segment is re-validated as
+/// UTF-8 — standards-compliant clients percent-encode multi-byte UTF-8
+/// sequences byte-wise (`é` → `%C3%A9`), so decoding each escape as a
+/// code point would mangle non-ASCII ids.
+fn decode_seg(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'%' && i + 2 < b.len() {
+            if let Some(v) = std::str::from_utf8(&b[i + 1..i + 3])
+                .ok()
+                .and_then(|hex| u8::from_str_radix(hex, 16).ok())
+            {
+                out.push(v);
+                i += 3;
+                continue;
+            }
+        }
+        out.push(b[i]);
+        i += 1;
+    }
+    match String::from_utf8(out) {
+        Ok(s) => s,
+        // An escape sequence that doesn't form valid UTF-8: keep it lossy;
+        // the resulting id simply won't match any resource (404).
+        Err(e) => String::from_utf8_lossy(e.as_bytes()).into_owned(),
+    }
+}
+
+/// Whether a path shape is part of the v1 surface under *some* method
+/// (drives the 404-vs-405 distinction).
+fn path_known(segs: &[&str]) -> bool {
+    matches!(
+        segs,
+        ["health"]
+            | ["dags"]
+            | ["dags", _]
+            | ["dags", _, "dagRuns"]
+            | ["dags", _, "dagRuns", _]
+            | ["dags", _, "dagRuns", _, "taskInstances"]
+            | ["dags", _, "clearTaskInstances"]
+    )
+}
+
+/// Resolve `method` + `path[?query]` to a typed endpoint.
+pub fn resolve(method: Method, target: &str) -> Result<(Endpoint, Query), ApiError> {
+    let (path, qs) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let query = Query::parse(qs);
+    let rest = path
+        .strip_prefix("/api/v1")
+        .ok_or_else(|| ApiError::not_found(format!("no route for '{path}' (expected /api/v1/...)")))?;
+    let segs: Vec<&str> = rest.split('/').filter(|s| !s.is_empty()).collect();
+
+    use Method::*;
+    let ep = match (method, segs.as_slice()) {
+        (Get, ["health"]) => Endpoint::Health,
+        (Get, ["dags"]) => Endpoint::ListDags,
+        (Post, ["dags"]) => Endpoint::UploadDag,
+        (Get, ["dags", d]) => Endpoint::GetDag { dag_id: decode_seg(d) },
+        (Patch, ["dags", d]) => Endpoint::PatchDag { dag_id: decode_seg(d) },
+        (Delete, ["dags", d]) => Endpoint::DeleteDag { dag_id: decode_seg(d) },
+        (Get, ["dags", d, "dagRuns"]) => Endpoint::ListDagRuns { dag_id: decode_seg(d) },
+        (Post, ["dags", d, "dagRuns"]) => Endpoint::TriggerDagRun { dag_id: decode_seg(d) },
+        (Get, ["dags", d, "dagRuns", r]) => {
+            Endpoint::GetDagRun { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
+        }
+        (Patch, ["dags", d, "dagRuns", r]) => {
+            Endpoint::PatchDagRun { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
+        }
+        (Get, ["dags", d, "dagRuns", r, "taskInstances"]) => {
+            Endpoint::ListTaskInstances { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
+        }
+        (Post, ["dags", d, "clearTaskInstances"]) => {
+            Endpoint::ClearTaskInstances { dag_id: decode_seg(d) }
+        }
+        (m, segs) if path_known(segs) => {
+            return Err(ApiError::method_not_allowed(format!("{m} not allowed on '{path}'")));
+        }
+        _ => return Err(ApiError::not_found(format!("no route for '{path}'"))),
+    };
+    Ok((ep, query))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::error::ErrorKind;
+
+    #[test]
+    fn resolves_all_routes() {
+        let cases: Vec<(Method, &str, Endpoint)> = vec![
+            (Method::Get, "/api/v1/health", Endpoint::Health),
+            (Method::Get, "/api/v1/dags", Endpoint::ListDags),
+            (Method::Post, "/api/v1/dags", Endpoint::UploadDag),
+            (Method::Get, "/api/v1/dags/etl", Endpoint::GetDag { dag_id: "etl".into() }),
+            (Method::Patch, "/api/v1/dags/etl", Endpoint::PatchDag { dag_id: "etl".into() }),
+            (Method::Delete, "/api/v1/dags/etl", Endpoint::DeleteDag { dag_id: "etl".into() }),
+            (
+                Method::Get,
+                "/api/v1/dags/etl/dagRuns",
+                Endpoint::ListDagRuns { dag_id: "etl".into() },
+            ),
+            (
+                Method::Post,
+                "/api/v1/dags/etl/dagRuns",
+                Endpoint::TriggerDagRun { dag_id: "etl".into() },
+            ),
+            (
+                Method::Get,
+                "/api/v1/dags/etl/dagRuns/3",
+                Endpoint::GetDagRun { dag_id: "etl".into(), run_id: 3 },
+            ),
+            (
+                Method::Patch,
+                "/api/v1/dags/etl/dagRuns/3",
+                Endpoint::PatchDagRun { dag_id: "etl".into(), run_id: 3 },
+            ),
+            (
+                Method::Get,
+                "/api/v1/dags/etl/dagRuns/3/taskInstances",
+                Endpoint::ListTaskInstances { dag_id: "etl".into(), run_id: 3 },
+            ),
+            (
+                Method::Post,
+                "/api/v1/dags/etl/clearTaskInstances",
+                Endpoint::ClearTaskInstances { dag_id: "etl".into() },
+            ),
+        ];
+        for (m, path, want) in cases {
+            let (got, _) = resolve(m, path).unwrap_or_else(|e| panic!("{m} {path}: {e}"));
+            assert_eq!(got, want, "{m} {path}");
+        }
+    }
+
+    #[test]
+    fn query_string_parsed() {
+        let (_, q) = resolve(Method::Get, "/api/v1/dags?limit=5&offset=2&paused=true").unwrap();
+        assert_eq!(q.get("limit"), Some("5"));
+        assert_eq!(q.get("offset"), Some("2"));
+        assert_eq!(q.get("paused"), Some("true"));
+        assert_eq!(q.get("missing"), None);
+    }
+
+    #[test]
+    fn unknown_path_is_404() {
+        let e = resolve(Method::Get, "/api/v1/pools").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::NotFound);
+        let e = resolve(Method::Get, "/api/v2/dags").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::NotFound);
+    }
+
+    #[test]
+    fn wrong_method_is_405() {
+        let e = resolve(Method::Delete, "/api/v1/health").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+        let e = resolve(Method::Patch, "/api/v1/dags/etl/dagRuns").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+    }
+
+    #[test]
+    fn bad_run_id_is_400() {
+        let e = resolve(Method::Get, "/api/v1/dags/etl/dagRuns/zero/taskInstances").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn encoded_segments_roundtrip() {
+        assert_eq!(encode_seg("team/etl?v=1#x"), "team%2Fetl%3Fv=1%23x");
+        assert_eq!(decode_seg(&encode_seg("team/etl?v=1#x")), "team/etl?v=1#x");
+        assert_eq!(decode_seg("100%"), "100%", "trailing '%' is literal");
+        // UTF-8 ids arrive byte-wise percent-encoded from real clients.
+        assert_eq!(decode_seg("caf%C3%A9"), "café");
+        assert_eq!(decode_seg("café"), "café", "unescaped UTF-8 passes through");
+        let target = format!("/api/v1/dags/{}/dagRuns", encode_seg("team/etl"));
+        let (ep, _) = resolve(Method::Get, &target).unwrap();
+        assert_eq!(ep, Endpoint::ListDagRuns { dag_id: "team/etl".into() });
+    }
+}

@@ -1,0 +1,478 @@
+//! Handlers of the v1 control-plane API.
+//!
+//! Read endpoints take `&World` and serve straight from the metadata-DB
+//! snapshot (Airflow's webserver reads the DB directly). Mutations take
+//! `&mut Sim` + `&mut World` and *only* inject events or commit DB
+//! transactions via the control operations in [`crate::sairflow::world`] —
+//! the API layer never mutates system state in place, so every write is
+//! CDC-visible and the control plane stays event-driven (§4.1).
+//!
+//! [`dispatch`] is the single entry point: it resolves the route, runs the
+//! handler, and folds the result into the response envelope (`ok` +
+//! `status` on success, the [`ApiError`] envelope on failure).
+
+use crate::api::error::{ApiError, ApiResult};
+use crate::api::page::Page;
+use crate::api::router::{self, Endpoint, Method, Query};
+use crate::cloud::db::{DagRunRow, MetaDb, TiRow};
+use crate::dag::state::{RunState, TiState};
+use crate::sairflow::{self, World};
+use crate::sim::engine::Sim;
+use crate::sim::time::as_secs;
+use crate::util::json::Json;
+
+/// Dispatch one API request against the deployed world.
+///
+/// `target` is the path with optional query string
+/// (e.g. `/api/v1/dags/etl/dagRuns?limit=5&state=success`); `body` is the
+/// parsed JSON request body for POST/PATCH endpoints that take one.
+pub fn dispatch(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    method: Method,
+    target: &str,
+    body: Option<&Json>,
+) -> Json {
+    match dispatch_inner(sim, w, method, target, body) {
+        Ok(payload) => payload.set("ok", true).set("status", 200u64),
+        Err(e) => e.to_json(),
+    }
+}
+
+/// Text-level convenience used by the CLI and the serving example: method
+/// name + target + optional raw JSON body.
+pub fn handle_http(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    method: &str,
+    target: &str,
+    body: Option<&str>,
+) -> Json {
+    let method = match Method::parse(method) {
+        Ok(m) => m,
+        Err(e) => return e.to_json(),
+    };
+    let parsed = match body.map(str::trim).filter(|t| !t.is_empty()) {
+        None => None,
+        Some(text) => match Json::parse(text) {
+            Ok(doc) => Some(doc),
+            Err(e) => {
+                return ApiError::bad_request(format!("invalid JSON body: {e}")).to_json()
+            }
+        },
+    };
+    dispatch(sim, w, method, target, parsed.as_ref())
+}
+
+fn dispatch_inner(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    method: Method,
+    target: &str,
+    body: Option<&Json>,
+) -> ApiResult {
+    let (ep, query) = router::resolve(method, target)?;
+    match ep {
+        Endpoint::Health => Ok(health(w)),
+        Endpoint::ListDags => list_dags(w, &query),
+        Endpoint::GetDag { dag_id } => get_dag(w, &dag_id),
+        Endpoint::PatchDag { dag_id } => patch_dag(sim, w, &dag_id, body),
+        Endpoint::DeleteDag { dag_id } => delete_dag(sim, w, &dag_id),
+        Endpoint::UploadDag => upload_dag(sim, w, body),
+        Endpoint::ListDagRuns { dag_id } => list_dag_runs(w, &dag_id, &query),
+        Endpoint::TriggerDagRun { dag_id } => trigger_dag_run(sim, w, &dag_id),
+        Endpoint::GetDagRun { dag_id, run_id } => get_dag_run(w, &dag_id, run_id),
+        Endpoint::PatchDagRun { dag_id, run_id } => {
+            patch_dag_run(sim, w, &dag_id, run_id, body)
+        }
+        Endpoint::ListTaskInstances { dag_id, run_id } => {
+            list_task_instances(w, &dag_id, run_id, &query)
+        }
+        Endpoint::ClearTaskInstances { dag_id } => {
+            clear_task_instances(sim, w, &dag_id, body)
+        }
+    }
+}
+
+// ---- resource serialization ------------------------------------------------
+
+fn opt_secs(t: Option<crate::sim::time::SimTime>) -> Json {
+    t.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null)
+}
+
+fn dag_json(db: &MetaDb, dag_id: &str) -> Json {
+    let row = &db.dags[dag_id];
+    Json::obj()
+        .set("dag_id", row.dag_id.as_str())
+        .set("fileloc", row.fileloc.as_str())
+        .set(
+            "period_secs",
+            row.period.map(|p| Json::Num(p as f64 / 1e6)).unwrap_or(Json::Null),
+        )
+        .set("is_paused", row.is_paused)
+        .set("n_tasks", db.serialized.get(dag_id).map(|s| s.n_tasks()).unwrap_or(0))
+}
+
+fn run_json(r: &DagRunRow) -> Json {
+    Json::obj()
+        .set("run_id", r.run_id)
+        .set("state", r.state.to_string())
+        .set("logical_ts", Json::Num(as_secs(r.logical_ts)))
+        .set("start", opt_secs(r.start))
+        .set("end", opt_secs(r.end))
+}
+
+fn ti_json(t: &TiRow) -> Json {
+    Json::obj()
+        .set("task_id", t.task_id)
+        .set("state", t.state.to_string())
+        .set("try_number", t.try_number)
+        .set("host", t.host.clone().map(Json::Str).unwrap_or(Json::Null))
+        .set("ready", opt_secs(t.ready))
+        .set("start", opt_secs(t.start))
+        .set("end", opt_secs(t.end))
+}
+
+// ---- existence checks ------------------------------------------------------
+
+fn require_dag(db: &MetaDb, dag_id: &str) -> Result<(), ApiError> {
+    if db.dags.contains_key(dag_id) || db.serialized.contains_key(dag_id) {
+        Ok(())
+    } else {
+        Err(ApiError::unknown_dag(dag_id))
+    }
+}
+
+fn require_run<'a>(db: &'a MetaDb, dag_id: &str, run_id: u64) -> Result<&'a DagRunRow, ApiError> {
+    require_dag(db, dag_id)?;
+    db.dag_runs
+        .get(&(dag_id.to_string(), run_id))
+        .ok_or_else(|| ApiError::unknown_run(dag_id, run_id))
+}
+
+fn require_body<'a>(body: Option<&'a Json>) -> Result<&'a Json, ApiError> {
+    body.ok_or_else(|| ApiError::bad_request("missing request body"))
+}
+
+/// Parse a JSON number as an exact non-negative integer. Floats with a
+/// fractional part, negative values and non-numbers are a 400 — a plain
+/// `as u64`/`as u32` cast would silently truncate or wrap and address the
+/// wrong resource.
+fn exact_u64(v: &Json, what: &str) -> Result<u64, ApiError> {
+    let f = v
+        .as_f64()
+        .ok_or_else(|| ApiError::bad_request(format!("{what} must be an integer")))?;
+    if f.fract() != 0.0 || f < 0.0 || f > u64::MAX as f64 {
+        return Err(ApiError::bad_request(format!(
+            "{what} must be a non-negative integer, got {f}"
+        )));
+    }
+    Ok(f as u64)
+}
+
+fn parse_bool_filter(q: &Query, key: &str) -> Result<Option<bool>, ApiError> {
+    match q.get(key) {
+        None => Ok(None),
+        Some("true") => Ok(Some(true)),
+        Some("false") => Ok(Some(false)),
+        Some(other) => {
+            Err(ApiError::bad_request(format!("invalid {key} filter '{other}'")))
+        }
+    }
+}
+
+// ---- read handlers (serve from the DB snapshot) ----------------------------
+
+fn list_dags(w: &World, q: &Query) -> ApiResult {
+    let page = Page::from_query(q)?;
+    let paused_filter = parse_bool_filter(q, "paused")?;
+    let db = w.db.read();
+    let ids: Vec<&str> = db
+        .dags
+        .values()
+        .filter(|d| paused_filter.map(|p| d.is_paused == p).unwrap_or(true))
+        .map(|d| d.dag_id.as_str())
+        .collect();
+    let (ids, total) = page.apply(ids);
+    let dags: Vec<Json> = ids.into_iter().map(|id| dag_json(db, id)).collect();
+    Ok(page.envelope("dags", dags, total))
+}
+
+fn get_dag(w: &World, dag_id: &str) -> ApiResult {
+    let db = w.db.read();
+    if !db.dags.contains_key(dag_id) {
+        return Err(ApiError::unknown_dag(dag_id));
+    }
+    let n_runs = db
+        .dag_runs
+        .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
+        .count();
+    Ok(Json::obj()
+        .set("dag", dag_json(db, dag_id).set("n_runs", n_runs))
+        .set("cron_registered", w.cron.is_registered(dag_id)))
+}
+
+fn parse_run_state_filter(q: &Query) -> Result<Option<RunState>, ApiError> {
+    match q.get("state") {
+        None => Ok(None),
+        Some(raw) => RunState::parse(raw)
+            .map(Some)
+            .ok_or_else(|| ApiError::bad_request(format!("invalid run state '{raw}'"))),
+    }
+}
+
+fn list_dag_runs(w: &World, dag_id: &str, q: &Query) -> ApiResult {
+    let page = Page::from_query(q)?;
+    let state = parse_run_state_filter(q)?;
+    let db = w.db.read();
+    require_dag(db, dag_id)?;
+    // Most recent first, like the Airflow UI.
+    let runs: Vec<&DagRunRow> = db
+        .dag_runs
+        .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
+        .rev()
+        .map(|(_, r)| r)
+        .filter(|r| state.map(|s| r.state == s).unwrap_or(true))
+        .collect();
+    let (runs, total) = page.apply(runs);
+    let items: Vec<Json> = runs.into_iter().map(run_json).collect();
+    Ok(page.envelope("dag_runs", items, total).set("dag_id", dag_id))
+}
+
+fn get_dag_run(w: &World, dag_id: &str, run_id: u64) -> ApiResult {
+    let db = w.db.read();
+    let run = require_run(db, dag_id, run_id)?;
+    Ok(Json::obj().set("dag_id", dag_id).set("dag_run", run_json(run)))
+}
+
+fn list_task_instances(w: &World, dag_id: &str, run_id: u64, q: &Query) -> ApiResult {
+    let page = Page::from_query(q)?;
+    let state = match q.get("state") {
+        None => None,
+        Some(raw) => Some(
+            TiState::parse(raw)
+                .ok_or_else(|| ApiError::bad_request(format!("invalid task state '{raw}'")))?,
+        ),
+    };
+    let db = w.db.read();
+    require_run(db, dag_id, run_id)?;
+    let tis: Vec<&TiRow> = db
+        .tis_of_run(dag_id, run_id)
+        .into_iter()
+        .filter(|t| state.map(|s| t.state == s).unwrap_or(true))
+        .collect();
+    let (tis, total) = page.apply(tis);
+    let items: Vec<Json> = tis.into_iter().map(ti_json).collect();
+    Ok(page
+        .envelope("task_instances", items, total)
+        .set("dag_id", dag_id)
+        .set("run_id", run_id))
+}
+
+fn health(w: &World) -> Json {
+    // One snapshot borrow serves every DB-derived counter.
+    let db = w.db.read();
+    let (mut r_queued, mut r_running, mut r_success, mut r_failed) = (0u64, 0u64, 0u64, 0u64);
+    for r in db.dag_runs.values() {
+        match r.state {
+            RunState::Queued => r_queued += 1,
+            RunState::Running => r_running += 1,
+            RunState::Success => r_success += 1,
+            RunState::Failed => r_failed += 1,
+        }
+    }
+    let mut t_counts = [0u64; 8];
+    for t in db.task_instances.values() {
+        let idx = match t.state {
+            TiState::None => 0,
+            TiState::Scheduled => 1,
+            TiState::Queued => 2,
+            TiState::Running => 3,
+            TiState::Success => 4,
+            TiState::Failed => 5,
+            TiState::UpForRetry => 6,
+            TiState::UpstreamFailed => 7,
+        };
+        t_counts[idx] += 1;
+    }
+    Json::obj()
+        .set("sched_queue_depth", w.sched_q.len())
+        .set("fexec_queue_depth", w.fexec_q.len())
+        .set("cexec_queue_depth", w.cexec_q.len())
+        .set("worker_inflight", w.faas.inflight(w.fns.worker) as u64)
+        .set("worker_warm_pool", w.faas.warm_pool(w.fns.worker))
+        .set("containers_inflight", w.caas.inflight() as u64)
+        .set("router_events", w.router.stats.events_in)
+        .set("cdc_records", w.cdc.stats.records)
+        .set("db_txns", db.stats.txns)
+        .set("n_dags", db.dags.len())
+        .set("active_runs", r_queued + r_running)
+        .set("active_tasks", db.active_ti_count())
+        .set(
+            "run_states",
+            Json::obj()
+                .set("queued", r_queued)
+                .set("running", r_running)
+                .set("success", r_success)
+                .set("failed", r_failed),
+        )
+        .set(
+            "task_states",
+            Json::obj()
+                .set("none", t_counts[0])
+                .set("scheduled", t_counts[1])
+                .set("queued", t_counts[2])
+                .set("running", t_counts[3])
+                .set("success", t_counts[4])
+                .set("failed", t_counts[5])
+                .set("up_for_retry", t_counts[6])
+                .set("upstream_failed", t_counts[7]),
+        )
+}
+
+// ---- mutation handlers (inject events / commit transactions) ---------------
+
+fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResult {
+    {
+        let db = w.db.read();
+        if !db.serialized.contains_key(dag_id) {
+            return Err(ApiError::unknown_dag(dag_id));
+        }
+        // The scheduler silently drops triggers for paused DAGs; a 200
+        // here would claim a run that will never exist.
+        if db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false) {
+            return Err(ApiError::conflict(format!(
+                "dag '{dag_id}' is paused — unpause it before triggering"
+            )));
+        }
+    }
+    sairflow::trigger_dag(sim, w, dag_id);
+    Ok(Json::obj().set("dag_id", dag_id).set("triggered", dag_id))
+}
+
+fn upload_dag(sim: &mut Sim<World>, w: &mut World, body: Option<&Json>) -> ApiResult {
+    let body = require_body(body)?;
+    let text = body.str_field("file_text").map_err(ApiError::bad_request)?;
+    // Validate eagerly so the client gets a 400 now; the accepted file
+    // still flows through blob → parse function → DB like any upload.
+    let spec = crate::parser::parse_dag_file(text)
+        .map_err(|e| ApiError::bad_request(format!("invalid DAG file: {e}")))?;
+    sairflow::upload_dag(sim, w, &spec);
+    Ok(Json::obj().set("uploaded", spec.dag_id.as_str()))
+}
+
+fn patch_dag(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: &str,
+    body: Option<&Json>,
+) -> ApiResult {
+    let body = require_body(body)?;
+    let paused = body
+        .get("is_paused")
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| ApiError::bad_request("body must set boolean field 'is_paused'"))?;
+    if !w.db.read().dags.contains_key(dag_id) {
+        return Err(ApiError::unknown_dag(dag_id));
+    }
+    sairflow::set_dag_paused(sim, w, dag_id, paused);
+    Ok(Json::obj().set("dag_id", dag_id).set("is_paused", paused))
+}
+
+fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResult {
+    require_dag(w.db.read(), dag_id)?;
+    sairflow::delete_dag(sim, w, dag_id);
+    Ok(Json::obj().set("deleted", dag_id))
+}
+
+fn patch_dag_run(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: &str,
+    run_id: u64,
+    body: Option<&Json>,
+) -> ApiResult {
+    let body = require_body(body)?;
+    let raw = body.str_field("state").map_err(ApiError::bad_request)?;
+    let state = RunState::parse(raw)
+        .filter(|s| s.is_terminal())
+        .ok_or_else(|| {
+            ApiError::bad_request(format!("state must be 'success' or 'failed', got '{raw}'"))
+        })?;
+    require_run(w.db.read(), dag_id, run_id)?;
+    sairflow::mark_run_state(sim, w, dag_id, run_id, state);
+    Ok(Json::obj().set("dag_id", dag_id).set("run_id", run_id).set("state", raw))
+}
+
+fn clear_task_instances(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: &str,
+    body: Option<&Json>,
+) -> ApiResult {
+    let body = require_body(body)?;
+    let run_id = exact_u64(
+        body.get("run_id")
+            .ok_or_else(|| ApiError::bad_request("missing field 'run_id'"))?,
+        "run_id",
+    )?;
+    let only_failed = body.get("only_failed").and_then(|v| v.as_bool()).unwrap_or(false);
+
+    // Resolve + validate the selection against one DB snapshot, producing
+    // an owned id list before the mutation borrows the world.
+    let selected: Vec<u32> = {
+        let db = w.db.read();
+        require_run(db, dag_id, run_id)?;
+        let tis = db.tis_of_run(dag_id, run_id);
+        let mut ids: Vec<u32> = match body.get("task_ids") {
+            None => tis.iter().map(|t| t.task_id).collect(),
+            Some(Json::Arr(raw)) => {
+                let mut ids = Vec::with_capacity(raw.len());
+                for v in raw {
+                    // Range-check in u64 before narrowing: a wrapped cast
+                    // would silently clear the wrong task.
+                    let id = exact_u64(v, "task_ids entries")?;
+                    if id >= tis.len() as u64 {
+                        return Err(ApiError::not_found(format!(
+                            "no task instance {id} in run {run_id} of dag '{dag_id}'"
+                        )));
+                    }
+                    ids.push(id as u32);
+                }
+                ids.sort_unstable();
+                ids.dedup();
+                ids
+            }
+            Some(_) => {
+                return Err(ApiError::bad_request("task_ids must be an array of integers"))
+            }
+        };
+        if only_failed {
+            ids.retain(|&id| {
+                matches!(
+                    tis[id as usize].state,
+                    TiState::Failed | TiState::UpstreamFailed
+                )
+            });
+        }
+        // Clearing a task that is queued or running would race the worker
+        // already executing it; reject like a state conflict.
+        for &id in &ids {
+            if tis[id as usize].state.is_active() {
+                return Err(ApiError::conflict(format!(
+                    "task instance {id} is {} — wait for it to finish before clearing",
+                    tis[id as usize].state
+                )));
+            }
+        }
+        ids
+    };
+
+    if !selected.is_empty() {
+        sairflow::clear_task_instances(sim, w, dag_id, run_id, &selected);
+    }
+    Ok(Json::obj()
+        .set("dag_id", dag_id)
+        .set("run_id", run_id)
+        .set("cleared", selected))
+}

@@ -34,13 +34,32 @@ impl BlobStore {
     pub fn put(&mut self, key: &str, value: String) -> bool {
         self.stats.puts += 1;
         self.stats.bytes_stored += value.len() as u64;
-        self.objects.insert(key.to_string(), value).is_some()
+        match self.objects.insert(key.to_string(), value) {
+            Some(old) => {
+                // An overwrite replaces the stored bytes, not adds to them.
+                self.stats.bytes_stored =
+                    self.stats.bytes_stored.saturating_sub(old.len() as u64);
+                true
+            }
+            None => false,
+        }
     }
 
     /// GET an object.
     pub fn get(&mut self, key: &str) -> Option<&str> {
         self.stats.gets += 1;
         self.objects.get(key).map(|s| s.as_str())
+    }
+
+    /// DELETE an object. Returns true when the key existed.
+    pub fn remove(&mut self, key: &str) -> bool {
+        match self.objects.remove(key) {
+            Some(v) => {
+                self.stats.bytes_stored = self.stats.bytes_stored.saturating_sub(v.len() as u64);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Check existence without counting a GET.
@@ -79,11 +98,24 @@ mod tests {
     }
 
     #[test]
-    fn overwrite_reports_existing() {
+    fn overwrite_reports_existing_and_replaces_bytes() {
         let mut b = BlobStore::new();
         b.put("k", "v1".into());
-        assert!(b.put("k", "v2".into()));
-        assert_eq!(b.get("k"), Some("v2"));
+        assert!(b.put("k", "longer".into()));
+        assert_eq!(b.get("k"), Some("longer"));
+        assert_eq!(b.stats.bytes_stored, 6, "overwrite replaces, not accumulates");
+        assert!(b.remove("k"));
+        assert_eq!(b.stats.bytes_stored, 0);
+    }
+
+    #[test]
+    fn remove_deletes_and_reports() {
+        let mut b = BlobStore::new();
+        b.put("k", "value".into());
+        assert!(b.remove("k"));
+        assert!(!b.remove("k"));
+        assert_eq!(b.get("k"), None);
+        assert_eq!(b.stats.bytes_stored, 0);
     }
 
     #[test]

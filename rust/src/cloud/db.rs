@@ -77,6 +77,8 @@ pub enum Change {
     DagRun { dag_id: String, run_id: u64, state: RunState },
     /// A task instance row changed state.
     Ti { dag_id: String, run_id: u64, task_id: u32, state: TiState },
+    /// A DAG and all its rows were removed (`DELETE /api/v1/dags/{id}`).
+    DagDeleted { dag_id: String },
 }
 
 /// One write in a transaction.
@@ -93,6 +95,19 @@ pub enum Write {
     /// Record the ready time of a task instance (when its last dependency
     /// completed) without a state transition.
     SetTiReady { key: TiKey, ts: SimTime },
+    /// Pause / unpause a DAG (the `PATCH /api/v1/dags/{id}` write).
+    SetDagPaused { dag_id: String, paused: bool },
+    /// Reset a task instance for re-execution (Airflow "clear"): state back
+    /// to `None`, timestamps and host wiped, `try_number` kept. Bypasses
+    /// the forward-only state machine by design and emits a CDC change so
+    /// the scheduler re-dispatches the task. Raced decisions are made at
+    /// apply time, not from the requester's snapshot: an active
+    /// (queued/running) row drops the clear, and a terminal owning run is
+    /// revived to `Running` (see `MetaDb::apply`).
+    ClearTi { key: TiKey },
+    /// Remove a DAG and every row that references it (serialized spec,
+    /// DAG runs, task instances).
+    DeleteDag { dag_id: String },
 }
 
 impl Write {
@@ -106,7 +121,8 @@ impl Write {
             Write::InsertTi(t) => Some((t.dag_id.clone(), t.run_id)),
             Write::SetTiState { key, .. }
             | Write::SetTiReady { key, .. }
-            | Write::SetTiHost { key, .. } => Some((key.0.clone(), key.1)),
+            | Write::SetTiHost { key, .. }
+            | Write::ClearTi { key } => Some((key.0.clone(), key.1)),
             _ => None,
         }
     }
@@ -203,7 +219,12 @@ impl MetaDb {
                         if row.state != state {
                             row.state = state;
                             match state {
-                                RunState::Running => row.start = row.start.or(Some(commit_ts)),
+                                RunState::Running => {
+                                    row.start = row.start.or(Some(commit_ts));
+                                    // A terminal run revived by a task clear
+                                    // is no longer finished.
+                                    row.end = None;
+                                }
                                 s if s.is_terminal() => row.end = Some(commit_ts),
                                 _ => {}
                             }
@@ -258,6 +279,89 @@ impl MetaDb {
                 Write::SetTiHost { key, host } => {
                     if let Some(row) = self.task_instances.get_mut(&key) {
                         row.host = Some(host);
+                    }
+                }
+                Write::SetDagPaused { dag_id, paused } => {
+                    if let Some(row) = self.dags.get_mut(&dag_id) {
+                        row.is_paused = paused;
+                        // Pause state is read directly by scheduler passes;
+                        // no CDC routing reacts to it, so no change record.
+                    }
+                }
+                Write::ClearTi { key } => {
+                    if let Some(row) = self.task_instances.get_mut(&key) {
+                        if row.state.is_active() {
+                            // The row got queued/started by a txn that was
+                            // in flight when the clear was validated (the
+                            // API's request-time 409 catches the non-racing
+                            // case). Dropping the clear is safer than
+                            // resetting a row a worker is executing, which
+                            // would double-run the task.
+                            self.stats.illegal_transitions += 1;
+                            continue;
+                        }
+                        row.state = TiState::None;
+                        row.ready = None;
+                        row.start = None;
+                        row.end = None;
+                        row.host = None;
+                        // The `None`-state change is CDC-routed to the
+                        // scheduler ("task-cleared" rule) so the next pass
+                        // re-schedules and re-queues the task.
+                        changes.push(Change::Ti {
+                            dag_id: key.0.clone(),
+                            run_id: key.1,
+                            task_id: key.2,
+                            state: TiState::None,
+                        });
+                        // Revive a terminal owning run so the scheduler
+                        // (which skips terminal runs) re-examines it. The
+                        // decision must be made here at apply time: a
+                        // run-completion transaction may be in flight when
+                        // the clear is requested, and deciding from the
+                        // request-time snapshot would lose the clear.
+                        if let Some(run) = self.dag_runs.get_mut(&(key.0.clone(), key.1)) {
+                            if run.state.is_terminal() {
+                                run.state = RunState::Running;
+                                run.end = None;
+                                changes.push(Change::DagRun {
+                                    dag_id: key.0,
+                                    run_id: key.1,
+                                    state: RunState::Running,
+                                });
+                            }
+                        }
+                    }
+                }
+                Write::DeleteDag { dag_id } => {
+                    let existed = self.dags.remove(&dag_id).is_some()
+                        | self.serialized.remove(&dag_id).is_some();
+                    let run_keys: Vec<RunKey> = self
+                        .dag_runs
+                        .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                        .map(|(k, _)| k.clone())
+                        .collect();
+                    for k in run_keys {
+                        self.dag_runs.remove(&k);
+                    }
+                    let ti_keys: Vec<TiKey> = self
+                        .task_instances
+                        .range(
+                            (dag_id.clone(), 0, 0)..=(dag_id.clone(), u64::MAX, u32::MAX),
+                        )
+                        .map(|(k, _)| k.clone())
+                        .collect();
+                    for k in ti_keys {
+                        if let Some(row) = self.task_instances.remove(&k) {
+                            if row.state.is_active() {
+                                self.active_count -= 1;
+                            }
+                        }
+                    }
+                    if existed {
+                        // Routed to the schedule updater, which drops the
+                        // DAG's cron entry.
+                        changes.push(Change::DagDeleted { dag_id });
                     }
                 }
             }
@@ -485,6 +589,187 @@ mod tests {
         let row = &db.task_instances[&key];
         assert_eq!(row.start, Some(3));
         assert_eq!(row.try_number, 1);
+    }
+
+    #[test]
+    fn clear_ti_resets_row_and_emits_none_change() {
+        let mut db = MetaDb::new();
+        let key: TiKey = ("d".into(), 1, 0);
+        let mut txn = Txn::new();
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        db.apply(txn, 4);
+        assert_eq!(db.active_ti_count(), 0);
+
+        let mut clear = Txn::new();
+        clear.push(Write::ClearTi { key: key.clone() });
+        let changes = db.apply(clear, 9);
+        assert_eq!(changes.len(), 1);
+        assert!(matches!(&changes[0], Change::Ti { state: TiState::None, .. }));
+        let row = &db.task_instances[&key];
+        assert_eq!(row.state, TiState::None);
+        assert_eq!(row.try_number, 1, "tries are kept across a clear");
+        assert!(row.ready.is_none() && row.start.is_none() && row.end.is_none());
+        assert!(row.host.is_none());
+        assert_eq!(db.active_ti_count(), 0);
+    }
+
+    #[test]
+    fn clear_of_active_ti_is_dropped_at_apply_time() {
+        // A clear that raced a queueing txn must not reset a row a worker
+        // is (about to be) executing — the write is skipped and counted.
+        let mut db = MetaDb::new();
+        let key: TiKey = ("d".into(), 1, 0);
+        let mut txn = Txn::new();
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
+        db.apply(txn, 1);
+        assert_eq!(db.active_ti_count(), 1);
+        let mut clear = Txn::new();
+        clear.push(Write::ClearTi { key: key.clone() });
+        let changes = db.apply(clear, 2);
+        assert!(changes.is_empty(), "dropped clear emits no change");
+        assert_eq!(db.task_instances[&key].state, TiState::Queued, "row untouched");
+        assert_eq!(db.active_ti_count(), 1);
+        assert_eq!(db.stats.illegal_transitions, 1);
+    }
+
+    #[test]
+    fn clear_ti_revives_terminal_run_at_apply_time() {
+        // The revive decision lives in apply(), not in the caller's
+        // snapshot: even when the run turned terminal after the clear was
+        // requested, the applied clear still reopens it.
+        let mut db = MetaDb::new();
+        let key: TiKey = ("d".into(), 1, 0);
+        let mut txn = Txn::new();
+        txn.push(Write::InsertDagRun(DagRunRow {
+            dag_id: "d".into(),
+            run_id: 1,
+            logical_ts: 0,
+            state: RunState::Running,
+            start: Some(1),
+            end: None,
+        }));
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        txn.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
+        db.apply(txn, 5);
+
+        let mut clear = Txn::new();
+        clear.push(Write::ClearTi { key: key.clone() });
+        let changes = db.apply(clear, 9);
+        assert!(matches!(&changes[0], Change::Ti { state: TiState::None, .. }));
+        assert!(
+            matches!(&changes[1], Change::DagRun { state: RunState::Running, .. }),
+            "terminal run revived alongside the clear"
+        );
+        let run = &db.dag_runs[&("d".into(), 1)];
+        assert_eq!(run.state, RunState::Running);
+        assert_eq!(run.end, None);
+        assert_eq!(run.start, Some(1), "original start kept");
+        // Clearing inside a still-running run emits no run change.
+        let mut txn = Txn::new();
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+        db.apply(txn, 10);
+        let mut clear = Txn::new();
+        clear.push(Write::ClearTi { key });
+        let changes = db.apply(clear, 11);
+        assert_eq!(changes.len(), 1);
+    }
+
+    #[test]
+    fn run_revived_by_running_state_clears_end() {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(Write::InsertDagRun(DagRunRow {
+            dag_id: "d".into(),
+            run_id: 1,
+            logical_ts: 0,
+            state: RunState::Running,
+            start: Some(1),
+            end: None,
+        }));
+        txn.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
+        db.apply(txn, 5);
+        assert_eq!(db.dag_runs[&("d".into(), 1)].end, Some(5));
+        let mut revive = Txn::new();
+        revive.push(Write::SetRunState {
+            dag_id: "d".into(),
+            run_id: 1,
+            state: RunState::Running,
+        });
+        db.apply(revive, 7);
+        let run = &db.dag_runs[&("d".into(), 1)];
+        assert_eq!(run.state, RunState::Running);
+        assert_eq!(run.start, Some(1), "original start kept");
+        assert_eq!(run.end, None, "revived run is no longer finished");
+    }
+
+    #[test]
+    fn set_dag_paused_flips_row_without_change_record() {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: "d".into(),
+            fileloc: "dags/d.json".into(),
+            period: None,
+            is_paused: false,
+        }));
+        db.apply(txn, 0);
+        let mut pause = Txn::new();
+        pause.push(Write::SetDagPaused { dag_id: "d".into(), paused: true });
+        let changes = db.apply(pause, 1);
+        assert!(changes.is_empty());
+        assert!(db.dags["d"].is_paused);
+        assert_eq!(db.stats.txns, 2, "pause went through a transaction");
+    }
+
+    #[test]
+    fn delete_dag_removes_all_rows_and_emits_change() {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: "d".into(),
+            fileloc: "dags/d.json".into(),
+            period: None,
+            is_paused: false,
+        }));
+        txn.push(Write::InsertDagRun(DagRunRow {
+            dag_id: "d".into(),
+            run_id: 1,
+            logical_ts: 0,
+            state: RunState::Running,
+            start: Some(0),
+            end: None,
+        }));
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Queued });
+        // A second DAG that must survive the delete.
+        txn.push(Write::InsertTi(ti("e", 1, 0)));
+        db.apply(txn, 0);
+        assert_eq!(db.active_ti_count(), 1);
+
+        let mut del = Txn::new();
+        del.push(Write::DeleteDag { dag_id: "d".into() });
+        let changes = db.apply(del, 1);
+        assert!(matches!(&changes[..], [Change::DagDeleted { dag_id }] if dag_id == "d"));
+        assert!(!db.dags.contains_key("d"));
+        assert!(db.dag_runs.is_empty());
+        assert!(db.task_instances.contains_key(&("e".into(), 1, 0)));
+        assert!(!db.task_instances.contains_key(&("d".into(), 1, 0)));
+        assert_eq!(db.active_ti_count(), 0, "deleted active TIs release slots");
+        // Deleting an unknown DAG is a no-op without a change record.
+        let mut del2 = Txn::new();
+        del2.push(Write::DeleteDag { dag_id: "ghost".into() });
+        assert!(db.apply(del2, 2).is_empty());
     }
 
     struct World {

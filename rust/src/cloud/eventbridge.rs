@@ -33,6 +33,8 @@ pub enum Matcher {
     TiIn(Vec<TiState>),
     /// A periodic cron fire.
     CronFired,
+    /// A DAG was deleted (all rows removed).
+    DagDeleted,
 }
 
 impl Matcher {
@@ -48,6 +50,7 @@ impl Matcher {
                 states.contains(state)
             }
             (Matcher::CronFired, BusEvent::CronFire { .. }) => true,
+            (Matcher::DagDeleted, BusEvent::Change(Change::DagDeleted { .. })) => true,
             _ => false,
         }
     }

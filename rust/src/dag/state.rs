@@ -62,6 +62,22 @@ impl TiState {
                 | (Scheduled, UpstreamFailed)
         )
     }
+
+    /// Parse the wire name produced by [`fmt::Display`] (API state
+    /// filters); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<TiState> {
+        match s {
+            "none" => Some(TiState::None),
+            "scheduled" => Some(TiState::Scheduled),
+            "queued" => Some(TiState::Queued),
+            "running" => Some(TiState::Running),
+            "success" => Some(TiState::Success),
+            "failed" => Some(TiState::Failed),
+            "up_for_retry" => Some(TiState::UpForRetry),
+            "upstream_failed" => Some(TiState::UpstreamFailed),
+            _ => Option::None,
+        }
+    }
 }
 
 impl fmt::Display for TiState {
@@ -92,6 +108,18 @@ pub enum RunState {
 impl RunState {
     pub fn is_terminal(self) -> bool {
         matches!(self, RunState::Success | RunState::Failed)
+    }
+
+    /// Parse the wire name produced by [`fmt::Display`] (API state
+    /// filters and `PATCH dagRuns` bodies); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<RunState> {
+        match s {
+            "queued" => Some(RunState::Queued),
+            "running" => Some(RunState::Running),
+            "success" => Some(RunState::Success),
+            "failed" => Some(RunState::Failed),
+            _ => None,
+        }
     }
 }
 
@@ -134,6 +162,20 @@ mod tests {
         assert!(!None.can_transition_to(Running));
         assert!(!Failed.can_transition_to(Scheduled));
         assert!(!Queued.can_transition_to(Success));
+    }
+
+    #[test]
+    fn parse_roundtrips_display() {
+        use TiState::*;
+        for s in [None, Scheduled, Queued, Running, Success, Failed, UpForRetry, UpstreamFailed]
+        {
+            assert_eq!(TiState::parse(&s.to_string()), Some(s));
+        }
+        for r in [RunState::Queued, RunState::Running, RunState::Success, RunState::Failed] {
+            assert_eq!(RunState::parse(&r.to_string()), Some(r));
+        }
+        assert_eq!(TiState::parse("bogus"), Option::None);
+        assert_eq!(RunState::parse("bogus"), Option::None);
     }
 
     #[test]

@@ -3,31 +3,39 @@
 //! ```text
 //! sairflow run    --system sairflow|mwaa --workload chain|parallel|forest|alibaba \
 //!                 [--n 16] [--p 10] [--t 5] [--k 4] [--seed 7] [--warm] [--gantt]
+//! sairflow api    --demo                     # drive the v1 control-plane API
 //! sairflow cost   [--scenario heavy|distributed|sporadic|constant]
 //! sairflow dags   [--seed 20240501]          # Alibaba-like workload inventory
 //! sairflow artifacts [--dir artifacts]       # list + smoke-run PJRT artifacts
 //! ```
 
+use sairflow::api::{handle_http, Method};
 use sairflow::cost;
 use sairflow::exp::{self, ExperimentSpec, SystemKind};
 use sairflow::metrics::gantt;
+use sairflow::sairflow::{Config, World};
+use sairflow::sim::engine::Sim;
+use sairflow::sim::time::mins;
 use sairflow::util::cli::Args;
+use sairflow::util::json::Json;
 use sairflow::workloads::{alibaba, synthetic};
 
 fn main() {
-    let args = Args::from_env(&["warm", "gantt", "caas", "ha"]);
+    let args = Args::from_env(&["warm", "gantt", "caas", "ha", "demo"]);
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
+        Some("api") => cmd_api(&args),
         Some("cost") => cmd_cost(&args),
         Some("dags") => cmd_dags(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: sairflow <run|cost|dags|artifacts> [options]\n\
+                "usage: sairflow <run|api|cost|dags|artifacts> [options]\n\
                  \n\
                  run:       --system sairflow|mwaa --workload chain|parallel|forest|alibaba\n\
                  \u{20}          --n <tasks> --p <secs> --t <minutes> --k <copies> --seed <n>\n\
                  \u{20}          --warm (skip first run / pin MWAA workers) --gantt --caas\n\
+                 api:       --demo (drive the v1 REST surface end-to-end) [--seed <n>]\n\
                  cost:      print the paper's cost tables (1-6)\n\
                  dags:      print the Alibaba-like workload inventory\n\
                  artifacts: list and smoke-run the AOT artifacts (--dir artifacts)"
@@ -127,6 +135,93 @@ fn cmd_run(args: &Args) {
         Ok(path) => println!("report: {}", path.display()),
         Err(e) => eprintln!("report write failed: {e}"),
     }
+}
+
+/// Drive the v1 control-plane API end-to-end against a deployed world,
+/// printing each request/response pair: upload → list → trigger → inspect
+/// → clear (re-execution) → pause → health → delete. Every mutation flows
+/// through the DB-txn → CDC → scheduler path; the demo advances simulated
+/// time between steps so the event fabric's reactions are visible.
+fn cmd_api(args: &Args) {
+    if !args.flag("demo") {
+        eprintln!("usage: sairflow api --demo [--seed <n>]");
+        std::process::exit(2);
+    }
+    let seed = args.get_u64("seed", 7);
+    let mut world = World::new(Config::seeded(seed));
+    let mut sim = world.sim();
+
+    let step = |sim: &mut Sim<World>,
+                    world: &mut World,
+                    method: Method,
+                    target: &str,
+                    body: Option<String>,
+                    settle_mins: f64| {
+        println!("\n→ {method} {target}");
+        if let Some(b) = &body {
+            println!("  body: {b}");
+        }
+        let resp = handle_http(sim, world, method.as_str(), target, body.as_deref());
+        println!("{}", resp.to_string_pretty());
+        if settle_mins > 0.0 {
+            sim.run_until(world, sim.now() + mins(settle_mins), 10_000_000);
+            println!("  … {settle_mins} simulated minute(s) pass");
+        }
+        resp
+    };
+
+    // 1. Upload a 3-task chain on a 2-minute schedule.
+    let dag = synthetic::chain_dag("etl", 3, 2.0, 2.0);
+    let body = Json::obj().set("file_text", dag.to_json().to_string_pretty());
+    step(&mut sim, &mut world, Method::Post, "/api/v1/dags", Some(body.to_string_compact()), 1.0);
+
+    // 2. Inspect the registered DAG, then trigger a manual run on top of
+    //    the schedule.
+    step(&mut sim, &mut world, Method::Get, "/api/v1/dags?limit=10", None, 0.0);
+    step(&mut sim, &mut world, Method::Post, "/api/v1/dags/etl/dagRuns", None, 5.0);
+    step(&mut sim, &mut world, Method::Get, "/api/v1/dags/etl/dagRuns?limit=5", None, 0.0);
+    step(
+        &mut sim,
+        &mut world,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns/1/taskInstances",
+        None,
+        0.0,
+    );
+
+    // 3. Clear the tail task of run 1: the CDC change re-enters the
+    //    scheduler, which re-queues and re-executes it (try_number 2).
+    step(
+        &mut sim,
+        &mut world,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(r#"{"run_id": 1, "task_ids": [2]}"#.into()),
+        3.0,
+    );
+    step(
+        &mut sim,
+        &mut world,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns/1/taskInstances?limit=3",
+        None,
+        0.0,
+    );
+
+    // 4. Pause (a DB transaction, visible in health's db_txns), check
+    //    health, then delete the DAG and confirm the surface is empty.
+    step(
+        &mut sim,
+        &mut world,
+        Method::Patch,
+        "/api/v1/dags/etl",
+        Some(r#"{"is_paused": true}"#.into()),
+        1.0,
+    );
+    step(&mut sim, &mut world, Method::Get, "/api/v1/health", None, 0.0);
+    step(&mut sim, &mut world, Method::Delete, "/api/v1/dags/etl", None, 1.0);
+    step(&mut sim, &mut world, Method::Get, "/api/v1/dags", None, 0.0);
+    println!("\ndemo complete: every mutation above flowed DB-txn → CDC → scheduler.");
 }
 
 fn cmd_cost(args: &Args) {

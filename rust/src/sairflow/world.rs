@@ -21,7 +21,7 @@
 use crate::cloud::blob::BlobStore;
 use crate::cloud::caas::{CaasHost, CaasPlatform};
 use crate::cloud::cdc::{self, Cdc, CdcHost};
-use crate::cloud::db::{self, Change, DbHost, DbService};
+use crate::cloud::db::{self, Change, DbHost, DbService, Txn, Write};
 use crate::cloud::eventbridge::{
     self, BusEvent, CronHost, CronService, EventRouter, Matcher,
 };
@@ -303,7 +303,8 @@ fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload
 /// Dispatch one routed event to its target (EventBridge → queue/function).
 fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: &Change) {
     match (target, change) {
-        (Target::Updater, Change::SerializedDag { dag_id }) => {
+        (Target::Updater, Change::SerializedDag { dag_id })
+        | (Target::Updater, Change::DagDeleted { dag_id }) => {
             let f = w.fns.updater;
             faas::invoke(sim, w, f, FnPayload::ScheduleUpdate { dag_id: dag_id.clone() });
         }
@@ -355,8 +356,11 @@ fn updater_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload>
     let cpu = secs(sim.rng.uniform(0.01, 0.04));
     let inv = ctx.inv;
     sim.after(cpu, "updater.work", move |sim, w| {
-        if let Some(period) = w.db.read().serialized.get(&dag_id).and_then(|s| s.period) {
-            eventbridge::set_schedule(sim, w, &dag_id, period);
+        match w.db.read().serialized.get(&dag_id).and_then(|s| s.period) {
+            Some(period) => eventbridge::set_schedule(sim, w, &dag_id, period),
+            // The DAG was deleted (or re-uploaded without a schedule):
+            // drop any cron entry so it stops firing.
+            None => w.cron.unregister(&dag_id),
         }
         faas::complete(sim, w, inv, true);
     });
@@ -430,6 +434,11 @@ impl World {
         );
         router.rule("task-queued", Matcher::TiIn(vec![TiState::Queued]), Target::Executor);
         router.rule("periodic", Matcher::CronFired, Target::Scheduler);
+        // Control-plane API rules: a cleared task instance (state reset to
+        // `None`) re-enters the scheduler, and a DAG deletion reaches the
+        // schedule updater so the cron entry is dropped.
+        router.rule("task-cleared", Matcher::TiIn(vec![TiState::None]), Target::Scheduler);
+        router.rule("dag-deleted", Matcher::DagDeleted, Target::Updater);
 
         let mut cdc = Cdc::default();
         cdc.delay = cfg.cdc_delay;
@@ -487,4 +496,76 @@ pub fn upload_dag(sim: &mut Sim<World>, _w: &mut World, spec: &DagSpec) {
 pub fn trigger_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
     w.sched_q.send(SchedMsg::Periodic { dag_id: dag_id.to_string(), logical_ts: sim.now() });
     mq::pump(sim, w, sched_acc, sched_handler);
+}
+
+// ---- control-plane API operations -----------------------------------------
+//
+// Every mutation below goes through a metadata-DB *transaction* (the same
+// `db::commit` path as the scheduler and workers), so its effect is
+// captured by CDC and the control plane reacts event-driven — the API
+// layer never mutates `World` state in place.
+
+/// Pause / unpause a DAG (`PATCH /api/v1/dags/{id}`). The flag is written
+/// through a DB transaction; the next scheduler pass reads it from its
+/// snapshot and skips (or resumes) periodic triggers.
+pub fn set_dag_paused(sim: &mut Sim<World>, w: &mut World, dag_id: &str, paused: bool) {
+    let mut txn = Txn::new();
+    txn.push(Write::SetDagPaused { dag_id: dag_id.to_string(), paused });
+    db::commit(sim, w, txn, |_sim, _w| {});
+}
+
+/// Clear task instances for re-execution
+/// (`POST /api/v1/dags/{id}/clearTaskInstances`). Each cleared row resets
+/// to state `None` inside one transaction; the CDC change is routed back
+/// to the scheduler ("task-cleared" rule), whose next pass re-schedules,
+/// re-queues and thus re-executes the task through the normal executor
+/// path. A terminal run is revived to `Running` by the `ClearTi` write
+/// itself, at apply time — deciding from a request-time snapshot would
+/// race an in-flight run-completion transaction and lose the clear.
+pub fn clear_task_instances(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: &str,
+    run_id: u64,
+    task_ids: &[u32],
+) {
+    let mut txn = Txn::new();
+    for &t in task_ids {
+        txn.push(Write::ClearTi { key: (dag_id.to_string(), run_id, t) });
+    }
+    db::commit(sim, w, txn, |_sim, _w| {});
+}
+
+/// Force a DAG run's state (`PATCH .../dagRuns/{run_id}`, Airflow's
+/// mark-success / mark-failed). Task instances are left untouched: ones
+/// still executing will write their own terminal states, which the
+/// scheduler ignores for an already-terminal run.
+pub fn mark_run_state(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: &str,
+    run_id: u64,
+    state: RunState,
+) {
+    let mut txn = Txn::new();
+    txn.push(Write::SetRunState { dag_id: dag_id.to_string(), run_id, state });
+    db::commit(sim, w, txn, |_sim, _w| {});
+}
+
+/// Delete a DAG and everything it owns (`DELETE /api/v1/dags/{id}`): the
+/// blob file goes away immediately; one transaction removes all metadata
+/// rows, and the resulting `DagDeleted` change reaches the schedule
+/// updater, which unregisters the cron entry.
+pub fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
+    let fileloc = w
+        .db
+        .read()
+        .dags
+        .get(dag_id)
+        .map(|d| d.fileloc.clone())
+        .unwrap_or_else(|| format!("dags/{dag_id}.json"));
+    w.blob.remove(&fileloc);
+    let mut txn = Txn::new();
+    txn.push(Write::DeleteDag { dag_id: dag_id.to_string() });
+    db::commit(sim, w, txn, |_sim, _w| {});
 }

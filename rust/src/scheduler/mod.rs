@@ -175,7 +175,19 @@ pub fn scheduling_pass(
         if run.state.is_terminal() {
             continue;
         }
-        let Some(spec) = db.serialized.get(dag_id) else { continue };
+        let Some(spec) = db.serialized.get(dag_id) else {
+            // The DAG was deleted while this run's events were in flight
+            // (a scheduling txn built from a pre-delete snapshot can
+            // re-insert rows after DeleteDag applies). Fail the orphan so
+            // it doesn't count as active forever.
+            out.txn.push(Write::SetRunState {
+                dag_id: dag_id.clone(),
+                run_id: *run_id,
+                state: RunState::Failed,
+            });
+            out.stats.runs_completed += 1;
+            continue;
+        };
         let graph = graphs
             .entry(spec.dag_id.as_str())
             .or_insert_with(|| DagGraph::of(spec));
@@ -469,6 +481,24 @@ mod tests {
         assert_eq!(out.stats.runs_completed, 1);
         db.apply(out.txn, 6);
         assert_eq!(db.dag_runs[&("c".into(), 1)].state, RunState::Failed);
+    }
+
+    #[test]
+    fn run_of_deleted_dag_is_failed_not_stuck() {
+        let spec = chain_dag("c", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let out = scheduling_pass(&db, 0, &periodic("c"), &SchedLimits::default());
+        db.apply(out.txn, 0);
+        // The DAG disappears (DELETE raced the run-creation txn) while the
+        // run's change event is still in flight.
+        db.serialized.remove("c");
+        db.dags.remove("c");
+        let stats = advance(&mut db, "c", 1, 2);
+        assert_eq!(stats.runs_completed, 1);
+        assert_eq!(db.dag_runs[&("c".into(), 1)].state, RunState::Failed);
+        // Terminal now: later passes leave it alone.
+        let stats = advance(&mut db, "c", 1, 3);
+        assert_eq!(stats.runs_completed, 0);
     }
 
     #[test]

@@ -1,0 +1,464 @@
+//! Integration tests of the v1 control-plane API: routing, pagination
+//! boundaries, the error envelope, task-level control operations flowing
+//! through the DB-txn → CDC → scheduler path, and the legacy wire-format
+//! compatibility shim.
+
+use sairflow::api::{self, dispatch, handle_http, Method};
+use sairflow::dag::state::{RunState, TiState};
+use sairflow::sairflow::{Config, World};
+use sairflow::sim::engine::Sim;
+use sairflow::sim::time::{mins, MINUTE};
+use sairflow::util::json::Json;
+use sairflow::workloads::synthetic::chain_dag;
+
+/// Deploy a world and upload one DAG *through the API* (`POST
+/// /api/v1/dags`), settling the parse → CDC → updater flow.
+fn deployed(spec: &sairflow::dag::spec::DagSpec) -> (Sim<World>, World) {
+    let w = World::new(Config::seeded(1234));
+    let mut sim = w.sim();
+    let mut w = w;
+    let body = Json::obj().set("file_text", spec.to_json().to_string_pretty());
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags", Some(&body));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "upload: {resp}");
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+    (sim, w)
+}
+
+/// A 2-task chain without a schedule (manual triggering only).
+fn manual_chain(dag_id: &str) -> sairflow::dag::spec::DagSpec {
+    let mut dag = chain_dag(dag_id, 2, 1.0, 5.0);
+    dag.period = None;
+    dag
+}
+
+fn trigger(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
+    let target = format!("/api/v1/dags/{dag_id}/dagRuns");
+    let resp = dispatch(sim, w, Method::Post, &target, None);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "trigger: {resp}");
+}
+
+#[test]
+fn routing_and_resource_detail() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    trigger(&mut sim, &mut w, "etl");
+    sim.run_until(&mut w, 10 * MINUTE, 10_000_000);
+
+    let dags = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags", None);
+    assert_eq!(dags.get("status").unwrap().as_u64(), Some(200));
+    assert_eq!(dags.get("total_entries").unwrap().as_u64(), Some(1));
+
+    let detail = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/etl", None);
+    let dag = detail.get("dag").unwrap();
+    assert_eq!(dag.get("n_tasks").unwrap().as_u64(), Some(2));
+    assert_eq!(dag.get("n_runs").unwrap().as_u64(), Some(1));
+
+    let run = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/etl/dagRuns/1", None);
+    assert_eq!(run.get("dag_run").unwrap().get("state").unwrap().as_str(), Some("success"));
+
+    let tis = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns/1/taskInstances",
+        None,
+    );
+    assert_eq!(tis.get("total_entries").unwrap().as_u64(), Some(2));
+
+    // Known path, wrong method → 405; unknown path → 404; bad path param → 400.
+    let e = dispatch(&mut sim, &mut w, Method::Delete, "/api/v1/health", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(405));
+    let e = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/pools", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+    let e = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/etl/dagRuns/xyz", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+}
+
+#[test]
+fn pagination_boundaries_and_state_filter() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    for _ in 0..3 {
+        trigger(&mut sim, &mut w, "etl");
+        sim.run_until(&mut w, sim.now() + mins(5.0), 10_000_000);
+    }
+
+    let list = |sim: &mut Sim<World>, w: &mut World, q: &str| {
+        dispatch(sim, w, Method::Get, &format!("/api/v1/dags/etl/dagRuns{q}"), None)
+    };
+
+    let page = list(&mut sim, &mut w, "?limit=2");
+    let runs = page.get("dag_runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 2);
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(3));
+    // Most recent first.
+    assert_eq!(runs[0].get("run_id").unwrap().as_u64(), Some(3));
+
+    let page = list(&mut sim, &mut w, "?limit=2&offset=2");
+    assert_eq!(page.get("dag_runs").unwrap().as_arr().unwrap().len(), 1);
+
+    // `limit=0` is a count probe: no items, correct total.
+    let page = list(&mut sim, &mut w, "?limit=0");
+    assert!(page.get("dag_runs").unwrap().as_arr().unwrap().is_empty());
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(3));
+
+    // Offset past the end: empty page, total intact.
+    let page = list(&mut sim, &mut w, "?offset=50");
+    assert!(page.get("dag_runs").unwrap().as_arr().unwrap().is_empty());
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(3));
+
+    // State filtering composes with pagination.
+    let page = list(&mut sim, &mut w, "?state=success&limit=0");
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(3));
+    let page = list(&mut sim, &mut w, "?state=failed");
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(0));
+
+    // Invalid query values are a 400, not a silent default.
+    let e = list(&mut sim, &mut w, "?state=bogus");
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    let e = list(&mut sim, &mut w, "?limit=ten");
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+
+    // Task-instance lists paginate the same way.
+    let page = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns/1/taskInstances?limit=1&offset=1",
+        None,
+    );
+    assert_eq!(page.get("task_instances").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(2));
+}
+
+#[test]
+fn error_envelope_shapes() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+
+    // Unknown resource → 404 with machine-readable kind + detail.
+    let e = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/ghost", None);
+    assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+    let err = e.get("error").unwrap();
+    assert_eq!(err.get("kind").unwrap().as_str(), Some("not_found"));
+    assert!(err.get("detail").unwrap().as_str().unwrap().contains("ghost"));
+
+    // Missing / malformed bodies → 400.
+    let e = dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/etl", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    let e = handle_http(&mut sim, &mut w, "PATCH", "/api/v1/dags/etl", Some("not json"));
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    assert_eq!(e.get("error").unwrap().get("kind").unwrap().as_str(), Some("bad_request"));
+    let body = Json::obj().set("is_paused", "yes");
+    let e = dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/etl", Some(&body));
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+
+    // clearTaskInstances validates its selection.
+    trigger(&mut sim, &mut w, "etl");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let body = Json::obj().set("run_id", 1u64).set("task_ids", vec![99u64]);
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+    let body = Json::obj().set("run_id", 1u64).set("task_ids", "all");
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+
+    // Out-of-range and fractional ids must not be truncated into valid
+    // ones (a wrapped `as u32` would silently clear task 0).
+    let body = Json::obj().set("run_id", 1u64).set("task_ids", vec![4294967296u64]);
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+    let body = Json::obj().set("run_id", 1u64).set("task_ids", vec![0.5]);
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    let body = Json::obj().set("run_id", -1i64);
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    // Nothing was cleared by any of the rejected requests.
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    assert_eq!(w.db.read().task_instances[&("etl".into(), 1, 0)].try_number, 1);
+}
+
+#[test]
+fn clear_task_instances_reexecutes_through_cdc() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    trigger(&mut sim, &mut w, "etl");
+    sim.run_until(&mut w, 15 * MINUTE, 10_000_000);
+
+    let (first_end, first_run_end) = {
+        let db = w.db.read();
+        let run = &db.dag_runs[&("etl".into(), 1)];
+        assert_eq!(run.state, RunState::Success);
+        let ti = &db.task_instances[&("etl".into(), 1, 1)];
+        assert_eq!(ti.state, TiState::Success);
+        assert_eq!(ti.try_number, 1);
+        (ti.end.unwrap(), run.end.unwrap())
+    };
+    let cdc_before = w.cdc.stats.records;
+    let txns_before = w.db.read().stats.txns;
+
+    let body = Json::obj().set("run_id", 1u64).set("task_ids", vec![1u64]);
+    let resp = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "clear: {resp}");
+    let cleared = resp.get("cleared").unwrap().as_arr().unwrap();
+    assert_eq!(cleared.len(), 1);
+
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+
+    let db = w.db.read();
+    // The clear went through a DB transaction and its change was
+    // CDC-captured (the event fabric, not an in-place mutation).
+    assert!(db.stats.txns > txns_before);
+    assert!(w.cdc.stats.records > cdc_before);
+    // The scheduler re-dispatched the cleared task: a second execution.
+    let ti = &db.task_instances[&("etl".into(), 1, 1)];
+    assert_eq!(ti.state, TiState::Success);
+    assert_eq!(ti.try_number, 2, "cleared task must run a second time");
+    assert!(ti.start.unwrap() > first_end, "re-execution starts after the first ended");
+    // The untouched upstream task did not re-run.
+    assert_eq!(db.task_instances[&("etl".into(), 1, 0)].try_number, 1);
+    // The revived run completed again, later than before.
+    let run = &db.dag_runs[&("etl".into(), 1)];
+    assert_eq!(run.state, RunState::Success);
+    assert!(run.end.unwrap() > first_run_end);
+}
+
+#[test]
+fn clear_rejects_active_tasks_with_conflict() {
+    let mut dag = sairflow::dag::spec::DagSpec::new("slow");
+    dag.sleep_task("long", 60.0, &[]);
+    let (mut sim, mut w) = deployed(&dag);
+    trigger(&mut sim, &mut w, "slow");
+    // Advance into the task's execution window.
+    sim.run_until(&mut w, sim.now() + mins(0.5), 10_000_000);
+    assert!(
+        w.db.read().task_instances[&("slow".into(), 1, 0)].state.is_active(),
+        "task should be queued/running at this point"
+    );
+    let body = Json::obj().set("run_id", 1u64);
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/slow/clearTaskInstances",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(409));
+    assert_eq!(e.get("error").unwrap().get("kind").unwrap().as_str(), Some("conflict"));
+}
+
+#[test]
+fn patch_dag_pause_is_a_db_transaction() {
+    // A scheduled DAG (2-minute period) that we pause through the API.
+    let (mut sim, mut w) = deployed(&chain_dag("cron", 1, 1.0, 2.0));
+    let txns_before = w.db.read().stats.txns;
+    let body = Json::obj().set("is_paused", true);
+    let resp = dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/cron", Some(&body));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    sim.run_until(&mut w, 15 * MINUTE, 10_000_000);
+
+    // The pause is visible in `db_txns` (it committed through the DB, not
+    // an in-place mutation) and the cron fires created no runs.
+    assert_eq!(w.db.read().stats.txns, txns_before + 1);
+    assert!(w.db.read().dags["cron"].is_paused);
+    assert!(w.db.read().dag_runs.is_empty(), "paused DAG must not run");
+
+    // Triggering a paused DAG is an honest 409, not a silent drop.
+    let e = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags/cron/dagRuns", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(409));
+    assert_eq!(e.get("error").unwrap().get("kind").unwrap().as_str(), Some("conflict"));
+
+    // Unpause resumes periodic runs.
+    let body = Json::obj().set("is_paused", false);
+    dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/cron", Some(&body));
+    sim.run_until(&mut w, 30 * MINUTE, 10_000_000);
+    assert!(!w.db.read().dag_runs.is_empty());
+}
+
+#[test]
+fn mark_run_state_sticks() {
+    let mut dag = sairflow::dag::spec::DagSpec::new("markme");
+    let a = dag.sleep_task("a", 120.0, &[]);
+    dag.sleep_task("b", 1.0, &[a]);
+    let (mut sim, mut w) = deployed(&dag);
+    trigger(&mut sim, &mut w, "markme");
+    sim.run_until(&mut w, sim.now() + mins(0.5), 10_000_000);
+    assert_eq!(w.db.read().dag_runs[&("markme".into(), 1)].state, RunState::Running);
+
+    let body = Json::obj().set("state", "failed");
+    let resp =
+        dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/markme/dagRuns/1", Some(&body));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    // Only terminal states are accepted.
+    let body = Json::obj().set("state", "queued");
+    let e =
+        dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/markme/dagRuns/1", Some(&body));
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+
+    // The in-flight task finishes later, but the scheduler skips terminal
+    // runs — the marked state sticks.
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let run = &w.db.read().dag_runs[&("markme".into(), 1)];
+    assert_eq!(run.state, RunState::Failed);
+    assert!(run.end.is_some());
+}
+
+#[test]
+fn delete_dag_removes_everything() {
+    let (mut sim, mut w) = deployed(&chain_dag("gone", 1, 1.0, 2.0));
+    sim.run_until(&mut w, 6 * MINUTE, 10_000_000);
+    assert!(w.cron.is_registered("gone"));
+    assert!(!w.db.read().dag_runs.is_empty());
+
+    let resp = dispatch(&mut sim, &mut w, Method::Delete, "/api/v1/dags/gone", None);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+
+    let db = w.db.read();
+    assert!(!db.dags.contains_key("gone"));
+    assert!(!db.serialized.contains_key("gone"));
+    assert!(db.dag_runs.is_empty());
+    assert!(db.task_instances.is_empty());
+    assert!(!w.blob.contains("dags/gone.json"));
+    // The DagDeleted change reached the schedule updater via CDC.
+    assert!(!w.cron.is_registered("gone"));
+    // No resurrections: the cron entry is gone, so nothing new appears.
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    assert!(w.db.read().dag_runs.is_empty());
+    // And the resource is now a 404.
+    let e = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags/gone/dagRuns", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+}
+
+#[test]
+fn legacy_wire_format_still_roundtrips() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    trigger(&mut sim, &mut w, "etl");
+    sim.run_until(&mut w, 10 * MINUTE, 10_000_000);
+
+    // Old flat ops map onto v1 routes; collections keep their legacy keys.
+    let resp = api::handle_text(&mut sim, &mut w, r#"{"op": "list_dags"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("dags").unwrap().as_arr().unwrap().len(), 1);
+
+    let resp =
+        api::handle_text(&mut sim, &mut w, r#"{"op": "list_runs", "dag_id": "etl"}"#);
+    let runs = resp.get("runs").expect("legacy key 'runs'").as_arr().unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].get("state").unwrap().as_str(), Some("success"));
+
+    let resp = api::handle_text(
+        &mut sim,
+        &mut w,
+        r#"{"op": "list_tasks", "dag_id": "etl", "run_id": 1}"#,
+    );
+    assert_eq!(resp.get("tasks").expect("legacy key 'tasks'").as_arr().unwrap().len(), 2);
+
+    let resp = api::handle_text(&mut sim, &mut w, r#"{"op": "health"}"#);
+    assert!(resp.get("db_txns").unwrap().as_u64().unwrap() > 0);
+
+    // Unknown ops and garbage land in the same structured envelope.
+    let resp = api::handle_text(&mut sim, &mut w, r#"{"op": "frobnicate"}"#);
+    assert_eq!(resp.get("status").unwrap().as_u64(), Some(400));
+    let resp = api::handle_text(&mut sim, &mut w, "definitely not json");
+    assert_eq!(resp.get("status").unwrap().as_u64(), Some(400));
+
+    // Legacy error shape: a flat string, not the v1 error object.
+    let resp = api::handle_text(&mut sim, &mut w, r#"{"op": "trigger", "dag_id": "ghost"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("ghost"));
+
+    // Legacy lists had no existence checks: unknown ids → empty lists.
+    let resp =
+        api::handle_text(&mut sim, &mut w, r#"{"op": "list_runs", "dag_id": "ghost"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert!(resp.get("runs").unwrap().as_arr().unwrap().is_empty());
+    let resp = api::handle_text(
+        &mut sim,
+        &mut w,
+        r#"{"op": "list_tasks", "dag_id": "etl", "run_id": 99}"#,
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert!(resp.get("tasks").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn legacy_shim_returns_full_collections_beyond_one_page() {
+    // The legacy protocol had no pagination: 120 runs must all come back,
+    // not the first page-size-capped 100.
+    let mut dag = sairflow::dag::spec::DagSpec::new("many");
+    dag.sleep_task("t", 1.0, &[]);
+    let (mut sim, mut w) = deployed(&dag);
+    for _ in 0..120 {
+        trigger(&mut sim, &mut w, "many");
+        sim.run_until(&mut w, sim.now() + mins(0.75), 10_000_000);
+    }
+    assert_eq!(w.db.read().dag_runs.len(), 120, "all triggers became runs");
+
+    let resp = api::handle_text(&mut sim, &mut w, r#"{"op": "list_runs", "dag_id": "many"}"#);
+    assert_eq!(resp.get("runs").unwrap().as_arr().unwrap().len(), 120);
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(120));
+
+    // The v1 surface itself still pages.
+    let page = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/many/dagRuns", None);
+    assert_eq!(page.get("dag_runs").unwrap().as_arr().unwrap().len(), 25);
+}
+
+#[test]
+fn legacy_shim_escapes_dag_ids_with_path_metacharacters() {
+    // A dag_id containing '/' worked with the old direct-DB handlers; the
+    // shim must percent-encode it so the router round-trips it.
+    let mut dag = sairflow::dag::spec::DagSpec::new("team/etl");
+    dag.sleep_task("t", 1.0, &[]);
+    let (mut sim, mut w) = deployed(&dag);
+
+    let resp =
+        api::handle_text(&mut sim, &mut w, r#"{"op": "trigger", "dag_id": "team/etl"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "trigger: {resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+
+    let resp =
+        api::handle_text(&mut sim, &mut w, r#"{"op": "list_runs", "dag_id": "team/etl"}"#);
+    let runs = resp.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].get("state").unwrap().as_str(), Some("success"));
+
+    // Direct v1 access works with the encoded segment too.
+    let detail = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/team%2Fetl", None);
+    assert_eq!(detail.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(detail.get("dag").unwrap().get("dag_id").unwrap().as_str(), Some("team/etl"));
+}

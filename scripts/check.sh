@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Pre-PR gate: formatting, lints, tests. Run from anywhere; it cd's to the
+# crate root. Every PR must pass this before review (see ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test =="
+cargo test -q
+
+echo "check.sh: all gates passed"

@@ -13,6 +13,7 @@
 mod common;
 
 use sairflow::cloud::db::{DagRow, MetaDb, Txn, Write};
+use sairflow::dag::state::RunType;
 use sairflow::exp::{self, ExperimentSpec, SystemKind};
 use sairflow::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
 use sairflow::sim::engine::Sim;
@@ -93,8 +94,12 @@ fn bench_scheduling_pass() -> (f64, usize) {
         let out = scheduling_pass(
             &db,
             0,
-            &[SchedMsg::Periodic { dag_id: spec.dag_id.clone(), logical_ts: 0 }],
-            &SchedLimits { parallelism: 10_000 },
+            &[SchedMsg::Trigger {
+                dag_id: spec.dag_id.clone(),
+                logical_ts: 0,
+                run_type: RunType::Scheduled,
+            }],
+            &SchedLimits { parallelism: 10_000, ..SchedLimits::default() },
         );
         db.apply(out.txn, 0);
         msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
@@ -103,7 +108,8 @@ fn bench_scheduling_pass() -> (f64, usize) {
     let t0 = Instant::now();
     let mut total_writes = 0;
     for _ in 0..iters {
-        let out = scheduling_pass(&db, 1, &msgs, &SchedLimits { parallelism: 10_000 });
+        let limits = SchedLimits { parallelism: 10_000, ..SchedLimits::default() };
+        let out = scheduling_pass(&db, 1, &msgs, &limits);
         total_writes += out.txn.writes.len();
     }
     let per_pass = t0.elapsed().as_secs_f64() / iters as f64;

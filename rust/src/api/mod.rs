@@ -20,8 +20,9 @@
 //! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
 //! | PATCH  | `/api/v1/dags/{dag_id}` | pause/unpause (body `{"is_paused": bool}`) |
 //! | DELETE | `/api/v1/dags/{dag_id}` | delete the DAG and all its rows |
-//! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `state=<run state>`) |
-//! | POST   | `/api/v1/dags/{dag_id}/dagRuns` | trigger a manual run |
+//! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `state=<run state>`, `run_type=scheduled\|manual\|backfill`) |
+//! | POST   | `/api/v1/dags/{dag_id}/dagRuns` | trigger a manual run — never dropped: on a paused DAG or past `max_active_runs` the run is created `queued` and promoted later (Airflow parity, not a 409) |
+//! | POST   | `/api/v1/dags/{dag_id}/dagRuns/backfill` | expand `{"start_ts", "end_ts", "interval_secs"}` into backfill-typed runs, throttled by `max_active_backfill_runs` |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | run detail |
 //! | PATCH  | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | mark run success/failed (body `{"state": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}/taskInstances` | list task instances (`limit`, `offset`, `state=<ti state>`) |
@@ -43,10 +44,14 @@
 //!
 //! ```json
 //! {"ok": true, "status": 200, "dag_id": "etl",
-//!  "dag_runs": [{"run_id": 7, "state": "success", "logical_ts": 2100,
-//!                "start": 2100.3, "end": 2131.9}, ...],
+//!  "dag_runs": [{"run_id": 7, "run_type": "scheduled", "state": "success",
+//!                "logical_ts": 2100, "start": 2100.3, "end": 2131.9}, ...],
 //!  "total_entries": 7, "limit": 2, "offset": 0}
 //! ```
+//!
+//! Every run payload carries `run_type` (`scheduled` / `manual` /
+//! `backfill`) — the trigger provenance that the scheduler's policy keys
+//! on (pause gate, backfill budget).
 //!
 //! # Legacy wire format
 //!
@@ -56,9 +61,11 @@
 //! (percent-encoding path parameters, and draining list pages so whole
 //! collections come back like the old handlers returned), renames the
 //! response collections back to their legacy keys (`dag_runs` → `runs`,
-//! `task_instances` → `tasks`), flattens the error envelope back to the
-//! legacy string shape (`"error": "<detail>"`), and keeps the legacy
-//! no-existence-check list behavior (unknown ids → empty collections).
+//! `task_instances` → `tasks`), strips v1-only fields the legacy format
+//! never carried (`run_type`, `dag_is_paused`), flattens the error
+//! envelope back to the legacy string shape (`"error": "<detail>"`), and
+//! keeps the legacy no-existence-check list behavior (unknown ids →
+//! empty collections).
 
 pub mod error;
 pub mod page;
@@ -122,6 +129,36 @@ fn rename_key(resp: Json, from: &str, to: &str) -> Json {
         Json::Obj(mut map) => {
             if let Some(v) = map.remove(from) {
                 map.insert(to.to_string(), v);
+            }
+            Json::Obj(map)
+        }
+        other => other,
+    }
+}
+
+/// Drop top-level keys the legacy wire format never had (bit-compat:
+/// strict legacy deserializers reject unknown fields).
+fn strip_keys(resp: Json, keys: &[&str]) -> Json {
+    match resp {
+        Json::Obj(mut map) => {
+            for k in keys {
+                map.remove(*k);
+            }
+            Json::Obj(map)
+        }
+        other => other,
+    }
+}
+
+/// Drop a key from every object of a collection (bit-compat for nested
+/// items, e.g. `run_type` inside legacy `runs` entries).
+fn strip_in_items(resp: Json, collection: &str, key: &str) -> Json {
+    match resp {
+        Json::Obj(mut map) => {
+            if let Some(Json::Arr(items)) = map.remove(collection) {
+                let items: Vec<Json> =
+                    items.into_iter().map(|it| strip_keys(it, &[key])).collect();
+                map.insert(collection.to_string(), Json::Arr(items));
             }
             Json::Obj(map)
         }
@@ -226,7 +263,9 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
             if is_not_found(&resp) {
                 legacy_empty("runs").set("dag_id", dag_id)
             } else {
-                rename_key(resp, "dag_runs", "runs")
+                // v1 run payloads grew `run_type`; the legacy run objects
+                // never had it.
+                strip_in_items(rename_key(resp, "dag_runs", "runs"), "runs", "run_type")
             }
         }
         Request::ListTasks { dag_id, run_id } => {
@@ -241,7 +280,12 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
         }
         Request::Trigger { dag_id } => {
             let target = format!("/api/v1/dags/{}/dagRuns", encode_seg(&dag_id));
-            v1::dispatch(sim, w, Method::Post, &target, None)
+            // v1 added `run_type` and `dag_is_paused` to the trigger
+            // response; the legacy wire format never had them.
+            strip_keys(
+                v1::dispatch(sim, w, Method::Post, &target, None),
+                &["run_type", "dag_is_paused"],
+            )
         }
         Request::SetPaused { dag_id, paused } => {
             let target = format!("/api/v1/dags/{}", encode_seg(&dag_id));
@@ -252,7 +296,21 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
             let body = Json::obj().set("file_text", file_text);
             v1::dispatch(sim, w, Method::Post, "/api/v1/dags", Some(&body))
         }
-        Request::Health => v1::dispatch(sim, w, Method::Get, "/api/v1/health", None),
+        Request::Health => {
+            let resp = v1::dispatch(sim, w, Method::Get, "/api/v1/health", None);
+            // Legacy `active_runs` counted queued+running; v1 now reports
+            // running only (parked runs are no longer transient). Restore
+            // the old semantics and drop the v1-only backfill counters.
+            let legacy_active = resp
+                .get("run_states")
+                .map(|rs| {
+                    rs.get("queued").and_then(|v| v.as_u64()).unwrap_or(0)
+                        + rs.get("running").and_then(|v| v.as_u64()).unwrap_or(0)
+                })
+                .unwrap_or(0);
+            strip_keys(resp, &["active_backfill_runs", "queued_backfill_runs"])
+                .set("active_runs", legacy_active)
+        }
     };
     legacy_error(resp)
 }
@@ -368,6 +426,9 @@ mod tests {
         assert_eq!(h.get("n_dags").unwrap().as_u64(), Some(1));
         assert!(h.get("run_states").unwrap().get("success").is_some());
         assert!(h.get("task_states").unwrap().get("queued").is_some());
+        // v1-only backfill counters are stripped for legacy clients.
+        assert!(h.get("active_backfill_runs").is_none());
+        assert!(h.get("queued_backfill_runs").is_none());
     }
 
     #[test]
@@ -381,5 +442,8 @@ mod tests {
         let resp =
             handle_text(&mut sim, &mut w, r#"{"op": "trigger", "dag_id": "api_dag"}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        // v1-only keys are stripped for legacy clients (bit-compat).
+        assert!(resp.get("run_type").is_none());
+        assert!(resp.get("dag_is_paused").is_none());
     }
 }

@@ -67,6 +67,10 @@ pub enum Endpoint {
     ListDagRuns { dag_id: String },
     /// `POST /api/v1/dags/{dag_id}/dagRuns` (manual trigger)
     TriggerDagRun { dag_id: String },
+    /// `POST /api/v1/dags/{dag_id}/dagRuns/backfill`
+    /// (body `{"start_ts": secs, "end_ts": secs, "interval_secs": secs}` —
+    /// expands the range into backfill-typed runs)
+    BackfillDagRuns { dag_id: String },
     /// `GET /api/v1/dags/{dag_id}/dagRuns/{run_id}`
     GetDagRun { dag_id: String, run_id: u64 },
     /// `PATCH /api/v1/dags/{dag_id}/dagRuns/{run_id}`
@@ -190,6 +194,11 @@ pub fn resolve(method: Method, target: &str) -> Result<(Endpoint, Query), ApiErr
         (Delete, ["dags", d]) => Endpoint::DeleteDag { dag_id: decode_seg(d) },
         (Get, ["dags", d, "dagRuns"]) => Endpoint::ListDagRuns { dag_id: decode_seg(d) },
         (Post, ["dags", d, "dagRuns"]) => Endpoint::TriggerDagRun { dag_id: decode_seg(d) },
+        // `backfill` is a verb segment, not a run id — match it before
+        // the `{run_id}` routes.
+        (Post, ["dags", d, "dagRuns", "backfill"]) => {
+            Endpoint::BackfillDagRuns { dag_id: decode_seg(d) }
+        }
         (Get, ["dags", d, "dagRuns", r]) => {
             Endpoint::GetDagRun { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
         }
@@ -233,6 +242,11 @@ mod tests {
                 Method::Post,
                 "/api/v1/dags/etl/dagRuns",
                 Endpoint::TriggerDagRun { dag_id: "etl".into() },
+            ),
+            (
+                Method::Post,
+                "/api/v1/dags/etl/dagRuns/backfill",
+                Endpoint::BackfillDagRuns { dag_id: "etl".into() },
             ),
             (
                 Method::Get,

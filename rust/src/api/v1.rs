@@ -15,11 +15,15 @@ use crate::api::error::{ApiError, ApiResult};
 use crate::api::page::Page;
 use crate::api::router::{self, Endpoint, Method, Query};
 use crate::cloud::db::{DagRunRow, MetaDb, TiRow};
-use crate::dag::state::{RunState, TiState};
+use crate::dag::state::{RunState, RunType, TiState};
 use crate::sairflow::{self, World};
 use crate::sim::engine::Sim;
-use crate::sim::time::as_secs;
+use crate::sim::time::{as_secs, secs, SimTime};
 use crate::util::json::Json;
+
+/// Ceiling on the number of runs one backfill request may expand to — a
+/// typo'd interval must not materialize millions of rows.
+pub const MAX_BACKFILL_RUNS: usize = 500;
 
 /// Dispatch one API request against the deployed world.
 ///
@@ -81,6 +85,7 @@ fn dispatch_inner(
         Endpoint::UploadDag => upload_dag(sim, w, body),
         Endpoint::ListDagRuns { dag_id } => list_dag_runs(w, &dag_id, &query),
         Endpoint::TriggerDagRun { dag_id } => trigger_dag_run(sim, w, &dag_id),
+        Endpoint::BackfillDagRuns { dag_id } => backfill_dag_runs(sim, w, &dag_id, body),
         Endpoint::GetDagRun { dag_id, run_id } => get_dag_run(w, &dag_id, run_id),
         Endpoint::PatchDagRun { dag_id, run_id } => {
             patch_dag_run(sim, w, &dag_id, run_id, body)
@@ -116,6 +121,7 @@ fn dag_json(db: &MetaDb, dag_id: &str) -> Json {
 fn run_json(r: &DagRunRow) -> Json {
     Json::obj()
         .set("run_id", r.run_id)
+        .set("run_type", r.run_type.to_string())
         .set("state", r.state.to_string())
         .set("logical_ts", Json::Num(as_secs(r.logical_ts)))
         .set("start", opt_secs(r.start))
@@ -221,9 +227,19 @@ fn parse_run_state_filter(q: &Query) -> Result<Option<RunState>, ApiError> {
     }
 }
 
+fn parse_run_type_filter(q: &Query) -> Result<Option<RunType>, ApiError> {
+    match q.get("run_type") {
+        None => Ok(None),
+        Some(raw) => RunType::parse(raw)
+            .map(Some)
+            .ok_or_else(|| ApiError::bad_request(format!("invalid run_type '{raw}'"))),
+    }
+}
+
 fn list_dag_runs(w: &World, dag_id: &str, q: &Query) -> ApiResult {
     let page = Page::from_query(q)?;
     let state = parse_run_state_filter(q)?;
+    let run_type = parse_run_type_filter(q)?;
     let db = w.db.read();
     require_dag(db, dag_id)?;
     // Most recent first, like the Airflow UI.
@@ -233,6 +249,7 @@ fn list_dag_runs(w: &World, dag_id: &str, q: &Query) -> ApiResult {
         .rev()
         .map(|(_, r)| r)
         .filter(|r| state.map(|s| r.state == s).unwrap_or(true))
+        .filter(|r| run_type.map(|t| r.run_type == t).unwrap_or(true))
         .collect();
     let (runs, total) = page.apply(runs);
     let items: Vec<Json> = runs.into_iter().map(run_json).collect();
@@ -306,8 +323,15 @@ fn health(w: &World) -> Json {
         .set("cdc_records", w.cdc.stats.records)
         .set("db_txns", db.stats.txns)
         .set("n_dags", db.dags.len())
-        .set("active_runs", r_queued + r_running)
+        // Runs actually executing. `Queued` is no longer transient (parked
+        // manual runs, throttled backfill), so counting it here would let
+        // one big backfill POST read as hundreds of "active" runs; the
+        // parked backlog is visible in `run_states.queued` and the
+        // backfill counters below.
+        .set("active_runs", r_running)
         .set("active_tasks", db.active_ti_count())
+        .set("active_backfill_runs", db.active_backfill_count())
+        .set("queued_backfill_runs", db.queued_backfill_count())
         .set(
             "run_states",
             Json::obj()
@@ -333,21 +357,92 @@ fn health(w: &World) -> Json {
 // ---- mutation handlers (inject events / commit transactions) ---------------
 
 fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResult {
-    {
+    let paused = {
         let db = w.db.read();
         if !db.serialized.contains_key(dag_id) {
             return Err(ApiError::unknown_dag(dag_id));
         }
-        // The scheduler silently drops triggers for paused DAGs; a 200
-        // here would claim a run that will never exist.
-        if db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false) {
-            return Err(ApiError::conflict(format!(
-                "dag '{dag_id}' is paused — unpause it before triggering"
-            )));
-        }
-    }
+        db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false)
+    };
+    // Airflow parity: a manual trigger is never dropped. On a paused DAG
+    // (or past the `max_active_runs` gate) the scheduler creates the run
+    // in state `queued` and promotes it when the DAG is unpaused /
+    // capacity frees. (This endpoint used to 409 on paused DAGs because
+    // cron and manual triggers shared one untyped message; `RunType`
+    // fixed that at the root.)
     sairflow::trigger_dag(sim, w, dag_id);
-    Ok(Json::obj().set("dag_id", dag_id).set("triggered", dag_id))
+    // `dag_is_paused` is the only parking condition knowable at request
+    // time; a run may also park behind `max_active_runs`, which only the
+    // scheduler pass that creates it can see.
+    Ok(Json::obj()
+        .set("dag_id", dag_id)
+        .set("triggered", dag_id)
+        .set("run_type", RunType::Manual.to_string())
+        .set("dag_is_paused", paused))
+}
+
+fn backfill_dag_runs(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: &str,
+    body: Option<&Json>,
+) -> ApiResult {
+    // Resource resolution before body validation, like every other
+    // per-DAG endpoint: probing an unknown DAG is a 404, not a 400.
+    if !w.db.read().serialized.contains_key(dag_id) {
+        return Err(ApiError::unknown_dag(dag_id));
+    }
+    let body = require_body(body)?;
+    let start = body.num_field("start_ts").map_err(ApiError::bad_request)?;
+    let end = body.num_field("end_ts").map_err(ApiError::bad_request)?;
+    let interval = body.num_field("interval_secs").map_err(ApiError::bad_request)?;
+    // Largest representable clock value: SimTime is u64 microseconds.
+    // Past it `secs()` saturates and every date would collapse onto one
+    // duplicate logical_ts.
+    let max_ts = u64::MAX as f64 / 1e6;
+    if !start.is_finite() || start < 0.0 {
+        return Err(ApiError::bad_request("start_ts must be a non-negative number"));
+    }
+    if !end.is_finite() || end < start || end >= max_ts {
+        return Err(ApiError::bad_request(format!(
+            "end_ts must be >= start_ts and below the clock range ({max_ts:.0} s)"
+        )));
+    }
+    // The simulation clock ticks in microseconds; a finer interval would
+    // round every date to the same tick and materialize duplicate
+    // logical_ts runs.
+    if !interval.is_finite() || interval < 1e-6 {
+        return Err(ApiError::bad_request("interval_secs must be >= 0.000001"));
+    }
+    // Count in f64 before narrowing: a huge range must hit the cap check,
+    // not overflow the integer count. The epsilon keeps the documented
+    // inclusive end date when (end-start)/interval is not exactly
+    // representable (e.g. 0.3/0.1 = 2.9999...).
+    let span = ((end - start) / interval + 1e-9).floor();
+    if span >= MAX_BACKFILL_RUNS as f64 {
+        return Err(ApiError::bad_request(format!(
+            "range expands to more than the {MAX_BACKFILL_RUNS}-run backfill cap"
+        )));
+    }
+    let n = span as usize + 1;
+    // Inclusive range [start, end] stepped by interval, like Airflow's
+    // date-range backfill. The dates are generated in the integer
+    // microsecond domain — f64 stepping would lose the interval in the
+    // ULP at large start_ts and collapse many dates onto one logical_ts.
+    // Backfill bypasses the pause gate; the runs are throttled by
+    // `max_active_backfill_runs`, not `max_active_runs`.
+    let start_us = secs(start);
+    let step_us = secs(interval).max(1);
+    let dates: Vec<SimTime> =
+        (0..n as u64).map(|i| start_us.saturating_add(i * step_us)).collect();
+    sairflow::backfill_dag(sim, w, dag_id, &dates);
+    Ok(Json::obj()
+        .set("dag_id", dag_id)
+        .set("run_type", RunType::Backfill.to_string())
+        .set("backfill_runs", n)
+        .set("start_ts", start)
+        .set("end_ts", end)
+        .set("interval_secs", interval))
 }
 
 fn upload_dag(sim: &mut Sim<World>, w: &mut World, body: Option<&Json>) -> ApiResult {

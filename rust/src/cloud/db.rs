@@ -18,10 +18,10 @@
 //!   becomes a bottleneck").
 
 use crate::dag::spec::DagSpec;
-use crate::dag::state::{RunState, TiState};
+use crate::dag::state::{RunState, RunType, TiState};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration, SimTime};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 /// Key of a DAG run: (dag_id, run_id).
 pub type RunKey = (String, u64);
@@ -44,6 +44,9 @@ pub struct DagRunRow {
     pub run_id: u64,
     /// Logical (scheduled) time of this run.
     pub logical_ts: SimTime,
+    /// Trigger provenance (Airflow's `run_type` column): scheduled /
+    /// manual / backfill. Drives run-type-aware scheduling policy.
+    pub run_type: RunType,
     pub state: RunState,
     pub start: Option<SimTime>,
     pub end: Option<SimTime>,
@@ -77,6 +80,10 @@ pub enum Change {
     DagRun { dag_id: String, run_id: u64, state: RunState },
     /// A task instance row changed state.
     Ti { dag_id: String, run_id: u64, task_id: u32, state: TiState },
+    /// A DAG's pause flag flipped (`PATCH /api/v1/dags/{id}`). The
+    /// unpause direction is routed to the scheduler so manual runs queued
+    /// while the DAG was paused get promoted to `Running`.
+    DagPaused { dag_id: String, paused: bool },
     /// A DAG and all its rows were removed (`DELETE /api/v1/dags/{id}`).
     DagDeleted { dag_id: String },
 }
@@ -88,6 +95,12 @@ pub enum Write {
     PutSerializedDag(DagSpec),
     InsertDagRun(DagRunRow),
     SetRunState { dag_id: String, run_id: u64, state: RunState },
+    /// Promote a parked (`Queued`) run to `Running` (backfill budget,
+    /// unpause, freed `max_active_runs` capacity). Applies only while the
+    /// row is still `Queued` — a promotion built from a pass snapshot
+    /// that races a concurrent mark-terminal must not revive the
+    /// cancelled run (raced write dropped + counted, like `ClearTi`).
+    PromoteRun { dag_id: String, run_id: u64 },
     InsertTi(TiRow),
     SetTiState { key: TiKey, state: TiState },
     /// Record the worker executing a task instance (Airflow `hostname`).
@@ -103,7 +116,9 @@ pub enum Write {
     /// the scheduler re-dispatches the task. Raced decisions are made at
     /// apply time, not from the requester's snapshot: an active
     /// (queued/running) row drops the clear, and a terminal owning run is
-    /// revived to `Running` (see `MetaDb::apply`).
+    /// revived to `Queued` — re-admitted by the scheduler's promotion
+    /// step under the pause/`max_active_runs`/backfill-budget policy (see
+    /// `MetaDb::apply`).
     ClearTi { key: TiKey },
     /// Remove a DAG and every row that references it (serialized spec,
     /// DAG runs, task instances).
@@ -117,7 +132,8 @@ impl Write {
     fn hot_key(&self) -> Option<RunKey> {
         match self {
             Write::InsertDagRun(r) => Some((r.dag_id.clone(), r.run_id)),
-            Write::SetRunState { dag_id, run_id, .. } => Some((dag_id.clone(), *run_id)),
+            Write::SetRunState { dag_id, run_id, .. }
+            | Write::PromoteRun { dag_id, run_id } => Some((dag_id.clone(), *run_id)),
             Write::InsertTi(t) => Some((t.dag_id.clone(), t.run_id)),
             Write::SetTiState { key, .. }
             | Write::SetTiReady { key, .. }
@@ -163,6 +179,14 @@ pub struct DbStats {
     pub queue_wait_total: SimDuration,
     pub max_queue_wait: SimDuration,
     pub illegal_transitions: u64,
+    /// Run/TI inserts dropped because their DAG no longer exists — a
+    /// scheduling transaction built from a pre-delete snapshot racing
+    /// `DELETE /dags/{id}` (write skipped, counted).
+    pub dropped_inserts: u64,
+    /// Promotions dropped at apply time because the run left `Queued`
+    /// (raced mark-state/delete) or its DAG got paused — a by-design
+    /// raced-write outcome, kept separate from `illegal_transitions`.
+    pub dropped_promotions: u64,
 }
 
 /// The metadata database state: tables + write-ahead log.
@@ -178,6 +202,20 @@ pub struct MetaDb {
     /// Maintained count of queued+running task instances (the scheduler's
     /// parallelism check) — O(1) instead of a full-table scan per pass.
     active_count: usize,
+    /// Maintained index of backfill runs waiting in state `Queued` — what
+    /// the scheduler's promotion step drains in key order under the
+    /// `max_active_backfill_runs` budget (creation order within a DAG;
+    /// across DAGs the order is lexicographic by dag_id, not arrival —
+    /// see the ROADMAP fairness item).
+    backfill_queued: BTreeSet<RunKey>,
+    /// Maintained count of backfill runs in state `Running` (the
+    /// promotion budget check) — O(1) instead of a run-table scan.
+    backfill_running: usize,
+    /// Maintained index of non-backfill (manual) runs parked in `Queued` —
+    /// a manual trigger on a paused DAG or one that hit the per-DAG
+    /// `max_active_runs` gate. Promoted by the scheduler once the DAG is
+    /// unpaused and capacity frees.
+    fg_queued: BTreeSet<RunKey>,
     pub stats: DbStats,
 }
 
@@ -196,7 +234,13 @@ impl MetaDb {
         for w in txn.writes {
             self.stats.writes += 1;
             match w {
-                Write::UpsertDag(row) => {
+                Write::UpsertDag(mut row) => {
+                    // A re-upload must not reset an operator's pause
+                    // decision: the parse function builds its row from the
+                    // file alone, so the existing flag wins at apply time.
+                    if let Some(existing) = self.dags.get(&row.dag_id) {
+                        row.is_paused = existing.is_paused;
+                    }
                     self.dags.insert(row.dag_id.clone(), row);
                 }
                 Write::PutSerializedDag(spec) => {
@@ -205,18 +249,29 @@ impl MetaDb {
                     changes.push(Change::SerializedDag { dag_id });
                 }
                 Write::InsertDagRun(row) => {
+                    // Apply-time guard: a scheduling txn built from a
+                    // pre-delete snapshot must not re-insert rows for a
+                    // DAG that `DeleteDag` already removed.
+                    if !self.dag_known(&row.dag_id) {
+                        self.stats.dropped_inserts += 1;
+                        continue;
+                    }
                     let key = (row.dag_id.clone(), row.run_id);
                     let change = Change::DagRun {
                         dag_id: row.dag_id.clone(),
                         run_id: row.run_id,
                         state: row.state,
                     };
+                    self.reindex_run(&key, row.run_type, None, Some(row.state));
                     self.dag_runs.insert(key, row);
                     changes.push(change);
                 }
                 Write::SetRunState { dag_id, run_id, state } => {
-                    if let Some(row) = self.dag_runs.get_mut(&(dag_id.clone(), run_id)) {
+                    let key = (dag_id.clone(), run_id);
+                    let mut flipped: Option<(RunState, RunType)> = None;
+                    if let Some(row) = self.dag_runs.get_mut(&key) {
                         if row.state != state {
+                            flipped = Some((row.state, row.run_type));
                             row.state = state;
                             match state {
                                 RunState::Running => {
@@ -228,11 +283,58 @@ impl MetaDb {
                                 s if s.is_terminal() => row.end = Some(commit_ts),
                                 _ => {}
                             }
-                            changes.push(Change::DagRun { dag_id, run_id, state });
                         }
+                    }
+                    if let Some((old, run_type)) = flipped {
+                        self.reindex_run(&key, run_type, Some(old), Some(state));
+                        changes.push(Change::DagRun { dag_id, run_id, state });
+                    }
+                }
+                Write::PromoteRun { dag_id, run_id } => {
+                    let key = (dag_id.clone(), run_id);
+                    // Non-backfill promotions re-check the pause flag at
+                    // commit time: a pause landing between the pass
+                    // snapshot and this commit keeps the run parked (the
+                    // unpause edge re-promotes it). Backfill ignores the
+                    // pause flag by design.
+                    let paused = self.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(false);
+                    let mut promoted: Option<RunType> = None;
+                    if let Some(row) = self.dag_runs.get_mut(&key) {
+                        if row.state == RunState::Queued
+                            && (row.run_type == RunType::Backfill || !paused)
+                        {
+                            row.state = RunState::Running;
+                            row.start = row.start.or(Some(commit_ts));
+                            promoted = Some(row.run_type);
+                        }
+                    }
+                    match promoted {
+                        Some(run_type) => {
+                            self.reindex_run(
+                                &key,
+                                run_type,
+                                Some(RunState::Queued),
+                                Some(RunState::Running),
+                            );
+                            changes.push(Change::DagRun {
+                                dag_id,
+                                run_id,
+                                state: RunState::Running,
+                            });
+                        }
+                        // The run is no longer `Queued` (raced mark-state
+                        // or delete) or its DAG got paused: drop the
+                        // stale promotion.
+                        None => self.stats.dropped_promotions += 1,
                     }
                 }
                 Write::InsertTi(row) => {
+                    // Same delete-race guard as `InsertDagRun`: no orphan
+                    // task-instance rows for a removed DAG.
+                    if !self.dag_known(&row.dag_id) {
+                        self.stats.dropped_inserts += 1;
+                        continue;
+                    }
                     let key = (row.dag_id.clone(), row.run_id, row.task_id);
                     self.task_instances.insert(key, row);
                     // TI creation in state None is not CDC-routed (nothing
@@ -283,9 +385,15 @@ impl MetaDb {
                 }
                 Write::SetDagPaused { dag_id, paused } => {
                     if let Some(row) = self.dags.get_mut(&dag_id) {
-                        row.is_paused = paused;
-                        // Pause state is read directly by scheduler passes;
-                        // no CDC routing reacts to it, so no change record.
+                        if row.is_paused != paused {
+                            row.is_paused = paused;
+                            // The pause flag itself is read directly from
+                            // scheduler snapshots, but the *unpause* edge
+                            // is CDC-routed so manual runs queued while
+                            // paused get promoted (same-value writes stay
+                            // silent).
+                            changes.push(Change::DagPaused { dag_id, paused });
+                        }
                     }
                 }
                 Write::ClearTi { key } => {
@@ -319,17 +427,28 @@ impl MetaDb {
                         // decision must be made here at apply time: a
                         // run-completion transaction may be in flight when
                         // the clear is requested, and deciding from the
-                        // request-time snapshot would lose the clear.
+                        // request-time snapshot would lose the clear. The
+                        // run revives to `Queued`, not `Running` — going
+                        // straight to `Running` would bypass the pause
+                        // gate, `max_active_runs` and the backfill
+                        // budget; the promotion step is the single
+                        // admission point for parked runs.
+                        let mut requeued: Option<(RunState, RunType)> = None;
                         if let Some(run) = self.dag_runs.get_mut(&(key.0.clone(), key.1)) {
                             if run.state.is_terminal() {
-                                run.state = RunState::Running;
+                                requeued = Some((run.state, run.run_type));
+                                run.state = RunState::Queued;
                                 run.end = None;
                                 changes.push(Change::DagRun {
-                                    dag_id: key.0,
+                                    dag_id: key.0.clone(),
                                     run_id: key.1,
-                                    state: RunState::Running,
+                                    state: RunState::Queued,
                                 });
                             }
+                        }
+                        if let Some((old, run_type)) = requeued {
+                            let k = (key.0, key.1);
+                            self.reindex_run(&k, run_type, Some(old), Some(RunState::Queued));
                         }
                     }
                 }
@@ -342,7 +461,9 @@ impl MetaDb {
                         .map(|(k, _)| k.clone())
                         .collect();
                     for k in run_keys {
-                        self.dag_runs.remove(&k);
+                        if let Some(run) = self.dag_runs.remove(&k) {
+                            self.reindex_run(&k, run.run_type, Some(run.state), None);
+                        }
                     }
                     let ti_keys: Vec<TiKey> = self
                         .task_instances
@@ -392,6 +513,96 @@ impl MetaDb {
             self.task_instances.values().filter(|t| t.state.is_active()).count()
         );
         self.active_count
+    }
+
+    /// Whether a DAG still exists (dag row or serialized spec) — the
+    /// apply-time guard for run/TI inserts racing `DeleteDag`.
+    fn dag_known(&self, dag_id: &str) -> bool {
+        self.dags.contains_key(dag_id) || self.serialized.contains_key(dag_id)
+    }
+
+    /// Keep the parked/active run indexes (`backfill_queued`,
+    /// `backfill_running`, `fg_queued`) in sync with one run's state
+    /// transition. `None` stands for "no row" (insert / delete). Every
+    /// write arm that changes a run row's state must route through this —
+    /// hand-rolling the updates per arm is how the counters drift.
+    fn reindex_run(
+        &mut self,
+        key: &RunKey,
+        run_type: RunType,
+        old: Option<RunState>,
+        new: Option<RunState>,
+    ) {
+        if run_type == RunType::Backfill {
+            match old {
+                Some(RunState::Queued) => {
+                    self.backfill_queued.remove(key);
+                }
+                Some(RunState::Running) => self.backfill_running -= 1,
+                _ => {}
+            }
+            match new {
+                Some(RunState::Queued) => {
+                    self.backfill_queued.insert(key.clone());
+                }
+                Some(RunState::Running) => self.backfill_running += 1,
+                _ => {}
+            }
+        } else {
+            if old == Some(RunState::Queued) {
+                self.fg_queued.remove(key);
+            }
+            if new == Some(RunState::Queued) {
+                self.fg_queued.insert(key.clone());
+            }
+        }
+    }
+
+    /// Count of backfill runs currently in state `Running` across all
+    /// DAGs — the scheduler's `max_active_backfill_runs` budget check.
+    pub fn active_backfill_count(&self) -> usize {
+        debug_assert_eq!(
+            self.backfill_running,
+            self.dag_runs
+                .values()
+                .filter(|r| r.run_type == RunType::Backfill && r.state == RunState::Running)
+                .count()
+        );
+        self.backfill_running
+    }
+
+    /// Backfill runs waiting in state `Queued`, in key order (creation
+    /// order within a DAG; lexicographic by dag_id across DAGs) — what
+    /// the scheduler's promotion step drains.
+    pub fn queued_backfill(&self) -> impl Iterator<Item = &RunKey> + '_ {
+        debug_assert_eq!(
+            self.backfill_queued.len(),
+            self.dag_runs
+                .values()
+                .filter(|r| r.run_type == RunType::Backfill && r.state == RunState::Queued)
+                .count()
+        );
+        self.backfill_queued.iter()
+    }
+
+    /// Count of backfill runs waiting in state `Queued` (for the health
+    /// endpoint).
+    pub fn queued_backfill_count(&self) -> usize {
+        self.backfill_queued.len()
+    }
+
+    /// Non-backfill runs parked in state `Queued` (manual triggers on a
+    /// paused DAG or past the `max_active_runs` gate), in key order —
+    /// what the scheduler's foreground promotion step drains.
+    pub fn queued_foreground(&self) -> impl Iterator<Item = &RunKey> + '_ {
+        debug_assert_eq!(
+            self.fg_queued.len(),
+            self.dag_runs
+                .values()
+                .filter(|r| r.run_type != RunType::Backfill && r.state == RunState::Queued)
+                .count()
+        );
+        self.fg_queued.iter()
     }
 }
 
@@ -549,10 +760,34 @@ mod tests {
         }
     }
 
+    /// Dag-row write registering `dag` (inserts for unknown DAGs are
+    /// dropped by the delete-race guard).
+    fn dag_row(dag: &str) -> Write {
+        Write::UpsertDag(DagRow {
+            dag_id: dag.into(),
+            fileloc: format!("dags/{dag}.json"),
+            period: None,
+            is_paused: false,
+        })
+    }
+
+    fn run_row(dag: &str, run: u64, run_type: RunType, state: RunState) -> DagRunRow {
+        DagRunRow {
+            dag_id: dag.into(),
+            run_id: run,
+            logical_ts: 0,
+            run_type,
+            state,
+            start: if state == RunState::Running { Some(1) } else { None },
+            end: None,
+        }
+    }
+
     #[test]
     fn apply_emits_changes_in_order() {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
+        txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Scheduled });
         txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Queued });
@@ -568,6 +803,7 @@ mod tests {
     fn illegal_transition_rejected() {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
+        txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Success });
         let changes = db.apply(txn, 1);
@@ -581,6 +817,7 @@ mod tests {
         let mut db = MetaDb::new();
         let key: TiKey = ("d".into(), 1, 0);
         let mut txn = Txn::new();
+        txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
@@ -596,6 +833,7 @@ mod tests {
         let mut db = MetaDb::new();
         let key: TiKey = ("d".into(), 1, 0);
         let mut txn = Txn::new();
+        txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
@@ -624,6 +862,7 @@ mod tests {
         let mut db = MetaDb::new();
         let key: TiKey = ("d".into(), 1, 0);
         let mut txn = Txn::new();
+        txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
@@ -646,14 +885,8 @@ mod tests {
         let mut db = MetaDb::new();
         let key: TiKey = ("d".into(), 1, 0);
         let mut txn = Txn::new();
-        txn.push(Write::InsertDagRun(DagRunRow {
-            dag_id: "d".into(),
-            run_id: 1,
-            logical_ts: 0,
-            state: RunState::Running,
-            start: Some(1),
-            end: None,
-        }));
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Manual, RunState::Running)));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
@@ -667,14 +900,15 @@ mod tests {
         let changes = db.apply(clear, 9);
         assert!(matches!(&changes[0], Change::Ti { state: TiState::None, .. }));
         assert!(
-            matches!(&changes[1], Change::DagRun { state: RunState::Running, .. }),
-            "terminal run revived alongside the clear"
+            matches!(&changes[1], Change::DagRun { state: RunState::Queued, .. }),
+            "terminal run revived to Queued alongside the clear"
         );
         let run = &db.dag_runs[&("d".into(), 1)];
-        assert_eq!(run.state, RunState::Running);
+        assert_eq!(run.state, RunState::Queued);
         assert_eq!(run.end, None);
         assert_eq!(run.start, Some(1), "original start kept");
-        // Clearing inside a still-running run emits no run change.
+        assert_eq!(db.queued_foreground().next(), Some(&("d".to_string(), 1)));
+        // Clearing inside a non-terminal run emits no run change.
         let mut txn = Txn::new();
         txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
         db.apply(txn, 10);
@@ -685,17 +919,41 @@ mod tests {
     }
 
     #[test]
+    fn clear_ti_revives_terminal_backfill_run_as_queued() {
+        // A revived backfill run must re-enter the promotion queue, not
+        // jump straight to Running past the backfill budget.
+        let mut db = MetaDb::new();
+        let key: TiKey = ("d".into(), 1, 0);
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Backfill, RunState::Running)));
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        txn.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
+        db.apply(txn, 5);
+        assert_eq!(db.active_backfill_count(), 0);
+
+        let mut clear = Txn::new();
+        clear.push(Write::ClearTi { key });
+        let changes = db.apply(clear, 9);
+        assert!(
+            matches!(&changes[1], Change::DagRun { state: RunState::Queued, .. }),
+            "backfill revive re-enters the promotion queue: {changes:?}"
+        );
+        assert_eq!(db.dag_runs[&("d".into(), 1)].state, RunState::Queued);
+        assert_eq!(db.queued_backfill_count(), 1);
+        assert_eq!(db.active_backfill_count(), 0, "budget not consumed directly");
+    }
+
+    #[test]
     fn run_revived_by_running_state_clears_end() {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
-        txn.push(Write::InsertDagRun(DagRunRow {
-            dag_id: "d".into(),
-            run_id: 1,
-            logical_ts: 0,
-            state: RunState::Running,
-            start: Some(1),
-            end: None,
-        }));
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Scheduled, RunState::Running)));
         txn.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
         db.apply(txn, 5);
         assert_eq!(db.dag_runs[&("d".into(), 1)].end, Some(5));
@@ -713,46 +971,199 @@ mod tests {
     }
 
     #[test]
-    fn set_dag_paused_flips_row_without_change_record() {
+    fn set_dag_paused_emits_change_only_on_flips() {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
-        txn.push(Write::UpsertDag(DagRow {
-            dag_id: "d".into(),
-            fileloc: "dags/d.json".into(),
-            period: None,
-            is_paused: false,
-        }));
+        txn.push(dag_row("d"));
         db.apply(txn, 0);
         let mut pause = Txn::new();
         pause.push(Write::SetDagPaused { dag_id: "d".into(), paused: true });
         let changes = db.apply(pause, 1);
-        assert!(changes.is_empty());
+        assert!(
+            matches!(&changes[..], [Change::DagPaused { dag_id, paused: true }] if dag_id == "d")
+        );
         assert!(db.dags["d"].is_paused);
         assert_eq!(db.stats.txns, 2, "pause went through a transaction");
+        // Writing the same value again is silent (no CDC noise).
+        let mut again = Txn::new();
+        again.push(Write::SetDagPaused { dag_id: "d".into(), paused: true });
+        assert!(db.apply(again, 2).is_empty());
+        // The unpause edge is a change record (routed to the scheduler).
+        let mut unpause = Txn::new();
+        unpause.push(Write::SetDagPaused { dag_id: "d".into(), paused: false });
+        let changes = db.apply(unpause, 3);
+        assert!(
+            matches!(&changes[..], [Change::DagPaused { paused: false, .. }]),
+            "unpause emits a change: {changes:?}"
+        );
+    }
+
+    #[test]
+    fn upsert_dag_preserves_pause_flag_across_reupload() {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        db.apply(txn, 0);
+        let mut pause = Txn::new();
+        pause.push(Write::SetDagPaused { dag_id: "d".into(), paused: true });
+        db.apply(pause, 1);
+        // Re-upload: the parse function always writes `is_paused: false`
+        // (it only sees the file); apply keeps the operator's flag.
+        let mut reupload = Txn::new();
+        reupload.push(dag_row("d"));
+        db.apply(reupload, 2);
+        assert!(db.dags["d"].is_paused, "re-upload must not unpause");
+        // A delete followed by a fresh upload starts unpaused again.
+        let mut del = Txn::new();
+        del.push(Write::DeleteDag { dag_id: "d".into() });
+        db.apply(del, 3);
+        let mut fresh = Txn::new();
+        fresh.push(dag_row("d"));
+        db.apply(fresh, 4);
+        assert!(!db.dags["d"].is_paused, "fresh upload is unpaused");
+    }
+
+    #[test]
+    fn inserts_for_unknown_dag_are_dropped() {
+        // The delete-race guard: a scheduling txn built from a pre-delete
+        // snapshot must not land orphan run/TI rows.
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(Write::InsertDagRun(run_row("ghost", 1, RunType::Scheduled, RunState::Running)));
+        txn.push(Write::InsertTi(ti("ghost", 1, 0)));
+        let changes = db.apply(txn, 1);
+        assert!(changes.is_empty(), "dropped inserts emit no change");
+        assert!(db.dag_runs.is_empty());
+        assert!(db.task_instances.is_empty());
+        assert_eq!(db.stats.dropped_inserts, 2);
+    }
+
+    #[test]
+    fn delete_race_snapshot_txn_leaves_no_orphans() {
+        // Build a run-creation txn from a snapshot where the DAG exists,
+        // delete the DAG, then apply the stale txn: nothing may land.
+        let mut db = MetaDb::new();
+        let mut setup = Txn::new();
+        setup.push(dag_row("d"));
+        db.apply(setup, 0);
+        let mut stale = Txn::new();
+        stale.push(Write::InsertDagRun(run_row("d", 1, RunType::Scheduled, RunState::Running)));
+        stale.push(Write::InsertTi(ti("d", 1, 0)));
+        let mut del = Txn::new();
+        del.push(Write::DeleteDag { dag_id: "d".into() });
+        db.apply(del, 1);
+        db.apply(stale, 2);
+        assert!(db.dag_runs.is_empty(), "no orphan run rows");
+        assert!(db.task_instances.is_empty(), "no orphan TI rows");
+        assert_eq!(db.stats.dropped_inserts, 2);
+    }
+
+    #[test]
+    fn raced_promotion_of_terminal_run_is_dropped() {
+        // A promotion built from a pass snapshot where the run was still
+        // `Queued` must not revive a run a concurrent mark-state already
+        // cancelled — `PromoteRun` decides at apply time.
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Backfill, RunState::Queued)));
+        db.apply(txn, 1);
+        let mut mark = Txn::new();
+        mark.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Failed });
+        db.apply(mark, 2);
+        let mut promo = Txn::new();
+        promo.push(Write::PromoteRun { dag_id: "d".into(), run_id: 1 });
+        let changes = db.apply(promo, 3);
+        assert!(changes.is_empty(), "stale promotion emits no change");
+        assert_eq!(db.dag_runs[&("d".into(), 1)].state, RunState::Failed, "stays cancelled");
+        assert_eq!(db.active_backfill_count(), 0);
+        assert_eq!(db.stats.dropped_promotions, 1);
+        assert_eq!(db.stats.illegal_transitions, 0, "raced drop is not a corruption signal");
+
+        // A legitimate promotion of a still-queued run applies normally.
+        let mut txn = Txn::new();
+        txn.push(Write::InsertDagRun(run_row("d", 2, RunType::Backfill, RunState::Queued)));
+        db.apply(txn, 4);
+        let mut promo = Txn::new();
+        promo.push(Write::PromoteRun { dag_id: "d".into(), run_id: 2 });
+        let changes = db.apply(promo, 5);
+        assert!(matches!(&changes[..], [Change::DagRun { state: RunState::Running, .. }]));
+        let run = &db.dag_runs[&("d".into(), 2)];
+        assert_eq!(run.state, RunState::Running);
+        assert_eq!(run.start, Some(5), "promotion stamps the start");
+        assert_eq!(db.active_backfill_count(), 1);
+        assert_eq!(db.queued_backfill_count(), 0);
+    }
+
+    #[test]
+    fn raced_promotion_on_paused_dag_stays_parked() {
+        // A pause that lands between the pass snapshot and the promotion
+        // commit keeps the manual run parked; backfill promotion ignores
+        // the pause flag by design.
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Manual, RunState::Queued)));
+        db.apply(txn, 1);
+        let mut pause = Txn::new();
+        pause.push(Write::SetDagPaused { dag_id: "d".into(), paused: true });
+        db.apply(pause, 2);
+        let mut promo = Txn::new();
+        promo.push(Write::PromoteRun { dag_id: "d".into(), run_id: 1 });
+        assert!(db.apply(promo, 3).is_empty(), "stale promotion dropped");
+        assert_eq!(db.dag_runs[&("d".into(), 1)].state, RunState::Queued, "stays parked");
+        let mut txn = Txn::new();
+        txn.push(Write::InsertDagRun(run_row("d", 2, RunType::Backfill, RunState::Queued)));
+        db.apply(txn, 4);
+        let mut promo = Txn::new();
+        promo.push(Write::PromoteRun { dag_id: "d".into(), run_id: 2 });
+        assert_eq!(db.apply(promo, 5).len(), 1, "backfill promotes while paused");
+        assert_eq!(db.dag_runs[&("d".into(), 2)].state, RunState::Running);
+    }
+
+    #[test]
+    fn backfill_accounting_maintained() {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Backfill, RunState::Queued)));
+        txn.push(Write::InsertDagRun(run_row("d", 2, RunType::Backfill, RunState::Queued)));
+        // A manual run never enters the backfill accounting.
+        txn.push(Write::InsertDagRun(run_row("d", 3, RunType::Manual, RunState::Running)));
+        db.apply(txn, 1);
+        assert_eq!(db.queued_backfill_count(), 2);
+        assert_eq!(db.active_backfill_count(), 0);
+        // Promote run 1: queued -> running.
+        let mut t = Txn::new();
+        t.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Running });
+        db.apply(t, 2);
+        assert_eq!(db.queued_backfill_count(), 1);
+        assert_eq!(db.active_backfill_count(), 1);
+        assert_eq!(db.queued_backfill().next(), Some(&("d".to_string(), 2)));
+        // Complete run 1: running -> success.
+        let mut t = Txn::new();
+        t.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
+        db.apply(t, 3);
+        assert_eq!(db.active_backfill_count(), 0);
+        // Delete cleans the index.
+        let mut del = Txn::new();
+        del.push(Write::DeleteDag { dag_id: "d".into() });
+        db.apply(del, 4);
+        assert_eq!(db.queued_backfill_count(), 0);
+        assert_eq!(db.active_backfill_count(), 0);
     }
 
     #[test]
     fn delete_dag_removes_all_rows_and_emits_change() {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
-        txn.push(Write::UpsertDag(DagRow {
-            dag_id: "d".into(),
-            fileloc: "dags/d.json".into(),
-            period: None,
-            is_paused: false,
-        }));
-        txn.push(Write::InsertDagRun(DagRunRow {
-            dag_id: "d".into(),
-            run_id: 1,
-            logical_ts: 0,
-            state: RunState::Running,
-            start: Some(0),
-            end: None,
-        }));
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Scheduled, RunState::Running)));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
         txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Scheduled });
         txn.push(Write::SetTiState { key: ("d".into(), 1, 0), state: TiState::Queued });
         // A second DAG that must survive the delete.
+        txn.push(dag_row("e"));
         txn.push(Write::InsertTi(ti("e", 1, 0)));
         db.apply(txn, 0);
         assert_eq!(db.active_ti_count(), 1);
@@ -796,6 +1207,7 @@ mod tests {
 
     fn one_ti_txn(dag: &str, run: u64, task: u32) -> Txn {
         let mut t = Txn::new();
+        t.push(dag_row(dag));
         t.push(Write::InsertTi(ti(dag, run, task)));
         t.push(Write::SetTiState {
             key: (dag.into(), run, task),

@@ -33,6 +33,9 @@ pub enum Matcher {
     TiIn(Vec<TiState>),
     /// A periodic cron fire.
     CronFired,
+    /// A DAG's pause flag flipped to unpaused (manual runs queued while
+    /// paused need promotion).
+    DagUnpaused,
     /// A DAG was deleted (all rows removed).
     DagDeleted,
 }
@@ -50,6 +53,9 @@ impl Matcher {
                 states.contains(state)
             }
             (Matcher::CronFired, BusEvent::CronFire { .. }) => true,
+            (Matcher::DagUnpaused, BusEvent::Change(Change::DagPaused { paused: false, .. })) => {
+                true
+            }
             (Matcher::DagDeleted, BusEvent::Change(Change::DagDeleted { .. })) => true,
             _ => false,
         }
@@ -221,6 +227,7 @@ mod tests {
         );
         r.rule("task-queued", Matcher::TiIn(vec![TiState::Queued]), Target::FnExec);
         r.rule("cron", Matcher::CronFired, Target::Sched);
+        r.rule("dag-resumed", Matcher::DagUnpaused, Target::Sched);
         r
     }
 
@@ -255,6 +262,14 @@ mod tests {
 
         let cron = BusEvent::CronFire { dag_id: "d".into(), logical_ts: 0 };
         assert_eq!(r.route(&cron), vec![Target::Sched]);
+
+        // Only the unpause edge reaches the scheduler; pausing matches
+        // nothing (the pass reads the flag from its snapshot).
+        let resumed =
+            BusEvent::Change(Change::DagPaused { dag_id: "d".into(), paused: false });
+        assert_eq!(r.route(&resumed), vec![Target::Sched]);
+        let paused = BusEvent::Change(Change::DagPaused { dag_id: "d".into(), paused: true });
+        assert!(r.route(&paused).is_empty());
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod state;
 
 pub use graph::DagGraph;
 pub use spec::{DagSpec, ExecKind, Payload, TaskSpec};
-pub use state::{RunState, TiState};
+pub use state::{RunState, RunType, TiState};

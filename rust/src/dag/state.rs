@@ -135,6 +135,47 @@ impl fmt::Display for RunState {
     }
 }
 
+/// Provenance of a DAG run: what triggered it. Mirrors Airflow's
+/// `dag_run.run_type` column. Scheduling policy is run-type-aware:
+/// cron fires are dropped while a DAG is paused, manual triggers on a
+/// paused DAG create a *queued* run that starts on unpause (Airflow
+/// parity), and backfill runs are promoted under a separate
+/// `max_active_backfill_runs` budget so a large backfill cannot starve
+/// cron traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RunType {
+    /// A periodic cron fire.
+    Scheduled,
+    /// A user trigger (`POST .../dagRuns`, the web-UI flow of §4.1).
+    Manual,
+    /// One run of a `POST .../dagRuns/backfill` range expansion.
+    Backfill,
+}
+
+impl RunType {
+    /// Parse the wire name produced by [`fmt::Display`] (API `run_type`
+    /// filters); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<RunType> {
+        match s {
+            "scheduled" => Some(RunType::Scheduled),
+            "manual" => Some(RunType::Manual),
+            "backfill" => Some(RunType::Backfill),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for RunType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            RunType::Scheduled => "scheduled",
+            RunType::Manual => "manual",
+            RunType::Backfill => "backfill",
+        };
+        f.write_str(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,8 +215,12 @@ mod tests {
         for r in [RunState::Queued, RunState::Running, RunState::Success, RunState::Failed] {
             assert_eq!(RunState::parse(&r.to_string()), Some(r));
         }
+        for t in [RunType::Scheduled, RunType::Manual, RunType::Backfill] {
+            assert_eq!(RunType::parse(&t.to_string()), Some(t));
+        }
         assert_eq!(TiState::parse("bogus"), Option::None);
         assert_eq!(RunState::parse("bogus"), Option::None);
+        assert_eq!(RunType::parse("bogus"), Option::None);
     }
 
     #[test]

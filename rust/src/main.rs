@@ -139,9 +139,11 @@ fn cmd_run(args: &Args) {
 
 /// Drive the v1 control-plane API end-to-end against a deployed world,
 /// printing each request/response pair: upload → list → trigger → inspect
-/// → clear (re-execution) → pause → health → delete. Every mutation flows
-/// through the DB-txn → CDC → scheduler path; the demo advances simulated
-/// time between steps so the event fabric's reactions are visible.
+/// → clear (re-execution) → pause → trigger-while-paused (queued run,
+/// Airflow parity) → unpause → backfill → health → delete. Every mutation
+/// flows through the DB-txn → CDC → scheduler path; the demo advances
+/// simulated time between steps so the event fabric's reactions are
+/// visible.
 fn cmd_api(args: &Args) {
     if !args.flag("demo") {
         eprintln!("usage: sairflow api --demo [--seed <n>]");
@@ -208,8 +210,9 @@ fn cmd_api(args: &Args) {
         0.0,
     );
 
-    // 4. Pause (a DB transaction, visible in health's db_txns), check
-    //    health, then delete the DAG and confirm the surface is empty.
+    // 4. Pause (a DB transaction, visible in health's db_txns), then
+    //    trigger manually anyway: Airflow parity — the run is created in
+    //    state `queued` and starts once the DAG is unpaused.
     step(
         &mut sim,
         &mut world,
@@ -218,6 +221,46 @@ fn cmd_api(args: &Args) {
         Some(r#"{"is_paused": true}"#.into()),
         1.0,
     );
+    step(&mut sim, &mut world, Method::Post, "/api/v1/dags/etl/dagRuns", None, 1.0);
+    step(
+        &mut sim,
+        &mut world,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns?state=queued",
+        None,
+        0.0,
+    );
+    step(
+        &mut sim,
+        &mut world,
+        Method::Patch,
+        "/api/v1/dags/etl",
+        Some(r#"{"is_paused": false}"#.into()),
+        5.0,
+    );
+
+    // 5. Backfill a logical-date range: the whole range materializes as
+    //    backfill-typed runs, promoted under the backfill budget so they
+    //    cannot starve cron traffic.
+    step(
+        &mut sim,
+        &mut world,
+        Method::Post,
+        "/api/v1/dags/etl/dagRuns/backfill",
+        Some(r#"{"start_ts": 0, "end_ts": 240, "interval_secs": 120}"#.into()),
+        8.0,
+    );
+    step(
+        &mut sim,
+        &mut world,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns?run_type=backfill",
+        None,
+        0.0,
+    );
+
+    // 6. Check health, then delete the DAG and confirm the surface is
+    //    empty.
     step(&mut sim, &mut world, Method::Get, "/api/v1/health", None, 0.0);
     step(&mut sim, &mut world, Method::Delete, "/api/v1/dags/etl", None, 1.0);
     step(&mut sim, &mut world, Method::Get, "/api/v1/dags", None, 0.0);

@@ -23,7 +23,7 @@ use crate::cloud::db::{Change, DbHost, DbService, DbServiceConfig, Txn, Write};
 use crate::cloud::eventbridge::{self, CronHost, CronService};
 use crate::cloud::mq::SqsQueue;
 use crate::dag::spec::{DagSpec, Payload};
-use crate::dag::state::TiState;
+use crate::dag::state::{RunType, TiState};
 use crate::executor::TaskRef;
 use crate::parser::parse_batch_txn;
 use crate::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
@@ -152,7 +152,11 @@ impl CronHost for MwaaWorld {
         &mut self.cron
     }
     fn on_cron_fire(_sim: &mut Sim<Self>, w: &mut Self, dag_id: String, logical_ts: u64) {
-        w.pending_msgs.push(SchedMsg::Periodic { dag_id, logical_ts });
+        w.pending_msgs.push(SchedMsg::Trigger {
+            dag_id,
+            logical_ts,
+            run_type: RunType::Scheduled,
+        });
     }
 }
 
@@ -210,7 +214,11 @@ pub fn deploy(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, specs: &[DagSpec]) {
 
 /// Trigger a DAG manually (next loop picks it up).
 pub fn trigger_dag(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, dag_id: &str) {
-    w.pending_msgs.push(SchedMsg::Periodic { dag_id: dag_id.to_string(), logical_ts: sim.now() });
+    w.pending_msgs.push(SchedMsg::Trigger {
+        dag_id: dag_id.to_string(),
+        logical_ts: sim.now(),
+        run_type: RunType::Manual,
+    });
 }
 
 fn scheduler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {

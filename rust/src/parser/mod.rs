@@ -36,6 +36,9 @@ pub fn parse_batch_txn(parsed: &[(String, DagSpec)]) -> Txn {
             dag_id: spec.dag_id.clone(),
             fileloc: fileloc.clone(),
             period: spec.period,
+            // The file knows nothing about the operator's pause decision;
+            // `UpsertDag` keeps an existing row's flag at apply time, so
+            // re-uploading a paused DAG does not unpause it.
             is_paused: false,
         }));
         txn.push(Write::PutSerializedDag(spec.clone()));

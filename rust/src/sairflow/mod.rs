@@ -4,8 +4,9 @@
 //!   database/CDC/container models), defaults matching §5;
 //! * [`world::World`] — the deployed system: every component of Fig. 1
 //!   wired together on the simulation clock;
-//! * [`world::upload_dag`] / [`world::trigger_dag`] — the user-facing
-//!   entry points (DAG upload and manual trigger).
+//! * [`world::upload_dag`] / [`world::trigger_dag`] /
+//!   [`world::backfill_dag`] — the user-facing entry points (DAG upload,
+//!   manual trigger, logical-date backfill).
 //!
 //! See the module docs of [`world`] for the end-to-end control flow.
 
@@ -14,8 +15,8 @@ pub mod world;
 
 pub use config::Config;
 pub use world::{
-    clear_task_instances, delete_dag, mark_run_state, set_dag_paused, trigger_dag, upload_dag,
-    FnPayload, Target, World,
+    backfill_dag, clear_task_instances, delete_dag, mark_run_state, set_dag_paused, trigger_dag,
+    upload_dag, FnPayload, Target, World,
 };
 
 #[cfg(test)]

@@ -30,13 +30,13 @@ use crate::cloud::kinesis::{self, KinesisHost, KinesisStream};
 use crate::cloud::mq::{self, Esm, EsmConfig, SqsQueue};
 use crate::cloud::stepfn::{StepFnHost, StepFunctions};
 use crate::dag::spec::{DagSpec, ExecKind};
-use crate::dag::state::{RunState, TiState};
+use crate::dag::state::{RunState, RunType, TiState};
 use crate::executor::{self, TaskRef};
 use crate::parser::{self, UploadEvent};
 use crate::sairflow::config::Config;
 use crate::scheduler::{scheduling_pass, SchedMsg};
 use crate::sim::engine::Sim;
-use crate::sim::time::secs;
+use crate::sim::time::{secs, SimTime};
 use crate::worker;
 
 /// Routing targets of the event router (Fig. 1 (6)).
@@ -158,7 +158,11 @@ impl CronHost for World {
         let targets = w.router.route(&ev);
         for t in targets {
             if t == Target::Scheduler {
-                w.sched_q.send(SchedMsg::Periodic { dag_id: dag_id.clone(), logical_ts });
+                w.sched_q.send(SchedMsg::Trigger {
+                    dag_id: dag_id.clone(),
+                    logical_ts,
+                    run_type: RunType::Scheduled,
+                });
                 mq::pump(sim, w, sched_acc, sched_handler);
             }
         }
@@ -312,6 +316,12 @@ fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: &Change
             w.sched_q.send(SchedMsg::RunChanged { dag_id: dag_id.clone(), run_id: *run_id });
             mq::pump(sim, w, sched_acc, sched_handler);
         }
+        (Target::Scheduler, Change::DagPaused { dag_id, paused: false }) => {
+            // Unpause: the next pass promotes manual runs queued while
+            // the DAG was paused ("dag-resumed" rule).
+            w.sched_q.send(SchedMsg::DagResumed { dag_id: dag_id.clone() });
+            mq::pump(sim, w, sched_acc, sched_handler);
+        }
         (Target::Scheduler, Change::Ti { dag_id, run_id, task_id, state }) => {
             w.sched_q.send(SchedMsg::TaskFinished {
                 dag_id: dag_id.clone(),
@@ -435,10 +445,13 @@ impl World {
         router.rule("task-queued", Matcher::TiIn(vec![TiState::Queued]), Target::Executor);
         router.rule("periodic", Matcher::CronFired, Target::Scheduler);
         // Control-plane API rules: a cleared task instance (state reset to
-        // `None`) re-enters the scheduler, and a DAG deletion reaches the
-        // schedule updater so the cron entry is dropped.
+        // `None`) re-enters the scheduler, a DAG deletion reaches the
+        // schedule updater so the cron entry is dropped, and an unpause
+        // re-enters the scheduler to promote manual runs queued while the
+        // DAG was paused.
         router.rule("task-cleared", Matcher::TiIn(vec![TiState::None]), Target::Scheduler);
         router.rule("dag-deleted", Matcher::DagDeleted, Target::Updater);
+        router.rule("dag-resumed", Matcher::DagUnpaused, Target::Scheduler);
 
         let mut cdc = Cdc::default();
         cdc.delay = cfg.cdc_delay;
@@ -492,9 +505,33 @@ pub fn upload_dag(sim: &mut Sim<World>, _w: &mut World, spec: &DagSpec) {
 }
 
 /// Trigger a DAG run manually (the web-UI flow (14) in Fig. 1): sends a
-/// periodic-style event directly to the scheduler feed.
+/// manual-typed trigger directly to the scheduler feed. Manual triggers
+/// are never dropped — on a paused DAG (or past `max_active_runs`) the
+/// run is created in state `Queued` and starts when the DAG is unpaused
+/// and capacity frees (Airflow parity).
 pub fn trigger_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
-    w.sched_q.send(SchedMsg::Periodic { dag_id: dag_id.to_string(), logical_ts: sim.now() });
+    w.sched_q.send(SchedMsg::Trigger {
+        dag_id: dag_id.to_string(),
+        logical_ts: sim.now(),
+        run_type: RunType::Manual,
+    });
+    mq::pump(sim, w, sched_acc, sched_handler);
+}
+
+/// Backfill a DAG over a list of logical dates
+/// (`POST /api/v1/dags/{id}/dagRuns/backfill`): one backfill-typed
+/// trigger per date goes down the same scheduler feed as any other
+/// trigger. The pass materializes every run immediately in state
+/// `Queued` and promotes them under `SchedLimits::max_active_backfill_runs`,
+/// so a large range cannot starve cron traffic.
+pub fn backfill_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str, logical_ts: &[SimTime]) {
+    for &ts in logical_ts {
+        w.sched_q.send(SchedMsg::Trigger {
+            dag_id: dag_id.to_string(),
+            logical_ts: ts,
+            run_type: RunType::Backfill,
+        });
+    }
     mq::pump(sim, w, sched_acc, sched_handler);
 }
 
@@ -519,9 +556,11 @@ pub fn set_dag_paused(sim: &mut Sim<World>, w: &mut World, dag_id: &str, paused:
 /// to state `None` inside one transaction; the CDC change is routed back
 /// to the scheduler ("task-cleared" rule), whose next pass re-schedules,
 /// re-queues and thus re-executes the task through the normal executor
-/// path. A terminal run is revived to `Running` by the `ClearTi` write
+/// path. A terminal run is revived to `Queued` by the `ClearTi` write
 /// itself, at apply time — deciding from a request-time snapshot would
-/// race an in-flight run-completion transaction and lose the clear.
+/// race an in-flight run-completion transaction and lose the clear —
+/// and re-admitted to `Running` by the scheduler's promotion step under
+/// the pause / `max_active_runs` / backfill-budget policy.
 pub fn clear_task_instances(
     sim: &mut Sim<World>,
     w: &mut World,
@@ -549,7 +588,38 @@ pub fn mark_run_state(
 ) {
     let mut txn = Txn::new();
     txn.push(Write::SetRunState { dag_id: dag_id.to_string(), run_id, state });
-    db::commit(sim, w, txn, |_sim, _w| {});
+    // The marked run's provenance decides which capacity a terminal mark
+    // can free (read before the row may change).
+    let marked_type = w
+        .db
+        .read()
+        .dag_runs
+        .get(&(dag_id.to_string(), run_id))
+        .map(|r| r.run_type)
+        .unwrap_or(RunType::Manual);
+    let dag = dag_id.to_string();
+    db::commit(sim, w, txn, move |sim, w| {
+        // Terminal run changes are not CDC-routed to the scheduler, but a
+        // forced-terminal run may have freed a backfill budget slot or
+        // this DAG's `max_active_runs` capacity (a parked manual run).
+        // Nudge the feed — only when parked work could actually use the
+        // freed capacity, so a busy backfill doesn't turn every mark into
+        // a no-op scheduler invocation.
+        let freed_work = {
+            let db = w.db.read();
+            match marked_type {
+                RunType::Backfill => {
+                    db.queued_backfill_count() > 0
+                        && db.active_backfill_count() < w.cfg.limits.max_active_backfill_runs
+                }
+                _ => db.queued_foreground().any(|k| k.0 == dag),
+            }
+        };
+        if state.is_terminal() && freed_work {
+            w.sched_q.send(SchedMsg::DagResumed { dag_id: dag });
+            mq::pump(sim, w, sched_acc, sched_handler);
+        }
+    });
 }
 
 /// Delete a DAG and everything it owns (`DELETE /api/v1/dags/{id}`): the
@@ -567,5 +637,20 @@ pub fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
     w.blob.remove(&fileloc);
     let mut txn = Txn::new();
     txn.push(Write::DeleteDag { dag_id: dag_id.to_string() });
-    db::commit(sim, w, txn, |_sim, _w| {});
+    let dag_id = dag_id.to_string();
+    db::commit(sim, w, txn, move |sim, w| {
+        // Deleting a DAG may have freed backfill budget (its running
+        // backfill runs vanish with it), and `DagDeleted` routes only to
+        // the schedule updater. Same nudge as `mark_run_state`, gated on
+        // queued work plus actual budget headroom.
+        let freed_work = {
+            let db = w.db.read();
+            db.queued_backfill_count() > 0
+                && db.active_backfill_count() < w.cfg.limits.max_active_backfill_runs
+        };
+        if freed_work {
+            w.sched_q.send(SchedMsg::DagResumed { dag_id });
+            mq::pump(sim, w, sched_acc, sched_handler);
+        }
+    });
 }

@@ -20,17 +20,29 @@
 //! pass inside its polling loop — same Airflow semantics, different
 //! triggering model.
 
-use crate::cloud::db::{MetaDb, TiRow, Txn, Write};
+use crate::cloud::db::{MetaDb, RunKey, TiRow, Txn, Write};
 use crate::dag::graph::DagGraph;
-use crate::dag::state::{RunState, TiState};
+use crate::dag::state::{RunState, RunType, TiState};
 use crate::sim::time::SimTime;
 use std::collections::{BTreeSet, HashMap};
 
 /// Messages feeding the scheduler (the FIFO queue payload).
 #[derive(Debug, Clone, PartialEq)]
 pub enum SchedMsg {
-    /// A periodic cron fire: a single launch of a scheduled workflow.
-    Periodic { dag_id: String, logical_ts: SimTime },
+    /// A typed trigger: one launch of a workflow. `run_type` is the
+    /// trigger's provenance and drives the scheduling policy — cron fires
+    /// ([`RunType::Scheduled`]) are dropped while the DAG is paused or
+    /// past `max_active_runs`; manual triggers are never dropped (a
+    /// paused or gate-saturated DAG parks a *queued* run, Airflow
+    /// parity); backfill triggers create queued runs promoted under the
+    /// separate backfill budget.
+    Trigger { dag_id: String, logical_ts: SimTime, run_type: RunType },
+    /// A promotion nudge for a DAG whose parked runs may now be able to
+    /// start: sent on unpause (the CDC-routed `DagPaused` edge) and after
+    /// API actions that free capacity outside the event fabric
+    /// (mark-terminal, delete). The pass itself carries the promotion
+    /// logic; this message exists to cause one.
+    DagResumed { dag_id: String },
     /// A DAG run row changed (e.g. the run was created).
     RunChanged { dag_id: String, run_id: u64 },
     /// A task instance reached a terminal-ish state
@@ -44,11 +56,17 @@ pub enum SchedMsg {
 pub struct SchedLimits {
     /// Maximum queued+running task instances across all DAGs.
     pub parallelism: usize,
+    /// Maximum backfill runs in state `Running` across all DAGs. A
+    /// backfill expands a whole date range at once; without a separate
+    /// budget those runs would race cron traffic for the 125 parallelism
+    /// slots. Excess backfill runs wait in `Queued` and are promoted as
+    /// earlier ones finish.
+    pub max_active_backfill_runs: usize,
 }
 
 impl Default for SchedLimits {
     fn default() -> SchedLimits {
-        SchedLimits { parallelism: 125 }
+        SchedLimits { parallelism: 125, max_active_backfill_runs: 16 }
     }
 }
 
@@ -56,8 +74,12 @@ impl Default for SchedLimits {
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct PassStats {
     pub runs_created: usize,
-    /// Periodic triggers skipped by the `max_active_runs` gate.
+    /// Cron triggers skipped by the `max_active_runs` gate (manual
+    /// triggers park in `Queued` instead; backfill has its own budget).
     pub runs_skipped: usize,
+    /// Queued runs promoted to `Running` (backfill budget, unpause,
+    /// freed `max_active_runs` capacity).
+    pub runs_promoted: usize,
     pub tis_scheduled: usize,
     pub tis_queued: usize,
     pub runs_completed: usize,
@@ -97,37 +119,83 @@ pub fn scheduling_pass(
     // Runs that this pass must (re)examine.
     let mut dirty_runs: BTreeSet<(String, u64)> = BTreeSet::new();
 
-    // Step 1: create DAG runs for periodic triggers.
-    let mut created_runs: Vec<(String, u64)> = Vec::new();
+    // Per-DAG bookkeeping shared by every trigger of this pass. The seed
+    // code recomputed `next_run_id(db, ..) + already` and
+    // `active_runs + already` independently per message; folding both
+    // into one entry computed once per DAG makes it impossible for id
+    // allocation and the `max_active_runs` gate to drift apart when a
+    // batch mixes run creation with `RunChanged` events for the same DAG.
+    struct PassDag {
+        /// `next_run_id` from the snapshot, computed once per DAG.
+        base_id: u64,
+        /// Runs created by this pass, all run types (id allocation).
+        created: u64,
+        /// Non-backfill runs created by this pass (`max_active_runs`).
+        created_fg: u64,
+        /// Active non-backfill runs in the snapshot, computed once.
+        snapshot_active_fg: u64,
+    }
+    let mut pass_dags: HashMap<String, PassDag> = HashMap::new();
+    // Backfill runs created by this pass, candidates for same-pass
+    // promotion under the backfill budget (below).
+    let mut created_backfill: Vec<RunKey> = Vec::new();
+
+    // Step 1: create DAG runs for triggers.
     for msg in batch {
         match msg {
-            SchedMsg::Periodic { dag_id, logical_ts } => {
+            SchedMsg::Trigger { dag_id, logical_ts, run_type } => {
                 let Some(spec) = db.serialized.get(dag_id) else { continue };
-                if db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false) {
+                let paused = db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false);
+                // Cron fires are silently dropped while the DAG is
+                // paused; manual and backfill triggers bypass the pause
+                // gate (Airflow parity: the run is created, parked in
+                // `Queued` until unpause for manual runs).
+                if *run_type == RunType::Scheduled && paused {
                     continue;
                 }
-                // Account for runs created earlier in this same pass.
-                let already =
-                    created_runs.iter().filter(|(d, _)| d == dag_id).count() as u64;
-                // Airflow `max_active_runs`: skip the trigger while too
-                // many runs of this DAG are still active.
-                let active_runs = db
-                    .dag_runs
-                    .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
-                    .filter(|(_, r)| !r.state.is_terminal())
-                    .count() as u64
-                    + already;
-                if active_runs >= spec.max_active_runs as u64 {
+                let st = pass_dags.entry(dag_id.clone()).or_insert_with(|| PassDag {
+                    base_id: next_run_id(db, dag_id),
+                    created: 0,
+                    created_fg: 0,
+                    snapshot_active_fg: db
+                        .dag_runs
+                        .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                        .filter(|(_, r)| {
+                            !r.state.is_terminal() && r.run_type != RunType::Backfill
+                        })
+                        .count() as u64,
+                });
+                // Airflow `max_active_runs`: cron fires past the gate
+                // are skipped (the next fire retries); manual triggers
+                // are never dropped — past the gate the run parks in
+                // `Queued` and promotes when capacity frees. Backfill
+                // runs live under their own budget entirely: they
+                // neither consume this gate nor are dropped by it (a
+                // dropped backfill trigger would leave a hole in the
+                // range).
+                let gate_full = *run_type != RunType::Backfill
+                    && st.snapshot_active_fg + st.created_fg >= spec.max_active_runs as u64;
+                if gate_full && *run_type == RunType::Scheduled {
                     out.stats.runs_skipped += 1;
                     continue;
                 }
-                let run_id = next_run_id(db, dag_id) + already;
+                let run_id = st.base_id + st.created;
+                // Backfill runs always start `Queued` (promoted below
+                // under the backfill budget); a manual run on a paused
+                // DAG or past the gate starts `Queued` until it can run;
+                // everything else starts `Running`.
+                let state = if *run_type == RunType::Backfill || paused || gate_full {
+                    RunState::Queued
+                } else {
+                    RunState::Running
+                };
                 out.txn.push(Write::InsertDagRun(crate::cloud::db::DagRunRow {
                     dag_id: dag_id.clone(),
                     run_id,
                     logical_ts: *logical_ts,
-                    state: RunState::Running,
-                    start: Some(now),
+                    run_type: *run_type,
+                    state,
+                    start: if state == RunState::Running { Some(now) } else { None },
                     end: None,
                 }));
                 for t in &spec.tasks {
@@ -143,8 +211,19 @@ pub fn scheduling_pass(
                         host: None,
                     }));
                 }
-                created_runs.push((dag_id.clone(), run_id));
+                st.created += 1;
+                if *run_type == RunType::Backfill {
+                    created_backfill.push((dag_id.clone(), run_id));
+                } else {
+                    st.created_fg += 1;
+                }
                 out.stats.runs_created += 1;
+            }
+            SchedMsg::DagResumed { .. } => {
+                // No bookkeeping needed: the foreground promotion step
+                // below runs on every pass and reads the pause flag from
+                // the snapshot — this message exists to *cause* a pass
+                // right after the unpause commit.
             }
             SchedMsg::RunChanged { dag_id, run_id } => {
                 dirty_runs.insert((dag_id.clone(), *run_id));
@@ -164,7 +243,13 @@ pub fn scheduling_pass(
     // event is routed to the scheduler"), and the *next* pass schedules
     // the roots. (MWAA's polling loop picks them up on its next
     // iteration.) Root ready times are therefore the run's start.
-    let _ = &created_runs;
+
+    // Runs this pass moves Running -> terminal free capacity for the
+    // promotion steps below: backfill completions free the global
+    // backfill budget, foreground completions free their DAG's
+    // `max_active_runs` capacity.
+    let mut backfill_freed = 0usize;
+    let mut fg_freed: HashMap<String, u64> = HashMap::new();
 
     // Steps 2+3 for existing dirty runs, plus run-completion detection.
     // Graphs are built once per DAG per pass (perf: a batch often carries
@@ -176,10 +261,18 @@ pub fn scheduling_pass(
             continue;
         }
         let Some(spec) = db.serialized.get(dag_id) else {
-            // The DAG was deleted while this run's events were in flight
-            // (a scheduling txn built from a pre-delete snapshot can
-            // re-insert rows after DeleteDag applies). Fail the orphan so
-            // it doesn't count as active forever.
+            // The DAG was deleted while this run's events were in flight.
+            // Apply-time insert guards keep orphan rows from landing, but
+            // a run inserted *before* the delete can still be referenced
+            // by in-flight events; fail it so it doesn't count as active
+            // forever.
+            if run.state == RunState::Running {
+                if run.run_type == RunType::Backfill {
+                    backfill_freed += 1;
+                } else {
+                    *fg_freed.entry(dag_id.clone()).or_insert(0) += 1;
+                }
+            }
             out.txn.push(Write::SetRunState {
                 dag_id: dag_id.clone(),
                 run_id: *run_id,
@@ -188,6 +281,13 @@ pub fn scheduling_pass(
             out.stats.runs_completed += 1;
             continue;
         };
+        if run.state == RunState::Queued {
+            // A parked run: a manual trigger that landed on a paused DAG
+            // or past the `max_active_runs` gate, or an unpromoted
+            // backfill run. The promotion steps below are its only way
+            // out; nothing to schedule yet.
+            continue;
+        }
         let graph = graphs
             .entry(spec.dag_id.as_str())
             .or_insert_with(|| DagGraph::of(spec));
@@ -211,6 +311,11 @@ pub fn scheduling_pass(
             }
         }
         if all_terminal {
+            if run.run_type == RunType::Backfill {
+                backfill_freed += 1;
+            } else {
+                *fg_freed.entry(dag_id.clone()).or_insert(0) += 1;
+            }
             out.txn.push(Write::SetRunState {
                 dag_id: dag_id.clone(),
                 run_id: *run_id,
@@ -293,6 +398,71 @@ pub fn scheduling_pass(
             }
         }
     }
+
+    // Foreground promotion: manual runs parked in `Queued` (paused DAG or
+    // saturated `max_active_runs` gate) promote once the DAG is unpaused
+    // and per-DAG capacity frees. Runs completed by *this* pass free
+    // capacity immediately; the promotion's `Running` change routes back
+    // through CDC and the next pass launches the roots. `DagResumed` and
+    // run-completion events are what bring the pass here.
+    let mut fg_capacity: HashMap<String, u64> = HashMap::new();
+    for key in db.queued_foreground() {
+        let dag_id = &key.0;
+        let Some(spec) = db.serialized.get(dag_id) else { continue };
+        if db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false) {
+            continue;
+        }
+        let cap = fg_capacity.entry(dag_id.clone()).or_insert_with(|| {
+            let running = db
+                .dag_runs
+                .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                .filter(|(_, r)| {
+                    r.state == RunState::Running && r.run_type != RunType::Backfill
+                })
+                .count() as u64;
+            let freed = fg_freed.get(dag_id).copied().unwrap_or(0);
+            (spec.max_active_runs as u64).saturating_sub(running.saturating_sub(freed))
+        });
+        if *cap == 0 {
+            continue;
+        }
+        *cap -= 1;
+        // `PromoteRun` (not a blind state write): at apply time it only
+        // lands while the row is still `Queued`, so a promotion racing a
+        // concurrent mark-terminal cannot revive the cancelled run.
+        out.txn.push(Write::PromoteRun { dag_id: dag_id.clone(), run_id: key.1 });
+        out.stats.runs_promoted += 1;
+    }
+
+    // Backfill promotion: drain queued backfill runs into `Running` while
+    // the global budget allows. Runs completed by *this* pass free budget
+    // immediately (their terminal write commits in this same txn), which
+    // keeps the pipeline moving without routing terminal run changes back
+    // to the scheduler. Snapshot queue first (key order: creation order
+    // within a DAG), then runs created above; the promotion's `Running`
+    // change routes back through CDC and the next pass launches the roots.
+    let backfill_active = db.active_backfill_count().saturating_sub(backfill_freed);
+    let mut budget = limits.max_active_backfill_runs.saturating_sub(backfill_active);
+    for key in db.queued_backfill() {
+        if budget == 0 {
+            break;
+        }
+        // Skip runs whose DAG vanished (the dirty loop fails them).
+        if !db.serialized.contains_key(&key.0) {
+            continue;
+        }
+        out.txn.push(Write::PromoteRun { dag_id: key.0.clone(), run_id: key.1 });
+        out.stats.runs_promoted += 1;
+        budget -= 1;
+    }
+    for (dag_id, run_id) in created_backfill {
+        if budget == 0 {
+            break;
+        }
+        out.txn.push(Write::PromoteRun { dag_id, run_id });
+        out.stats.runs_promoted += 1;
+        budget -= 1;
+    }
     out
 }
 
@@ -317,8 +487,12 @@ mod tests {
         db
     }
 
+    fn trigger_msg(dag_id: &str, logical_ts: u64, run_type: RunType) -> SchedMsg {
+        SchedMsg::Trigger { dag_id: dag_id.into(), logical_ts, run_type }
+    }
+
     fn periodic(dag_id: &str) -> Vec<SchedMsg> {
-        vec![SchedMsg::Periodic { dag_id: dag_id.into(), logical_ts: 0 }]
+        vec![trigger_msg(dag_id, 0, RunType::Scheduled)]
     }
 
     /// Advance a run by one RunChanged pass (what the CDC DAG-run event
@@ -401,7 +575,7 @@ mod tests {
             task_id: 0,
             state: TiState::Success,
         }];
-        let limits = SchedLimits { parallelism: 10 };
+        let limits = SchedLimits { parallelism: 10, ..SchedLimits::default() };
         let out = scheduling_pass(&db, 3, &msg, &limits);
         assert_eq!(out.stats.tis_scheduled, 50);
         assert_eq!(out.stats.tis_queued, 10, "only 10 slots");
@@ -543,12 +717,196 @@ mod tests {
     }
 
     #[test]
+    fn manual_trigger_bypasses_pause_gate() {
+        let spec = chain_dag("c", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        db.dags.get_mut("c").unwrap().is_paused = true;
+        // Cron fire: dropped. Manual trigger: creates a *queued* run
+        // (Airflow parity — the run exists instead of a 409).
+        let batch = vec![
+            trigger_msg("c", 0, RunType::Scheduled),
+            trigger_msg("c", 1, RunType::Manual),
+        ];
+        let out = scheduling_pass(&db, SECOND, &batch, &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 1);
+        db.apply(out.txn, SECOND);
+        let run = &db.dag_runs[&("c".into(), 1)];
+        assert_eq!(run.run_type, RunType::Manual);
+        assert_eq!(run.state, RunState::Queued);
+        assert_eq!(run.start, None, "parked run has not started");
+        // While paused, RunChanged passes leave it parked.
+        let stats = advance(&mut db, "c", 1, 2 * SECOND);
+        assert_eq!(stats.runs_promoted, 0);
+        assert_eq!(db.dag_runs[&("c".into(), 1)].state, RunState::Queued);
+        // Unpause: the DagResumed event promotes it to Running.
+        db.dags.get_mut("c").unwrap().is_paused = false;
+        let out = scheduling_pass(
+            &db,
+            3 * SECOND,
+            &[SchedMsg::DagResumed { dag_id: "c".into() }],
+            &SchedLimits::default(),
+        );
+        assert_eq!(out.stats.runs_promoted, 1);
+        db.apply(out.txn, 3 * SECOND);
+        assert_eq!(db.dag_runs[&("c".into(), 1)].state, RunState::Running);
+        // The next RunChanged pass queues the root.
+        let stats = advance(&mut db, "c", 1, 4 * SECOND);
+        assert_eq!(stats.tis_queued, 1);
+    }
+
+    #[test]
+    fn manual_trigger_past_gate_parks_and_promotes_on_completion() {
+        // A manual trigger is never dropped: past the `max_active_runs`
+        // gate the run parks in `Queued` and promotes when capacity
+        // frees (cron fires past the gate are still skipped).
+        let spec = chain_dag("g", 1, 10.0, 5.0).max_active_runs(1);
+        let mut db = db_with(&spec);
+        let limits = SchedLimits::default();
+        let out = scheduling_pass(&db, 0, &[trigger_msg("g", 0, RunType::Manual)], &limits);
+        assert_eq!(out.stats.runs_created, 1);
+        db.apply(out.txn, 0);
+        assert_eq!(db.dag_runs[&("g".into(), 1)].state, RunState::Running);
+        // Second manual trigger while run 1 holds the only slot.
+        let out = scheduling_pass(&db, 1, &[trigger_msg("g", 1, RunType::Manual)], &limits);
+        assert_eq!(out.stats.runs_created, 1, "parked, not dropped");
+        assert_eq!(out.stats.runs_skipped, 0);
+        db.apply(out.txn, 1);
+        assert_eq!(db.dag_runs[&("g".into(), 2)].state, RunState::Queued);
+        // While the slot is held, passes keep it parked.
+        let stats = advance(&mut db, "g", 2, 2);
+        assert_eq!(stats.runs_promoted, 0, "gate still full");
+        // Complete run 1; the completion pass promotes run 2.
+        advance(&mut db, "g", 1, 3); // queue run 1's root
+        let key = ("g".to_string(), 1, 0u32);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Success });
+        db.apply(t, 4);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "g".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Success,
+        }];
+        let out = scheduling_pass(&db, 5, &msg, &SchedLimits::default());
+        assert_eq!(out.stats.runs_completed, 1);
+        assert_eq!(out.stats.runs_promoted, 1, "freed slot promotes the parked run");
+        db.apply(out.txn, 5);
+        assert_eq!(db.dag_runs[&("g".into(), 2)].state, RunState::Running);
+    }
+
+    #[test]
+    fn manual_trigger_on_unpaused_dag_runs_immediately() {
+        let spec = chain_dag("c", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let msg = vec![trigger_msg("c", 0, RunType::Manual)];
+        let out = scheduling_pass(&db, SECOND, &msg, &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 1);
+        db.apply(out.txn, SECOND);
+        let run = &db.dag_runs[&("c".into(), 1)];
+        assert_eq!(run.run_type, RunType::Manual);
+        assert_eq!(run.state, RunState::Running);
+        assert_eq!(run.start, Some(SECOND));
+    }
+
+    #[test]
+    fn backfill_runs_promoted_under_budget() {
+        let spec = chain_dag("b", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let limits = SchedLimits { max_active_backfill_runs: 2, ..SchedLimits::default() };
+        let batch: Vec<SchedMsg> =
+            (0..5).map(|i| trigger_msg("b", i * SECOND, RunType::Backfill)).collect();
+        let out = scheduling_pass(&db, SECOND, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 5, "the whole range materializes");
+        assert_eq!(out.stats.runs_promoted, 2, "budget promotes two");
+        db.apply(out.txn, SECOND);
+        assert_eq!(db.active_backfill_count(), 2);
+        assert_eq!(db.queued_backfill_count(), 3);
+        // A later pass with no budget change promotes nothing more
+        // (explicit pass: `advance` would use the default limits).
+        let msg = vec![SchedMsg::RunChanged { dag_id: "b".into(), run_id: 1 }];
+        let out = scheduling_pass(&db, 2 * SECOND, &msg, &limits);
+        assert_eq!(out.stats.runs_promoted, 0, "budget still saturated");
+        db.apply(out.txn, 2 * SECOND); // queues run 1's root
+        // Complete run 1's task; the pass that detects the completion
+        // frees budget and promotes the next queued run in the same txn.
+        let key = ("b".to_string(), 1, 0u32);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Success });
+        db.apply(t, 3 * SECOND);
+        let msg = vec![SchedMsg::TaskFinished {
+            dag_id: "b".into(),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Success,
+        }];
+        let out = scheduling_pass(&db, 4 * SECOND, &msg, &limits);
+        assert_eq!(out.stats.runs_completed, 1);
+        assert_eq!(out.stats.runs_promoted, 1, "freed slot promotes run 3");
+        db.apply(out.txn, 4 * SECOND);
+        assert_eq!(db.active_backfill_count(), 2);
+        assert_eq!(db.queued_backfill_count(), 2);
+    }
+
+    #[test]
+    fn backfill_does_not_consume_max_active_runs() {
+        let spec = chain_dag("m", 1, 10.0, 5.0).max_active_runs(1);
+        let mut db = db_with(&spec);
+        let limits = SchedLimits::default();
+        let batch: Vec<SchedMsg> =
+            (0..2).map(|i| trigger_msg("m", i, RunType::Backfill)).collect();
+        let out = scheduling_pass(&db, 0, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 2);
+        db.apply(out.txn, 0);
+        // A cron fire still creates its run: backfill runs are outside
+        // the `max_active_runs` gate.
+        let out = scheduling_pass(&db, 1, &periodic("m"), &limits);
+        assert_eq!(out.stats.runs_created, 1);
+        assert_eq!(out.stats.runs_skipped, 0);
+        db.apply(out.txn, 1);
+        assert_eq!(db.dag_runs.len(), 3);
+        // But a second cron fire is gated by the now-active cron run.
+        let out = scheduling_pass(&db, 2, &periodic("m"), &limits);
+        assert_eq!(out.stats.runs_created, 0);
+        assert_eq!(out.stats.runs_skipped, 1);
+    }
+
+    #[test]
+    fn mixed_batch_keeps_id_and_gate_accounting_consistent() {
+        // Regression for the same-pass bookkeeping audit: a batch mixing
+        // run creation with `RunChanged` for the same DAG must neither
+        // double-count the `max_active_runs` gate nor collide run ids.
+        let spec = chain_dag("x", 1, 10.0, 5.0).max_active_runs(3);
+        let mut db = db_with(&spec);
+        // Run 1 exists and is active.
+        let out = scheduling_pass(&db, 0, &periodic("x"), &SchedLimits::default());
+        db.apply(out.txn, 0);
+        let batch = vec![
+            trigger_msg("x", 1, RunType::Scheduled),
+            SchedMsg::RunChanged { dag_id: "x".into(), run_id: 1 },
+            trigger_msg("x", 2, RunType::Manual),
+        ];
+        let out = scheduling_pass(&db, SECOND, &batch, &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 2, "one active + two new fits gate 3");
+        assert_eq!(out.stats.runs_skipped, 0);
+        db.apply(out.txn, SECOND);
+        assert_eq!(db.dag_runs.len(), 3, "distinct run ids, no overwrite");
+        assert!(db.dag_runs.contains_key(&("x".into(), 2)));
+        assert!(db.dag_runs.contains_key(&("x".into(), 3)));
+        // The gate is now full: one more trigger is skipped.
+        let out = scheduling_pass(&db, 2 * SECOND, &periodic("x"), &SchedLimits::default());
+        assert_eq!(out.stats.runs_created, 0);
+        assert_eq!(out.stats.runs_skipped, 1);
+    }
+
+    #[test]
     fn two_periodics_same_pass_get_distinct_runs() {
         let spec = chain_dag("c", 1, 10.0, 5.0);
         let mut db = db_with(&spec);
         let batch = vec![
-            SchedMsg::Periodic { dag_id: "c".into(), logical_ts: 0 },
-            SchedMsg::Periodic { dag_id: "c".into(), logical_ts: 1 },
+            trigger_msg("c", 0, RunType::Scheduled),
+            trigger_msg("c", 1, RunType::Scheduled),
         ];
         let out = scheduling_pass(&db, 0, &batch, &SchedLimits::default());
         assert_eq!(out.stats.runs_created, 2);

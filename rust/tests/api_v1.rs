@@ -4,7 +4,7 @@
 //! compatibility shim.
 
 use sairflow::api::{self, dispatch, handle_http, Method};
-use sairflow::dag::state::{RunState, TiState};
+use sairflow::dag::state::{RunState, RunType, TiState};
 use sairflow::sairflow::{Config, World};
 use sairflow::sim::engine::Sim;
 use sairflow::sim::time::{mins, MINUTE};
@@ -297,16 +297,21 @@ fn patch_dag_pause_is_a_db_transaction() {
     assert!(w.db.read().dags["cron"].is_paused);
     assert!(w.db.read().dag_runs.is_empty(), "paused DAG must not run");
 
-    // Triggering a paused DAG is an honest 409, not a silent drop.
-    let e = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags/cron/dagRuns", None);
-    assert_eq!(e.get("status").unwrap().as_u64(), Some(409));
-    assert_eq!(e.get("error").unwrap().get("kind").unwrap().as_str(), Some("conflict"));
+    // Triggering a paused DAG is Airflow parity now: a 200 whose run is
+    // created `queued` (not the 409 this endpoint used to return).
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags/cron/dagRuns", None);
+    assert_eq!(resp.get("status").unwrap().as_u64(), Some(200), "trigger: {resp}");
+    assert_eq!(resp.get("dag_is_paused").unwrap().as_bool(), Some(true));
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    assert_eq!(w.db.read().dag_runs[&("cron".into(), 1)].state, RunState::Queued);
 
-    // Unpause resumes periodic runs.
+    // Unpause resumes periodic runs and starts the parked manual run.
     let body = Json::obj().set("is_paused", false);
     dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/cron", Some(&body));
     sim.run_until(&mut w, 30 * MINUTE, 10_000_000);
-    assert!(!w.db.read().dag_runs.is_empty());
+    let db = w.db.read();
+    assert_eq!(db.dag_runs[&("cron".into(), 1)].state, RunState::Success);
+    assert!(db.dag_runs.len() > 1, "cron fires resumed");
 }
 
 #[test]
@@ -365,6 +370,232 @@ fn delete_dag_removes_everything() {
 }
 
 #[test]
+fn manual_trigger_on_paused_dag_creates_queued_run() {
+    // Airflow parity regression: `POST .../dagRuns` on a paused DAG used
+    // to 409; real Airflow creates a queued run that starts on unpause.
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    let body = Json::obj().set("is_paused", true);
+    dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/etl", Some(&body));
+    sim.run_until(&mut w, sim.now() + mins(1.0), 10_000_000);
+
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags/etl/dagRuns", None);
+    assert_eq!(resp.get("status").unwrap().as_u64(), Some(200), "no 409: {resp}");
+    assert_eq!(resp.get("run_type").unwrap().as_str(), Some("manual"));
+    assert_eq!(resp.get("dag_is_paused").unwrap().as_bool(), Some(true));
+    sim.run_until(&mut w, sim.now() + mins(5.0), 10_000_000);
+    {
+        let db = w.db.read();
+        let run = &db.dag_runs[&("etl".into(), 1)];
+        assert_eq!(run.state, RunState::Queued);
+        assert_eq!(run.run_type, RunType::Manual);
+        assert!(run.start.is_none(), "parked run has not started");
+        assert!(
+            db.task_instances.values().all(|t| t.state == TiState::None),
+            "no task ran while paused"
+        );
+    }
+    // The run payload exposes its provenance and parked state.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/etl/dagRuns/1", None);
+    let run = resp.get("dag_run").unwrap();
+    assert_eq!(run.get("run_type").unwrap().as_str(), Some("manual"));
+    assert_eq!(run.get("state").unwrap().as_str(), Some("queued"));
+
+    // Unpause: the queued run starts and completes through the normal
+    // CDC → scheduler → executor path.
+    let body = Json::obj().set("is_paused", false);
+    dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/etl", Some(&body));
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let db = w.db.read();
+    assert_eq!(db.dag_runs[&("etl".into(), 1)].state, RunState::Success);
+    assert!(db.task_instances.values().all(|t| t.state == TiState::Success));
+}
+
+#[test]
+fn pause_preserved_across_dag_reupload() {
+    // Regression: the parse function upserts the dag row with
+    // `is_paused: false`; apply-time logic must keep the operator's flag.
+    let (mut sim, mut w) = deployed(&chain_dag("keep", 1, 1.0, 2.0));
+    let body = Json::obj().set("is_paused", true);
+    dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/keep", Some(&body));
+    sim.run_until(&mut w, sim.now() + mins(1.0), 10_000_000);
+    assert!(w.db.read().dags["keep"].is_paused);
+
+    let body = Json::obj()
+        .set("file_text", chain_dag("keep", 1, 1.0, 2.0).to_json().to_string_pretty());
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags", Some(&body));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "re-upload: {resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    assert!(w.db.read().dags["keep"].is_paused, "re-upload must not unpause");
+    assert!(w.db.read().dag_runs.is_empty(), "still paused: no cron runs");
+}
+
+#[test]
+fn backfill_creates_full_range_through_event_path() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    // Backfill bypasses the pause gate (Airflow's backfill ignores it).
+    let body = Json::obj().set("is_paused", true);
+    dispatch(&mut sim, &mut w, Method::Patch, "/api/v1/dags/etl", Some(&body));
+    sim.run_until(&mut w, sim.now() + mins(1.0), 10_000_000);
+    let txns_before = w.db.read().stats.txns;
+
+    let body = Json::obj()
+        .set("start_ts", 0u64)
+        .set("end_ts", 240u64)
+        .set("interval_secs", 60u64);
+    let resp = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/etl/dagRuns/backfill",
+        Some(&body),
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "backfill: {resp}");
+    assert_eq!(resp.get("backfill_runs").unwrap().as_u64(), Some(5));
+    sim.run_until(&mut w, sim.now() + mins(15.0), 10_000_000);
+    {
+        let db = w.db.read();
+        assert!(db.stats.txns > txns_before, "flowed through DB transactions");
+        assert_eq!(db.dag_runs.len(), 5, "the whole range materialized");
+        let mut dates: Vec<f64> =
+            db.dag_runs.values().map(|r| r.logical_ts as f64 / 1e6).collect();
+        dates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(dates, vec![0.0, 60.0, 120.0, 180.0, 240.0]);
+        assert!(db.dag_runs.values().all(|r| r.run_type == RunType::Backfill));
+        assert!(db.dag_runs.values().all(|r| r.state == RunState::Success));
+    }
+
+    // The run_type filter composes with listing and pagination.
+    let page = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/dags/etl/dagRuns?run_type=backfill&limit=0",
+        None,
+    );
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(5));
+    let page =
+        dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/etl/dagRuns?run_type=manual", None);
+    assert_eq!(page.get("total_entries").unwrap().as_u64(), Some(0));
+    let e =
+        dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/etl/dagRuns?run_type=bogus", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+}
+
+#[test]
+fn backfill_validates_range_and_dag() {
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    let post = |sim: &mut Sim<World>, w: &mut World, body: &Json| {
+        dispatch(sim, w, Method::Post, "/api/v1/dags/etl/dagRuns/backfill", Some(body))
+    };
+    let bad =
+        Json::obj().set("start_ts", 10u64).set("end_ts", 0u64).set("interval_secs", 60u64);
+    assert_eq!(post(&mut sim, &mut w, &bad).get("status").unwrap().as_u64(), Some(400));
+    let bad = Json::obj().set("start_ts", 0u64).set("end_ts", 10u64).set("interval_secs", 0u64);
+    assert_eq!(post(&mut sim, &mut w, &bad).get("status").unwrap().as_u64(), Some(400));
+    let bad = Json::obj()
+        .set("start_ts", 0u64)
+        .set("end_ts", 1_000_000u64)
+        .set("interval_secs", 1u64);
+    let e = post(&mut sim, &mut w, &bad);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400), "run cap: {e}");
+    let missing = Json::obj().set("start_ts", 0u64).set("end_ts", 10u64);
+    assert_eq!(post(&mut sim, &mut w, &missing).get("status").unwrap().as_u64(), Some(400));
+    let e = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags/etl/dagRuns/backfill", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400), "missing body");
+    let body = Json::obj().set("start_ts", 0u64).set("end_ts", 0u64).set("interval_secs", 60u64);
+    let e = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/ghost/dagRuns/backfill",
+        Some(&body),
+    );
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+    // None of the rejected requests created anything.
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    assert!(w.db.read().dag_runs.is_empty());
+}
+
+#[test]
+fn backfill_throttled_and_cron_unstarved() {
+    // A 4-run backfill of a slow DAG under `max_active_backfill_runs: 1`
+    // must drain one run at a time while a 2-minute cron DAG keeps
+    // scheduling — the separate budget prevents starvation.
+    let mut cfg = Config::seeded(77);
+    cfg.limits.max_active_backfill_runs = 1;
+    let w = World::new(cfg);
+    let mut sim = w.sim();
+    let mut w = w;
+    let mut bf = sairflow::dag::spec::DagSpec::new("bf");
+    bf.sleep_task("slow", 30.0, &[]);
+    let body = Json::obj().set("file_text", bf.to_json().to_string_pretty());
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags", Some(&body));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "upload bf: {resp}");
+    let cron = chain_dag("cron", 1, 1.0, 2.0);
+    let body = Json::obj().set("file_text", cron.to_json().to_string_pretty());
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/dags", Some(&body));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "upload cron: {resp}");
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+
+    let body = Json::obj()
+        .set("start_ts", 0u64)
+        .set("end_ts", 180u64)
+        .set("interval_secs", 60u64);
+    let resp = dispatch(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/dags/bf/dagRuns/backfill",
+        Some(&body),
+    );
+    assert_eq!(resp.get("backfill_runs").unwrap().as_u64(), Some(4), "backfill: {resp}");
+
+    // Sample while the backfill drains: the budget is never exceeded.
+    let mut max_active = 0usize;
+    for _ in 0..120 {
+        sim.run_until(&mut w, sim.now() + mins(0.25), 10_000_000);
+        max_active = max_active.max(w.db.read().active_backfill_count());
+    }
+    assert!(max_active <= 1, "backfill budget violated: {max_active} active");
+    let db = w.db.read();
+    let bf_runs: Vec<_> = db
+        .dag_runs
+        .range(("bf".to_string(), 0)..=("bf".to_string(), u64::MAX))
+        .map(|(_, r)| r)
+        .collect();
+    assert_eq!(bf_runs.len(), 4);
+    assert!(bf_runs.iter().all(|r| r.run_type == RunType::Backfill));
+    assert!(
+        bf_runs.iter().all(|r| r.state == RunState::Success),
+        "whole range drained: {bf_runs:?}"
+    );
+    // Cron traffic kept flowing while the backfill drained.
+    let cron_done = db
+        .dag_runs
+        .range(("cron".to_string(), 0)..=("cron".to_string(), u64::MAX))
+        .filter(|(_, r)| r.state == RunState::Success)
+        .count();
+    assert!(cron_done >= 5, "cron starved during backfill: {cron_done} runs");
+}
+
+#[test]
+fn delete_racing_trigger_leaves_no_orphan_rows() {
+    // Regression for the delete-race ROADMAP item: a scheduling txn built
+    // from a pre-delete snapshot must not land orphan rows — apply-time
+    // insert guards drop them. (Whichever way the commits interleave, the
+    // end state is a fully empty surface.)
+    let (mut sim, mut w) = deployed(&manual_chain("racy"));
+    trigger(&mut sim, &mut w, "racy");
+    let resp = dispatch(&mut sim, &mut w, Method::Delete, "/api/v1/dags/racy", None);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let db = w.db.read();
+    assert!(!db.dags.contains_key("racy"));
+    assert!(db.dag_runs.is_empty(), "no orphan run rows");
+    assert!(db.task_instances.is_empty(), "no orphan TI rows");
+}
+
+#[test]
 fn legacy_wire_format_still_roundtrips() {
     let (mut sim, mut w) = deployed(&manual_chain("etl"));
     trigger(&mut sim, &mut w, "etl");
@@ -380,6 +611,8 @@ fn legacy_wire_format_still_roundtrips() {
     let runs = resp.get("runs").expect("legacy key 'runs'").as_arr().unwrap();
     assert_eq!(runs.len(), 1);
     assert_eq!(runs[0].get("state").unwrap().as_str(), Some("success"));
+    // v1's `run_type` is stripped from legacy run objects (bit-compat).
+    assert!(runs[0].get("run_type").is_none());
 
     let resp = api::handle_text(
         &mut sim,

@@ -9,7 +9,7 @@
 use sairflow::cloud::db::{DagRow, MetaDb, Txn, Write};
 use sairflow::dag::graph::DagGraph;
 use sairflow::dag::spec::DagSpec;
-use sairflow::dag::state::TiState;
+use sairflow::dag::state::{RunType, TiState};
 use sairflow::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
 use sairflow::util::prop::{check, Gen};
 
@@ -55,7 +55,11 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
     let out = scheduling_pass(
         &db,
         now,
-        &[SchedMsg::Periodic { dag_id: spec.dag_id.clone(), logical_ts: 0 }],
+        &[SchedMsg::Trigger {
+            dag_id: spec.dag_id.clone(),
+            logical_ts: 0,
+            run_type: RunType::Scheduled,
+        }],
         limits,
     );
     db.apply(out.txn, now);
@@ -189,7 +193,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
 fn random_dags_complete_with_invariants() {
     check("scheduler invariants (no failures)", 120, |g| {
         let spec = gen_dag(g, "prop");
-        let limits = SchedLimits { parallelism: g.sized(1, 130) };
+        let limits = SchedLimits { parallelism: g.sized(1, 130), ..SchedLimits::default() };
         drive(g, &spec, &limits, false)
     });
 }
@@ -201,7 +205,7 @@ fn random_dags_with_failures_and_retries() {
         for i in 0..spec.tasks.len() {
             spec.tasks[i].retries = g.u64_in(0, 2) as u32;
         }
-        let limits = SchedLimits { parallelism: g.sized(2, 130) };
+        let limits = SchedLimits { parallelism: g.sized(2, 130), ..SchedLimits::default() };
         drive(g, &spec, &limits, true)
     });
 }
@@ -210,7 +214,7 @@ fn random_dags_with_failures_and_retries() {
 fn tiny_parallelism_still_completes() {
     check("parallelism=1 serializes but completes", 40, |g| {
         let spec = gen_dag(g, "serial");
-        let limits = SchedLimits { parallelism: 1 };
+        let limits = SchedLimits { parallelism: 1, ..SchedLimits::default() };
         drive(g, &spec, &limits, false)
     });
 }
@@ -220,7 +224,11 @@ fn pass_is_deterministic() {
     check("pass determinism", 60, |g| {
         let spec = gen_dag(g, "det");
         let db = db_with(&spec);
-        let msgs = vec![SchedMsg::Periodic { dag_id: spec.dag_id.clone(), logical_ts: 0 }];
+        let msgs = vec![SchedMsg::Trigger {
+            dag_id: spec.dag_id.clone(),
+            logical_ts: 0,
+            run_type: RunType::Scheduled,
+        }];
         let a = scheduling_pass(&db, 5, &msgs, &SchedLimits::default());
         let b = scheduling_pass(&db, 5, &msgs, &SchedLimits::default());
         if a.stats == b.stats && a.txn.writes.len() == b.txn.writes.len() {

@@ -13,4 +13,10 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo test =="
 cargo test -q
 
+echo "== sairflow api --demo (smoke) =="
+# Drive the v1 control-plane API end-to-end (upload → trigger → clear →
+# pause → trigger-while-paused → unpause → backfill → health → delete)
+# so the pre-PR gate exercises the API surface, not just the unit tests.
+cargo run -q --bin sairflow -- api --demo > /dev/null
+
 echo "check.sh: all gates passed"

@@ -20,13 +20,20 @@ use std::fmt;
 pub enum ErrorKind {
     /// Malformed request: bad path parameter, bad query value, bad body.
     BadRequest,
-    /// The addressed resource (DAG, run, task instance) does not exist.
+    /// Missing or invalid credentials for the addressed tenant.
+    Unauthorized,
+    /// The addressed resource (tenant, DAG, run, task instance) does not
+    /// exist — also the answer for resources that exist under *another*
+    /// tenant (404-without-leak).
     NotFound,
     /// The route exists but not for this HTTP method.
     MethodNotAllowed,
     /// The request is well-formed but conflicts with resource state
     /// (e.g. clearing a task instance that is currently executing).
     Conflict,
+    /// The tenant is over its gateway rate budget (admission control);
+    /// retry after the token bucket refills.
+    TooManyRequests,
 }
 
 impl ErrorKind {
@@ -34,9 +41,11 @@ impl ErrorKind {
     pub fn status(self) -> u16 {
         match self {
             ErrorKind::BadRequest => 400,
+            ErrorKind::Unauthorized => 401,
             ErrorKind::NotFound => 404,
             ErrorKind::MethodNotAllowed => 405,
             ErrorKind::Conflict => 409,
+            ErrorKind::TooManyRequests => 429,
         }
     }
 
@@ -44,9 +53,11 @@ impl ErrorKind {
     pub fn as_str(self) -> &'static str {
         match self {
             ErrorKind::BadRequest => "bad_request",
+            ErrorKind::Unauthorized => "unauthorized",
             ErrorKind::NotFound => "not_found",
             ErrorKind::MethodNotAllowed => "method_not_allowed",
             ErrorKind::Conflict => "conflict",
+            ErrorKind::TooManyRequests => "too_many_requests",
         }
     }
 }
@@ -79,6 +90,19 @@ impl ApiError {
 
     pub fn conflict(detail: impl Into<String>) -> ApiError {
         ApiError { kind: ErrorKind::Conflict, detail: detail.into() }
+    }
+
+    pub fn unauthorized(detail: impl Into<String>) -> ApiError {
+        ApiError { kind: ErrorKind::Unauthorized, detail: detail.into() }
+    }
+
+    pub fn too_many_requests(detail: impl Into<String>) -> ApiError {
+        ApiError { kind: ErrorKind::TooManyRequests, detail: detail.into() }
+    }
+
+    /// Shorthand: 404 for a tenant id that is not registered.
+    pub fn unknown_tenant(tenant_id: &str) -> ApiError {
+        ApiError::not_found(format!("no tenant '{tenant_id}'"))
     }
 
     /// Shorthand: 404 for a DAG id that is not registered.
@@ -119,9 +143,13 @@ mod tests {
     #[test]
     fn kinds_map_to_http_statuses() {
         assert_eq!(ErrorKind::BadRequest.status(), 400);
+        assert_eq!(ErrorKind::Unauthorized.status(), 401);
         assert_eq!(ErrorKind::NotFound.status(), 404);
         assert_eq!(ErrorKind::MethodNotAllowed.status(), 405);
         assert_eq!(ErrorKind::Conflict.status(), 409);
+        assert_eq!(ErrorKind::TooManyRequests.status(), 429);
+        assert_eq!(ErrorKind::Unauthorized.as_str(), "unauthorized");
+        assert_eq!(ErrorKind::TooManyRequests.as_str(), "too_many_requests");
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Gateway admission control: per-tenant token-bucket rate limiting in
+//! front of the v1 dispatcher.
+//!
+//! The paper's control plane is a shared, elastically scaled serverless
+//! service (§4.1); what keeps one tenant's request storm from degrading
+//! every other tenant is admission control at the *interface* (the
+//! DataFlower argument: orchestration overhead must be bounded at the
+//! boundary, not inside the handlers). The gateway sits between tenant
+//! resolution and handler dispatch: every admitted request debits the
+//! tenant's token bucket, every rejection is a structured `429
+//! too_many_requests` envelope, and both outcomes are counted — totals
+//! and per tenant — for the health surface.
+//!
+//! The bucket is classic: `tokens` refills at `rps` up to `burst`
+//! (both from the tenant's [`TenantRow`] record), one token per request.
+//! A tenant with no rate budget configured (the `default` tenant's
+//! shipping state) is always admitted but still counted.
+
+use crate::api::error::ApiError;
+use crate::cloud::db::TenantRow;
+use crate::sim::time::{as_secs, SimTime};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+
+/// One tenant's token bucket. Buckets start full (a fresh tenant gets its
+/// whole burst) and are created lazily on first request.
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    tokens: f64,
+    last_refill: SimTime,
+}
+
+/// Admitted/rejected counters (one pair globally, one per tenant).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct AdmissionStats {
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl AdmissionStats {
+    fn to_json(&self) -> Json {
+        Json::obj().set("admitted", self.admitted).set("rejected", self.rejected)
+    }
+}
+
+/// The admission-control state of the API gateway.
+#[derive(Debug, Default)]
+pub struct Gateway {
+    buckets: HashMap<String, TokenBucket>,
+    /// Totals across all tenants.
+    pub totals: AdmissionStats,
+    /// Per-tenant counters (BTreeMap: deterministic health serialization).
+    per_tenant: BTreeMap<String, AdmissionStats>,
+}
+
+impl Gateway {
+    pub fn new() -> Gateway {
+        Gateway::default()
+    }
+
+    /// Admit or reject one request for `tenant` at simulated time `now`.
+    /// Rate parameters are read from the tenant record on every call, so
+    /// an updated budget takes effect immediately (a shrunk burst clamps
+    /// the stored tokens on the next refill).
+    pub fn admit(&mut self, tenant: &TenantRow, now: SimTime) -> Result<(), ApiError> {
+        let decision = match tenant.rate {
+            None => Ok(()),
+            Some((rps, burst)) => {
+                let b = self
+                    .buckets
+                    .entry(tenant.tenant_id.clone())
+                    .or_insert_with(|| TokenBucket { tokens: burst, last_refill: now });
+                let dt = as_secs(now.saturating_sub(b.last_refill));
+                b.tokens = (b.tokens + dt * rps).min(burst);
+                b.last_refill = now;
+                if b.tokens >= 1.0 {
+                    b.tokens -= 1.0;
+                    Ok(())
+                } else {
+                    // How long until one token is available — a hint, the
+                    // actual refill happens on the next call.
+                    let retry_secs = if rps > 0.0 { (1.0 - b.tokens) / rps } else { f64::INFINITY };
+                    Err(ApiError::too_many_requests(format!(
+                        "tenant '{}' is over its rate budget ({rps} req/s, burst {burst}); \
+                         retry in {retry_secs:.2} s",
+                        tenant.tenant_id
+                    )))
+                }
+            }
+        };
+        let counters = self.per_tenant.entry(tenant.tenant_id.clone()).or_default();
+        match &decision {
+            Ok(()) => {
+                counters.admitted += 1;
+                self.totals.admitted += 1;
+            }
+            Err(_) => {
+                counters.rejected += 1;
+                self.totals.rejected += 1;
+            }
+        }
+        decision
+    }
+
+    /// One tenant's counters (zeroes for a tenant that never called).
+    pub fn tenant_stats(&self, tenant_id: &str) -> AdmissionStats {
+        self.per_tenant.get(tenant_id).cloned().unwrap_or_default()
+    }
+
+    /// The health-surface JSON for one tenant's admission counters.
+    pub fn tenant_json(&self, tenant_id: &str) -> Json {
+        self.tenant_stats(tenant_id).to_json()
+    }
+
+    /// The health-surface JSON for the whole gateway: totals plus the
+    /// per-tenant breakdown (only shown on the default/operator surface —
+    /// tenant-scoped health gets `tenant_json`).
+    pub fn totals_json(&self) -> Json {
+        let mut by_tenant = Json::obj();
+        for (t, s) in &self.per_tenant {
+            by_tenant = by_tenant.set(t, s.to_json());
+        }
+        Json::obj()
+            .set("admitted", self.totals.admitted)
+            .set("rejected", self.totals.rejected)
+            .set("by_tenant", by_tenant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::error::ErrorKind;
+    use crate::sim::time::secs;
+
+    fn tenant(rate: Option<(f64, f64)>) -> TenantRow {
+        TenantRow {
+            tenant_id: "acme".into(),
+            token: None,
+            rate,
+            max_active_backfill_runs: None,
+        }
+    }
+
+    #[test]
+    fn unlimited_tenant_always_admitted_but_counted() {
+        let mut g = Gateway::new();
+        let t = tenant(None);
+        for _ in 0..100 {
+            assert!(g.admit(&t, 0).is_ok());
+        }
+        assert_eq!(g.tenant_stats("acme").admitted, 100);
+        assert_eq!(g.totals.admitted, 100);
+        assert_eq!(g.totals.rejected, 0);
+    }
+
+    #[test]
+    fn burst_then_429_then_refill() {
+        let mut g = Gateway::new();
+        let t = tenant(Some((1.0, 2.0))); // 1 req/s, burst 2
+        assert!(g.admit(&t, 0).is_ok());
+        assert!(g.admit(&t, 0).is_ok());
+        let e = g.admit(&t, 0).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::TooManyRequests);
+        assert!(e.detail.contains("acme"));
+        assert_eq!(g.tenant_stats("acme"), AdmissionStats { admitted: 2, rejected: 1 });
+        // One second later one token has refilled.
+        assert!(g.admit(&t, secs(1.0)).is_ok());
+        assert!(g.admit(&t, secs(1.0)).is_err());
+        // Refill is capped at the burst: a long idle period does not bank
+        // unbounded tokens.
+        assert!(g.admit(&t, secs(3600.0)).is_ok());
+        assert!(g.admit(&t, secs(3600.0)).is_ok());
+        assert!(g.admit(&t, secs(3600.0)).is_err());
+    }
+
+    #[test]
+    fn tenants_are_isolated() {
+        let mut g = Gateway::new();
+        let limited = tenant(Some((1.0, 1.0)));
+        let mut other = tenant(Some((1.0, 1.0)));
+        other.tenant_id = "globex".into();
+        assert!(g.admit(&limited, 0).is_ok());
+        assert!(g.admit(&limited, 0).is_err(), "acme exhausted");
+        // Globex has its own bucket — unaffected by acme's rejections.
+        assert!(g.admit(&other, 0).is_ok());
+        assert_eq!(g.tenant_stats("globex").rejected, 0);
+        let totals = g.totals_json();
+        assert_eq!(totals.get("admitted").unwrap().as_u64(), Some(2));
+        assert_eq!(totals.get("rejected").unwrap().as_u64(), Some(1));
+        assert!(totals.get("by_tenant").unwrap().get("acme").is_some());
+    }
+}

@@ -14,7 +14,7 @@
 //!
 //! | Method | Path | Action |
 //! |--------|------|--------|
-//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, run/task state breakdowns |
+//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters |
 //! | GET    | `/api/v1/dags` | list DAGs (`limit`, `offset`, `paused=true\|false`) |
 //! | POST   | `/api/v1/dags` | upload a DAG file (body `{"file_text": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
@@ -22,11 +22,30 @@
 //! | DELETE | `/api/v1/dags/{dag_id}` | delete the DAG and all its rows |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `state=<run state>`, `run_type=scheduled\|manual\|backfill`) |
 //! | POST   | `/api/v1/dags/{dag_id}/dagRuns` | trigger a manual run — never dropped: on a paused DAG or past `max_active_runs` the run is created `queued` and promoted later (Airflow parity, not a 409) |
-//! | POST   | `/api/v1/dags/{dag_id}/dagRuns/backfill` | expand `{"start_ts", "end_ts", "interval_secs"}` into backfill-typed runs, throttled by `max_active_backfill_runs` |
+//! | POST   | `/api/v1/dags/{dag_id}/dagRuns/backfill` | expand `{"start_ts", "end_ts", "interval_secs"}` into backfill-typed runs, throttled by the tenant's `max_active_backfill_runs`; dates that already have a run are deduped (`created`/`skipped` in the response) |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | run detail |
 //! | PATCH  | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | mark run success/failed (body `{"state": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}/taskInstances` | list task instances (`limit`, `offset`, `state=<ti state>`) |
 //! | POST   | `/api/v1/dags/{dag_id}/clearTaskInstances` | clear task instances for re-execution (body `{"run_id": n, "task_ids": [...], "only_failed": bool}`) |
+//! | GET    | `/api/v1/tenants` | list tenants (operator surface; tokens are never returned) |
+//! | POST   | `/api/v1/tenants` | create/update a tenant (body `{"tenant_id", "token"?, "rate_rps"?, "rate_burst"?, "max_active_backfill_runs"?}`) |
+//! | GET    | `/api/v1/tenants/{tenant_id}` | tenant detail + live admission counters |
+//!
+//! # Multi-tenancy
+//!
+//! Every resource path above also exists under
+//! `/api/v1/tenants/{tenant}/...` — the identical layout inside that
+//! tenant's namespace. Un-prefixed paths address the built-in `default`
+//! tenant, which ships open (no token, no rate limit), keeping every
+//! legacy caller working unchanged. The router resolves the tenant
+//! *before* dispatch; then, in order: unknown tenant → 404, bad
+//! `Authorization: Bearer <token>` → 401, over the tenant's token-bucket
+//! rate budget → 429 `too_many_requests` ([`gateway`]). Internally every
+//! resource is keyed by a tenant-qualified DAG id (see
+//! [`crate::dag::state::scoped_dag_id`]), so uploads, lists, triggers,
+//! backfill budgets, health breakdowns and deletes are fully isolated
+//! between tenants — a resource under another tenant is a plain 404,
+//! indistinguishable from one that does not exist.
 //!
 //! Every list endpoint paginates (`limit` default 25, capped at 100;
 //! `offset` default 0) and reports `total_entries`. Every response is an
@@ -62,20 +81,23 @@
 //! collections come back like the old handlers returned), renames the
 //! response collections back to their legacy keys (`dag_runs` → `runs`,
 //! `task_instances` → `tasks`), strips v1-only fields the legacy format
-//! never carried (`run_type`, `dag_is_paused`), flattens the error
-//! envelope back to the legacy string shape (`"error": "<detail>"`), and
-//! keeps the legacy no-existence-check list behavior (unknown ids →
-//! empty collections).
+//! never carried (`run_type`, `dag_is_paused`, and the tenancy/admission
+//! health keys — the shim always addresses the open `default` tenant),
+//! flattens the error envelope back to the legacy string shape
+//! (`"error": "<detail>"`), and keeps the legacy no-existence-check list
+//! behavior (unknown ids → empty collections).
 
 pub mod error;
+pub mod gateway;
 pub mod page;
 pub mod router;
 pub mod v1;
 
 pub use error::{ApiError, ApiResult, ErrorKind};
+pub use gateway::{AdmissionStats, Gateway};
 pub use page::Page;
 pub use router::{Endpoint, Method, Query};
-pub use v1::{dispatch, handle_http};
+pub use v1::{dispatch, dispatch_auth, handle_http, handle_http_auth};
 
 use crate::sairflow::World;
 use crate::sim::engine::Sim;
@@ -300,7 +322,9 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
             let resp = v1::dispatch(sim, w, Method::Get, "/api/v1/health", None);
             // Legacy `active_runs` counted queued+running; v1 now reports
             // running only (parked runs are no longer transient). Restore
-            // the old semantics and drop the v1-only backfill counters.
+            // the old semantics and drop the v1-only backfill, tenancy and
+            // admission keys (bit-compat: strict legacy deserializers
+            // reject unknown fields).
             let legacy_active = resp
                 .get("run_states")
                 .map(|rs| {
@@ -308,8 +332,17 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
                         + rs.get("running").and_then(|v| v.as_u64()).unwrap_or(0)
                 })
                 .unwrap_or(0);
-            strip_keys(resp, &["active_backfill_runs", "queued_backfill_runs"])
-                .set("active_runs", legacy_active)
+            strip_keys(
+                resp,
+                &[
+                    "active_backfill_runs",
+                    "queued_backfill_runs",
+                    "tenant",
+                    "admission",
+                    "admission_totals",
+                ],
+            )
+            .set("active_runs", legacy_active)
         }
     };
     legacy_error(resp)

@@ -1,13 +1,22 @@
-//! Route table of the v1 API: `(method, path)` → typed endpoint.
+//! Route table of the v1 API: `(method, path)` → tenant + typed endpoint.
 //!
-//! Mirrors the resource layout of Airflow's stable REST API v1. Matching
-//! is purely syntactic — the router resolves path parameters and the
-//! query string; existence checks (404 on unknown DAG etc.) belong to the
-//! handlers in [`super::v1`]. A known path with the wrong method yields
-//! 405 `method_not_allowed`, an unknown path 404 `not_found`, and an
-//! unparsable path parameter 400 `bad_request`.
+//! Mirrors the resource layout of Airflow's stable REST API v1, extended
+//! with tenant namespaces: every resource path exists both un-prefixed
+//! (the backward-compatible surface, owned by the `default` tenant) and
+//! under `/api/v1/tenants/{tenant}/...`, plus a small tenant admin
+//! surface (`GET|POST /api/v1/tenants`, `GET /api/v1/tenants/{id}`).
+//! [`resolve`] therefore returns the addressed tenant alongside the
+//! endpoint — tenant resolution happens *before* dispatch, so auth and
+//! admission control gate the request at the routing layer.
+//!
+//! Matching is purely syntactic — the router resolves path parameters and
+//! the query string; existence checks (404 on unknown tenant/DAG etc.)
+//! belong to the handlers in [`super::v1`]. A known path with the wrong
+//! method yields 405 `method_not_allowed`, an unknown path 404
+//! `not_found`, and an unparsable path parameter 400 `bad_request`.
 
 use crate::api::error::ApiError;
+use crate::dag::state::{DEFAULT_TENANT, TENANT_SEP};
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -81,6 +90,13 @@ pub enum Endpoint {
     /// `POST /api/v1/dags/{dag_id}/clearTaskInstances`
     /// (body `{"run_id": n, "task_ids": [...], "only_failed": bool}`)
     ClearTaskInstances { dag_id: String },
+    /// `GET /api/v1/tenants` (tenant admin surface)
+    ListTenants,
+    /// `POST /api/v1/tenants` (body `{"tenant_id": ..., "token"?: ...,
+    /// "rate_rps"?: n, "rate_burst"?: n, "max_active_backfill_runs"?: n}`)
+    PutTenant,
+    /// `GET /api/v1/tenants/{tenant_id}`
+    GetTenant { tenant_id: String },
 }
 
 /// Parsed query string (`?limit=10&state=success`).
@@ -109,6 +125,19 @@ impl Query {
 
 fn parse_run_id(raw: &str) -> Result<u64, ApiError> {
     raw.parse::<u64>().map_err(|_| ApiError::bad_request(format!("invalid run_id '{raw}'")))
+}
+
+/// Decode a `dag_id` path segment, rejecting the reserved tenant
+/// separator. Without this check a percent-encoded `%1F` in an
+/// un-prefixed path would decode to another tenant's *qualified* id —
+/// the default tenant's identity mapping would pass it straight through
+/// to the DB lookups and defeat tenant isolation.
+fn decode_dag_seg(s: &str) -> Result<String, ApiError> {
+    let d = decode_seg(s);
+    if d.contains(TENANT_SEP) {
+        return Err(ApiError::bad_request("dag_id contains a reserved character"));
+    }
+    Ok(d)
 }
 
 /// Percent-encode one path segment. Callers that interpolate
@@ -172,8 +201,14 @@ fn path_known(segs: &[&str]) -> bool {
     )
 }
 
-/// Resolve `method` + `path[?query]` to a typed endpoint.
-pub fn resolve(method: Method, target: &str) -> Result<(Endpoint, Query), ApiError> {
+/// Resolve `method` + `path[?query]` to `(tenant, endpoint, query)`.
+///
+/// Un-prefixed paths address the `default` tenant (backward compatible);
+/// `/api/v1/tenants/{tenant}/...` addresses that tenant's namespace with
+/// the identical resource layout. The tenant admin endpoints
+/// (`/api/v1/tenants` with nothing after the id) belong to the operator
+/// (default-tenant) surface.
+pub fn resolve(method: Method, target: &str) -> Result<(String, Endpoint, Query), ApiError> {
     let (path, qs) = match target.split_once('?') {
         Some((p, q)) => (p, q),
         None => (target, ""),
@@ -185,38 +220,73 @@ pub fn resolve(method: Method, target: &str) -> Result<(Endpoint, Query), ApiErr
     let segs: Vec<&str> = rest.split('/').filter(|s| !s.is_empty()).collect();
 
     use Method::*;
-    let ep = match (method, segs.as_slice()) {
+    // Tenant admin surface first: `tenants` with no resource suffix.
+    match (method, segs.as_slice()) {
+        (Get, ["tenants"]) => {
+            return Ok((DEFAULT_TENANT.to_string(), Endpoint::ListTenants, query))
+        }
+        (Post, ["tenants"]) => {
+            return Ok((DEFAULT_TENANT.to_string(), Endpoint::PutTenant, query))
+        }
+        (Get, ["tenants", t]) => {
+            return Ok((
+                DEFAULT_TENANT.to_string(),
+                Endpoint::GetTenant { tenant_id: decode_seg(t) },
+                query,
+            ));
+        }
+        (m, ["tenants"] | ["tenants", _]) => {
+            return Err(ApiError::method_not_allowed(format!("{m} not allowed on '{path}'")));
+        }
+        _ => {}
+    }
+    // Namespace prefix: `/tenants/{tenant}/<resource...>` resolves the
+    // identical resource table inside that tenant.
+    let (tenant, resource): (String, &[&str]) = match segs.as_slice() {
+        ["tenants", t, resource @ ..] => (decode_seg(t), resource),
+        other => (DEFAULT_TENANT.to_string(), other),
+    };
+    let ep = resolve_resource(method, resource, path)?;
+    Ok((tenant, ep, query))
+}
+
+/// Resolve the tenant-relative resource segments to a typed endpoint.
+fn resolve_resource(method: Method, segs: &[&str], path: &str) -> Result<Endpoint, ApiError> {
+    use Method::*;
+    let ep = match (method, segs) {
         (Get, ["health"]) => Endpoint::Health,
         (Get, ["dags"]) => Endpoint::ListDags,
         (Post, ["dags"]) => Endpoint::UploadDag,
-        (Get, ["dags", d]) => Endpoint::GetDag { dag_id: decode_seg(d) },
-        (Patch, ["dags", d]) => Endpoint::PatchDag { dag_id: decode_seg(d) },
-        (Delete, ["dags", d]) => Endpoint::DeleteDag { dag_id: decode_seg(d) },
-        (Get, ["dags", d, "dagRuns"]) => Endpoint::ListDagRuns { dag_id: decode_seg(d) },
-        (Post, ["dags", d, "dagRuns"]) => Endpoint::TriggerDagRun { dag_id: decode_seg(d) },
+        (Get, ["dags", d]) => Endpoint::GetDag { dag_id: decode_dag_seg(d)? },
+        (Patch, ["dags", d]) => Endpoint::PatchDag { dag_id: decode_dag_seg(d)? },
+        (Delete, ["dags", d]) => Endpoint::DeleteDag { dag_id: decode_dag_seg(d)? },
+        (Get, ["dags", d, "dagRuns"]) => Endpoint::ListDagRuns { dag_id: decode_dag_seg(d)? },
+        (Post, ["dags", d, "dagRuns"]) => {
+            Endpoint::TriggerDagRun { dag_id: decode_dag_seg(d)? }
+        }
         // `backfill` is a verb segment, not a run id — match it before
         // the `{run_id}` routes.
         (Post, ["dags", d, "dagRuns", "backfill"]) => {
-            Endpoint::BackfillDagRuns { dag_id: decode_seg(d) }
+            Endpoint::BackfillDagRuns { dag_id: decode_dag_seg(d)? }
         }
         (Get, ["dags", d, "dagRuns", r]) => {
-            Endpoint::GetDagRun { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
+            Endpoint::GetDagRun { dag_id: decode_dag_seg(d)?, run_id: parse_run_id(r)? }
         }
         (Patch, ["dags", d, "dagRuns", r]) => {
-            Endpoint::PatchDagRun { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
+            Endpoint::PatchDagRun { dag_id: decode_dag_seg(d)?, run_id: parse_run_id(r)? }
         }
         (Get, ["dags", d, "dagRuns", r, "taskInstances"]) => {
-            Endpoint::ListTaskInstances { dag_id: decode_seg(d), run_id: parse_run_id(r)? }
+            Endpoint::ListTaskInstances { dag_id: decode_dag_seg(d)?, run_id: parse_run_id(r)? }
         }
         (Post, ["dags", d, "clearTaskInstances"]) => {
-            Endpoint::ClearTaskInstances { dag_id: decode_seg(d) }
+            Endpoint::ClearTaskInstances { dag_id: decode_dag_seg(d)? }
         }
         (m, segs) if path_known(segs) => {
             return Err(ApiError::method_not_allowed(format!("{m} not allowed on '{path}'")));
         }
         _ => return Err(ApiError::not_found(format!("no route for '{path}'"))),
     };
-    Ok((ep, query))
+    Ok(ep)
 }
 
 #[cfg(test)]
@@ -270,14 +340,70 @@ mod tests {
             ),
         ];
         for (m, path, want) in cases {
-            let (got, _) = resolve(m, path).unwrap_or_else(|e| panic!("{m} {path}: {e}"));
+            let (tenant, got, _) =
+                resolve(m, path).unwrap_or_else(|e| panic!("{m} {path}: {e}"));
             assert_eq!(got, want, "{m} {path}");
+            assert_eq!(tenant, DEFAULT_TENANT, "un-prefixed paths are default-tenant");
         }
     }
 
     #[test]
+    fn tenant_prefix_resolves_same_resource_table() {
+        // Every resource path exists under /tenants/{tenant}/... too.
+        let cases: Vec<(Method, &str, Endpoint)> = vec![
+            (Method::Get, "/api/v1/tenants/acme/health", Endpoint::Health),
+            (Method::Get, "/api/v1/tenants/acme/dags", Endpoint::ListDags),
+            (Method::Post, "/api/v1/tenants/acme/dags", Endpoint::UploadDag),
+            (
+                Method::Delete,
+                "/api/v1/tenants/acme/dags/etl",
+                Endpoint::DeleteDag { dag_id: "etl".into() },
+            ),
+            (
+                Method::Post,
+                "/api/v1/tenants/acme/dags/etl/dagRuns/backfill",
+                Endpoint::BackfillDagRuns { dag_id: "etl".into() },
+            ),
+            (
+                Method::Get,
+                "/api/v1/tenants/acme/dags/etl/dagRuns/3/taskInstances",
+                Endpoint::ListTaskInstances { dag_id: "etl".into(), run_id: 3 },
+            ),
+        ];
+        for (m, path, want) in cases {
+            let (tenant, got, _) =
+                resolve(m, path).unwrap_or_else(|e| panic!("{m} {path}: {e}"));
+            assert_eq!(tenant, "acme", "{m} {path}");
+            assert_eq!(got, want, "{m} {path}");
+        }
+        // Unknown resource inside a tenant namespace is still a 404.
+        let e = resolve(Method::Get, "/api/v1/tenants/acme/pools").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::NotFound);
+        // Wrong method inside a tenant namespace is still a 405.
+        let e = resolve(Method::Delete, "/api/v1/tenants/acme/health").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+    }
+
+    #[test]
+    fn tenant_admin_surface() {
+        let (t, ep, _) = resolve(Method::Get, "/api/v1/tenants").unwrap();
+        assert_eq!((t.as_str(), ep), (DEFAULT_TENANT, Endpoint::ListTenants));
+        let (t, ep, _) = resolve(Method::Post, "/api/v1/tenants").unwrap();
+        assert_eq!((t.as_str(), ep), (DEFAULT_TENANT, Endpoint::PutTenant));
+        let (t, ep, _) = resolve(Method::Get, "/api/v1/tenants/acme").unwrap();
+        assert_eq!(t, DEFAULT_TENANT, "admin surface, not acme's namespace");
+        assert_eq!(ep, Endpoint::GetTenant { tenant_id: "acme".into() });
+        // No DELETE/PATCH on the admin surface.
+        let e = resolve(Method::Delete, "/api/v1/tenants/acme").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+        let e = resolve(Method::Patch, "/api/v1/tenants").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+    }
+
+    #[test]
     fn query_string_parsed() {
-        let (_, q) = resolve(Method::Get, "/api/v1/dags?limit=5&offset=2&paused=true").unwrap();
+        let (_, _, q) =
+            resolve(Method::Get, "/api/v1/dags?limit=5&offset=2&paused=true").unwrap();
         assert_eq!(q.get("limit"), Some("5"));
         assert_eq!(q.get("offset"), Some("2"));
         assert_eq!(q.get("paused"), Some("true"));
@@ -301,6 +427,25 @@ mod tests {
     }
 
     #[test]
+    fn encoded_tenant_separator_in_dag_id_is_400() {
+        // `%1F` decodes to the reserved tenant separator; letting it
+        // through would address another tenant's qualified id via the
+        // default tenant's identity mapping.
+        for (m, path) in [
+            (Method::Get, "/api/v1/dags/acme%1Fetl"),
+            (Method::Delete, "/api/v1/dags/acme%1Fetl"),
+            (Method::Post, "/api/v1/dags/acme%1Fetl/dagRuns"),
+            (Method::Post, "/api/v1/dags/acme%1Fetl/dagRuns/backfill"),
+            (Method::Get, "/api/v1/dags/acme%1Fetl/dagRuns/1"),
+            (Method::Post, "/api/v1/dags/acme%1Fetl/clearTaskInstances"),
+            (Method::Get, "/api/v1/tenants/acme/dags/x%1fy"),
+        ] {
+            let e = resolve(m, path).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::BadRequest, "{m} {path}");
+        }
+    }
+
+    #[test]
     fn bad_run_id_is_400() {
         let e = resolve(Method::Get, "/api/v1/dags/etl/dagRuns/zero/taskInstances").unwrap_err();
         assert_eq!(e.kind, ErrorKind::BadRequest);
@@ -315,7 +460,7 @@ mod tests {
         assert_eq!(decode_seg("caf%C3%A9"), "café");
         assert_eq!(decode_seg("café"), "café", "unescaped UTF-8 passes through");
         let target = format!("/api/v1/dags/{}/dagRuns", encode_seg("team/etl"));
-        let (ep, _) = resolve(Method::Get, &target).unwrap();
+        let (_, ep, _) = resolve(Method::Get, &target).unwrap();
         assert_eq!(ep, Endpoint::ListDagRuns { dag_id: "team/etl".into() });
     }
 }

@@ -7,15 +7,24 @@
 //! the API layer never mutates system state in place, so every write is
 //! CDC-visible and the control plane stays event-driven (§4.1).
 //!
-//! [`dispatch`] is the single entry point: it resolves the route, runs the
-//! handler, and folds the result into the response envelope (`ok` +
-//! `status` on success, the [`ApiError`] envelope on failure).
+//! [`dispatch`] is the single entry point: it resolves the route **and
+//! the tenant** (un-prefixed paths map to `default`, see
+//! [`super::router`]), authenticates the `Authorization` header against
+//! the tenant's token, passes gateway admission control (per-tenant token
+//! bucket → structured 429), runs the handler inside the tenant's
+//! namespace, and folds the result into the response envelope (`ok` +
+//! `status` on success, the [`ApiError`] envelope on failure). Handlers
+//! operate on tenant-qualified DAG ids throughout, so nothing a handler
+//! does can cross a tenant boundary; payloads show tenant-local ids.
 
 use crate::api::error::{ApiError, ApiResult};
 use crate::api::page::Page;
 use crate::api::router::{self, Endpoint, Method, Query};
-use crate::cloud::db::{DagRunRow, MetaDb, TiRow};
-use crate::dag::state::{RunState, RunType, TiState};
+use crate::cloud::db::{DagRunRow, MetaDb, TenantRow, TiRow, Txn, Write};
+use crate::dag::state::{
+    local_dag_id, scoped_dag_id, tenant_of, valid_tenant_id, RunState, RunType, TiState,
+    DEFAULT_TENANT, TENANT_SEP,
+};
 use crate::sairflow::{self, World};
 use crate::sim::engine::Sim;
 use crate::sim::time::{as_secs, secs, SimTime};
@@ -25,7 +34,8 @@ use crate::util::json::Json;
 /// typo'd interval must not materialize millions of rows.
 pub const MAX_BACKFILL_RUNS: usize = 500;
 
-/// Dispatch one API request against the deployed world.
+/// Dispatch one API request against the deployed world (no credentials —
+/// reaches open tenants only; see [`dispatch_auth`]).
 ///
 /// `target` is the path with optional query string
 /// (e.g. `/api/v1/dags/etl/dagRuns?limit=5&state=success`); `body` is the
@@ -37,7 +47,21 @@ pub fn dispatch(
     target: &str,
     body: Option<&Json>,
 ) -> Json {
-    match dispatch_inner(sim, w, method, target, body) {
+    dispatch_auth(sim, w, method, target, body, None)
+}
+
+/// Dispatch one API request with an `Authorization` header value
+/// (`"Bearer <token>"`). Tenant resolution, auth and admission control
+/// run before the handler.
+pub fn dispatch_auth(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    method: Method,
+    target: &str,
+    body: Option<&Json>,
+    authorization: Option<&str>,
+) -> Json {
+    match dispatch_inner(sim, w, method, target, body, authorization) {
         Ok(payload) => payload.set("ok", true).set("status", 200u64),
         Err(e) => e.to_json(),
     }
@@ -52,6 +76,18 @@ pub fn handle_http(
     target: &str,
     body: Option<&str>,
 ) -> Json {
+    handle_http_auth(sim, w, method, target, body, None)
+}
+
+/// [`handle_http`] plus an `Authorization` header value.
+pub fn handle_http_auth(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    method: &str,
+    target: &str,
+    body: Option<&str>,
+    authorization: Option<&str>,
+) -> Json {
     let method = match Method::parse(method) {
         Ok(m) => m,
         Err(e) => return e.to_json(),
@@ -65,7 +101,26 @@ pub fn handle_http(
             }
         },
     };
-    dispatch(sim, w, method, target, parsed.as_ref())
+    dispatch_auth(sim, w, method, target, parsed.as_ref(), authorization)
+}
+
+/// Check the presented `Authorization` header against the tenant's token.
+/// Open tenants (no token — the `default` tenant's shipping state) accept
+/// anything; tokened tenants require `Bearer <token>` exactly. The error
+/// never reveals whether the tenant has a token or what it looks like.
+fn authenticate(tenant: &TenantRow, authorization: Option<&str>) -> Result<(), ApiError> {
+    let Some(expected) = &tenant.token else { return Ok(()) };
+    let presented = authorization
+        .and_then(|h| h.strip_prefix("Bearer ").or_else(|| h.strip_prefix("bearer ")))
+        .map(str::trim);
+    if presented == Some(expected.as_str()) {
+        Ok(())
+    } else {
+        Err(ApiError::unauthorized(format!(
+            "missing or invalid credentials for tenant '{}'",
+            tenant.tenant_id
+        )))
+    }
 }
 
 fn dispatch_inner(
@@ -74,28 +129,45 @@ fn dispatch_inner(
     method: Method,
     target: &str,
     body: Option<&Json>,
+    authorization: Option<&str>,
 ) -> ApiResult {
-    let (ep, query) = router::resolve(method, target)?;
+    let (tenant_id, ep, query) = router::resolve(method, target)?;
+    // Gate the request at the boundary, in order: unknown tenant → 404,
+    // bad credentials → 401, over the rate budget → 429. Only admitted
+    // requests reach a handler.
+    let tenant = {
+        let db = w.db.read();
+        db.tenants
+            .get(&tenant_id)
+            .cloned()
+            .ok_or_else(|| ApiError::unknown_tenant(&tenant_id))?
+    };
+    authenticate(&tenant, authorization)?;
+    w.gateway.admit(&tenant, sim.now())?;
+    let t = tenant.tenant_id.as_str();
     match ep {
-        Endpoint::Health => Ok(health(w)),
-        Endpoint::ListDags => list_dags(w, &query),
-        Endpoint::GetDag { dag_id } => get_dag(w, &dag_id),
-        Endpoint::PatchDag { dag_id } => patch_dag(sim, w, &dag_id, body),
-        Endpoint::DeleteDag { dag_id } => delete_dag(sim, w, &dag_id),
-        Endpoint::UploadDag => upload_dag(sim, w, body),
-        Endpoint::ListDagRuns { dag_id } => list_dag_runs(w, &dag_id, &query),
-        Endpoint::TriggerDagRun { dag_id } => trigger_dag_run(sim, w, &dag_id),
-        Endpoint::BackfillDagRuns { dag_id } => backfill_dag_runs(sim, w, &dag_id, body),
-        Endpoint::GetDagRun { dag_id, run_id } => get_dag_run(w, &dag_id, run_id),
+        Endpoint::Health => Ok(health(w, t)),
+        Endpoint::ListDags => list_dags(w, t, &query),
+        Endpoint::GetDag { dag_id } => get_dag(w, t, &dag_id),
+        Endpoint::PatchDag { dag_id } => patch_dag(sim, w, t, &dag_id, body),
+        Endpoint::DeleteDag { dag_id } => delete_dag(sim, w, t, &dag_id),
+        Endpoint::UploadDag => upload_dag(sim, w, t, body),
+        Endpoint::ListDagRuns { dag_id } => list_dag_runs(w, t, &dag_id, &query),
+        Endpoint::TriggerDagRun { dag_id } => trigger_dag_run(sim, w, t, &dag_id),
+        Endpoint::BackfillDagRuns { dag_id } => backfill_dag_runs(sim, w, t, &dag_id, body),
+        Endpoint::GetDagRun { dag_id, run_id } => get_dag_run(w, t, &dag_id, run_id),
         Endpoint::PatchDagRun { dag_id, run_id } => {
-            patch_dag_run(sim, w, &dag_id, run_id, body)
+            patch_dag_run(sim, w, t, &dag_id, run_id, body)
         }
         Endpoint::ListTaskInstances { dag_id, run_id } => {
-            list_task_instances(w, &dag_id, run_id, &query)
+            list_task_instances(w, t, &dag_id, run_id, &query)
         }
         Endpoint::ClearTaskInstances { dag_id } => {
-            clear_task_instances(sim, w, &dag_id, body)
+            clear_task_instances(sim, w, t, &dag_id, body)
         }
+        Endpoint::ListTenants => list_tenants(w, &query),
+        Endpoint::PutTenant => put_tenant(sim, w, body, authorization),
+        Endpoint::GetTenant { tenant_id } => get_tenant(w, &tenant_id),
     }
 }
 
@@ -105,11 +177,19 @@ fn opt_secs(t: Option<crate::sim::time::SimTime>) -> Json {
     t.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null)
 }
 
+/// Serialize a dag row. `dag_id` is tenant-qualified internally; payloads
+/// show the tenant-local id (the tenant is implied by the namespace the
+/// request addressed).
 fn dag_json(db: &MetaDb, dag_id: &str) -> Json {
     let row = &db.dags[dag_id];
+    // Payloads show tenant-local identifiers: the stored fileloc embeds
+    // the tenant-qualified id (it IS the blob key), so the qualified
+    // substring is mapped back to the local id for display — leaking the
+    // internal separator would contradict the namespace abstraction.
+    let fileloc = row.fileloc.replace(&row.dag_id, local_dag_id(&row.dag_id));
     Json::obj()
-        .set("dag_id", row.dag_id.as_str())
-        .set("fileloc", row.fileloc.as_str())
+        .set("dag_id", local_dag_id(&row.dag_id))
+        .set("fileloc", fileloc)
         .set(
             "period_secs",
             row.period.map(|p| Json::Num(p as f64 / 1e6)).unwrap_or(Json::Null),
@@ -140,12 +220,16 @@ fn ti_json(t: &TiRow) -> Json {
 }
 
 // ---- existence checks ------------------------------------------------------
+//
+// All checks address tenant-qualified ids; error messages show the
+// tenant-local id — a resource living under another tenant is therefore
+// indistinguishable from one that does not exist (404-without-leak).
 
 fn require_dag(db: &MetaDb, dag_id: &str) -> Result<(), ApiError> {
     if db.dags.contains_key(dag_id) || db.serialized.contains_key(dag_id) {
         Ok(())
     } else {
-        Err(ApiError::unknown_dag(dag_id))
+        Err(ApiError::unknown_dag(local_dag_id(dag_id)))
     }
 }
 
@@ -153,7 +237,7 @@ fn require_run<'a>(db: &'a MetaDb, dag_id: &str, run_id: u64) -> Result<&'a DagR
     require_dag(db, dag_id)?;
     db.dag_runs
         .get(&(dag_id.to_string(), run_id))
-        .ok_or_else(|| ApiError::unknown_run(dag_id, run_id))
+        .ok_or_else(|| ApiError::unknown_run(local_dag_id(dag_id), run_id))
 }
 
 fn require_body<'a>(body: Option<&'a Json>) -> Result<&'a Json, ApiError> {
@@ -189,13 +273,17 @@ fn parse_bool_filter(q: &Query, key: &str) -> Result<Option<bool>, ApiError> {
 
 // ---- read handlers (serve from the DB snapshot) ----------------------------
 
-fn list_dags(w: &World, q: &Query) -> ApiResult {
+fn list_dags(w: &World, tenant: &str, q: &Query) -> ApiResult {
     let page = Page::from_query(q)?;
     let paused_filter = parse_bool_filter(q, "paused")?;
     let db = w.db.read();
+    // The tenant filter is structural: only this tenant's qualified ids
+    // are even considered, so a foreign DAG can never appear in the page
+    // or inflate `total_entries`.
     let ids: Vec<&str> = db
         .dags
         .values()
+        .filter(|d| tenant_of(&d.dag_id) == tenant)
         .filter(|d| paused_filter.map(|p| d.is_paused == p).unwrap_or(true))
         .map(|d| d.dag_id.as_str())
         .collect();
@@ -204,18 +292,19 @@ fn list_dags(w: &World, q: &Query) -> ApiResult {
     Ok(page.envelope("dags", dags, total))
 }
 
-fn get_dag(w: &World, dag_id: &str) -> ApiResult {
+fn get_dag(w: &World, tenant: &str, dag_id: &str) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let db = w.db.read();
-    if !db.dags.contains_key(dag_id) {
+    if !db.dags.contains_key(&scoped) {
         return Err(ApiError::unknown_dag(dag_id));
     }
     let n_runs = db
         .dag_runs
-        .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
+        .range((scoped.clone(), 0)..=(scoped.clone(), u64::MAX))
         .count();
     Ok(Json::obj()
-        .set("dag", dag_json(db, dag_id).set("n_runs", n_runs))
-        .set("cron_registered", w.cron.is_registered(dag_id)))
+        .set("dag", dag_json(db, &scoped).set("n_runs", n_runs))
+        .set("cron_registered", w.cron.is_registered(&scoped)))
 }
 
 fn parse_run_state_filter(q: &Query) -> Result<Option<RunState>, ApiError> {
@@ -236,16 +325,17 @@ fn parse_run_type_filter(q: &Query) -> Result<Option<RunType>, ApiError> {
     }
 }
 
-fn list_dag_runs(w: &World, dag_id: &str, q: &Query) -> ApiResult {
+fn list_dag_runs(w: &World, tenant: &str, dag_id: &str, q: &Query) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let page = Page::from_query(q)?;
     let state = parse_run_state_filter(q)?;
     let run_type = parse_run_type_filter(q)?;
     let db = w.db.read();
-    require_dag(db, dag_id)?;
+    require_dag(db, &scoped)?;
     // Most recent first, like the Airflow UI.
     let runs: Vec<&DagRunRow> = db
         .dag_runs
-        .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
+        .range((scoped.clone(), 0)..=(scoped.clone(), u64::MAX))
         .rev()
         .map(|(_, r)| r)
         .filter(|r| state.map(|s| r.state == s).unwrap_or(true))
@@ -256,13 +346,21 @@ fn list_dag_runs(w: &World, dag_id: &str, q: &Query) -> ApiResult {
     Ok(page.envelope("dag_runs", items, total).set("dag_id", dag_id))
 }
 
-fn get_dag_run(w: &World, dag_id: &str, run_id: u64) -> ApiResult {
+fn get_dag_run(w: &World, tenant: &str, dag_id: &str, run_id: u64) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let db = w.db.read();
-    let run = require_run(db, dag_id, run_id)?;
+    let run = require_run(db, &scoped, run_id)?;
     Ok(Json::obj().set("dag_id", dag_id).set("dag_run", run_json(run)))
 }
 
-fn list_task_instances(w: &World, dag_id: &str, run_id: u64, q: &Query) -> ApiResult {
+fn list_task_instances(
+    w: &World,
+    tenant: &str,
+    dag_id: &str,
+    run_id: u64,
+    q: &Query,
+) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let page = Page::from_query(q)?;
     let state = match q.get("state") {
         None => None,
@@ -272,9 +370,9 @@ fn list_task_instances(w: &World, dag_id: &str, run_id: u64, q: &Query) -> ApiRe
         ),
     };
     let db = w.db.read();
-    require_run(db, dag_id, run_id)?;
+    require_run(db, &scoped, run_id)?;
     let tis: Vec<&TiRow> = db
-        .tis_of_run(dag_id, run_id)
+        .tis_of_run(&scoped, run_id)
         .into_iter()
         .filter(|t| state.map(|s| t.state == s).unwrap_or(true))
         .collect();
@@ -286,11 +384,15 @@ fn list_task_instances(w: &World, dag_id: &str, run_id: u64, q: &Query) -> ApiRe
         .set("run_id", run_id))
 }
 
-fn health(w: &World) -> Json {
-    // One snapshot borrow serves every DB-derived counter.
+fn health(w: &World, tenant: &str) -> Json {
+    // One snapshot borrow serves every DB-derived counter. Workflow-state
+    // breakdowns are scoped to the addressed tenant — health must never
+    // expose another tenant's runs; the platform counters (queue depths,
+    // warm pools, db/cdc totals) describe the shared substrate and stay
+    // global, which is the paper's shared-control-plane model.
     let db = w.db.read();
     let (mut r_queued, mut r_running, mut r_success, mut r_failed) = (0u64, 0u64, 0u64, 0u64);
-    for r in db.dag_runs.values() {
+    for r in db.dag_runs.values().filter(|r| r.tenant_id == tenant) {
         match r.state {
             RunState::Queued => r_queued += 1,
             RunState::Running => r_running += 1,
@@ -299,7 +401,8 @@ fn health(w: &World) -> Json {
         }
     }
     let mut t_counts = [0u64; 8];
-    for t in db.task_instances.values() {
+    let mut active_tasks = 0u64;
+    for t in db.task_instances.values().filter(|t| t.tenant_id == tenant) {
         let idx = match t.state {
             TiState::None => 0,
             TiState::Scheduled => 1,
@@ -311,8 +414,15 @@ fn health(w: &World) -> Json {
             TiState::UpstreamFailed => 7,
         };
         t_counts[idx] += 1;
+        if t.state.is_active() {
+            active_tasks += 1;
+        }
     }
-    Json::obj()
+    let n_dags = db.dags.values().filter(|d| tenant_of(&d.dag_id) == tenant).count();
+    let queued_backfill =
+        db.queued_backfill().filter(|k| tenant_of(&k.0) == tenant).count();
+    let mut resp = Json::obj()
+        .set("tenant", tenant)
         .set("sched_queue_depth", w.sched_q.len())
         .set("fexec_queue_depth", w.fexec_q.len())
         .set("cexec_queue_depth", w.cexec_q.len())
@@ -322,16 +432,18 @@ fn health(w: &World) -> Json {
         .set("router_events", w.router.stats.events_in)
         .set("cdc_records", w.cdc.stats.records)
         .set("db_txns", db.stats.txns)
-        .set("n_dags", db.dags.len())
+        .set("n_dags", n_dags)
         // Runs actually executing. `Queued` is no longer transient (parked
         // manual runs, throttled backfill), so counting it here would let
         // one big backfill POST read as hundreds of "active" runs; the
         // parked backlog is visible in `run_states.queued` and the
         // backfill counters below.
         .set("active_runs", r_running)
-        .set("active_tasks", db.active_ti_count())
-        .set("active_backfill_runs", db.active_backfill_count())
-        .set("queued_backfill_runs", db.queued_backfill_count())
+        .set("active_tasks", active_tasks)
+        .set("active_backfill_runs", db.active_backfill_count_of(tenant))
+        .set("queued_backfill_runs", queued_backfill)
+        // This tenant's gateway admission counters.
+        .set("admission", w.gateway.tenant_json(tenant))
         .set(
             "run_states",
             Json::obj()
@@ -351,18 +463,25 @@ fn health(w: &World) -> Json {
                 .set("failed", t_counts[5])
                 .set("up_for_retry", t_counts[6])
                 .set("upstream_failed", t_counts[7]),
-        )
+        );
+    // The operator surface (default tenant) additionally sees the
+    // gateway-wide admission totals with the per-tenant breakdown.
+    if tenant == DEFAULT_TENANT {
+        resp = resp.set("admission_totals", w.gateway.totals_json());
+    }
+    resp
 }
 
 // ---- mutation handlers (inject events / commit transactions) ---------------
 
-fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResult {
+fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, tenant: &str, dag_id: &str) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let paused = {
         let db = w.db.read();
-        if !db.serialized.contains_key(dag_id) {
+        if !db.serialized.contains_key(&scoped) {
             return Err(ApiError::unknown_dag(dag_id));
         }
-        db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false)
+        db.dags.get(&scoped).map(|d| d.is_paused).unwrap_or(false)
     };
     // Airflow parity: a manual trigger is never dropped. On a paused DAG
     // (or past the `max_active_runs` gate) the scheduler creates the run
@@ -370,7 +489,7 @@ fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResu
     // capacity frees. (This endpoint used to 409 on paused DAGs because
     // cron and manual triggers shared one untyped message; `RunType`
     // fixed that at the root.)
-    sairflow::trigger_dag(sim, w, dag_id);
+    sairflow::trigger_dag(sim, w, &scoped);
     // `dag_is_paused` is the only parking condition knowable at request
     // time; a run may also park behind `max_active_runs`, which only the
     // scheduler pass that creates it can see.
@@ -384,12 +503,14 @@ fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResu
 fn backfill_dag_runs(
     sim: &mut Sim<World>,
     w: &mut World,
+    tenant: &str,
     dag_id: &str,
     body: Option<&Json>,
 ) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     // Resource resolution before body validation, like every other
     // per-DAG endpoint: probing an unknown DAG is a 404, not a 400.
-    if !w.db.read().serialized.contains_key(dag_id) {
+    if !w.db.read().serialized.contains_key(&scoped) {
         return Err(ApiError::unknown_dag(dag_id));
     }
     let body = require_body(body)?;
@@ -429,64 +550,99 @@ fn backfill_dag_runs(
     // date-range backfill. The dates are generated in the integer
     // microsecond domain — f64 stepping would lose the interval in the
     // ULP at large start_ts and collapse many dates onto one logical_ts.
-    // Backfill bypasses the pause gate; the runs are throttled by
-    // `max_active_backfill_runs`, not `max_active_runs`.
+    // Backfill bypasses the pause gate; the runs are throttled by the
+    // tenant's `max_active_backfill_runs` budget, not `max_active_runs`.
     let start_us = secs(start);
     let step_us = secs(interval).max(1);
     let dates: Vec<SimTime> =
         (0..n as u64).map(|i| start_us.saturating_add(i * step_us)).collect();
-    sairflow::backfill_dag(sim, w, dag_id, &dates);
+    // Dedup (Airflow parity): logical dates that already have a run for
+    // this DAG are skipped, so re-POSTing an overlapping range reports
+    // them as `skipped` instead of duplicating runs. One probe set built
+    // from a single range scan — not a scan per date. The same check is
+    // enforced again at apply time inside the scheduling pass, which
+    // covers triggers still in flight on the feed.
+    let (fresh, skipped): (Vec<SimTime>, Vec<SimTime>) = {
+        let existing = w.db.read().logical_dates_of(&scoped);
+        dates.into_iter().partition(|ts| !existing.contains(ts))
+    };
+    let (created, skipped) = (fresh.len(), skipped.len());
+    if !fresh.is_empty() {
+        sairflow::backfill_dag(sim, w, &scoped, &fresh);
+    }
     Ok(Json::obj()
         .set("dag_id", dag_id)
         .set("run_type", RunType::Backfill.to_string())
-        .set("backfill_runs", n)
+        .set("backfill_runs", created)
+        .set("created", created)
+        .set("skipped", skipped)
         .set("start_ts", start)
         .set("end_ts", end)
         .set("interval_secs", interval))
 }
 
-fn upload_dag(sim: &mut Sim<World>, w: &mut World, body: Option<&Json>) -> ApiResult {
+fn upload_dag(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    tenant: &str,
+    body: Option<&Json>,
+) -> ApiResult {
     let body = require_body(body)?;
     let text = body.str_field("file_text").map_err(ApiError::bad_request)?;
     // Validate eagerly so the client gets a 400 now; the accepted file
     // still flows through blob → parse function → DB like any upload.
-    let spec = crate::parser::parse_dag_file(text)
+    let mut spec = crate::parser::parse_dag_file(text)
         .map_err(|e| ApiError::bad_request(format!("invalid DAG file: {e}")))?;
+    // The tenant separator is reserved: a crafted DAG id containing it
+    // could impersonate another tenant's namespace.
+    if spec.dag_id.contains(TENANT_SEP) {
+        return Err(ApiError::bad_request("dag_id contains a reserved character"));
+    }
+    let local = spec.dag_id.clone();
+    // Qualify the id once at the boundary; from here on the upload flows
+    // blob → parse function → DB under the tenant-qualified id like any
+    // other upload.
+    spec.dag_id = scoped_dag_id(tenant, &spec.dag_id);
     sairflow::upload_dag(sim, w, &spec);
-    Ok(Json::obj().set("uploaded", spec.dag_id.as_str()))
+    Ok(Json::obj().set("uploaded", local))
 }
 
 fn patch_dag(
     sim: &mut Sim<World>,
     w: &mut World,
+    tenant: &str,
     dag_id: &str,
     body: Option<&Json>,
 ) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let body = require_body(body)?;
     let paused = body
         .get("is_paused")
         .and_then(|v| v.as_bool())
         .ok_or_else(|| ApiError::bad_request("body must set boolean field 'is_paused'"))?;
-    if !w.db.read().dags.contains_key(dag_id) {
+    if !w.db.read().dags.contains_key(&scoped) {
         return Err(ApiError::unknown_dag(dag_id));
     }
-    sairflow::set_dag_paused(sim, w, dag_id, paused);
+    sairflow::set_dag_paused(sim, w, &scoped, paused);
     Ok(Json::obj().set("dag_id", dag_id).set("is_paused", paused))
 }
 
-fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) -> ApiResult {
-    require_dag(w.db.read(), dag_id)?;
-    sairflow::delete_dag(sim, w, dag_id);
+fn delete_dag(sim: &mut Sim<World>, w: &mut World, tenant: &str, dag_id: &str) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
+    require_dag(w.db.read(), &scoped)?;
+    sairflow::delete_dag(sim, w, &scoped);
     Ok(Json::obj().set("deleted", dag_id))
 }
 
 fn patch_dag_run(
     sim: &mut Sim<World>,
     w: &mut World,
+    tenant: &str,
     dag_id: &str,
     run_id: u64,
     body: Option<&Json>,
 ) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let body = require_body(body)?;
     let raw = body.str_field("state").map_err(ApiError::bad_request)?;
     let state = RunState::parse(raw)
@@ -494,17 +650,19 @@ fn patch_dag_run(
         .ok_or_else(|| {
             ApiError::bad_request(format!("state must be 'success' or 'failed', got '{raw}'"))
         })?;
-    require_run(w.db.read(), dag_id, run_id)?;
-    sairflow::mark_run_state(sim, w, dag_id, run_id, state);
+    require_run(w.db.read(), &scoped, run_id)?;
+    sairflow::mark_run_state(sim, w, &scoped, run_id, state);
     Ok(Json::obj().set("dag_id", dag_id).set("run_id", run_id).set("state", raw))
 }
 
 fn clear_task_instances(
     sim: &mut Sim<World>,
     w: &mut World,
+    tenant: &str,
     dag_id: &str,
     body: Option<&Json>,
 ) -> ApiResult {
+    let scoped = scoped_dag_id(tenant, dag_id);
     let body = require_body(body)?;
     let run_id = exact_u64(
         body.get("run_id")
@@ -517,8 +675,8 @@ fn clear_task_instances(
     // an owned id list before the mutation borrows the world.
     let selected: Vec<u32> = {
         let db = w.db.read();
-        require_run(db, dag_id, run_id)?;
-        let tis = db.tis_of_run(dag_id, run_id);
+        require_run(db, &scoped, run_id)?;
+        let tis = db.tis_of_run(&scoped, run_id);
         let mut ids: Vec<u32> = match body.get("task_ids") {
             None => tis.iter().map(|t| t.task_id).collect(),
             Some(Json::Arr(raw)) => {
@@ -564,10 +722,139 @@ fn clear_task_instances(
     };
 
     if !selected.is_empty() {
-        sairflow::clear_task_instances(sim, w, dag_id, run_id, &selected);
+        sairflow::clear_task_instances(sim, w, &scoped, run_id, &selected);
     }
     Ok(Json::obj()
         .set("dag_id", dag_id)
         .set("run_id", run_id)
         .set("cleared", selected))
+}
+
+// ---- tenant admin handlers -------------------------------------------------
+
+/// Serialize a tenant record plus its live admission counters. The token
+/// itself is never returned — only whether one is set.
+fn tenant_json(w: &World, row: &TenantRow) -> Json {
+    Json::obj()
+        .set("tenant_id", row.tenant_id.as_str())
+        .set("token_set", row.token.is_some())
+        .set(
+            "rate_rps",
+            row.rate.map(|(rps, _)| Json::Num(rps)).unwrap_or(Json::Null),
+        )
+        .set(
+            "rate_burst",
+            row.rate.map(|(_, burst)| Json::Num(burst)).unwrap_or(Json::Null),
+        )
+        .set(
+            "max_active_backfill_runs",
+            row.max_active_backfill_runs
+                .map(|n| Json::Num(n as f64))
+                .unwrap_or(Json::Null),
+        )
+        .set("admission", w.gateway.tenant_json(&row.tenant_id))
+}
+
+fn list_tenants(w: &World, q: &Query) -> ApiResult {
+    let page = Page::from_query(q)?;
+    let db = w.db.read();
+    let rows: Vec<&TenantRow> = db.tenants.values().collect();
+    let (rows, total) = page.apply(rows);
+    let items: Vec<Json> = rows.into_iter().map(|r| tenant_json(w, r)).collect();
+    Ok(page.envelope("tenants", items, total))
+}
+
+fn get_tenant(w: &World, tenant_id: &str) -> ApiResult {
+    let db = w.db.read();
+    let row = db
+        .tenants
+        .get(tenant_id)
+        .ok_or_else(|| ApiError::unknown_tenant(tenant_id))?;
+    Ok(Json::obj().set("tenant", tenant_json(w, row)))
+}
+
+/// Create or update a tenant (`POST /api/v1/tenants`). Tenant records are
+/// self-sovereign: updating a tenant that has a token requires *that
+/// tenant's* token in the `Authorization` header (an open overwrite would
+/// let anyone hijack a namespace by replacing its credentials); creating
+/// a new tenant is open (there is no separate operator credential — see
+/// the ROADMAP open item). Semantics are read-modify-write: omitted
+/// fields keep their current values, an explicit `null` clears a field.
+/// Like every other mutation the record goes through a metadata-DB
+/// transaction; it becomes visible to routing when the commit applies
+/// (milliseconds of simulated time), so callers settle before using a
+/// freshly minted tenant.
+fn put_tenant(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    body: Option<&Json>,
+    authorization: Option<&str>,
+) -> ApiResult {
+    let body = require_body(body)?;
+    let tenant_id = body.str_field("tenant_id").map_err(ApiError::bad_request)?.to_string();
+    if !valid_tenant_id(&tenant_id) {
+        return Err(ApiError::bad_request(format!(
+            "invalid tenant_id '{tenant_id}' (ASCII alphanumerics, '-', '_', max 64 chars)"
+        )));
+    }
+    if tenant_id == DEFAULT_TENANT {
+        // The default tenant is the open legacy surface; tokening or
+        // rate-limiting it would break every un-prefixed client.
+        return Err(ApiError::bad_request("the reserved tenant 'default' cannot be modified"));
+    }
+    let existing = w.db.read().tenants.get(&tenant_id).cloned();
+    if let Some(existing) = &existing {
+        // A tokened record only changes under its own credentials.
+        authenticate(existing, authorization)?;
+    }
+    // What this request authenticated against — the apply-time
+    // compare-and-swap value: a racing commit that changes the record's
+    // token in between invalidates this write instead of being replaced.
+    let expected_token = existing.as_ref().and_then(|t| t.token.clone());
+    let mut row = existing.unwrap_or_else(|| TenantRow {
+        tenant_id: tenant_id.clone(),
+        token: None,
+        rate: None,
+        max_active_backfill_runs: None,
+    });
+    match body.get("token") {
+        None => {}
+        Some(Json::Null) => row.token = None,
+        Some(Json::Str(s)) if !s.is_empty() => row.token = Some(s.clone()),
+        Some(_) => {
+            return Err(ApiError::bad_request("token must be a non-empty string or null"))
+        }
+    }
+    match (body.get("rate_rps"), body.get("rate_burst")) {
+        (None, None) => {}
+        (Some(Json::Null), Some(Json::Null)) => row.rate = None,
+        (Some(rps), Some(burst)) => {
+            let rps = rps
+                .as_f64()
+                .filter(|r| r.is_finite() && *r > 0.0)
+                .ok_or_else(|| ApiError::bad_request("rate_rps must be a positive number"))?;
+            let burst = burst
+                .as_f64()
+                .filter(|b| b.is_finite() && *b >= 1.0)
+                .ok_or_else(|| ApiError::bad_request("rate_burst must be >= 1"))?;
+            row.rate = Some((rps, burst));
+        }
+        _ => {
+            return Err(ApiError::bad_request(
+                "rate_rps and rate_burst must be set together (both values or both null)",
+            ))
+        }
+    }
+    match body.get("max_active_backfill_runs") {
+        None => {}
+        Some(Json::Null) => row.max_active_backfill_runs = None,
+        Some(v) => {
+            row.max_active_backfill_runs = Some(exact_u64(v, "max_active_backfill_runs")? as usize)
+        }
+    }
+    let resp = tenant_json(w, &row);
+    let mut txn = Txn::new();
+    txn.push(Write::UpsertTenant { row, expected_token });
+    crate::cloud::db::commit(sim, w, txn, |_sim, _w| {});
+    Ok(Json::obj().set("tenant", resp))
 }

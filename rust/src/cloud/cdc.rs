@@ -13,6 +13,12 @@
 //! order (DMS replicates the WAL sequentially). The stream itself (the
 //! [`kinesis`](crate::cloud::kinesis) module) adds per-shard serialized
 //! consumption on top.
+//!
+//! The stream is shared across tenants — one control plane, one WAL —
+//! but every [`Change`] record carries a tenant-qualified DAG id, so
+//! each record is attributable to its tenant
+//! ([`Change::tenant_id`](crate::cloud::db::Change::tenant_id)) and the
+//! routing layer never has to guess ownership.
 
 use crate::cloud::db::Change;
 use crate::sim::engine::Sim;

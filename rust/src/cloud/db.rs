@@ -18,15 +18,48 @@
 //!   becomes a bottleneck").
 
 use crate::dag::spec::DagSpec;
-use crate::dag::state::{RunState, RunType, TiState};
+use crate::dag::state::{tenant_of, RunState, RunType, TiState, DEFAULT_TENANT};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration, SimTime};
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 /// Key of a DAG run: (dag_id, run_id).
 pub type RunKey = (String, u64);
 /// Key of a task instance: (dag_id, run_id, task_id).
 pub type TiKey = (String, u64, u32);
+
+/// Row of the `tenant` table: one tenant of the shared control plane.
+/// Resolved by the API router before dispatch (auth + admission) and by
+/// the scheduler for per-tenant budgets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantRow {
+    pub tenant_id: String,
+    /// Bearer token required on this tenant's API paths; `None` leaves
+    /// the tenant open (the `default` tenant ships open so the legacy
+    /// unauthenticated surface keeps working).
+    pub token: Option<String>,
+    /// Gateway admission budget as `(requests/sec, burst)`; `None` means
+    /// unlimited (again the `default` tenant's shipping state).
+    pub rate: Option<(f64, f64)>,
+    /// Per-tenant override of [`crate::scheduler::SchedLimits`]'
+    /// `max_active_backfill_runs`; `None` falls back to the deployment
+    /// default. Budgets are per tenant, never shared — one tenant's
+    /// backfill cannot consume another's slots.
+    pub max_active_backfill_runs: Option<usize>,
+}
+
+impl TenantRow {
+    /// The implicit tenant every un-prefixed path and legacy caller maps
+    /// to: open (no token) and unlimited.
+    pub fn default_tenant() -> TenantRow {
+        TenantRow {
+            tenant_id: DEFAULT_TENANT.to_string(),
+            token: None,
+            rate: None,
+            max_active_backfill_runs: None,
+        }
+    }
+}
 
 /// Row of the `dag` table.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,6 +74,9 @@ pub struct DagRow {
 #[derive(Debug, Clone, PartialEq)]
 pub struct DagRunRow {
     pub dag_id: String,
+    /// Owning tenant (denormalized from the tenant-qualified `dag_id` so
+    /// per-tenant accounting and health filters never re-split strings).
+    pub tenant_id: String,
     pub run_id: u64,
     /// Logical (scheduled) time of this run.
     pub logical_ts: SimTime,
@@ -56,6 +92,8 @@ pub struct DagRunRow {
 #[derive(Debug, Clone, PartialEq)]
 pub struct TiRow {
     pub dag_id: String,
+    /// Owning tenant (see [`DagRunRow::tenant_id`]).
+    pub tenant_id: String,
     pub run_id: u64,
     pub task_id: u32,
     pub state: TiState,
@@ -88,9 +126,41 @@ pub enum Change {
     DagDeleted { dag_id: String },
 }
 
+impl Change {
+    /// The tenant-qualified DAG id this change is about.
+    pub fn dag_id(&self) -> &str {
+        match self {
+            Change::SerializedDag { dag_id }
+            | Change::DagRun { dag_id, .. }
+            | Change::Ti { dag_id, .. }
+            | Change::DagPaused { dag_id, .. }
+            | Change::DagDeleted { dag_id } => dag_id,
+        }
+    }
+
+    /// The tenant whose resources this change touches — the CDC stream is
+    /// shared across tenants (one control plane, §4.1), but every record
+    /// is attributable because the dag ids it carries are
+    /// tenant-qualified.
+    pub fn tenant_id(&self) -> &str {
+        tenant_of(self.dag_id())
+    }
+}
+
 /// One write in a transaction.
 #[derive(Debug, Clone)]
 pub enum Write {
+    /// Create or update a tenant record (`POST /api/v1/tenants`). Like
+    /// `UpsertDag` it emits no change record: nothing in the event fabric
+    /// reacts to tenant metadata, the router reads it from snapshots.
+    /// `expected_token` is the token of the record the requester
+    /// authenticated against (None for creation): at apply time the write
+    /// only lands if the current row's token still matches — a racing
+    /// create/update that would replace credentials the requester never
+    /// presented is dropped (counted in `DbStats::dropped_tenant_upserts`),
+    /// the same apply-time raced-write discipline as `PromoteRun` and the
+    /// insert guards.
+    UpsertTenant { row: TenantRow, expected_token: Option<String> },
     UpsertDag(DagRow),
     PutSerializedDag(DagSpec),
     InsertDagRun(DagRunRow),
@@ -187,11 +257,19 @@ pub struct DbStats {
     /// (raced mark-state/delete) or its DAG got paused — a by-design
     /// raced-write outcome, kept separate from `illegal_transitions`.
     pub dropped_promotions: u64,
+    /// Tenant upserts dropped at apply time because the record's token no
+    /// longer matched what the requester authenticated against (raced
+    /// create/update) — first write wins, credentials cannot be replaced
+    /// by a write that never presented them.
+    pub dropped_tenant_upserts: u64,
 }
 
 /// The metadata database state: tables + write-ahead log.
 #[derive(Debug, Default)]
 pub struct MetaDb {
+    /// Tenants of the shared control plane, keyed by tenant id. Seeded
+    /// with the `default` tenant so un-prefixed paths always resolve.
+    pub tenants: BTreeMap<String, TenantRow>,
     pub dags: BTreeMap<String, DagRow>,
     pub serialized: BTreeMap<String, DagSpec>,
     pub dag_runs: BTreeMap<RunKey, DagRunRow>,
@@ -202,15 +280,21 @@ pub struct MetaDb {
     /// Maintained count of queued+running task instances (the scheduler's
     /// parallelism check) — O(1) instead of a full-table scan per pass.
     active_count: usize,
-    /// Maintained index of backfill runs waiting in state `Queued` — what
-    /// the scheduler's promotion step drains in key order under the
-    /// `max_active_backfill_runs` budget (creation order within a DAG;
-    /// across DAGs the order is lexicographic by dag_id, not arrival —
-    /// see the ROADMAP fairness item).
-    backfill_queued: BTreeSet<RunKey>,
-    /// Maintained count of backfill runs in state `Running` (the
-    /// promotion budget check) — O(1) instead of a run-table scan.
-    backfill_running: usize,
+    /// Maintained promotion queue of backfill runs waiting in state
+    /// `Queued`, keyed by an arrival sequence number — the scheduler
+    /// drains it in insertion order, so concurrent backfills of different
+    /// DAGs are served true FIFO by arrival, not lexicographically by
+    /// `(dag_id, run_id)` (the old `BTreeSet<RunKey>` ordering).
+    backfill_queued: BTreeMap<u64, RunKey>,
+    /// Reverse index of `backfill_queued` for O(log n) removal when a
+    /// queued run leaves `Queued` (promotion, mark-state, delete).
+    backfill_seq: HashMap<RunKey, u64>,
+    /// Next arrival sequence number for `backfill_queued`.
+    next_backfill_seq: u64,
+    /// Maintained per-tenant count of backfill runs in state `Running`
+    /// (the promotion budget check) — budgets are per tenant, so the
+    /// counter is too.
+    backfill_running: BTreeMap<String, usize>,
     /// Maintained index of non-backfill (manual) runs parked in `Queued` —
     /// a manual trigger on a paused DAG or one that hit the per-DAG
     /// `max_active_runs` gate. Promoted by the scheduler once the DAG is
@@ -221,7 +305,9 @@ pub struct MetaDb {
 
 impl MetaDb {
     pub fn new() -> MetaDb {
-        MetaDb::default()
+        let mut db = MetaDb::default();
+        db.tenants.insert(DEFAULT_TENANT.to_string(), TenantRow::default_tenant());
+        db
     }
 
     /// Apply a transaction atomically at `commit_ts`. Returns the change
@@ -234,6 +320,21 @@ impl MetaDb {
         for w in txn.writes {
             self.stats.writes += 1;
             match w {
+                Write::UpsertTenant { row, expected_token } => {
+                    // Apply-time compare-and-swap on the token: the write
+                    // was authorized against `expected_token`; if a racing
+                    // commit changed the record's credentials in between,
+                    // this write must not overwrite them.
+                    let current =
+                        self.tenants.get(&row.tenant_id).and_then(|t| t.token.clone());
+                    if current != expected_token {
+                        self.stats.dropped_tenant_upserts += 1;
+                        continue;
+                    }
+                    self.tenants.insert(row.tenant_id.clone(), row);
+                    // No change record: nothing event-driven consumes
+                    // tenant metadata (the router reads snapshots).
+                }
                 Write::UpsertDag(mut row) => {
                     // A re-upload must not reset an operator's pause
                     // decision: the parse function builds its row from the
@@ -257,6 +358,14 @@ impl MetaDb {
                         continue;
                     }
                     let key = (row.dag_id.clone(), row.run_id);
+                    // An insert that overwrites an existing key (should
+                    // not happen — pass-level id allocation prevents it)
+                    // must first unindex the old row or the maintained
+                    // queues would double-count it.
+                    if let Some(prev) = self.dag_runs.get(&key) {
+                        let (ps, pt) = (prev.state, prev.run_type);
+                        self.reindex_run(&key, pt, Some(ps), None);
+                    }
                     let change = Change::DagRun {
                         dag_id: row.dag_id.clone(),
                         run_id: row.run_id,
@@ -521,11 +630,12 @@ impl MetaDb {
         self.dags.contains_key(dag_id) || self.serialized.contains_key(dag_id)
     }
 
-    /// Keep the parked/active run indexes (`backfill_queued`,
-    /// `backfill_running`, `fg_queued`) in sync with one run's state
-    /// transition. `None` stands for "no row" (insert / delete). Every
-    /// write arm that changes a run row's state must route through this —
-    /// hand-rolling the updates per arm is how the counters drift.
+    /// Keep the parked/active run indexes (`backfill_queued` +
+    /// `backfill_seq`, `backfill_running`, `fg_queued`) in sync with one
+    /// run's state transition. `None` stands for "no row" (insert /
+    /// delete). Every write arm that changes a run row's state must route
+    /// through this — hand-rolling the updates per arm is how the
+    /// counters drift.
     fn reindex_run(
         &mut self,
         key: &RunKey,
@@ -536,16 +646,40 @@ impl MetaDb {
         if run_type == RunType::Backfill {
             match old {
                 Some(RunState::Queued) => {
-                    self.backfill_queued.remove(key);
+                    if let Some(seq) = self.backfill_seq.remove(key) {
+                        self.backfill_queued.remove(&seq);
+                    }
                 }
-                Some(RunState::Running) => self.backfill_running -= 1,
+                Some(RunState::Running) => {
+                    let tenant = tenant_of(&key.0);
+                    let drained = match self.backfill_running.get_mut(tenant) {
+                        Some(c) => {
+                            *c -= 1;
+                            *c == 0
+                        }
+                        None => false,
+                    };
+                    if drained {
+                        self.backfill_running.remove(tenant);
+                    }
+                }
                 _ => {}
             }
             match new {
                 Some(RunState::Queued) => {
-                    self.backfill_queued.insert(key.clone());
+                    // Arrival-sequenced: re-entering `Queued` (a revived
+                    // run) goes to the back of the FIFO.
+                    let seq = self.next_backfill_seq;
+                    self.next_backfill_seq += 1;
+                    self.backfill_queued.insert(seq, key.clone());
+                    self.backfill_seq.insert(key.clone(), seq);
                 }
-                Some(RunState::Running) => self.backfill_running += 1,
+                Some(RunState::Running) => {
+                    *self
+                        .backfill_running
+                        .entry(tenant_of(&key.0).to_string())
+                        .or_insert(0) += 1;
+                }
                 _ => {}
             }
         } else {
@@ -559,21 +693,41 @@ impl MetaDb {
     }
 
     /// Count of backfill runs currently in state `Running` across all
-    /// DAGs — the scheduler's `max_active_backfill_runs` budget check.
+    /// tenants (for the health surface; budget checks are per tenant via
+    /// [`MetaDb::active_backfill_count_of`]).
     pub fn active_backfill_count(&self) -> usize {
+        let total: usize = self.backfill_running.values().sum();
         debug_assert_eq!(
-            self.backfill_running,
+            total,
             self.dag_runs
                 .values()
                 .filter(|r| r.run_type == RunType::Backfill && r.state == RunState::Running)
                 .count()
         );
-        self.backfill_running
+        total
     }
 
-    /// Backfill runs waiting in state `Queued`, in key order (creation
-    /// order within a DAG; lexicographic by dag_id across DAGs) — what
-    /// the scheduler's promotion step drains.
+    /// Count of one tenant's backfill runs in state `Running` — the
+    /// scheduler's per-tenant `max_active_backfill_runs` budget check.
+    pub fn active_backfill_count_of(&self, tenant: &str) -> usize {
+        debug_assert_eq!(
+            self.backfill_running.get(tenant).copied().unwrap_or(0),
+            self.dag_runs
+                .values()
+                .filter(|r| {
+                    r.run_type == RunType::Backfill
+                        && r.state == RunState::Running
+                        && r.tenant_id == tenant
+                })
+                .count()
+        );
+        self.backfill_running.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Backfill runs waiting in state `Queued`, FIFO by arrival (the
+    /// sequence number stamped when the run entered `Queued`) — what the
+    /// scheduler's promotion step drains. Concurrent backfills of
+    /// different DAGs interleave in true submission order.
     pub fn queued_backfill(&self) -> impl Iterator<Item = &RunKey> + '_ {
         debug_assert_eq!(
             self.backfill_queued.len(),
@@ -582,7 +736,39 @@ impl MetaDb {
                 .filter(|r| r.run_type == RunType::Backfill && r.state == RunState::Queued)
                 .count()
         );
-        self.backfill_queued.iter()
+        self.backfill_queued.values()
+    }
+
+    /// One tenant's backfill cap: its record override, or the deployment
+    /// default (`SchedLimits::max_active_backfill_runs`). The single
+    /// definition shared by the scheduler's promotion budget and the
+    /// capacity-freeing nudges in `sairflow::world`.
+    pub fn backfill_cap_of(&self, tenant: &str, default_cap: usize) -> usize {
+        self.tenants
+            .get(tenant)
+            .and_then(|t| t.max_active_backfill_runs)
+            .unwrap_or(default_cap)
+    }
+
+    /// Whether this tenant has queued backfill work *and* budget headroom
+    /// to promote it — the predicate behind the mark-terminal / delete
+    /// scheduler nudges (only nudge when a pass could actually use the
+    /// freed capacity).
+    pub fn tenant_backfill_promotable(&self, tenant: &str, default_cap: usize) -> bool {
+        self.active_backfill_count_of(tenant) < self.backfill_cap_of(tenant, default_cap)
+            && self.queued_backfill().any(|k| tenant_of(&k.0) == tenant)
+    }
+
+    /// The logical dates that already have a run (any type, any state)
+    /// for `dag_id` — the backfill dedup probe set (Airflow skips dates
+    /// that already ran; re-POSTing an overlapping range must not
+    /// duplicate). One range scan; callers probe the set per candidate
+    /// date instead of rescanning the run table per date.
+    pub fn logical_dates_of(&self, dag_id: &str) -> HashSet<SimTime> {
+        self.dag_runs
+            .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
+            .map(|(_, r)| r.logical_ts)
+            .collect()
     }
 
     /// Count of backfill runs waiting in state `Queued` (for the health
@@ -749,6 +935,7 @@ mod tests {
     fn ti(dag: &str, run: u64, task: u32) -> TiRow {
         TiRow {
             dag_id: dag.into(),
+            tenant_id: tenant_of(dag).to_string(),
             run_id: run,
             task_id: task,
             state: TiState::None,
@@ -774,6 +961,7 @@ mod tests {
     fn run_row(dag: &str, run: u64, run_type: RunType, state: RunState) -> DagRunRow {
         DagRunRow {
             dag_id: dag.into(),
+            tenant_id: tenant_of(dag).to_string(),
             run_id: run,
             logical_ts: 0,
             run_type,
@@ -1151,6 +1339,167 @@ mod tests {
         db.apply(del, 4);
         assert_eq!(db.queued_backfill_count(), 0);
         assert_eq!(db.active_backfill_count(), 0);
+    }
+
+    #[test]
+    fn backfill_queue_is_fifo_by_arrival_not_key_order() {
+        // Regression for the cross-DAG fairness item: "zzz" backfills
+        // before "aaa"; the promotion queue must drain in arrival order,
+        // not lexicographically by (dag_id, run_id).
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("zzz"));
+        txn.push(dag_row("aaa"));
+        txn.push(Write::InsertDagRun(run_row("zzz", 1, RunType::Backfill, RunState::Queued)));
+        txn.push(Write::InsertDagRun(run_row("aaa", 1, RunType::Backfill, RunState::Queued)));
+        txn.push(Write::InsertDagRun(run_row("zzz", 2, RunType::Backfill, RunState::Queued)));
+        db.apply(txn, 1);
+        let order: Vec<RunKey> = db.queued_backfill().cloned().collect();
+        assert_eq!(
+            order,
+            vec![
+                ("zzz".to_string(), 1),
+                ("aaa".to_string(), 1),
+                ("zzz".to_string(), 2),
+            ],
+            "FIFO by arrival, not key order"
+        );
+        // Leaving `Queued` removes the entry; re-entering goes to the back.
+        let mut t = Txn::new();
+        t.push(Write::SetRunState { dag_id: "zzz".into(), run_id: 1, state: RunState::Running });
+        db.apply(t, 2);
+        let mut t = Txn::new();
+        t.push(Write::SetRunState { dag_id: "zzz".into(), run_id: 1, state: RunState::Queued });
+        db.apply(t, 3);
+        let order: Vec<RunKey> = db.queued_backfill().cloned().collect();
+        assert_eq!(
+            order,
+            vec![
+                ("aaa".to_string(), 1),
+                ("zzz".to_string(), 2),
+                ("zzz".to_string(), 1),
+            ],
+            "requeued run re-enters at the back"
+        );
+    }
+
+    #[test]
+    fn backfill_running_counted_per_tenant() {
+        use crate::dag::state::scoped_dag_id;
+        let a = scoped_dag_id("acme", "etl");
+        let g = scoped_dag_id("globex", "etl");
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row(&a));
+        txn.push(dag_row(&g));
+        txn.push(Write::InsertDagRun(run_row(&a, 1, RunType::Backfill, RunState::Running)));
+        txn.push(Write::InsertDagRun(run_row(&a, 2, RunType::Backfill, RunState::Running)));
+        txn.push(Write::InsertDagRun(run_row(&g, 1, RunType::Backfill, RunState::Running)));
+        db.apply(txn, 1);
+        assert_eq!(db.active_backfill_count(), 3);
+        assert_eq!(db.active_backfill_count_of("acme"), 2);
+        assert_eq!(db.active_backfill_count_of("globex"), 1);
+        assert_eq!(db.active_backfill_count_of("default"), 0);
+        let mut t = Txn::new();
+        t.push(Write::SetRunState { dag_id: a.clone(), run_id: 1, state: RunState::Success });
+        db.apply(t, 2);
+        assert_eq!(db.active_backfill_count_of("acme"), 1);
+        assert_eq!(db.active_backfill_count_of("globex"), 1);
+    }
+
+    fn tenant_row(id: &str, token: Option<&str>) -> TenantRow {
+        TenantRow {
+            tenant_id: id.into(),
+            token: token.map(|t| t.to_string()),
+            rate: Some((2.0, 4.0)),
+            max_active_backfill_runs: Some(1),
+        }
+    }
+
+    #[test]
+    fn tenants_seeded_and_upserted() {
+        let mut db = MetaDb::new();
+        assert!(db.tenants.contains_key("default"), "default tenant pre-seeded");
+        assert_eq!(db.tenants["default"].token, None);
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertTenant {
+            row: tenant_row("acme", Some("s3cret")),
+            expected_token: None,
+        });
+        let changes = db.apply(txn, 1);
+        assert!(changes.is_empty(), "tenant metadata is not CDC-routed");
+        assert_eq!(db.tenants["acme"].rate, Some((2.0, 4.0)));
+        assert_eq!(db.tenants["acme"].max_active_backfill_runs, Some(1));
+    }
+
+    #[test]
+    fn raced_tenant_upsert_cannot_replace_credentials() {
+        // Two racing creates both authenticated against "no record"
+        // (expected_token None): the first lands, the second — which
+        // would replace the first's credentials — is dropped at apply
+        // time (compare-and-swap on the token).
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertTenant {
+            row: tenant_row("acme", Some("victim")),
+            expected_token: None,
+        });
+        db.apply(txn, 1);
+        let mut race = Txn::new();
+        race.push(Write::UpsertTenant {
+            row: tenant_row("acme", Some("attacker")),
+            expected_token: None,
+        });
+        db.apply(race, 2);
+        assert_eq!(db.tenants["acme"].token.as_deref(), Some("victim"), "first write wins");
+        assert_eq!(db.stats.dropped_tenant_upserts, 1);
+        // An update that authenticated against the live token applies.
+        let mut update = Txn::new();
+        update.push(Write::UpsertTenant {
+            row: tenant_row("acme", Some("rotated")),
+            expected_token: Some("victim".into()),
+        });
+        db.apply(update, 3);
+        assert_eq!(db.tenants["acme"].token.as_deref(), Some("rotated"));
+        assert_eq!(db.stats.dropped_tenant_upserts, 1);
+        // A stale update carrying the old token is dropped.
+        let mut stale = Txn::new();
+        stale.push(Write::UpsertTenant {
+            row: tenant_row("acme", None),
+            expected_token: Some("victim".into()),
+        });
+        db.apply(stale, 4);
+        assert_eq!(db.tenants["acme"].token.as_deref(), Some("rotated"));
+        assert_eq!(db.stats.dropped_tenant_upserts, 2);
+    }
+
+    #[test]
+    fn change_records_are_tenant_attributable() {
+        use crate::dag::state::scoped_dag_id;
+        let c = Change::Ti {
+            dag_id: scoped_dag_id("acme", "etl"),
+            run_id: 1,
+            task_id: 0,
+            state: TiState::Queued,
+        };
+        assert_eq!(c.tenant_id(), "acme");
+        let c = Change::DagDeleted { dag_id: "etl".into() };
+        assert_eq!(c.tenant_id(), "default");
+    }
+
+    #[test]
+    fn logical_dates_probe_set_is_per_dag() {
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        let mut r = run_row("d", 1, RunType::Backfill, RunState::Queued);
+        r.logical_ts = 120;
+        txn.push(Write::InsertDagRun(r));
+        db.apply(txn, 1);
+        let dates = db.logical_dates_of("d");
+        assert!(dates.contains(&120));
+        assert!(!dates.contains(&60));
+        assert!(db.logical_dates_of("other").is_empty());
     }
 
     #[test]

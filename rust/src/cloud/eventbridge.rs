@@ -135,7 +135,9 @@ pub struct CronStats {
 
 /// The cron-like scheduled-event service. A registered DAG fires every
 /// `period`, starting one period after registration (Airflow semantics:
-/// the first run happens at the end of the first interval).
+/// the first run happens at the end of the first interval). Entries are
+/// keyed by the tenant-qualified DAG id, so same-named DAGs of different
+/// tenants hold independent schedules.
 #[derive(Debug, Default)]
 pub struct CronService {
     entries: HashMap<String, CronEntry>,

@@ -1,12 +1,68 @@
-//! Airflow state machines for DAG runs and task instances.
+//! Airflow state machines for DAG runs and task instances, plus the
+//! tenancy primitives of the multi-tenant control plane.
 //!
 //! We reproduce the subset of Airflow 2.4 states the paper's control flow
 //! exercises (§3, §4.1): a task instance goes
 //! `None → Scheduled → Queued → Running → {Success, Failed, UpForRetry}`,
 //! and `UpForRetry → Scheduled` again; a DAG run goes
 //! `Queued → Running → {Success, Failed}`.
+//!
+//! # Tenancy
+//!
+//! The paper's control plane is a *shared* serverless service (§4.1), so
+//! tenant isolation is an identifier-level concern: every resource the
+//! control plane touches is addressed by a **tenant-qualified DAG id**
+//! built by [`scoped_dag_id`]. The qualified id is what flows through the
+//! entire event fabric — blob keys, `dag`/`dag_run`/`task_instance` rows,
+//! CDC change records, cron entries, and every `SchedMsg` — so two
+//! tenants with identical DAG ids can never collide in any substrate.
+//! The `default` tenant maps to the bare id, which keeps every
+//! pre-tenancy caller (experiments, MWAA baseline, legacy wire format)
+//! bit-compatible. [`tenant_of`] / [`local_dag_id`] split a qualified id
+//! back into its parts at the serialization boundary.
 
 use std::fmt;
+
+/// The implicit tenant of all un-prefixed API paths and of every internal
+/// caller that predates multi-tenancy.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Separator between tenant id and DAG id inside a qualified id. ASCII
+/// unit separator: it cannot appear in a valid tenant id
+/// ([`valid_tenant_id`]) and is rejected in uploaded DAG ids, so the
+/// split is unambiguous.
+pub const TENANT_SEP: char = '\u{1f}';
+
+/// Whether `s` is a well-formed tenant id: non-empty, at most 64 bytes,
+/// ASCII alphanumerics plus `-`/`_`. The restricted charset is what makes
+/// [`TENANT_SEP`] collision-free and keeps tenant ids path- and
+/// blob-key-safe without escaping.
+pub fn valid_tenant_id(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+/// The tenant-qualified DAG id used everywhere inside the control plane.
+/// The default tenant maps to the bare id (full backward compatibility);
+/// any other tenant prefixes `"{tenant}\u{1f}"`.
+pub fn scoped_dag_id(tenant: &str, dag_id: &str) -> String {
+    if tenant == DEFAULT_TENANT {
+        dag_id.to_string()
+    } else {
+        format!("{tenant}{TENANT_SEP}{dag_id}")
+    }
+}
+
+/// The tenant that owns a (possibly qualified) DAG id.
+pub fn tenant_of(scoped: &str) -> &str {
+    scoped.split_once(TENANT_SEP).map(|(t, _)| t).unwrap_or(DEFAULT_TENANT)
+}
+
+/// The tenant-local DAG id (what API payloads show) of a qualified id.
+pub fn local_dag_id(scoped: &str) -> &str {
+    scoped.split_once(TENANT_SEP).map(|(_, d)| d).unwrap_or(scoped)
+}
 
 /// State of a task instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -221,6 +277,39 @@ mod tests {
         assert_eq!(TiState::parse("bogus"), Option::None);
         assert_eq!(RunState::parse("bogus"), Option::None);
         assert_eq!(RunType::parse("bogus"), Option::None);
+    }
+
+    #[test]
+    fn scoped_ids_roundtrip_and_default_maps_to_bare() {
+        // Default tenant: the qualified id IS the bare id (pre-tenancy
+        // callers stay bit-compatible).
+        assert_eq!(scoped_dag_id(DEFAULT_TENANT, "etl"), "etl");
+        assert_eq!(tenant_of("etl"), DEFAULT_TENANT);
+        assert_eq!(local_dag_id("etl"), "etl");
+        // Named tenant: prefix + separator, split back losslessly.
+        let s = scoped_dag_id("acme", "etl");
+        assert_ne!(s, "etl");
+        assert_eq!(tenant_of(&s), "acme");
+        assert_eq!(local_dag_id(&s), "etl");
+        // Two tenants with the same DAG id never collide.
+        assert_ne!(scoped_dag_id("acme", "etl"), scoped_dag_id("globex", "etl"));
+        // DAG ids containing path metacharacters survive the split (only
+        // the first separator is structural).
+        let s = scoped_dag_id("acme", "team/etl");
+        assert_eq!(tenant_of(&s), "acme");
+        assert_eq!(local_dag_id(&s), "team/etl");
+    }
+
+    #[test]
+    fn tenant_id_validation() {
+        assert!(valid_tenant_id("acme"));
+        assert!(valid_tenant_id("team_a-2"));
+        assert!(valid_tenant_id(DEFAULT_TENANT));
+        assert!(!valid_tenant_id(""));
+        assert!(!valid_tenant_id("has space"));
+        assert!(!valid_tenant_id("slash/y"));
+        assert!(!valid_tenant_id(&"x".repeat(65)));
+        assert!(!valid_tenant_id(&format!("a{TENANT_SEP}b")));
     }
 
     #[test]

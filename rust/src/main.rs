@@ -9,7 +9,7 @@
 //! sairflow artifacts [--dir artifacts]       # list + smoke-run PJRT artifacts
 //! ```
 
-use sairflow::api::{handle_http, Method};
+use sairflow::api::{handle_http_auth, Method};
 use sairflow::cost;
 use sairflow::exp::{self, ExperimentSpec, SystemKind};
 use sairflow::metrics::gantt;
@@ -137,13 +137,40 @@ fn cmd_run(args: &Args) {
     }
 }
 
+/// One demo request with an optional `Authorization` header, printed with
+/// its response; optionally advances simulated time so the event fabric's
+/// reactions are visible.
+fn demo_step(
+    sim: &mut Sim<World>,
+    world: &mut World,
+    method: Method,
+    target: &str,
+    auth: Option<&str>,
+    body: Option<String>,
+    settle_mins: f64,
+) -> sairflow::util::json::Json {
+    let tag = if auth.is_some() { "  [Authorization set]" } else { "" };
+    println!("\n→ {method} {target}{tag}");
+    if let Some(b) = &body {
+        println!("  body: {b}");
+    }
+    let resp = handle_http_auth(sim, world, method.as_str(), target, body.as_deref(), auth);
+    println!("{}", resp.to_string_pretty());
+    if settle_mins > 0.0 {
+        sim.run_until(world, sim.now() + mins(settle_mins), 10_000_000);
+        println!("  … {settle_mins} simulated minute(s) pass");
+    }
+    resp
+}
+
 /// Drive the v1 control-plane API end-to-end against a deployed world,
 /// printing each request/response pair: upload → list → trigger → inspect
 /// → clear (re-execution) → pause → trigger-while-paused (queued run,
-/// Airflow parity) → unpause → backfill → health → delete. Every mutation
-/// flows through the DB-txn → CDC → scheduler path; the demo advances
-/// simulated time between steps so the event fabric's reactions are
-/// visible.
+/// Airflow parity) → unpause → backfill (with dedup) → tenant CRUD +
+/// authorized tenant traffic + gateway 429 → health → delete. Every
+/// mutation flows through the DB-txn → CDC → scheduler path; the demo
+/// advances simulated time between steps so the event fabric's reactions
+/// are visible.
 fn cmd_api(args: &Args) {
     if !args.flag("demo") {
         eprintln!("usage: sairflow api --demo [--seed <n>]");
@@ -159,17 +186,7 @@ fn cmd_api(args: &Args) {
                     target: &str,
                     body: Option<String>,
                     settle_mins: f64| {
-        println!("\n→ {method} {target}");
-        if let Some(b) = &body {
-            println!("  body: {b}");
-        }
-        let resp = handle_http(sim, world, method.as_str(), target, body.as_deref());
-        println!("{}", resp.to_string_pretty());
-        if settle_mins > 0.0 {
-            sim.run_until(world, sim.now() + mins(settle_mins), 10_000_000);
-            println!("  … {settle_mins} simulated minute(s) pass");
-        }
-        resp
+        demo_step(sim, world, method, target, None, body, settle_mins)
     };
 
     // 1. Upload a 3-task chain on a 2-minute schedule.
@@ -239,9 +256,10 @@ fn cmd_api(args: &Args) {
         5.0,
     );
 
-    // 5. Backfill a logical-date range: the whole range materializes as
-    //    backfill-typed runs, promoted under the backfill budget so they
-    //    cannot starve cron traffic.
+    // 5. Backfill a logical-date range: dates without an existing run
+    //    materialize as backfill-typed runs (any date that already has a
+    //    run would be reported as `skipped`), promoted under the backfill
+    //    budget so they cannot starve cron traffic.
     step(
         &mut sim,
         &mut world,
@@ -259,12 +277,84 @@ fn cmd_api(args: &Args) {
         0.0,
     );
 
-    // 6. Check health, then delete the DAG and confirm the surface is
-    //    empty.
+    // 6. Re-POST an overlapping backfill range: already-materialized
+    //    logical dates are skipped (`created` vs `skipped`), no
+    //    duplicates.
+    step(
+        &mut sim,
+        &mut world,
+        Method::Post,
+        "/api/v1/dags/etl/dagRuns/backfill",
+        Some(r#"{"start_ts": 120, "end_ts": 360, "interval_secs": 120}"#.into()),
+        5.0,
+    );
+
+    // 7. Multi-tenancy: mint tenant "acme" (token + 1 req/s rate budget),
+    //    then drive its own namespace with the Authorization header. Its
+    //    "etl" DAG is a different resource from the default tenant's.
+    step(
+        &mut sim,
+        &mut world,
+        Method::Post,
+        "/api/v1/tenants",
+        Some(
+            r#"{"tenant_id": "acme", "token": "acme-secret", "rate_rps": 1, "rate_burst": 2, "max_active_backfill_runs": 4}"#
+                .into(),
+        ),
+        1.0,
+    );
+    let acme = Some("Bearer acme-secret");
+    let acme_dag = synthetic::chain_dag("etl", 2, 1.0, 2.0);
+    let body = Json::obj().set("file_text", acme_dag.to_json().to_string_pretty());
+    demo_step(
+        &mut sim,
+        &mut world,
+        Method::Post,
+        "/api/v1/tenants/acme/dags",
+        acme,
+        Some(body.to_string_compact()),
+        1.0,
+    );
+    demo_step(
+        &mut sim,
+        &mut world,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        acme,
+        None,
+        3.0,
+    );
+    demo_step(&mut sim, &mut world, Method::Get, "/api/v1/tenants/acme/dags", acme, None, 2.0);
+    // The default tenant still sees exactly one "etl" — its own.
+    step(&mut sim, &mut world, Method::Get, "/api/v1/dags?limit=10", None, 0.0);
+    // Missing credentials on a tokened tenant: structured 401.
+    demo_step(&mut sim, &mut world, Method::Get, "/api/v1/tenants/acme/dags", None, None, 0.0);
+
+    // 8. Gateway admission control: the third request inside one second
+    //    exceeds acme's burst of 2 → structured 429; the default tenant
+    //    is unaffected.
+    for _ in 0..3 {
+        demo_step(
+            &mut sim,
+            &mut world,
+            Method::Get,
+            "/api/v1/tenants/acme/health",
+            acme,
+            None,
+            0.0,
+        );
+    }
+
+    // 9. Check health (per-tenant breakdowns + admission totals on the
+    //    operator surface), then delete the DAG and confirm the surface
+    //    is empty.
     step(&mut sim, &mut world, Method::Get, "/api/v1/health", None, 0.0);
     step(&mut sim, &mut world, Method::Delete, "/api/v1/dags/etl", None, 1.0);
     step(&mut sim, &mut world, Method::Get, "/api/v1/dags", None, 0.0);
-    println!("\ndemo complete: every mutation above flowed DB-txn → CDC → scheduler.");
+    println!(
+        "\ndemo complete: every mutation above flowed DB-txn → CDC → scheduler, \
+         and every request passed tenant resolution + gateway admission."
+    );
 }
 
 fn cmd_cost(args: &Args) {

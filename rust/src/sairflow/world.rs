@@ -18,6 +18,7 @@
 //! No sAirflow code polls or runs in the background: every arrow above is
 //! an event.
 
+use crate::api::gateway::Gateway;
 use crate::cloud::blob::BlobStore;
 use crate::cloud::caas::{CaasHost, CaasPlatform};
 use crate::cloud::cdc::{self, Cdc, CdcHost};
@@ -30,7 +31,7 @@ use crate::cloud::kinesis::{self, KinesisHost, KinesisStream};
 use crate::cloud::mq::{self, Esm, EsmConfig, SqsQueue};
 use crate::cloud::stepfn::{StepFnHost, StepFunctions};
 use crate::dag::spec::{DagSpec, ExecKind};
-use crate::dag::state::{RunState, RunType, TiState};
+use crate::dag::state::{tenant_of, RunState, RunType, TiState};
 use crate::executor::{self, TaskRef};
 use crate::parser::{self, UploadEvent};
 use crate::sairflow::config::Config;
@@ -94,6 +95,9 @@ pub struct World {
     pub cexec_q: SqsQueue<TaskRef>,
     pub cexec_esm: Esm,
     pub fns: Fns,
+    /// API gateway admission control: per-tenant token buckets + counters
+    /// (Fig. 1 (14) — the interface of the shared control plane).
+    pub gateway: Gateway,
     /// Optional PJRT engine for `Compute` task payloads (the data plane).
     pub engine: Option<crate::runtime::Engine>,
 }
@@ -478,6 +482,7 @@ impl World {
             cexec_q: SqsQueue::standard("container-executor"),
             cexec_esm: Esm::new(EsmConfig::executor_feed()),
             fns,
+            gateway: Gateway::new(),
             engine: None,
             faas: faas_platform,
             caas: caas_platform,
@@ -493,6 +498,14 @@ impl World {
 
 /// Upload a DAG file (the user action (1) of Fig. 1): write the file to
 /// blob storage and emit the storage notification.
+///
+/// Tenancy note: `spec.dag_id` — like every `dag_id` the functions below
+/// take — is the tenant-qualified id
+/// ([`crate::dag::state::scoped_dag_id`]); the API layer qualifies ids at
+/// the boundary, and the default tenant's ids are bare, so pre-tenancy
+/// callers pass plain ids unchanged. The qualified id flows into the blob
+/// key, every DB row, the CDC stream and the cron service, which is what
+/// keeps same-named DAGs of different tenants fully isolated end to end.
 pub fn upload_dag(sim: &mut Sim<World>, _w: &mut World, spec: &DagSpec) {
     let key = format!("dags/{}.json", spec.dag_id);
     let text = spec.to_json().to_string_pretty();
@@ -608,10 +621,12 @@ pub fn mark_run_state(
         let freed_work = {
             let db = w.db.read();
             match marked_type {
-                RunType::Backfill => {
-                    db.queued_backfill_count() > 0
-                        && db.active_backfill_count() < w.cfg.limits.max_active_backfill_runs
-                }
+                // Budgets are per tenant: only this tenant's queued runs
+                // can use the freed slot, checked against its own cap.
+                RunType::Backfill => db.tenant_backfill_promotable(
+                    tenant_of(&dag),
+                    w.cfg.limits.max_active_backfill_runs,
+                ),
                 _ => db.queued_foreground().any(|k| k.0 == dag),
             }
         };
@@ -642,12 +657,12 @@ pub fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
         // Deleting a DAG may have freed backfill budget (its running
         // backfill runs vanish with it), and `DagDeleted` routes only to
         // the schedule updater. Same nudge as `mark_run_state`, gated on
-        // queued work plus actual budget headroom.
-        let freed_work = {
-            let db = w.db.read();
-            db.queued_backfill_count() > 0
-                && db.active_backfill_count() < w.cfg.limits.max_active_backfill_runs
-        };
+        // queued work plus actual budget headroom — per tenant, since the
+        // freed slots belong to the deleted DAG's tenant alone.
+        let freed_work = w.db.read().tenant_backfill_promotable(
+            tenant_of(&dag_id),
+            w.cfg.limits.max_active_backfill_runs,
+        );
         if freed_work {
             w.sched_q.send(SchedMsg::DagResumed { dag_id });
             mq::pump(sim, w, sched_acc, sched_handler);

@@ -22,9 +22,9 @@
 
 use crate::cloud::db::{MetaDb, RunKey, TiRow, Txn, Write};
 use crate::dag::graph::DagGraph;
-use crate::dag::state::{RunState, RunType, TiState};
+use crate::dag::state::{tenant_of, RunState, RunType, TiState};
 use crate::sim::time::SimTime;
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 /// Messages feeding the scheduler (the FIFO queue payload).
 #[derive(Debug, Clone, PartialEq)]
@@ -54,13 +54,17 @@ pub enum SchedMsg {
 /// support at most 125 concurrent task instances.
 #[derive(Debug, Clone)]
 pub struct SchedLimits {
-    /// Maximum queued+running task instances across all DAGs.
+    /// Maximum queued+running task instances across all DAGs (platform
+    /// capacity — the 125 worker slots are physical and shared).
     pub parallelism: usize,
-    /// Maximum backfill runs in state `Running` across all DAGs. A
+    /// Default maximum backfill runs in state `Running` **per tenant**. A
     /// backfill expands a whole date range at once; without a separate
     /// budget those runs would race cron traffic for the 125 parallelism
-    /// slots. Excess backfill runs wait in `Queued` and are promoted as
-    /// earlier ones finish.
+    /// slots. Excess backfill runs wait in `Queued` and are promoted
+    /// FIFO-by-arrival as earlier ones finish. A tenant record can
+    /// override its own budget (`TenantRow::max_active_backfill_runs`);
+    /// budgets are never shared across tenants, so one tenant's backfill
+    /// storm cannot consume another tenant's promotion slots.
     pub max_active_backfill_runs: usize,
 }
 
@@ -80,6 +84,9 @@ pub struct PassStats {
     /// Queued runs promoted to `Running` (backfill budget, unpause,
     /// freed `max_active_runs` capacity).
     pub runs_promoted: usize,
+    /// Backfill triggers dropped because their logical date already has a
+    /// run for that DAG (re-POSTed overlapping range, Airflow dedup).
+    pub backfill_deduped: usize,
     pub tis_scheduled: usize,
     pub tis_queued: usize,
     pub runs_completed: usize,
@@ -139,6 +146,12 @@ pub fn scheduling_pass(
     // Backfill runs created by this pass, candidates for same-pass
     // promotion under the backfill budget (below).
     let mut created_backfill: Vec<RunKey> = Vec::new();
+    // Backfill dedup probe sets, one per DAG, seeded lazily from the
+    // snapshot (one range scan per DAG per pass — not one per trigger)
+    // and extended with the dates this pass creates, so overlapping
+    // POSTs dedup whether the earlier range is already committed or
+    // still in this very batch.
+    let mut bf_dates: HashMap<String, HashSet<SimTime>> = HashMap::new();
 
     // Step 1: create DAG runs for triggers.
     for msg in batch {
@@ -152,6 +165,19 @@ pub fn scheduling_pass(
                 // `Queued` until unpause for manual runs).
                 if *run_type == RunType::Scheduled && paused {
                     continue;
+                }
+                // Backfill dedup (Airflow parity): a logical date that
+                // already has a run for this DAG — in the snapshot or
+                // created earlier in this very pass — is skipped, so
+                // re-POSTing an overlapping range cannot duplicate runs.
+                if *run_type == RunType::Backfill {
+                    let dates = bf_dates
+                        .entry(dag_id.clone())
+                        .or_insert_with(|| db.logical_dates_of(dag_id));
+                    if !dates.insert(*logical_ts) {
+                        out.stats.backfill_deduped += 1;
+                        continue;
+                    }
                 }
                 let st = pass_dags.entry(dag_id.clone()).or_insert_with(|| PassDag {
                     base_id: next_run_id(db, dag_id),
@@ -191,6 +217,7 @@ pub fn scheduling_pass(
                 };
                 out.txn.push(Write::InsertDagRun(crate::cloud::db::DagRunRow {
                     dag_id: dag_id.clone(),
+                    tenant_id: tenant_of(dag_id).to_string(),
                     run_id,
                     logical_ts: *logical_ts,
                     run_type: *run_type,
@@ -201,6 +228,7 @@ pub fn scheduling_pass(
                 for t in &spec.tasks {
                     out.txn.push(Write::InsertTi(TiRow {
                         dag_id: dag_id.clone(),
+                        tenant_id: tenant_of(dag_id).to_string(),
                         run_id,
                         task_id: t.id,
                         state: TiState::None,
@@ -245,10 +273,10 @@ pub fn scheduling_pass(
     // iteration.) Root ready times are therefore the run's start.
 
     // Runs this pass moves Running -> terminal free capacity for the
-    // promotion steps below: backfill completions free the global
+    // promotion steps below: backfill completions free their *tenant's*
     // backfill budget, foreground completions free their DAG's
     // `max_active_runs` capacity.
-    let mut backfill_freed = 0usize;
+    let mut backfill_freed: HashMap<String, usize> = HashMap::new();
     let mut fg_freed: HashMap<String, u64> = HashMap::new();
 
     // Steps 2+3 for existing dirty runs, plus run-completion detection.
@@ -268,7 +296,7 @@ pub fn scheduling_pass(
             // forever.
             if run.state == RunState::Running {
                 if run.run_type == RunType::Backfill {
-                    backfill_freed += 1;
+                    *backfill_freed.entry(run.tenant_id.clone()).or_insert(0) += 1;
                 } else {
                     *fg_freed.entry(dag_id.clone()).or_insert(0) += 1;
                 }
@@ -312,7 +340,7 @@ pub fn scheduling_pass(
         }
         if all_terminal {
             if run.run_type == RunType::Backfill {
-                backfill_freed += 1;
+                *backfill_freed.entry(run.tenant_id.clone()).or_insert(0) += 1;
             } else {
                 *fg_freed.entry(dag_id.clone()).or_insert(0) += 1;
             }
@@ -435,33 +463,56 @@ pub fn scheduling_pass(
     }
 
     // Backfill promotion: drain queued backfill runs into `Running` while
-    // the global budget allows. Runs completed by *this* pass free budget
-    // immediately (their terminal write commits in this same txn), which
-    // keeps the pipeline moving without routing terminal run changes back
-    // to the scheduler. Snapshot queue first (key order: creation order
-    // within a DAG), then runs created above; the promotion's `Running`
-    // change routes back through CDC and the next pass launches the roots.
-    let backfill_active = db.active_backfill_count().saturating_sub(backfill_freed);
-    let mut budget = limits.max_active_backfill_runs.saturating_sub(backfill_active);
+    // their *tenant's* budget allows. Budgets are strictly per tenant
+    // (record override or the deployment default) — a saturated tenant is
+    // skipped, never allowed to block another tenant's promotions. Runs
+    // completed by *this* pass free budget immediately (their terminal
+    // write commits in this same txn), which keeps the pipeline moving
+    // without routing terminal run changes back to the scheduler. The
+    // snapshot queue drains FIFO by arrival sequence (cross-DAG
+    // fairness), then runs created above; the promotion's `Running`
+    // change routes back through CDC and the next pass launches the
+    // roots.
+    fn bf_budget_left(
+        db: &MetaDb,
+        limits: &SchedLimits,
+        freed: &HashMap<String, usize>,
+        tenant: &str,
+    ) -> usize {
+        let cap = db.backfill_cap_of(tenant, limits.max_active_backfill_runs);
+        let active = db
+            .active_backfill_count_of(tenant)
+            .saturating_sub(freed.get(tenant).copied().unwrap_or(0));
+        cap.saturating_sub(active)
+    }
+    let mut bf_remaining: HashMap<String, usize> = HashMap::new();
     for key in db.queued_backfill() {
-        if budget == 0 {
-            break;
-        }
         // Skip runs whose DAG vanished (the dirty loop fails them).
         if !db.serialized.contains_key(&key.0) {
             continue;
         }
+        let tenant = tenant_of(&key.0);
+        let rem = bf_remaining
+            .entry(tenant.to_string())
+            .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
+        if *rem == 0 {
+            continue; // this tenant is saturated; others still drain
+        }
+        *rem -= 1;
         out.txn.push(Write::PromoteRun { dag_id: key.0.clone(), run_id: key.1 });
         out.stats.runs_promoted += 1;
-        budget -= 1;
     }
     for (dag_id, run_id) in created_backfill {
-        if budget == 0 {
-            break;
+        let tenant = tenant_of(&dag_id);
+        let rem = bf_remaining
+            .entry(tenant.to_string())
+            .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
+        if *rem == 0 {
+            continue;
         }
+        *rem -= 1;
         out.txn.push(Write::PromoteRun { dag_id, run_id });
         out.stats.runs_promoted += 1;
-        budget -= 1;
     }
     out
 }
@@ -898,6 +949,165 @@ mod tests {
         let out = scheduling_pass(&db, 2 * SECOND, &periodic("x"), &SchedLimits::default());
         assert_eq!(out.stats.runs_created, 0);
         assert_eq!(out.stats.runs_skipped, 1);
+    }
+
+    #[test]
+    fn backfill_dedup_skips_existing_logical_dates() {
+        let spec = chain_dag("b", 1, 10.0, 5.0);
+        let mut db = db_with(&spec);
+        let limits = SchedLimits::default();
+        // First range: dates 0, 60, 120.
+        let batch: Vec<SchedMsg> =
+            [0u64, 60, 120].iter().map(|&t| trigger_msg("b", t, RunType::Backfill)).collect();
+        let out = scheduling_pass(&db, 0, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 3);
+        assert_eq!(out.stats.backfill_deduped, 0);
+        db.apply(out.txn, 0);
+        // Overlapping re-POST: 60, 120, 180 — only 180 is new.
+        let batch: Vec<SchedMsg> =
+            [60u64, 120, 180].iter().map(|&t| trigger_msg("b", t, RunType::Backfill)).collect();
+        let out = scheduling_pass(&db, 1, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 1, "only the new date materializes");
+        assert_eq!(out.stats.backfill_deduped, 2);
+        db.apply(out.txn, 1);
+        assert_eq!(db.dag_runs.len(), 4);
+        // Same-pass duplicates (two identical POSTs batched together)
+        // dedup too.
+        let batch = vec![
+            trigger_msg("b", 240, RunType::Backfill),
+            trigger_msg("b", 240, RunType::Backfill),
+        ];
+        let out = scheduling_pass(&db, 2, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 1);
+        assert_eq!(out.stats.backfill_deduped, 1);
+        // Manual triggers are never deduped (same logical date is fine).
+        db.apply(out.txn, 2);
+        let batch = vec![
+            trigger_msg("b", 240, RunType::Manual),
+            trigger_msg("b", 240, RunType::Manual),
+        ];
+        let out = scheduling_pass(&db, 3, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 2);
+        assert_eq!(out.stats.backfill_deduped, 0);
+    }
+
+    #[test]
+    fn interleaved_backfills_of_two_dags_drain_fifo_by_arrival() {
+        // Regression for the cross-DAG fairness item: "zzz" backfills
+        // strictly before "aaa"; with a budget of 1 the promotions must
+        // follow arrival order, not lexicographic (dag_id, run_id) order.
+        let zzz = chain_dag("zzz", 1, 10.0, 5.0);
+        let aaa = chain_dag("aaa", 1, 10.0, 5.0);
+        let mut db = db_with(&zzz);
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: aaa.dag_id.clone(),
+            fileloc: "dags/aaa.json".into(),
+            period: aaa.period,
+            is_paused: false,
+        }));
+        txn.push(Write::PutSerializedDag(aaa.clone()));
+        db.apply(txn, 0);
+        let limits = SchedLimits { max_active_backfill_runs: 1, ..SchedLimits::default() };
+        // zzz's range arrives first, aaa's second (interleaved in one
+        // batch, as back-to-back POSTs would land on the FIFO feed).
+        let batch = vec![
+            trigger_msg("zzz", 0, RunType::Backfill),
+            trigger_msg("zzz", 60, RunType::Backfill),
+            trigger_msg("aaa", 0, RunType::Backfill),
+            trigger_msg("aaa", 60, RunType::Backfill),
+        ];
+        let out = scheduling_pass(&db, 0, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 4);
+        assert_eq!(out.stats.runs_promoted, 1, "budget 1: one promotion");
+        db.apply(out.txn, 0);
+        // The promoted run is zzz/1 — first arrival, despite "aaa" < "zzz".
+        assert_eq!(db.dag_runs[&("zzz".into(), 1)].state, RunState::Running);
+        assert_eq!(db.dag_runs[&("aaa".into(), 1)].state, RunState::Queued);
+        // Drain: complete the running run, observe the next promotion.
+        let mut promoted_order: Vec<RunKey> = vec![("zzz".into(), 1)];
+        for step in 0..3 {
+            let (key, _) = db
+                .dag_runs
+                .iter()
+                .find(|(_, r)| r.state == RunState::Running)
+                .map(|(k, r)| (k.clone(), r.run_id))
+                .expect("one running backfill");
+            let mut t = Txn::new();
+            t.push(Write::SetRunState {
+                dag_id: key.0.clone(),
+                run_id: key.1,
+                state: RunState::Success,
+            });
+            db.apply(t, 10 + step);
+            let msg = vec![SchedMsg::DagResumed { dag_id: key.0.clone() }];
+            let out = scheduling_pass(&db, 11 + step, &msg, &limits);
+            assert_eq!(out.stats.runs_promoted, 1, "freed slot promotes next arrival");
+            db.apply(out.txn, 11 + step);
+            let next = db
+                .dag_runs
+                .iter()
+                .find(|(_, r)| r.state == RunState::Running)
+                .map(|(k, _)| k.clone())
+                .expect("next backfill promoted");
+            promoted_order.push(next);
+        }
+        assert_eq!(
+            promoted_order,
+            vec![
+                ("zzz".to_string(), 1),
+                ("zzz".to_string(), 2),
+                ("aaa".to_string(), 1),
+                ("aaa".to_string(), 2),
+            ],
+            "FIFO by arrival across DAGs"
+        );
+    }
+
+    #[test]
+    fn backfill_budgets_are_per_tenant() {
+        use crate::cloud::db::TenantRow;
+        use crate::dag::state::scoped_dag_id;
+        // Tenant "acme" overrides its budget to 1; "globex" uses the
+        // deployment default (2). Saturating acme must not block globex.
+        let acme_dag = scoped_dag_id("acme", "etl");
+        let globex_dag = scoped_dag_id("globex", "etl");
+        let mut spec_a = chain_dag(&acme_dag, 1, 10.0, 5.0);
+        spec_a.period = None;
+        let mut db = db_with(&spec_a);
+        let mut spec_g = chain_dag(&globex_dag, 1, 10.0, 5.0);
+        spec_g.period = None;
+        let mut txn = Txn::new();
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: globex_dag.clone(),
+            fileloc: String::new(),
+            period: None,
+            is_paused: false,
+        }));
+        txn.push(Write::PutSerializedDag(spec_g));
+        txn.push(Write::UpsertTenant {
+            row: TenantRow {
+                tenant_id: "acme".into(),
+                token: None,
+                rate: None,
+                max_active_backfill_runs: Some(1),
+            },
+            expected_token: None,
+        });
+        db.apply(txn, 0);
+        let limits = SchedLimits { max_active_backfill_runs: 2, ..SchedLimits::default() };
+        // Acme's big range arrives before globex's — with a shared budget
+        // acme would starve globex; per-tenant budgets promote 1 + 2.
+        let mut batch: Vec<SchedMsg> =
+            (0..4).map(|i| trigger_msg(&acme_dag, i * 60, RunType::Backfill)).collect();
+        batch.extend((0..3).map(|i| trigger_msg(&globex_dag, i * 60, RunType::Backfill)));
+        let out = scheduling_pass(&db, 0, &batch, &limits);
+        assert_eq!(out.stats.runs_created, 7);
+        assert_eq!(out.stats.runs_promoted, 3, "1 acme (override) + 2 globex (default)");
+        db.apply(out.txn, 0);
+        assert_eq!(db.active_backfill_count_of("acme"), 1);
+        assert_eq!(db.active_backfill_count_of("globex"), 2);
+        assert_eq!(db.queued_backfill_count(), 4);
     }
 
     #[test]

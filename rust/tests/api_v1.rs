@@ -517,6 +517,61 @@ fn backfill_validates_range_and_dag() {
 }
 
 #[test]
+fn backfill_overlapping_range_dedupes_existing_dates() {
+    // Regression for the ROADMAP dedup item: re-POSTing an overlapping
+    // [start_ts, end_ts] range skips logical dates that already have a
+    // run, and the response reports created vs skipped.
+    let (mut sim, mut w) = deployed(&manual_chain("etl"));
+    let post = |sim: &mut Sim<World>, w: &mut World, start: u64, end: u64| {
+        let body = Json::obj()
+            .set("start_ts", start)
+            .set("end_ts", end)
+            .set("interval_secs", 60u64);
+        dispatch(sim, w, Method::Post, "/api/v1/dags/etl/dagRuns/backfill", Some(&body))
+    };
+    let resp = post(&mut sim, &mut w, 0, 240);
+    assert_eq!(resp.get("created").unwrap().as_u64(), Some(5), "{resp}");
+    assert_eq!(resp.get("skipped").unwrap().as_u64(), Some(0));
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    assert_eq!(w.db.read().dag_runs.len(), 5);
+
+    // Overlap [120, 360] step 60 re-offers 120/180/240/300/360; the
+    // first range already created 0/60/120/180/240, so 120/180/240 are
+    // skipped and only 300/360 materialize.
+    let resp = post(&mut sim, &mut w, 120, 360);
+    assert_eq!(resp.get("created").unwrap().as_u64(), Some(2), "{resp}");
+    assert_eq!(resp.get("skipped").unwrap().as_u64(), Some(3));
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    {
+        let db = w.db.read();
+        assert_eq!(db.dag_runs.len(), 7, "no duplicate logical dates");
+        let mut dates: Vec<u64> = db.dag_runs.values().map(|r| r.logical_ts).collect();
+        dates.sort_unstable();
+        dates.dedup();
+        assert_eq!(dates.len(), 7, "every logical date unique");
+    }
+
+    // A fully-covered re-POST creates nothing.
+    let resp = post(&mut sim, &mut w, 0, 360);
+    assert_eq!(resp.get("created").unwrap().as_u64(), Some(0), "{resp}");
+    assert_eq!(resp.get("skipped").unwrap().as_u64(), Some(7));
+    sim.run_until(&mut w, sim.now() + mins(5.0), 10_000_000);
+    assert_eq!(w.db.read().dag_runs.len(), 7);
+
+    // Two identical POSTs without settling in between: the in-flight
+    // triggers aren't visible to the second request's snapshot, but the
+    // scheduling pass dedups at apply time — still no duplicates.
+    let r1 = post(&mut sim, &mut w, 600, 720);
+    let r2 = post(&mut sim, &mut w, 600, 720);
+    assert_eq!(r1.get("created").unwrap().as_u64(), Some(3));
+    assert_eq!(r2.get("created").unwrap().as_u64(), Some(3), "snapshot can't see in-flight");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let db = w.db.read();
+    assert_eq!(db.dag_runs.len(), 10, "apply-time dedup dropped the racing range");
+    assert!(db.stats.txns > 0);
+}
+
+#[test]
 fn backfill_throttled_and_cron_unstarved() {
     // A 4-run backfill of a slow DAG under `max_active_backfill_runs: 1`
     // must drain one run at a time while a 2-minute cron DAG keeps

@@ -1,0 +1,574 @@
+//! Integration tests of the multi-tenant control plane: tenant CRUD,
+//! namespace isolation (uploads, lists, runs, health, deletes), auth
+//! (401), gateway admission control (429), and legacy-shim bit-compat on
+//! the `default` tenant.
+
+use sairflow::api::{self, dispatch, dispatch_auth, Method};
+use sairflow::dag::state::{scoped_dag_id, RunState};
+use sairflow::sairflow::{Config, World};
+use sairflow::sim::engine::Sim;
+use sairflow::sim::time::{mins, MINUTE};
+use sairflow::util::json::Json;
+use sairflow::workloads::synthetic::chain_dag;
+
+/// A 2-task chain without a schedule (manual triggering only).
+fn manual_chain(dag_id: &str) -> sairflow::dag::spec::DagSpec {
+    let mut dag = chain_dag(dag_id, 2, 1.0, 5.0);
+    dag.period = None;
+    dag
+}
+
+fn status(resp: &Json) -> u64 {
+    resp.get("status").unwrap().as_u64().unwrap()
+}
+
+/// Create a tenant through the API and settle the commit.
+fn mint_tenant(sim: &mut Sim<World>, w: &mut World, body: Json) {
+    let resp = dispatch(sim, w, Method::Post, "/api/v1/tenants", Some(&body));
+    assert_eq!(status(&resp), 200, "mint tenant: {resp}");
+    sim.run_until(w, sim.now() + mins(0.5), 1_000_000);
+}
+
+/// World with two tokened tenants, each owning a DAG named "etl"
+/// (uploaded through its own namespace), fully settled.
+fn two_tenants() -> (Sim<World>, World) {
+    let w = World::new(Config::seeded(4242));
+    let mut sim = w.sim();
+    let mut w = w;
+    for t in ["acme", "globex"] {
+        mint_tenant(
+            &mut sim,
+            &mut w,
+            Json::obj().set("tenant_id", t).set("token", format!("{t}-token")),
+        );
+    }
+    for t in ["acme", "globex"] {
+        let body = Json::obj()
+            .set("file_text", manual_chain("etl").to_json().to_string_pretty());
+        let auth = format!("Bearer {t}-token");
+        let resp = dispatch_auth(
+            &mut sim,
+            &mut w,
+            Method::Post,
+            &format!("/api/v1/tenants/{t}/dags"),
+            Some(&body),
+            Some(auth.as_str()),
+        );
+        assert_eq!(status(&resp), 200, "upload under {t}: {resp}");
+    }
+    sim.run_until(&mut w, 2 * MINUTE, 10_000_000);
+    (sim, w)
+}
+
+#[test]
+fn tenant_crud_and_detail() {
+    let w = World::new(Config::seeded(1));
+    let mut sim = w.sim();
+    let mut w = w;
+    mint_tenant(
+        &mut sim,
+        &mut w,
+        Json::obj()
+            .set("tenant_id", "acme")
+            .set("token", "s3cret")
+            .set("rate_rps", 2.0)
+            .set("rate_burst", 4.0)
+            .set("max_active_backfill_runs", 3u64),
+    );
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants", None);
+    assert_eq!(status(&resp), 200);
+    // default + acme.
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(2));
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/acme", None);
+    let t = resp.get("tenant").unwrap();
+    assert_eq!(t.get("tenant_id").unwrap().as_str(), Some("acme"));
+    assert_eq!(t.get("token_set").unwrap().as_bool(), Some(true));
+    assert!(t.get("token").is_none(), "the token itself is never returned");
+    assert_eq!(t.get("rate_rps").unwrap().as_f64(), Some(2.0));
+    assert_eq!(t.get("max_active_backfill_runs").unwrap().as_u64(), Some(3));
+    // Unknown tenant detail → 404.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/ghost", None);
+    assert_eq!(status(&resp), 404);
+    // Invalid ids and the reserved default are a 400.
+    let bad = Json::obj().set("tenant_id", "has space");
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/tenants", Some(&bad));
+    assert_eq!(status(&resp), 400);
+    let bad = Json::obj().set("tenant_id", "default").set("token", "x");
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/tenants", Some(&bad));
+    assert_eq!(status(&resp), 400, "default tenant is reserved: {resp}");
+    // Rate fields must come as a pair.
+    let bad = Json::obj().set("tenant_id", "x").set("rate_rps", 1.0);
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/tenants", Some(&bad));
+    assert_eq!(status(&resp), 400);
+}
+
+#[test]
+fn auth_is_enforced_per_tenant() {
+    let (mut sim, mut w) = two_tenants();
+    let acme_dags = "/api/v1/tenants/acme/dags";
+    // No credentials → 401 with the structured kind.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, acme_dags, None);
+    assert_eq!(status(&resp), 401);
+    assert_eq!(
+        resp.get("error").unwrap().get("kind").unwrap().as_str(),
+        Some("unauthorized")
+    );
+    // A wrong token and *another tenant's* token are equally rejected.
+    for bad in ["Bearer wrong", "Bearer globex-token", "acme-token"] {
+        let resp = dispatch_auth(&mut sim, &mut w, Method::Get, acme_dags, None, Some(bad));
+        assert_eq!(status(&resp), 401, "auth '{bad}' must fail");
+    }
+    // The right token works.
+    let resp =
+        dispatch_auth(&mut sim, &mut w, Method::Get, acme_dags, None, Some("Bearer acme-token"));
+    assert_eq!(status(&resp), 200, "{resp}");
+    // Unknown tenants 404 before auth even runs.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/ghost/dags", None);
+    assert_eq!(status(&resp), 404);
+}
+
+#[test]
+fn same_dag_id_is_fully_isolated_between_tenants() {
+    let (mut sim, mut w) = two_tenants();
+    let acme = Some("Bearer acme-token");
+    let globex = Some("Bearer globex-token");
+
+    // Both tenants see exactly one DAG — their own "etl".
+    for (t, auth) in [("acme", acme), ("globex", globex)] {
+        let resp = dispatch_auth(
+            &mut sim,
+            &mut w,
+            Method::Get,
+            &format!("/api/v1/tenants/{t}/dags"),
+            None,
+            auth,
+        );
+        assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(1), "{t}: {resp}");
+        let dags = resp.get("dags").unwrap().as_arr().unwrap();
+        assert_eq!(dags[0].get("dag_id").unwrap().as_str(), Some("etl"));
+    }
+    // The default tenant sees none of them.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags", None);
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(0));
+
+    // Trigger acme's etl; globex's stays untouched.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(1));
+    let runs = resp.get("dag_runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs[0].get("state").unwrap().as_str(), Some("success"));
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/globex/dags/etl/dagRuns",
+        None,
+        globex,
+    );
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(0), "globex unaffected");
+
+    // Health breakdowns are per tenant: acme sees its run, globex zero.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/health",
+        None,
+        acme,
+    );
+    assert_eq!(resp.get("n_dags").unwrap().as_u64(), Some(1));
+    assert_eq!(
+        resp.get("run_states").unwrap().get("success").unwrap().as_u64(),
+        Some(1)
+    );
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/globex/health",
+        None,
+        globex,
+    );
+    assert_eq!(
+        resp.get("run_states").unwrap().get("success").unwrap().as_u64(),
+        Some(0),
+        "globex's health must not count acme's runs"
+    );
+    // Tenant-scoped health does not carry the operator-only totals.
+    assert!(resp.get("admission_totals").is_none());
+
+    // Cross-tenant access by resource id is a plain 404 — the error
+    // reveals nothing beyond "no dag 'etl'" (404-without-leak): globex
+    // deleting its own etl works, but acme's remains.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Delete,
+        "/api/v1/tenants/globex/dags/etl",
+        None,
+        globex,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/dags/etl",
+        None,
+        acme,
+    );
+    assert_eq!(status(&resp), 200, "acme's etl survives globex's delete: {resp}");
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/globex/dags/etl",
+        None,
+        globex,
+    );
+    assert_eq!(status(&resp), 404);
+    let detail =
+        resp.get("error").unwrap().get("detail").unwrap().as_str().unwrap().to_string();
+    assert!(detail.contains("no dag 'etl'"), "local id only: {detail}");
+    assert!(!detail.contains("acme"), "no cross-tenant leak: {detail}");
+
+    // The internal rows are tenant-qualified: acme's run lives under the
+    // scoped id, never the bare one.
+    let db = w.db.read();
+    let scoped = scoped_dag_id("acme", "etl");
+    assert!(db.dag_runs.contains_key(&(scoped.clone(), 1)));
+    assert!(!db.dag_runs.contains_key(&("etl".to_string(), 1)));
+    assert_eq!(db.dag_runs[&(scoped, 1)].state, RunState::Success);
+}
+
+#[test]
+fn cross_tenant_trigger_and_get_are_404() {
+    let (mut sim, mut w) = two_tenants();
+    // Delete globex's etl so only acme's exists, then probe it from
+    // globex's namespace: GET, trigger, DELETE — all 404, no effect.
+    let globex = Some("Bearer globex-token");
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Delete,
+        "/api/v1/tenants/globex/dags/etl",
+        None,
+        globex,
+    );
+    assert_eq!(status(&resp), 200);
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    for (m, path) in [
+        (Method::Get, "/api/v1/tenants/globex/dags/etl"),
+        (Method::Post, "/api/v1/tenants/globex/dags/etl/dagRuns"),
+        (Method::Delete, "/api/v1/tenants/globex/dags/etl"),
+    ] {
+        let resp = dispatch_auth(&mut sim, &mut w, m, path, None, globex);
+        assert_eq!(status(&resp), 404, "{m} {path}: {resp}");
+    }
+    sim.run_until(&mut w, sim.now() + mins(5.0), 10_000_000);
+    // Acme's DAG is untouched and never ran.
+    let db = w.db.read();
+    assert!(db.dags.contains_key(&scoped_dag_id("acme", "etl")));
+    assert!(db.dag_runs.is_empty(), "cross-tenant probes created nothing");
+}
+
+#[test]
+fn encoded_separator_in_dag_id_cannot_cross_tenants() {
+    // `%1F` decodes to the reserved internal separator; before the router
+    // rejected it, an unauthenticated un-prefixed request could address
+    // acme's qualified id through the default tenant's identity mapping.
+    let (mut sim, mut w) = two_tenants();
+    for (m, path) in [
+        (Method::Get, "/api/v1/dags/acme%1Fetl"),
+        (Method::Delete, "/api/v1/dags/acme%1Fetl"),
+        (Method::Patch, "/api/v1/dags/acme%1Fetl"),
+        (Method::Post, "/api/v1/dags/acme%1Fetl/dagRuns"),
+        (Method::Post, "/api/v1/dags/acme%1Fetl/dagRuns/backfill"),
+        (Method::Get, "/api/v1/dags/acme%1Fetl/dagRuns"),
+        (Method::Post, "/api/v1/dags/acme%1Fetl/clearTaskInstances"),
+    ] {
+        let resp = dispatch(&mut sim, &mut w, m, path, None);
+        assert_eq!(status(&resp), 400, "{m} {path}: {resp}");
+    }
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    // Acme's DAG is untouched and nothing ran.
+    let db = w.db.read();
+    assert!(db.dags.contains_key(&scoped_dag_id("acme", "etl")));
+    assert!(db.dag_runs.is_empty());
+}
+
+#[test]
+fn tokened_tenant_record_cannot_be_overwritten_without_its_token() {
+    let (mut sim, mut w) = two_tenants();
+    // Unauthenticated hijack attempt: replace acme's token → 401.
+    let hijack = Json::obj().set("tenant_id", "acme").set("token", "attacker");
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/tenants", Some(&hijack));
+    assert_eq!(status(&resp), 401, "{resp}");
+    // Another tenant's credentials are equally rejected.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants",
+        Some(&hijack),
+        Some("Bearer globex-token"),
+    );
+    assert_eq!(status(&resp), 401, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(1.0), 1_000_000);
+    // Acme's original token still works; the attacker's does not.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/dags",
+        None,
+        Some("Bearer acme-token"),
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/dags",
+        None,
+        Some("Bearer attacker"),
+    );
+    assert_eq!(status(&resp), 401);
+
+    // With its own token the update succeeds — and omitted fields keep
+    // their values (read-modify-write, not a destructive replace).
+    let update =
+        Json::obj().set("tenant_id", "acme").set("rate_rps", 5.0).set("rate_burst", 5.0);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants",
+        Some(&update),
+        Some("Bearer acme-token"),
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(1.0), 1_000_000);
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/acme", None);
+    let t = resp.get("tenant").unwrap();
+    assert_eq!(t.get("token_set").unwrap().as_bool(), Some(true), "token survived: {resp}");
+    assert_eq!(t.get("rate_rps").unwrap().as_f64(), Some(5.0));
+
+    // An explicit null clears the token (the tenant opts back to open).
+    let clear = Json::obj().set("tenant_id", "acme").set("token", Json::Null);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants",
+        Some(&clear),
+        Some("Bearer acme-token"),
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(1.0), 1_000_000);
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/acme/dags", None);
+    assert_eq!(status(&resp), 200, "acme is open again: {resp}");
+}
+
+#[test]
+fn backfill_and_its_dedup_are_tenant_local() {
+    // Both tenants backfill the same [0, 120] range of their own "etl":
+    // each materializes its own 3 runs — the dedup check never crosses
+    // tenants, because it runs against tenant-qualified ids.
+    let (mut sim, mut w) = two_tenants();
+    let body = Json::obj()
+        .set("start_ts", 0u64)
+        .set("end_ts", 120u64)
+        .set("interval_secs", 60u64);
+    for t in ["acme", "globex"] {
+        let auth = format!("Bearer {t}-token");
+        let resp = dispatch_auth(
+            &mut sim,
+            &mut w,
+            Method::Post,
+            &format!("/api/v1/tenants/{t}/dags/etl/dagRuns/backfill"),
+            Some(&body),
+            Some(auth.as_str()),
+        );
+        assert_eq!(status(&resp), 200, "{t}: {resp}");
+        assert_eq!(resp.get("created").unwrap().as_u64(), Some(3), "{t}: {resp}");
+        assert_eq!(resp.get("skipped").unwrap().as_u64(), Some(0), "no cross-tenant dedup");
+    }
+    sim.run_until(&mut w, sim.now() + mins(15.0), 10_000_000);
+    for t in ["acme", "globex"] {
+        let auth = format!("Bearer {t}-token");
+        let resp = dispatch_auth(
+            &mut sim,
+            &mut w,
+            Method::Get,
+            &format!("/api/v1/tenants/{t}/dags/etl/dagRuns?run_type=backfill&limit=0"),
+            None,
+            Some(auth.as_str()),
+        );
+        assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(3), "{t}: {resp}");
+    }
+    // Re-POSTing acme's range dedupes inside acme only.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns/backfill",
+        Some(&body),
+        Some("Bearer acme-token"),
+    );
+    assert_eq!(resp.get("created").unwrap().as_u64(), Some(0), "{resp}");
+    assert_eq!(resp.get("skipped").unwrap().as_u64(), Some(3));
+}
+
+#[test]
+fn rate_limited_tenant_gets_429_and_others_are_unaffected() {
+    let w = World::new(Config::seeded(99));
+    let mut sim = w.sim();
+    let mut w = w;
+    mint_tenant(
+        &mut sim,
+        &mut w,
+        Json::obj().set("tenant_id", "limited").set("rate_rps", 1.0).set("rate_burst", 2.0),
+    );
+    mint_tenant(&mut sim, &mut w, Json::obj().set("tenant_id", "free"));
+
+    // Burst of 2 admitted, the third rejected with the structured 429.
+    let path = "/api/v1/tenants/limited/health";
+    assert_eq!(status(&dispatch(&mut sim, &mut w, Method::Get, path, None)), 200);
+    assert_eq!(status(&dispatch(&mut sim, &mut w, Method::Get, path, None)), 200);
+    let resp = dispatch(&mut sim, &mut w, Method::Get, path, None);
+    assert_eq!(status(&resp), 429, "{resp}");
+    let err = resp.get("error").unwrap();
+    assert_eq!(err.get("kind").unwrap().as_str(), Some("too_many_requests"));
+    assert!(err.get("detail").unwrap().as_str().unwrap().contains("rate budget"));
+
+    // Other tenants keep flowing while "limited" is rejected.
+    for _ in 0..20 {
+        let resp =
+            dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/free/health", None);
+        assert_eq!(status(&resp), 200);
+        let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/health", None);
+        assert_eq!(status(&resp), 200);
+    }
+    // After the bucket refills, "limited" is admitted again.
+    sim.run_until(&mut w, sim.now() + mins(1.0), 1_000_000);
+    let resp = dispatch(&mut sim, &mut w, Method::Get, path, None);
+    assert_eq!(status(&resp), 200, "{resp}");
+
+    // Admission counters: per-tenant on the tenant's health, totals (with
+    // the per-tenant breakdown) on the operator surface.
+    let adm = resp.get("admission").unwrap();
+    assert_eq!(adm.get("admitted").unwrap().as_u64(), Some(3));
+    assert_eq!(adm.get("rejected").unwrap().as_u64(), Some(1));
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/health", None);
+    let totals = resp.get("admission_totals").unwrap();
+    assert_eq!(totals.get("rejected").unwrap().as_u64(), Some(1));
+    assert!(totals.get("by_tenant").unwrap().get("limited").is_some());
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/tenants/limited", None);
+    let adm = resp.get("tenant").unwrap().get("admission").unwrap();
+    assert_eq!(adm.get("rejected").unwrap().as_u64(), Some(1));
+}
+
+#[test]
+fn rate_limited_tenant_still_within_budget_runs_dags() {
+    // A rate budget gates *requests*, not the tenant's workflows: a
+    // limited tenant under its budget uploads and runs normally.
+    let w = World::new(Config::seeded(7));
+    let mut sim = w.sim();
+    let mut w = w;
+    mint_tenant(
+        &mut sim,
+        &mut w,
+        Json::obj()
+            .set("tenant_id", "acme")
+            .set("token", "tok")
+            .set("rate_rps", 10.0)
+            .set("rate_burst", 10.0),
+    );
+    let auth = Some("Bearer tok");
+    let body =
+        Json::obj().set("file_text", manual_chain("etl").to_json().to_string_pretty());
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags",
+        Some(&body),
+        auth,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(1.0), 1_000_000);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        auth,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/dags/etl/dagRuns/1",
+        None,
+        auth,
+    );
+    assert_eq!(
+        resp.get("dag_run").unwrap().get("state").unwrap().as_str(),
+        Some("success"),
+        "{resp}"
+    );
+}
+
+#[test]
+fn legacy_shim_stays_bit_compatible_on_default_tenant() {
+    let (mut sim, mut w) = two_tenants();
+    // Upload one default-tenant DAG through the legacy op.
+    let resp = api::handle_text(
+        &mut sim,
+        &mut w,
+        &Json::obj()
+            .set("op", "upload_dag")
+            .set("file_text", manual_chain("legacy").to_json().to_string_pretty())
+            .to_string_compact(),
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+
+    // Legacy list sees only the default tenant's DAG — tenant namespaces
+    // are invisible to the old wire format.
+    let resp = api::handle_text(&mut sim, &mut w, r#"{"op": "list_dags"}"#);
+    let dags = resp.get("dags").unwrap().as_arr().unwrap();
+    assert_eq!(dags.len(), 1);
+    assert_eq!(dags[0].get("dag_id").unwrap().as_str(), Some("legacy"));
+
+    // Legacy health carries none of the tenancy/admission keys (strict
+    // legacy deserializers reject unknown fields).
+    let h = api::handle_text(&mut sim, &mut w, r#"{"op": "health"}"#);
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true));
+    assert!(h.get("tenant").is_none());
+    assert!(h.get("admission").is_none());
+    assert!(h.get("admission_totals").is_none());
+    assert!(h.get("active_backfill_runs").is_none());
+    assert!(h.get("db_txns").unwrap().as_u64().unwrap() > 0);
+}

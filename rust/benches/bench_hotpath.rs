@@ -6,9 +6,21 @@
 //!   1. raw DES event throughput (events/s);
 //!   2. metadata-DB commit throughput under a burst;
 //!   3. scheduling-pass latency on a large database snapshot;
+//!   3b. scheduling-pass latency on a *multi-tenant* snapshot (many DAGs
+//!       across many tenants, mixed backfill/foreground traffic) — the
+//!       cell that exercises the tenant-attribution and promotion paths;
 //!   4. end-to-end simulated experiment wall time (the n=125 cold cell)
 //!      and its events/s;
 //!   5. PJRT artifact execution latency (if artifacts are built).
+//!
+//! Cells 2/3/3b are the payoff metric of the symbolized identifier
+//! fabric (PR 5): every key the DB commit and the scheduling pass touch
+//! is a `Copy` [`DagId`] symbol, so the measured loops perform no string
+//! allocation. Run with `--bench5` to save the summary as
+//! `rust/reports/BENCH_5.json` (instead of the default
+//! `rust/reports/perf_hotpath.json` — reports land relative to the crate
+//! root cargo runs from), then copy the cell values into the committed
+//! trajectory file `reports/BENCH_5.json` at the repository root.
 //!
 //! CI smoke mode: `cargo bench --bench bench_hotpath -- --test` runs the
 //! same hot paths with tiny iteration counts (compile + run, no stats)
@@ -19,7 +31,7 @@
 mod common;
 
 use sairflow::cloud::db::{DagRow, MetaDb, Txn, Write};
-use sairflow::dag::state::RunType;
+use sairflow::dag::state::{DagId, RunType};
 use sairflow::exp::{self, ExperimentSpec, SystemKind};
 use sairflow::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
 use sairflow::sim::engine::Sim;
@@ -62,12 +74,14 @@ fn bench_db_commits(n: u64) -> f64 {
     }
     let mut sim: Sim<W> = Sim::new(2);
     let mut w = W { db: sairflow::cloud::db::DbService::new(Default::default()) };
+    // Symbols are interned once at the boundary (as the API layer does);
+    // the measured loop only copies them.
+    let dags: Vec<DagId> = (0..64).map(|i| DagId::intern(&format!("d{i}"))).collect();
     let t0 = Instant::now();
     for i in 0..n {
         let mut t = Txn::new();
         t.push(Write::InsertTi(sairflow::cloud::db::TiRow {
-            dag_id: format!("d{}", i % 64),
-            tenant_id: "default".to_string(),
+            dag_id: dags[(i % 64) as usize],
             run_id: i % 16,
             task_id: (i % 1000) as u32,
             state: sairflow::dag::TiState::None,
@@ -89,9 +103,10 @@ fn bench_scheduling_pass(iters: u32) -> (f64, usize) {
     let mut msgs = Vec::new();
     for d in 0..40 {
         let spec = parallel_dag(&format!("d{d}"), 80, 10.0, 5.0);
+        let dag: DagId = spec.dag_id.as_str().into();
         let mut txn = Txn::new();
         txn.push(Write::UpsertDag(DagRow {
-            dag_id: spec.dag_id.clone(),
+            dag_id: dag,
             fileloc: String::new(),
             period: spec.period,
             is_paused: false,
@@ -101,15 +116,11 @@ fn bench_scheduling_pass(iters: u32) -> (f64, usize) {
         let out = scheduling_pass(
             &db,
             0,
-            &[SchedMsg::Trigger {
-                dag_id: spec.dag_id.clone(),
-                logical_ts: 0,
-                run_type: RunType::Scheduled,
-            }],
+            &[SchedMsg::Trigger { dag_id: dag, logical_ts: 0, run_type: RunType::Scheduled }],
             &SchedLimits { parallelism: 10_000, ..SchedLimits::default() },
         );
         db.apply(out.txn, 0);
-        msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
+        msgs.push(SchedMsg::RunChanged { dag_id: dag, run_id: 1 });
     }
     let t0 = Instant::now();
     let mut total_writes = 0;
@@ -120,6 +131,63 @@ fn bench_scheduling_pass(iters: u32) -> (f64, usize) {
     }
     let per_pass = t0.elapsed().as_secs_f64() / iters as f64;
     (per_pass * 1e3, total_writes / iters as usize)
+}
+
+/// Cell 3b: a multi-tenant snapshot — `tenants` tenants × `dags_per`
+/// DAGs × 30 tasks, with mixed traffic per pass: foreground run events
+/// plus a backfill trigger wave, so the pass exercises per-tenant budget
+/// accounting, the promotion queue and backfill dedup alongside the
+/// plain scheduling path. Symbols make the tenant attribution a field
+/// read per row; pre-symbol code re-split every id per check.
+fn bench_scheduling_pass_multitenant(iters: u32, tenants: u32, dags_per: u32) -> (f64, usize) {
+    use sairflow::dag::state::scoped_dag_id;
+    let mut db = MetaDb::new();
+    let mut msgs = Vec::new();
+    for t in 0..tenants {
+        let tenant = format!("tenant{t:02}");
+        for d in 0..dags_per {
+            let local = format!("dag{d:02}");
+            let mut spec = parallel_dag(&local, 30, 10.0, 5.0);
+            spec.dag_id = scoped_dag_id(&tenant, &local);
+            let dag: DagId = spec.dag_id.as_str().into();
+            let mut txn = Txn::new();
+            txn.push(Write::UpsertDag(DagRow {
+                dag_id: dag,
+                fileloc: String::new(),
+                period: spec.period,
+                is_paused: false,
+            }));
+            txn.push(Write::PutSerializedDag(spec.clone()));
+            db.apply(txn, 0);
+            let out = scheduling_pass(
+                &db,
+                0,
+                &[SchedMsg::Trigger { dag_id: dag, logical_ts: 0, run_type: RunType::Scheduled }],
+                &SchedLimits { parallelism: 100_000, ..SchedLimits::default() },
+            );
+            db.apply(out.txn, 0);
+            msgs.push(SchedMsg::RunChanged { dag_id: dag, run_id: 1 });
+            // A backfill wave per DAG: the k=0 date collides with the
+            // scheduled run above (dedup path), the other three are
+            // fresh (creation + promotion-budget path).
+            for k in 0..4u64 {
+                msgs.push(SchedMsg::Trigger {
+                    dag_id: dag,
+                    logical_ts: k * 60_000_000,
+                    run_type: RunType::Backfill,
+                });
+            }
+        }
+    }
+    let limits = SchedLimits { parallelism: 100_000, ..SchedLimits::default() };
+    let t0 = Instant::now();
+    let mut total_writes = 0;
+    for _ in 0..iters {
+        let out = scheduling_pass(&db, 1, &msgs, &limits);
+        total_writes += out.txn.writes.len();
+    }
+    let per_pass = t0.elapsed().as_secs_f64() / iters as f64;
+    (per_pass * 1e3, total_writes / iters.max(1) as usize)
 }
 
 fn bench_e2e(n_tasks: u32) -> (f64, f64) {
@@ -141,6 +209,7 @@ fn bench_e2e(n_tasks: u32) -> (f64, f64) {
 fn main() {
     // CI smoke: tiny iteration counts, no stats — proves the paths run.
     let ci = std::env::args().any(|a| a == "--test" || a == "--ci-smoke");
+    let bench5 = std::env::args().any(|a| a == "--bench5");
     let (des_target, db_n, pass_iters, e2e_tasks) =
         if ci { (100_000, 5_000, 5, 16) } else { (2_000_000, 100_000, 200, 125) };
     if ci {
@@ -154,6 +223,12 @@ fn main() {
     println!("DB commit throughput      : {:>12.0} commits/s", db);
     let (pass_ms, writes) = bench_scheduling_pass(pass_iters);
     println!("scheduling pass (40x80)   : {pass_ms:>9.3} ms/pass ({writes} writes)");
+    let (mt_tenants, mt_dags) = if ci { (4, 4) } else { (20, 10) };
+    let (mt_ms, mt_writes) =
+        bench_scheduling_pass_multitenant(pass_iters, mt_tenants, mt_dags);
+    println!(
+        "scheduling pass (mt {mt_tenants}x{mt_dags}) : {mt_ms:>9.3} ms/pass ({mt_writes} writes)"
+    );
     let (e2e_wall, mk) = bench_e2e(e2e_tasks);
     println!("e2e n={e2e_tasks} cold experiment : {e2e_wall:>9.3} s wall (sim makespan {mk:.1} s)");
 
@@ -162,6 +237,9 @@ fn main() {
         .set("des_events_per_sec", des)
         .set("db_commits_per_sec", db)
         .set("sched_pass_ms", pass_ms)
+        .set("sched_pass_multitenant_ms", mt_ms)
+        .set("sched_pass_multitenant_tenants", mt_tenants as u64)
+        .set("sched_pass_multitenant_dags_per_tenant", mt_dags as u64)
         .set("e2e_tasks", e2e_tasks as u64)
         .set("e2e_wall_secs", e2e_wall);
 
@@ -180,5 +258,12 @@ fn main() {
         }
         Err(_) => println!("PJRT artifacts not built; run `make artifacts`"),
     }
-    common::save(if ci { "BENCH_ci" } else { "perf_hotpath" }, json);
+    let report = if ci {
+        "BENCH_ci"
+    } else if bench5 {
+        "BENCH_5"
+    } else {
+        "perf_hotpath"
+    };
+    common::save(report, json);
 }

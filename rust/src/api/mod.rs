@@ -14,18 +14,18 @@
 //!
 //! | Method | Path | Action |
 //! |--------|------|--------|
-//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters |
+//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters (operator surface adds WAL window counters) |
 //! | GET    | `/api/v1/dags` | list DAGs (`limit`, `offset`, `paused=true\|false`) |
 //! | POST   | `/api/v1/dags` | upload a DAG file (body `{"file_text": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
 //! | PATCH  | `/api/v1/dags/{dag_id}` | pause/unpause (body `{"is_paused": bool}`) |
 //! | DELETE | `/api/v1/dags/{dag_id}` | delete the DAG and all its rows |
-//! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `state=<run state>`, `run_type=scheduled\|manual\|backfill`) |
+//! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `cursor`, `state=<run state>`, `run_type=scheduled\|manual\|backfill`) |
 //! | POST   | `/api/v1/dags/{dag_id}/dagRuns` | trigger a manual run — never dropped: on a paused DAG or past `max_active_runs` the run is created `queued` and promoted later (Airflow parity, not a 409) |
 //! | POST   | `/api/v1/dags/{dag_id}/dagRuns/backfill` | expand `{"start_ts", "end_ts", "interval_secs"}` into backfill-typed runs, throttled by the tenant's `max_active_backfill_runs`; dates that already have a run are deduped (`created`/`skipped` in the response) |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | run detail |
 //! | PATCH  | `/api/v1/dags/{dag_id}/dagRuns/{run_id}` | mark run success/failed (body `{"state": ...}`) |
-//! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}/taskInstances` | list task instances (`limit`, `offset`, `state=<ti state>`) |
+//! | GET    | `/api/v1/dags/{dag_id}/dagRuns/{run_id}/taskInstances` | list task instances (`limit`, `offset`, `cursor`, `state=<ti state>`) |
 //! | POST   | `/api/v1/dags/{dag_id}/clearTaskInstances` | clear task instances for re-execution (body `{"run_id": n, "task_ids": [...], "only_failed": bool}`) |
 //! | GET    | `/api/v1/tenants` | list tenants (operator surface; tokens are never returned) |
 //! | POST   | `/api/v1/tenants` | create/update a tenant (body `{"tenant_id", "token"?, "rate_rps"?, "rate_burst"?, "max_active_backfill_runs"?}`) |
@@ -48,9 +48,19 @@
 //! indistinguishable from one that does not exist.
 //!
 //! Every list endpoint paginates (`limit` default 25, capped at 100;
-//! `offset` default 0) and reports `total_entries`. Every response is an
-//! envelope: `{"ok": true, "status": 200, ...}` on success, and on
-//! failure
+//! `offset` default 0) and reports `total_entries`. `GET .../dagRuns`
+//! and `.../taskInstances` additionally accept an opaque `cursor`
+//! parameter for large histories: `cursor` (empty value) starts a walk
+//! and each page returns `next_cursor` to pass verbatim into the next
+//! request — a page may be short or empty with a non-null cursor (scan
+//! cap inside a sparse filter); only `next_cursor: null` ends the walk.
+//! Cursor pages are served by a range scan *from the cursor key* and
+//! examine at most `v1::MAX_CURSOR_SCAN` rows — bounded cost per page —
+//! where `offset` pagination skip-scans the whole prefix; `limit`/
+//! `offset` requests are unchanged bit-for-bit (endpoints without cursor
+//! support reject the parameter with a 400 rather than silently
+//! truncating a walk). Every response is an envelope:
+//! `{"ok": true, "status": 200, ...}` on success, and on failure
 //!
 //! ```json
 //! {"ok": false, "status": 404,
@@ -81,8 +91,9 @@
 //! collections come back like the old handlers returned), renames the
 //! response collections back to their legacy keys (`dag_runs` → `runs`,
 //! `task_instances` → `tasks`), strips v1-only fields the legacy format
-//! never carried (`run_type`, `dag_is_paused`, and the tenancy/admission
-//! health keys — the shim always addresses the open `default` tenant),
+//! never carried (`run_type`, `dag_is_paused`, and the
+//! tenancy/admission/WAL-window health keys — the shim always addresses
+//! the open `default` tenant),
 //! flattens the error envelope back to the legacy string shape
 //! (`"error": "<detail>"`), and keeps the legacy no-existence-check list
 //! behavior (unknown ids → empty collections).
@@ -340,6 +351,9 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
                     "tenant",
                     "admission",
                     "admission_totals",
+                    "wal_retained",
+                    "wal_truncated",
+                    "interned_dag_ids",
                 ],
             )
             .set("active_runs", legacy_active)

@@ -1,4 +1,4 @@
-//! `limit`/`offset` pagination of the v1 list endpoints.
+//! `limit`/`offset` and cursor pagination of the v1 list endpoints.
 //!
 //! Mirrors Airflow's REST API: every list endpoint accepts `limit`
 //! (default [`DEFAULT_LIMIT`], capped at [`MAX_LIMIT`]) and `offset`
@@ -7,6 +7,37 @@
 //! `limit`/`offset`, so clients can page without a separate count call.
 //! `limit=0` is a valid probe: it returns no items but a correct
 //! `total_entries`.
+//!
+//! # Cursor pagination
+//!
+//! `offset` pagination skip-scans the whole prefix of the collection on
+//! every page — fine for small histories, quadratic for deep walks over
+//! large ones. The run/task-instance list endpoints therefore also
+//! accept an opaque `cursor` parameter (the last-examined key of the
+//! previous page, issued by the server as `next_cursor`): a cursor page
+//! is served by a *range scan from the cursor key*, never re-scanning
+//! the prefix, and examines at most
+//! [`MAX_CURSOR_SCAN`](crate::api::v1::MAX_CURSOR_SCAN) rows — so every
+//! request's cost is bounded regardless of history depth or filter
+//! selectivity. Protocol:
+//!
+//! * `?cursor` (empty value) — start a cursor walk at the collection's
+//!   natural order (runs: most recent first; task instances: task-id
+//!   order);
+//! * each page carries `next_cursor` — pass it verbatim as
+//!   `?cursor=<next_cursor>` for the following page. A page may be
+//!   *short or even empty* with a non-null `next_cursor` (the scan cap
+//!   hit inside a sparse filter, or the page filled exactly at the end
+//!   of the history); **only `next_cursor: null` ends the walk**;
+//! * cursor responses do **not** report `total_entries` (counting would
+//!   re-scan the collection, defeating the point); `limit` still caps
+//!   the page size and must be ≥ 1 with a cursor (a zero-item limit
+//!   would make every page look complete).
+//!
+//! The cursor value is opaque to clients: it happens to be the last-seen
+//! key today, but clients must only echo it back. Requests without a
+//! `cursor` parameter are served by the `limit`/`offset` path unchanged,
+//! bit-for-bit.
 
 use crate::api::error::ApiError;
 use crate::api::router::Query;
@@ -18,11 +49,24 @@ pub const DEFAULT_LIMIT: usize = 25;
 /// `maximum_page_limit`).
 pub const MAX_LIMIT: usize = 100;
 
+/// A resolved cursor position: where the next page's range scan starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cursor {
+    /// `?cursor` with an empty value: begin the walk.
+    Start,
+    /// `?cursor=<key>`: resume strictly after the last-seen key.
+    After(u64),
+}
+
 /// A resolved pagination window.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Page {
     pub limit: usize,
     pub offset: usize,
+    /// Set when the request carries a `cursor` parameter; the handler
+    /// then serves a range scan from the cursor instead of the
+    /// offset-window path.
+    pub cursor: Option<Cursor>,
 }
 
 impl Page {
@@ -41,7 +85,31 @@ impl Page {
                 .parse::<usize>()
                 .map_err(|_| ApiError::bad_request(format!("invalid offset '{raw}'")))?,
         };
-        Ok(Page { limit: limit.min(MAX_LIMIT), offset })
+        let cursor = match q.get("cursor") {
+            None => None,
+            Some("") => Some(Cursor::Start),
+            Some(raw) => Some(Cursor::After(raw.parse::<u64>().map_err(|_| {
+                ApiError::bad_request(format!("invalid cursor '{raw}'"))
+            })?)),
+        };
+        // `limit=0` is a count probe in offset mode; a cursor walk has no
+        // count, and a zero-item page would return `next_cursor: null` —
+        // indistinguishable from a completed walk on a non-empty
+        // collection. Reject the combination instead of lying.
+        if cursor.is_some() && limit == 0 {
+            return Err(ApiError::bad_request("limit must be >= 1 with a cursor"));
+        }
+        // A cursor walk has no offset either — silently ignoring one
+        // would serve pages the client believes it skipped.
+        if cursor.is_some() && offset != 0 {
+            return Err(ApiError::bad_request("offset cannot be combined with a cursor"));
+        }
+        Ok(Page { limit: limit.min(MAX_LIMIT), offset, cursor })
+    }
+
+    /// A plain window (no cursor) — test/internal convenience.
+    pub fn window(limit: usize, offset: usize) -> Page {
+        Page { limit, offset, cursor: None }
     }
 
     /// Apply the window to a fully-filtered collection; returns the page
@@ -61,6 +129,53 @@ impl Page {
             .set("limit", self.limit)
             .set("offset", self.offset)
     }
+
+    /// Walk one cursor page: examine rows from `iter` (already positioned
+    /// just past the cursor) until the page holds `limit` matches or
+    /// `max_scan` rows were examined, whichever comes first. Returns the
+    /// kept rows plus the resume key — the key of the last row
+    /// *examined* (`None` when the iterator was exhausted, i.e. the walk
+    /// is complete). The single definition of the protocol invariants
+    /// both cursor endpoints share: the cap counts rows examined (not
+    /// returned), the resume point is strictly after the last examined
+    /// key, and a page may be short or empty with a non-`None` resume
+    /// key.
+    pub fn cursor_page<T>(
+        &self,
+        iter: impl Iterator<Item = T>,
+        max_scan: usize,
+        mut keep: impl FnMut(&T) -> bool,
+        mut resume_key: impl FnMut(&T) -> u64,
+    ) -> (Vec<T>, Option<u64>) {
+        let mut items = Vec::new();
+        let mut next = None;
+        let mut scanned = 0usize;
+        for row in iter {
+            scanned += 1;
+            let key = resume_key(&row);
+            if keep(&row) {
+                items.push(row);
+            }
+            if items.len() >= self.limit || scanned >= max_scan {
+                // Resume after this row. If the collection happens to end
+                // exactly here, the follow-up page is empty with a null
+                // cursor — one extra round-trip, never a wrong result.
+                next = Some(key);
+                break;
+            }
+        }
+        (items, next)
+    }
+
+    /// Build the cursor-walk envelope: items under `key`, plus `limit`
+    /// and `next_cursor` (`null` when the walk is complete). No
+    /// `total_entries` — a count would re-scan the collection.
+    pub fn cursor_envelope(&self, key: &str, items: Vec<Json>, next: Option<u64>) -> Json {
+        Json::obj()
+            .set(key, Json::Arr(items))
+            .set("limit", self.limit)
+            .set("next_cursor", next.map(Json::from).unwrap_or(Json::Null))
+    }
 }
 
 #[cfg(test)]
@@ -75,14 +190,14 @@ mod tests {
     #[test]
     fn defaults_and_clamp() {
         let p = Page::from_query(&q("")).unwrap();
-        assert_eq!(p, Page { limit: DEFAULT_LIMIT, offset: 0 });
+        assert_eq!(p, Page::window(DEFAULT_LIMIT, 0));
         let p = Page::from_query(&q("limit=1000")).unwrap();
         assert_eq!(p.limit, MAX_LIMIT);
     }
 
     #[test]
     fn windowing() {
-        let p = Page { limit: 2, offset: 1 };
+        let p = Page::window(2, 1);
         let (page, total) = p.apply(vec![10, 20, 30, 40]);
         assert_eq!(page, vec![20, 30]);
         assert_eq!(total, 4);
@@ -90,11 +205,11 @@ mod tests {
 
     #[test]
     fn limit_zero_probe_and_offset_past_end() {
-        let p = Page { limit: 0, offset: 0 };
+        let p = Page::window(0, 0);
         let (page, total) = p.apply(vec![1, 2, 3]);
         assert!(page.is_empty());
         assert_eq!(total, 3);
-        let p = Page { limit: 10, offset: 99 };
+        let p = Page::window(10, 99);
         let (page, total) = p.apply(vec![1, 2, 3]);
         assert!(page.is_empty());
         assert_eq!(total, 3);
@@ -106,5 +221,59 @@ mod tests {
         assert_eq!(e.kind, ErrorKind::BadRequest);
         let e = Page::from_query(&q("offset=-1")).unwrap_err();
         assert_eq!(e.kind, ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn cursor_parsing() {
+        assert_eq!(Page::from_query(&q("")).unwrap().cursor, None);
+        assert_eq!(Page::from_query(&q("cursor")).unwrap().cursor, Some(Cursor::Start));
+        assert_eq!(Page::from_query(&q("cursor=")).unwrap().cursor, Some(Cursor::Start));
+        assert_eq!(
+            Page::from_query(&q("cursor=17&limit=2")).unwrap().cursor,
+            Some(Cursor::After(17))
+        );
+        let e = Page::from_query(&q("cursor=abc")).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        // limit=0 is only meaningful as an offset-mode count probe; with
+        // a cursor it would fake a completed walk.
+        let e = Page::from_query(&q("cursor&limit=0")).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        assert!(Page::from_query(&q("limit=0")).is_ok(), "offset-mode probe still fine");
+        // Offsets don't compose with cursors either (a walk would serve
+        // pages the client believes it skipped).
+        let e = Page::from_query(&q("cursor&offset=5")).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        assert!(Page::from_query(&q("cursor&offset=0")).is_ok(), "explicit zero is fine");
+    }
+
+    #[test]
+    fn cursor_page_protocol_invariants() {
+        let p = Page::window(2, 0);
+        let rows: Vec<u64> = (1..=7).rev().collect(); // 7,6,...,1
+        // Page fills: resume after the last examined (= last kept) row.
+        let (items, next) = p.cursor_page(rows.iter(), 100, |_| true, |r| **r);
+        assert_eq!(items, vec![&7, &6]);
+        assert_eq!(next, Some(6));
+        // Scan cap hits inside a sparse filter: short page, resumable.
+        let (items, next) = p.cursor_page(rows.iter(), 3, |r| **r == 1, |r| **r);
+        assert!(items.is_empty());
+        assert_eq!(next, Some(5), "resume after the last examined row");
+        // Iterator exhausts: walk complete.
+        let (items, next) = p.cursor_page(rows.iter().skip(5), 100, |_| true, |r| **r);
+        assert_eq!(items, vec![&2, &1]);
+        assert_eq!(next, Some(1), "filled exactly at the end — one extra page");
+        let (items, next) = p.cursor_page(std::iter::empty::<&u64>(), 100, |_| true, |r| **r);
+        assert!(items.is_empty());
+        assert_eq!(next, None);
+    }
+
+    #[test]
+    fn cursor_envelope_shape() {
+        let p = Page::window(2, 0);
+        let resp = p.cursor_envelope("items", vec![Json::from(1u64)], Some(7));
+        assert_eq!(resp.get("next_cursor").unwrap().as_u64(), Some(7));
+        assert!(resp.get("total_entries").is_none(), "no count on cursor pages");
+        let done = p.cursor_envelope("items", vec![], None);
+        assert_eq!(done.get("next_cursor"), Some(&Json::Null));
     }
 }

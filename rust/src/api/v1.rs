@@ -13,17 +13,42 @@
 //! the tenant's token, passes gateway admission control (per-tenant token
 //! bucket → structured 429), runs the handler inside the tenant's
 //! namespace, and folds the result into the response envelope (`ok` +
-//! `status` on success, the [`ApiError`] envelope on failure). Handlers
-//! operate on tenant-qualified DAG ids throughout, so nothing a handler
-//! does can cross a tenant boundary; payloads show tenant-local ids.
+//! `status` on success, the [`ApiError`] envelope on failure).
+//!
+//! # Identifier boundary
+//!
+//! This module is where wire strings meet the symbolized event fabric:
+//! each handler resolves its `(tenant, dag_id)` path parameters to a
+//! [`DagId`] symbol **once**, with the non-inserting
+//! [`DagId::lookup_scoped`] — an id that was never interned cannot name a
+//! resource anywhere in the fabric, so the miss is the same 404 as a
+//! missing row, and 404 probe traffic cannot grow the intern table.
+//! Everything past that point (table probes, range scans, control ops)
+//! copies 8-byte symbols; payloads show the tenant-local id
+//! (`DagId::local`, a precomputed field — no separator scan), so wire
+//! bytes are identical to the string-keyed implementation.
+//!
+//! # Cursor pagination
+//!
+//! `GET .../dagRuns` and `.../taskInstances` additionally accept an
+//! opaque `cursor` query parameter (see [`super::page`]): `cursor` with
+//! an empty value starts a cursor walk, and each page returns
+//! `next_cursor` to be passed verbatim into the next request (a page may
+//! be short or empty with a non-null cursor; only `null` ends the walk).
+//! A cursor page is served by a *range scan from the cursor key* —
+//! `Copy` bounds, no offset skip-scan — and examines at most
+//! [`MAX_CURSOR_SCAN`] rows, so deep pages of a large run history cost a
+//! bounded page, not the prefix, even under a sparse state filter. Plain
+//! `limit`/`offset` requests are served exactly as before, bit-for-bit;
+//! list endpoints without cursor support reject the parameter (400).
 
 use crate::api::error::{ApiError, ApiResult};
-use crate::api::page::Page;
+use crate::api::page::{Cursor, Page};
 use crate::api::router::{self, Endpoint, Method, Query};
 use crate::cloud::db::{DagRunRow, MetaDb, TenantRow, TiRow, Txn, Write};
 use crate::dag::state::{
-    local_dag_id, scoped_dag_id, tenant_of, valid_tenant_id, RunState, RunType, TiState,
-    DEFAULT_TENANT, TENANT_SEP,
+    scoped_dag_id, valid_tenant_id, DagId, RunState, RunType, TiState, DEFAULT_TENANT,
+    TENANT_SEP,
 };
 use crate::sairflow::{self, World};
 use crate::sim::engine::Sim;
@@ -33,6 +58,15 @@ use crate::util::json::Json;
 /// Ceiling on the number of runs one backfill request may expand to — a
 /// typo'd interval must not materialize millions of rows.
 pub const MAX_BACKFILL_RUNS: usize = 500;
+
+/// Ceiling on rows one cursor page may *examine* (not return). With a
+/// selective filter a page could otherwise scan an entire million-run
+/// history looking for matches; hitting the cap returns the rows found
+/// so far plus a `next_cursor` at the scan position, so every request is
+/// bounded and the client resumes where the scan stopped. Consequence of
+/// the protocol: a page may be short — or even empty — with a non-null
+/// `next_cursor`; only `next_cursor: null` ends the walk.
+pub const MAX_CURSOR_SCAN: usize = 4096;
 
 /// Dispatch one API request against the deployed world (no credentials —
 /// reaches open tenants only; see [`dispatch_auth`]).
@@ -177,25 +211,25 @@ fn opt_secs(t: Option<crate::sim::time::SimTime>) -> Json {
     t.map(|x| Json::Num(as_secs(x))).unwrap_or(Json::Null)
 }
 
-/// Serialize a dag row. `dag_id` is tenant-qualified internally; payloads
-/// show the tenant-local id (the tenant is implied by the namespace the
-/// request addressed).
-fn dag_json(db: &MetaDb, dag_id: &str) -> Json {
-    let row = &db.dags[dag_id];
+/// Serialize a dag row. The row is addressed by symbol; payloads show the
+/// tenant-local id (the tenant is implied by the namespace the request
+/// addressed) — `DagId::local` is a precomputed field, not a scan.
+fn dag_json(db: &MetaDb, dag: DagId) -> Json {
+    let row = &db.dags[&dag];
     // Payloads show tenant-local identifiers: the stored fileloc embeds
     // the tenant-qualified id (it IS the blob key), so the qualified
     // substring is mapped back to the local id for display — leaking the
     // internal separator would contradict the namespace abstraction.
-    let fileloc = row.fileloc.replace(&row.dag_id, local_dag_id(&row.dag_id));
+    let fileloc = row.fileloc.replace(row.dag_id.as_str(), row.dag_id.local());
     Json::obj()
-        .set("dag_id", local_dag_id(&row.dag_id))
+        .set("dag_id", row.dag_id.local())
         .set("fileloc", fileloc)
         .set(
             "period_secs",
             row.period.map(|p| Json::Num(p as f64 / 1e6)).unwrap_or(Json::Null),
         )
         .set("is_paused", row.is_paused)
-        .set("n_tasks", db.serialized.get(dag_id).map(|s| s.n_tasks()).unwrap_or(0))
+        .set("n_tasks", db.serialized.get(&dag).map(|s| s.n_tasks()).unwrap_or(0))
 }
 
 fn run_json(r: &DagRunRow) -> Json {
@@ -219,25 +253,39 @@ fn ti_json(t: &TiRow) -> Json {
         .set("end", opt_secs(t.end))
 }
 
-// ---- existence checks ------------------------------------------------------
+// ---- identifier resolution + existence checks ------------------------------
 //
-// All checks address tenant-qualified ids; error messages show the
-// tenant-local id — a resource living under another tenant is therefore
-// indistinguishable from one that does not exist (404-without-leak).
+// `resolve_dag` is the one string→symbol step of a request: a
+// non-inserting intern-table lookup of the tenant-scoped id. A `None`
+// means the id was never interned, i.e. no resource under this name can
+// exist anywhere in the fabric — reported with exactly the same 404 as a
+// missing row, so existence checks address tenant-qualified identities
+// while error messages show the tenant-local id: a resource living under
+// another tenant is indistinguishable from one that does not exist
+// (404-without-leak).
 
-fn require_dag(db: &MetaDb, dag_id: &str) -> Result<(), ApiError> {
-    if db.dags.contains_key(dag_id) || db.serialized.contains_key(dag_id) {
-        Ok(())
-    } else {
-        Err(ApiError::unknown_dag(local_dag_id(dag_id)))
+fn resolve_dag(tenant: &str, dag_id: &str) -> Option<DagId> {
+    DagId::lookup_scoped(tenant, dag_id)
+}
+
+fn require_dag(db: &MetaDb, dag: Option<DagId>, local: &str) -> Result<DagId, ApiError> {
+    match dag {
+        Some(d) if db.dags.contains_key(&d) || db.serialized.contains_key(&d) => Ok(d),
+        _ => Err(ApiError::unknown_dag(local)),
     }
 }
 
-fn require_run<'a>(db: &'a MetaDb, dag_id: &str, run_id: u64) -> Result<&'a DagRunRow, ApiError> {
-    require_dag(db, dag_id)?;
+fn require_run<'a>(
+    db: &'a MetaDb,
+    dag: Option<DagId>,
+    local: &str,
+    run_id: u64,
+) -> Result<(DagId, &'a DagRunRow), ApiError> {
+    let d = require_dag(db, dag, local)?;
     db.dag_runs
-        .get(&(dag_id.to_string(), run_id))
-        .ok_or_else(|| ApiError::unknown_run(local_dag_id(dag_id), run_id))
+        .get(&(d, run_id))
+        .map(|r| (d, r))
+        .ok_or_else(|| ApiError::unknown_run(local, run_id))
 }
 
 fn require_body<'a>(body: Option<&'a Json>) -> Result<&'a Json, ApiError> {
@@ -273,19 +321,31 @@ fn parse_bool_filter(q: &Query, key: &str) -> Result<Option<bool>, ApiError> {
 
 // ---- read handlers (serve from the DB snapshot) ----------------------------
 
+/// Reject the `cursor` parameter on list endpoints that serve
+/// offset-windows only — silently ignoring it would truncate a
+/// cursor-protocol client's walk to the first page.
+fn reject_cursor(page: &Page) -> Result<(), ApiError> {
+    if page.cursor.is_some() {
+        return Err(ApiError::bad_request("cursor pagination is not supported on this endpoint"));
+    }
+    Ok(())
+}
+
 fn list_dags(w: &World, tenant: &str, q: &Query) -> ApiResult {
     let page = Page::from_query(q)?;
+    reject_cursor(&page)?;
     let paused_filter = parse_bool_filter(q, "paused")?;
     let db = w.db.read();
     // The tenant filter is structural: only this tenant's qualified ids
     // are even considered, so a foreign DAG can never appear in the page
-    // or inflate `total_entries`.
-    let ids: Vec<&str> = db
+    // or inflate `total_entries`. `tenant()` is a field read of the
+    // intern entry, not a separator scan.
+    let ids: Vec<DagId> = db
         .dags
         .values()
-        .filter(|d| tenant_of(&d.dag_id) == tenant)
+        .filter(|d| d.dag_id.tenant() == tenant)
         .filter(|d| paused_filter.map(|p| d.is_paused == p).unwrap_or(true))
-        .map(|d| d.dag_id.as_str())
+        .map(|d| d.dag_id)
         .collect();
     let (ids, total) = page.apply(ids);
     let dags: Vec<Json> = ids.into_iter().map(|id| dag_json(db, id)).collect();
@@ -293,18 +353,15 @@ fn list_dags(w: &World, tenant: &str, q: &Query) -> ApiResult {
 }
 
 fn get_dag(w: &World, tenant: &str, dag_id: &str) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let db = w.db.read();
-    if !db.dags.contains_key(&scoped) {
+    let Some(dag) = dag.filter(|d| db.dags.contains_key(d)) else {
         return Err(ApiError::unknown_dag(dag_id));
-    }
-    let n_runs = db
-        .dag_runs
-        .range((scoped.clone(), 0)..=(scoped.clone(), u64::MAX))
-        .count();
+    };
+    let n_runs = db.dag_runs.of_dag(dag).count();
     Ok(Json::obj()
-        .set("dag", dag_json(db, &scoped).set("n_runs", n_runs))
-        .set("cron_registered", w.cron.is_registered(&scoped)))
+        .set("dag", dag_json(db, dag).set("n_runs", n_runs))
+        .set("cron_registered", w.cron.is_registered(dag.as_str())))
 }
 
 fn parse_run_state_filter(q: &Query) -> Result<Option<RunState>, ApiError> {
@@ -326,30 +383,46 @@ fn parse_run_type_filter(q: &Query) -> Result<Option<RunType>, ApiError> {
 }
 
 fn list_dag_runs(w: &World, tenant: &str, dag_id: &str, q: &Query) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let page = Page::from_query(q)?;
     let state = parse_run_state_filter(q)?;
     let run_type = parse_run_type_filter(q)?;
     let db = w.db.read();
-    require_dag(db, &scoped)?;
-    // Most recent first, like the Airflow UI.
-    let runs: Vec<&DagRunRow> = db
-        .dag_runs
-        .range((scoped.clone(), 0)..=(scoped.clone(), u64::MAX))
+    let dag = require_dag(db, dag, dag_id)?;
+    let keep = |r: &DagRunRow| {
+        state.map(|s| r.state == s).unwrap_or(true)
+            && run_type.map(|t| r.run_type == t).unwrap_or(true)
+    };
+    if let Some(cursor) = page.cursor {
+        // Cursor walk: a range scan from the cursor key downwards (runs
+        // list most recent first), with `Copy` bounds — deep pages never
+        // re-scan the prefix the way `offset` does, and the per-page work
+        // is bounded by `MAX_CURSOR_SCAN` even under a sparse filter
+        // (`Page::cursor_page` resumes after the last row *examined*,
+        // not the last one returned).
+        let iter = match cursor {
+            Cursor::Start => db.dag_runs.of_dag(dag),
+            Cursor::After(last) => db.dag_runs.of_dag_below(dag, last),
+        }
         .rev()
-        .map(|(_, r)| r)
-        .filter(|r| state.map(|s| r.state == s).unwrap_or(true))
-        .filter(|r| run_type.map(|t| r.run_type == t).unwrap_or(true))
-        .collect();
+        .map(|(_, r)| r);
+        let (items, next) =
+            page.cursor_page(iter, MAX_CURSOR_SCAN, |r| keep(r), |r| r.run_id);
+        let items: Vec<Json> = items.into_iter().map(run_json).collect();
+        return Ok(page.cursor_envelope("dag_runs", items, next).set("dag_id", dag_id));
+    }
+    // Most recent first, like the Airflow UI.
+    let runs: Vec<&DagRunRow> =
+        db.dag_runs.of_dag(dag).rev().map(|(_, r)| r).filter(|r| keep(r)).collect();
     let (runs, total) = page.apply(runs);
     let items: Vec<Json> = runs.into_iter().map(run_json).collect();
     Ok(page.envelope("dag_runs", items, total).set("dag_id", dag_id))
 }
 
 fn get_dag_run(w: &World, tenant: &str, dag_id: &str, run_id: u64) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let db = w.db.read();
-    let run = require_run(db, &scoped, run_id)?;
+    let (_, run) = require_run(db, dag, dag_id, run_id)?;
     Ok(Json::obj().set("dag_id", dag_id).set("dag_run", run_json(run)))
 }
 
@@ -360,7 +433,7 @@ fn list_task_instances(
     run_id: u64,
     q: &Query,
 ) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let page = Page::from_query(q)?;
     let state = match q.get("state") {
         None => None,
@@ -370,12 +443,34 @@ fn list_task_instances(
         ),
     };
     let db = w.db.read();
-    require_run(db, &scoped, run_id)?;
-    let tis: Vec<&TiRow> = db
-        .tis_of_run(&scoped, run_id)
-        .into_iter()
-        .filter(|t| state.map(|s| t.state == s).unwrap_or(true))
-        .collect();
+    let (dag, _) = require_run(db, dag, dag_id, run_id)?;
+    let keep = |t: &TiRow| state.map(|s| t.state == s).unwrap_or(true);
+    if let Some(cursor) = page.cursor {
+        // Cursor walk: task instances list in task-id order, so the page
+        // is a range scan from just above the cursor key (`Copy` bounds),
+        // with the same `MAX_CURSOR_SCAN` per-page bound as run walks.
+        use std::ops::Bound;
+        let lower = match cursor {
+            Cursor::Start => Bound::Included((dag, run_id, 0u32)),
+            // A cursor past u32 range excludes everything (empty page),
+            // never wraps onto a wrong key.
+            Cursor::After(last) => {
+                Bound::Excluded((dag, run_id, u32::try_from(last).unwrap_or(u32::MAX)))
+            }
+        };
+        let iter = db
+            .task_instances
+            .range((lower, Bound::Included((dag, run_id, u32::MAX))))
+            .map(|(_, t)| t);
+        let (items, next) =
+            page.cursor_page(iter, MAX_CURSOR_SCAN, |t| keep(t), |t| t.task_id as u64);
+        let items: Vec<Json> = items.into_iter().map(ti_json).collect();
+        return Ok(page
+            .cursor_envelope("task_instances", items, next)
+            .set("dag_id", dag_id)
+            .set("run_id", run_id));
+    }
+    let tis: Vec<&TiRow> = db.tis_of_run(dag, run_id).into_iter().filter(|t| keep(t)).collect();
     let (tis, total) = page.apply(tis);
     let items: Vec<Json> = tis.into_iter().map(ti_json).collect();
     Ok(page
@@ -389,10 +484,11 @@ fn health(w: &World, tenant: &str) -> Json {
     // breakdowns are scoped to the addressed tenant — health must never
     // expose another tenant's runs; the platform counters (queue depths,
     // warm pools, db/cdc totals) describe the shared substrate and stay
-    // global, which is the paper's shared-control-plane model.
+    // global, which is the paper's shared-control-plane model. Tenant
+    // attribution is a field read of each row's interned dag id.
     let db = w.db.read();
     let (mut r_queued, mut r_running, mut r_success, mut r_failed) = (0u64, 0u64, 0u64, 0u64);
-    for r in db.dag_runs.values().filter(|r| r.tenant_id == tenant) {
+    for r in db.dag_runs.values().filter(|r| r.dag_id.tenant() == tenant) {
         match r.state {
             RunState::Queued => r_queued += 1,
             RunState::Running => r_running += 1,
@@ -402,7 +498,7 @@ fn health(w: &World, tenant: &str) -> Json {
     }
     let mut t_counts = [0u64; 8];
     let mut active_tasks = 0u64;
-    for t in db.task_instances.values().filter(|t| t.tenant_id == tenant) {
+    for t in db.task_instances.values().filter(|t| t.dag_id.tenant() == tenant) {
         let idx = match t.state {
             TiState::None => 0,
             TiState::Scheduled => 1,
@@ -418,9 +514,9 @@ fn health(w: &World, tenant: &str) -> Json {
             active_tasks += 1;
         }
     }
-    let n_dags = db.dags.values().filter(|d| tenant_of(&d.dag_id) == tenant).count();
+    let n_dags = db.dags.values().filter(|d| d.dag_id.tenant() == tenant).count();
     let queued_backfill =
-        db.queued_backfill().filter(|k| tenant_of(&k.0) == tenant).count();
+        db.queued_backfill().filter(|k| k.0.tenant() == tenant).count();
     let mut resp = Json::obj()
         .set("tenant", tenant)
         .set("sched_queue_depth", w.sched_q.len())
@@ -464,10 +560,16 @@ fn health(w: &World, tenant: &str) -> Json {
                 .set("up_for_retry", t_counts[6])
                 .set("upstream_failed", t_counts[7]),
         );
-    // The operator surface (default tenant) additionally sees the
-    // gateway-wide admission totals with the per-tenant breakdown.
+    // The operator surface (default tenant) additionally sees the WAL
+    // window counters, the intern-table size (append-only by design —
+    // the hook for watching its growth) and the gateway-wide admission
+    // totals with the per-tenant breakdown.
     if tenant == DEFAULT_TENANT {
-        resp = resp.set("admission_totals", w.gateway.totals_json());
+        resp = resp
+            .set("admission_totals", w.gateway.totals_json())
+            .set("wal_retained", db.wal.len() as u64)
+            .set("wal_truncated", db.stats.wal_truncated)
+            .set("interned_dag_ids", DagId::interned_count() as u64);
     }
     resp
 }
@@ -475,13 +577,13 @@ fn health(w: &World, tenant: &str) -> Json {
 // ---- mutation handlers (inject events / commit transactions) ---------------
 
 fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, tenant: &str, dag_id: &str) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
-    let paused = {
+    let dag = resolve_dag(tenant, dag_id);
+    let (dag, paused) = {
         let db = w.db.read();
-        if !db.serialized.contains_key(&scoped) {
+        let Some(dag) = dag.filter(|d| db.serialized.contains_key(d)) else {
             return Err(ApiError::unknown_dag(dag_id));
-        }
-        db.dags.get(&scoped).map(|d| d.is_paused).unwrap_or(false)
+        };
+        (dag, db.dags.get(&dag).map(|d| d.is_paused).unwrap_or(false))
     };
     // Airflow parity: a manual trigger is never dropped. On a paused DAG
     // (or past the `max_active_runs` gate) the scheduler creates the run
@@ -489,7 +591,7 @@ fn trigger_dag_run(sim: &mut Sim<World>, w: &mut World, tenant: &str, dag_id: &s
     // capacity frees. (This endpoint used to 409 on paused DAGs because
     // cron and manual triggers shared one untyped message; `RunType`
     // fixed that at the root.)
-    sairflow::trigger_dag(sim, w, &scoped);
+    sairflow::trigger_dag(sim, w, dag);
     // `dag_is_paused` is the only parking condition knowable at request
     // time; a run may also park behind `max_active_runs`, which only the
     // scheduler pass that creates it can see.
@@ -507,12 +609,12 @@ fn backfill_dag_runs(
     dag_id: &str,
     body: Option<&Json>,
 ) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     // Resource resolution before body validation, like every other
     // per-DAG endpoint: probing an unknown DAG is a 404, not a 400.
-    if !w.db.read().serialized.contains_key(&scoped) {
+    let Some(dag) = dag.filter(|d| w.db.read().serialized.contains_key(d)) else {
         return Err(ApiError::unknown_dag(dag_id));
-    }
+    };
     let body = require_body(body)?;
     let start = body.num_field("start_ts").map_err(ApiError::bad_request)?;
     let end = body.num_field("end_ts").map_err(ApiError::bad_request)?;
@@ -563,12 +665,12 @@ fn backfill_dag_runs(
     // enforced again at apply time inside the scheduling pass, which
     // covers triggers still in flight on the feed.
     let (fresh, skipped): (Vec<SimTime>, Vec<SimTime>) = {
-        let existing = w.db.read().logical_dates_of(&scoped);
+        let existing = w.db.read().logical_dates_of(dag);
         dates.into_iter().partition(|ts| !existing.contains(ts))
     };
     let (created, skipped) = (fresh.len(), skipped.len());
     if !fresh.is_empty() {
-        sairflow::backfill_dag(sim, w, &scoped, &fresh);
+        sairflow::backfill_dag(sim, w, dag, &fresh);
     }
     Ok(Json::obj()
         .set("dag_id", dag_id)
@@ -601,7 +703,8 @@ fn upload_dag(
     let local = spec.dag_id.clone();
     // Qualify the id once at the boundary; from here on the upload flows
     // blob → parse function → DB under the tenant-qualified id like any
-    // other upload.
+    // other upload. (This is the *creating* side of the boundary — the
+    // parse function's apply step interns the symbol.)
     spec.dag_id = scoped_dag_id(tenant, &spec.dag_id);
     sairflow::upload_dag(sim, w, &spec);
     Ok(Json::obj().set("uploaded", local))
@@ -614,23 +717,22 @@ fn patch_dag(
     dag_id: &str,
     body: Option<&Json>,
 ) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let body = require_body(body)?;
     let paused = body
         .get("is_paused")
         .and_then(|v| v.as_bool())
         .ok_or_else(|| ApiError::bad_request("body must set boolean field 'is_paused'"))?;
-    if !w.db.read().dags.contains_key(&scoped) {
+    let Some(dag) = dag.filter(|d| w.db.read().dags.contains_key(d)) else {
         return Err(ApiError::unknown_dag(dag_id));
-    }
-    sairflow::set_dag_paused(sim, w, &scoped, paused);
+    };
+    sairflow::set_dag_paused(sim, w, dag, paused);
     Ok(Json::obj().set("dag_id", dag_id).set("is_paused", paused))
 }
 
 fn delete_dag(sim: &mut Sim<World>, w: &mut World, tenant: &str, dag_id: &str) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
-    require_dag(w.db.read(), &scoped)?;
-    sairflow::delete_dag(sim, w, &scoped);
+    let dag = require_dag(w.db.read(), resolve_dag(tenant, dag_id), dag_id)?;
+    sairflow::delete_dag(sim, w, dag);
     Ok(Json::obj().set("deleted", dag_id))
 }
 
@@ -642,7 +744,7 @@ fn patch_dag_run(
     run_id: u64,
     body: Option<&Json>,
 ) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let body = require_body(body)?;
     let raw = body.str_field("state").map_err(ApiError::bad_request)?;
     let state = RunState::parse(raw)
@@ -650,8 +752,8 @@ fn patch_dag_run(
         .ok_or_else(|| {
             ApiError::bad_request(format!("state must be 'success' or 'failed', got '{raw}'"))
         })?;
-    require_run(w.db.read(), &scoped, run_id)?;
-    sairflow::mark_run_state(sim, w, &scoped, run_id, state);
+    let (dag, _) = require_run(w.db.read(), dag, dag_id, run_id)?;
+    sairflow::mark_run_state(sim, w, dag, run_id, state);
     Ok(Json::obj().set("dag_id", dag_id).set("run_id", run_id).set("state", raw))
 }
 
@@ -662,7 +764,7 @@ fn clear_task_instances(
     dag_id: &str,
     body: Option<&Json>,
 ) -> ApiResult {
-    let scoped = scoped_dag_id(tenant, dag_id);
+    let dag = resolve_dag(tenant, dag_id);
     let body = require_body(body)?;
     let run_id = exact_u64(
         body.get("run_id")
@@ -673,10 +775,10 @@ fn clear_task_instances(
 
     // Resolve + validate the selection against one DB snapshot, producing
     // an owned id list before the mutation borrows the world.
-    let selected: Vec<u32> = {
+    let (dag, selected): (DagId, Vec<u32>) = {
         let db = w.db.read();
-        require_run(db, &scoped, run_id)?;
-        let tis = db.tis_of_run(&scoped, run_id);
+        let (dag, _) = require_run(db, dag, dag_id, run_id)?;
+        let tis = db.tis_of_run(dag, run_id);
         let mut ids: Vec<u32> = match body.get("task_ids") {
             None => tis.iter().map(|t| t.task_id).collect(),
             Some(Json::Arr(raw)) => {
@@ -718,11 +820,11 @@ fn clear_task_instances(
                 )));
             }
         }
-        ids
+        (dag, ids)
     };
 
     if !selected.is_empty() {
-        sairflow::clear_task_instances(sim, w, &scoped, run_id, &selected);
+        sairflow::clear_task_instances(sim, w, dag, run_id, &selected);
     }
     Ok(Json::obj()
         .set("dag_id", dag_id)
@@ -757,6 +859,7 @@ fn tenant_json(w: &World, row: &TenantRow) -> Json {
 
 fn list_tenants(w: &World, q: &Query) -> ApiResult {
     let page = Page::from_query(q)?;
+    reject_cursor(&page)?;
     let db = w.db.read();
     let rows: Vec<&TenantRow> = db.tenants.values().collect();
     let (rows, total) = page.apply(rows);

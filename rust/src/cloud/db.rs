@@ -7,8 +7,8 @@
 //!
 //! * [`MetaDb`] — the tables (dags, serialized dags, DAG runs, task
 //!   instances), transactional application of write sets, state-machine
-//!   validation, and a write-ahead log of [`Change`] records (what CDC
-//!   tails);
+//!   validation, and a bounded write-ahead log of [`Change`] records (what
+//!   CDC tails);
 //! * [`DbService`] — the *instance* the database runs on (the paper uses a
 //!   2-vCPU db.t3.small): a c-server queueing model with per-transaction
 //!   service times and hot-row serialization. Under bursts (125 workers
@@ -16,17 +16,170 @@
 //!   the paper's observation that a 10 s task takes 17 s when n = 125
 //!   (§6.1, "the transactional nature of the internal Airflow's code
 //!   becomes a bottleneck").
+//!
+//! # Symbolized keys
+//!
+//! Every table and change record is keyed by [`DagId`] — an interned
+//! `Copy` symbol of the tenant-qualified DAG id (see
+//! [`crate::dag::state`]). Range probes use `Copy` bounds, write sets
+//! carry `Copy` keys, and WAL records are plain `Copy` values, so the
+//! commit/apply hot path performs no string allocation at all. The
+//! [`DagTable`]/[`RunTable`] wrappers keep the string-keyed probe surface
+//! (`contains_key`/`range`/indexing with `String` keys) working for
+//! existing callers; new code addresses rows by symbol
+//! ([`RunTable::of_dag`], plain `Copy` tuples).
 
 use crate::dag::spec::DagSpec;
-use crate::dag::state::{tenant_of, RunState, RunType, TiState, DEFAULT_TENANT};
+use crate::dag::state::{DagId, RunState, RunType, TiState, DEFAULT_TENANT};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration, SimTime};
-use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::collections::{btree_map, BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+use std::ops::{Bound, Deref, DerefMut, Index, RangeBounds};
 
-/// Key of a DAG run: (dag_id, run_id).
-pub type RunKey = (String, u64);
-/// Key of a task instance: (dag_id, run_id, task_id).
-pub type TiKey = (String, u64, u32);
+/// Key of a DAG run: (dag id symbol, run_id). `Copy` — range bounds and
+/// write-set keys never allocate.
+pub type RunKey = (DagId, u64);
+/// Key of a task instance: (dag id symbol, run_id, task_id). `Copy`.
+pub type TiKey = (DagId, u64, u32);
+
+/// Records retained in the WAL by default. The WAL is a *window*, not the
+/// log of record: CDC consumes changes at commit time (they are returned
+/// by [`MetaDb::apply`] and handed off immediately); the retained tail
+/// exists for replay/debugging, so an unbounded log would only leak
+/// memory over a long-lived control plane.
+pub const DEFAULT_WAL_RETAIN: usize = 65_536;
+
+/// The `dag` table, keyed by [`DagId`]. Derefs to the underlying
+/// `BTreeMap` (string-ordered, because `DagId`'s `Ord` follows the
+/// string); the inherent [`DagTable::contains_key`] additionally accepts
+/// any string-ish key so pre-symbol callers keep probing it unchanged.
+#[derive(Debug, Default)]
+pub struct DagTable {
+    map: BTreeMap<DagId, DagRow>,
+}
+
+impl DagTable {
+    /// Whether a dag row exists, addressed by symbol or by (qualified)
+    /// string — `DagId`, `&str` and `&String` all work.
+    pub fn contains_key(&self, key: impl AsRef<str>) -> bool {
+        self.map.contains_key(key.as_ref())
+    }
+}
+
+impl Deref for DagTable {
+    type Target = BTreeMap<DagId, DagRow>;
+    fn deref(&self) -> &Self::Target {
+        &self.map
+    }
+}
+
+impl DerefMut for DagTable {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.map
+    }
+}
+
+/// The `dag_run` table, keyed by [`RunKey`]. Derefs to the underlying
+/// `BTreeMap`; inherent methods keep the pre-symbol `(String, u64)` probe
+/// surface working (`contains_key`, `range`, indexing), and
+/// [`RunTable::of_dag`] is the allocation-free per-DAG range scan the hot
+/// paths use.
+#[derive(Debug, Default)]
+pub struct RunTable {
+    map: BTreeMap<RunKey, DagRunRow>,
+}
+
+impl RunTable {
+    /// All runs of one DAG, in run-id order — a range scan with `Copy`
+    /// bounds (zero allocation).
+    pub fn of_dag(&self, dag: DagId) -> btree_map::Range<'_, RunKey, DagRunRow> {
+        self.map.range((dag, 0)..=(dag, u64::MAX))
+    }
+
+    /// Runs of one DAG strictly below `run_id`, in run-id order — the
+    /// cursor-pagination range probe (`Copy` bounds; the page is served
+    /// from the cursor key, never by skip-scanning the prefix).
+    pub fn of_dag_below(
+        &self,
+        dag: DagId,
+        run_id: u64,
+    ) -> btree_map::Range<'_, RunKey, DagRunRow> {
+        self.map.range((Bound::Included((dag, 0)), Bound::Excluded((dag, run_id))))
+    }
+
+    /// String-keyed existence probe (pre-symbol surface).
+    pub fn contains_key(&self, key: &(String, u64)) -> bool {
+        DagId::lookup(&key.0).is_some_and(|d| self.map.contains_key(&(d, key.1)))
+    }
+
+    /// String-keyed range scan (pre-symbol surface, kept for the frozen
+    /// pre-symbol test suites). **Contract: both bounds address the same
+    /// DAG id** — the per-DAG scan shape, which is the only one the
+    /// string-keyed callers ever used; a cross-DAG string range cannot
+    /// be answered without interning arbitrary bound strings
+    /// (debug-asserted below). Bounds resolve with the *non-inserting*
+    /// [`DagId::lookup`] — a never-interned id cannot key any row, so
+    /// the scan is empty and probe traffic cannot grow the intern table.
+    /// Prefer [`RunTable::of_dag`] on hot paths.
+    pub fn range<R>(&self, range: R) -> btree_map::Range<'_, RunKey, DagRunRow>
+    where
+        R: RangeBounds<(String, u64)>,
+    {
+        #[cfg(debug_assertions)]
+        if let (
+            Bound::Included((a, _)) | Bound::Excluded((a, _)),
+            Bound::Included((b, _)) | Bound::Excluded((b, _)),
+        ) = (range.start_bound(), range.end_bound())
+        {
+            debug_assert_eq!(
+                a, b,
+                "RunTable::range is a per-DAG probe; use of_dag/of_dag_below or \
+                 symbol-keyed ranges for cross-DAG scans"
+            );
+        }
+        fn conv(b: Bound<&(String, u64)>) -> Option<Bound<RunKey>> {
+            match b {
+                Bound::Included((s, r)) => DagId::lookup(s).map(|d| Bound::Included((d, *r))),
+                Bound::Excluded((s, r)) => DagId::lookup(s).map(|d| Bound::Excluded((d, *r))),
+                Bound::Unbounded => Some(Bound::Unbounded),
+            }
+        }
+        match (conv(range.start_bound()), conv(range.end_bound())) {
+            (Some(start), Some(end)) => self.map.range((start, end)),
+            // A bound's id was never interned: no row can match it. A
+            // half-open range over one reserved key is the empty range.
+            _ => {
+                let k = (DagId::probe_sentinel(), 0);
+                self.map.range((Bound::Included(k), Bound::Excluded(k)))
+            }
+        }
+    }
+}
+
+impl Deref for RunTable {
+    type Target = BTreeMap<RunKey, DagRunRow>;
+    fn deref(&self) -> &Self::Target {
+        &self.map
+    }
+}
+
+impl DerefMut for RunTable {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.map
+    }
+}
+
+impl Index<&(String, u64)> for RunTable {
+    type Output = DagRunRow;
+    fn index(&self, key: &(String, u64)) -> &DagRunRow {
+        // Non-inserting: a never-interned id keys no row, so indexing it
+        // panics exactly like a missing `BTreeMap` key — without growing
+        // the intern table as a side effect.
+        DagId::lookup(&key.0)
+            .and_then(|d| self.map.get(&(d, key.1)))
+            .unwrap_or_else(|| panic!("no dag_run row for ({:?}, {})", key.0, key.1))
+    }
+}
 
 /// Row of the `tenant` table: one tenant of the shared control plane.
 /// Resolved by the API router before dispatch (auth + admission) and by
@@ -64,19 +217,18 @@ impl TenantRow {
 /// Row of the `dag` table.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DagRow {
-    pub dag_id: String,
+    pub dag_id: DagId,
     pub fileloc: String,
     pub period: Option<SimDuration>,
     pub is_paused: bool,
 }
 
-/// Row of the `dag_run` table.
-#[derive(Debug, Clone, PartialEq)]
+/// Row of the `dag_run` table. All-`Copy` — the symbol replaces both the
+/// old `String` dag id and the denormalized `tenant_id` column (the
+/// tenant is a precomputed field of the intern entry: `dag_id.tenant()`).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DagRunRow {
-    pub dag_id: String,
-    /// Owning tenant (denormalized from the tenant-qualified `dag_id` so
-    /// per-tenant accounting and health filters never re-split strings).
-    pub tenant_id: String,
+    pub dag_id: DagId,
     pub run_id: u64,
     /// Logical (scheduled) time of this run.
     pub logical_ts: SimTime,
@@ -88,12 +240,11 @@ pub struct DagRunRow {
     pub end: Option<SimTime>,
 }
 
-/// Row of the `task_instance` table.
+/// Row of the `task_instance` table. The owning tenant is
+/// `dag_id.tenant()` (precomputed at intern time).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TiRow {
-    pub dag_id: String,
-    /// Owning tenant (see [`DagRunRow::tenant_id`]).
-    pub tenant_id: String,
+    pub dag_id: DagId,
     pub run_id: u64,
     pub task_id: u32,
     pub state: TiState,
@@ -109,27 +260,30 @@ pub struct TiRow {
 }
 
 /// A change record captured in the write-ahead log — the unit CDC forwards
-/// to the control plane.
-#[derive(Debug, Clone, PartialEq)]
+/// to the control plane. `Copy`: appending to the WAL and fanning out to
+/// CDC share the same 24-byte value instead of cloning heap strings per
+/// record (this is what made an `Arc<Change>` scheme unnecessary — a copy
+/// is cheaper than a refcount).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Change {
     /// A serialized DAG was written (new or updated workflow).
-    SerializedDag { dag_id: String },
+    SerializedDag { dag_id: DagId },
     /// A DAG run row changed state.
-    DagRun { dag_id: String, run_id: u64, state: RunState },
+    DagRun { dag_id: DagId, run_id: u64, state: RunState },
     /// A task instance row changed state.
-    Ti { dag_id: String, run_id: u64, task_id: u32, state: TiState },
+    Ti { dag_id: DagId, run_id: u64, task_id: u32, state: TiState },
     /// A DAG's pause flag flipped (`PATCH /api/v1/dags/{id}`). The
     /// unpause direction is routed to the scheduler so manual runs queued
     /// while the DAG was paused get promoted to `Running`.
-    DagPaused { dag_id: String, paused: bool },
+    DagPaused { dag_id: DagId, paused: bool },
     /// A DAG and all its rows were removed (`DELETE /api/v1/dags/{id}`).
-    DagDeleted { dag_id: String },
+    DagDeleted { dag_id: DagId },
 }
 
 impl Change {
     /// The tenant-qualified DAG id this change is about.
-    pub fn dag_id(&self) -> &str {
-        match self {
+    pub fn dag_id(&self) -> DagId {
+        match *self {
             Change::SerializedDag { dag_id }
             | Change::DagRun { dag_id, .. }
             | Change::Ti { dag_id, .. }
@@ -141,13 +295,16 @@ impl Change {
     /// The tenant whose resources this change touches — the CDC stream is
     /// shared across tenants (one control plane, §4.1), but every record
     /// is attributable because the dag ids it carries are
-    /// tenant-qualified.
-    pub fn tenant_id(&self) -> &str {
-        tenant_of(self.dag_id())
+    /// tenant-qualified. A field read of the intern entry, not a
+    /// separator scan.
+    pub fn tenant_id(&self) -> &'static str {
+        self.dag_id().tenant()
     }
 }
 
-/// One write in a transaction.
+/// One write in a transaction. Every key is `Copy`; only the row-carrying
+/// variants (`UpsertDag`, `PutSerializedDag`, `InsertTi`, `UpsertTenant`,
+/// `SetTiHost`) still own heap data.
 #[derive(Debug, Clone)]
 pub enum Write {
     /// Create or update a tenant record (`POST /api/v1/tenants`). Like
@@ -164,13 +321,13 @@ pub enum Write {
     UpsertDag(DagRow),
     PutSerializedDag(DagSpec),
     InsertDagRun(DagRunRow),
-    SetRunState { dag_id: String, run_id: u64, state: RunState },
+    SetRunState { dag_id: DagId, run_id: u64, state: RunState },
     /// Promote a parked (`Queued`) run to `Running` (backfill budget,
     /// unpause, freed `max_active_runs` capacity). Applies only while the
     /// row is still `Queued` — a promotion built from a pass snapshot
     /// that races a concurrent mark-terminal must not revive the
     /// cancelled run (raced write dropped + counted, like `ClearTi`).
-    PromoteRun { dag_id: String, run_id: u64 },
+    PromoteRun { dag_id: DagId, run_id: u64 },
     InsertTi(TiRow),
     SetTiState { key: TiKey, state: TiState },
     /// Record the worker executing a task instance (Airflow `hostname`).
@@ -179,7 +336,7 @@ pub enum Write {
     /// completed) without a state transition.
     SetTiReady { key: TiKey, ts: SimTime },
     /// Pause / unpause a DAG (the `PATCH /api/v1/dags/{id}` write).
-    SetDagPaused { dag_id: String, paused: bool },
+    SetDagPaused { dag_id: DagId, paused: bool },
     /// Reset a task instance for re-execution (Airflow "clear"): state back
     /// to `None`, timestamps and host wiped, `try_number` kept. Bypasses
     /// the forward-only state machine by design and emits a CDC change so
@@ -192,23 +349,23 @@ pub enum Write {
     ClearTi { key: TiKey },
     /// Remove a DAG and every row that references it (serialized spec,
     /// DAG runs, task instances).
-    DeleteDag { dag_id: String },
+    DeleteDag { dag_id: DagId },
 }
 
 impl Write {
     /// The hot row this write contends on: all writes touching the same DAG
     /// run serialize (Airflow holds run-level locks in its scheduling
-    /// critical section).
+    /// critical section). `Copy` keys — no per-write clone.
     fn hot_key(&self) -> Option<RunKey> {
         match self {
-            Write::InsertDagRun(r) => Some((r.dag_id.clone(), r.run_id)),
+            Write::InsertDagRun(r) => Some((r.dag_id, r.run_id)),
             Write::SetRunState { dag_id, run_id, .. }
-            | Write::PromoteRun { dag_id, run_id } => Some((dag_id.clone(), *run_id)),
-            Write::InsertTi(t) => Some((t.dag_id.clone(), t.run_id)),
+            | Write::PromoteRun { dag_id, run_id } => Some((*dag_id, *run_id)),
+            Write::InsertTi(t) => Some((t.dag_id, t.run_id)),
             Write::SetTiState { key, .. }
             | Write::SetTiReady { key, .. }
             | Write::SetTiHost { key, .. }
-            | Write::ClearTi { key } => Some((key.0.clone(), key.1)),
+            | Write::ClearTi { key } => Some((key.0, key.1)),
             _ => None,
         }
     }
@@ -245,6 +402,11 @@ pub struct DbStats {
     pub txns: u64,
     pub writes: u64,
     pub wal_records: u64,
+    /// WAL records dropped from the front of the retained window
+    /// (checkpoint + truncate once the window exceeds
+    /// `MetaDb::wal_retain`). CDC saw every one of these at commit time;
+    /// truncation only bounds the replay tail.
+    pub wal_truncated: u64,
     /// Total time transactions spent queued behind other transactions.
     pub queue_wait_total: SimDuration,
     pub max_queue_wait: SimDuration,
@@ -264,18 +426,22 @@ pub struct DbStats {
     pub dropped_tenant_upserts: u64,
 }
 
-/// The metadata database state: tables + write-ahead log.
-#[derive(Debug, Default)]
+/// The metadata database state: tables + bounded write-ahead log.
+#[derive(Debug)]
 pub struct MetaDb {
     /// Tenants of the shared control plane, keyed by tenant id. Seeded
     /// with the `default` tenant so un-prefixed paths always resolve.
     pub tenants: BTreeMap<String, TenantRow>,
-    pub dags: BTreeMap<String, DagRow>,
-    pub serialized: BTreeMap<String, DagSpec>,
-    pub dag_runs: BTreeMap<RunKey, DagRunRow>,
+    pub dags: DagTable,
+    pub serialized: BTreeMap<DagId, DagSpec>,
+    pub dag_runs: RunTable,
     pub task_instances: BTreeMap<TiKey, TiRow>,
-    /// Write-ahead log: (lsn, commit time, change).
-    pub wal: Vec<(u64, SimTime, Change)>,
+    /// Write-ahead log window: (lsn, commit time, change). Bounded to the
+    /// most recent `wal_retain` records (checkpoint + truncate on apply);
+    /// LSNs stay monotonic across truncation.
+    pub wal: VecDeque<(u64, SimTime, Change)>,
+    /// Retained WAL window size ([`DEFAULT_WAL_RETAIN`] by default).
+    pub wal_retain: usize,
     next_lsn: u64,
     /// Maintained count of queued+running task instances (the scheduler's
     /// parallelism check) — O(1) instead of a full-table scan per pass.
@@ -293,14 +459,37 @@ pub struct MetaDb {
     next_backfill_seq: u64,
     /// Maintained per-tenant count of backfill runs in state `Running`
     /// (the promotion budget check) — budgets are per tenant, so the
-    /// counter is too.
-    backfill_running: BTreeMap<String, usize>,
+    /// counter is too. Keyed by the interned tenant string (`'static`, no
+    /// per-update allocation).
+    backfill_running: BTreeMap<&'static str, usize>,
     /// Maintained index of non-backfill (manual) runs parked in `Queued` —
     /// a manual trigger on a paused DAG or one that hit the per-DAG
     /// `max_active_runs` gate. Promoted by the scheduler once the DAG is
     /// unpaused and capacity frees.
     fg_queued: BTreeSet<RunKey>,
     pub stats: DbStats,
+}
+
+impl Default for MetaDb {
+    fn default() -> MetaDb {
+        MetaDb {
+            tenants: BTreeMap::new(),
+            dags: DagTable::default(),
+            serialized: BTreeMap::new(),
+            dag_runs: RunTable::default(),
+            task_instances: BTreeMap::new(),
+            wal: VecDeque::new(),
+            wal_retain: DEFAULT_WAL_RETAIN,
+            next_lsn: 0,
+            active_count: 0,
+            backfill_queued: BTreeMap::new(),
+            backfill_seq: HashMap::new(),
+            next_backfill_seq: 0,
+            backfill_running: BTreeMap::new(),
+            fg_queued: BTreeSet::new(),
+            stats: DbStats::default(),
+        }
+    }
 }
 
 impl MetaDb {
@@ -342,41 +531,42 @@ impl MetaDb {
                     if let Some(existing) = self.dags.get(&row.dag_id) {
                         row.is_paused = existing.is_paused;
                     }
-                    self.dags.insert(row.dag_id.clone(), row);
+                    self.dags.insert(row.dag_id, row);
                 }
                 Write::PutSerializedDag(spec) => {
-                    let dag_id = spec.dag_id.clone();
-                    self.serialized.insert(dag_id.clone(), spec);
+                    // The one interning point of the upload path: from here
+                    // on the workflow exists as a symbol.
+                    let dag_id = DagId::intern(&spec.dag_id);
+                    self.serialized.insert(dag_id, spec);
                     changes.push(Change::SerializedDag { dag_id });
                 }
                 Write::InsertDagRun(row) => {
                     // Apply-time guard: a scheduling txn built from a
                     // pre-delete snapshot must not re-insert rows for a
                     // DAG that `DeleteDag` already removed.
-                    if !self.dag_known(&row.dag_id) {
+                    if !self.dag_known(row.dag_id) {
                         self.stats.dropped_inserts += 1;
                         continue;
                     }
-                    let key = (row.dag_id.clone(), row.run_id);
+                    let key = (row.dag_id, row.run_id);
                     // An insert that overwrites an existing key (should
                     // not happen — pass-level id allocation prevents it)
                     // must first unindex the old row or the maintained
                     // queues would double-count it.
                     if let Some(prev) = self.dag_runs.get(&key) {
                         let (ps, pt) = (prev.state, prev.run_type);
-                        self.reindex_run(&key, pt, Some(ps), None);
+                        self.reindex_run(key, pt, Some(ps), None);
                     }
-                    let change = Change::DagRun {
-                        dag_id: row.dag_id.clone(),
+                    self.reindex_run(key, row.run_type, None, Some(row.state));
+                    changes.push(Change::DagRun {
+                        dag_id: row.dag_id,
                         run_id: row.run_id,
                         state: row.state,
-                    };
-                    self.reindex_run(&key, row.run_type, None, Some(row.state));
+                    });
                     self.dag_runs.insert(key, row);
-                    changes.push(change);
                 }
                 Write::SetRunState { dag_id, run_id, state } => {
-                    let key = (dag_id.clone(), run_id);
+                    let key = (dag_id, run_id);
                     let mut flipped: Option<(RunState, RunType)> = None;
                     if let Some(row) = self.dag_runs.get_mut(&key) {
                         if row.state != state {
@@ -395,18 +585,19 @@ impl MetaDb {
                         }
                     }
                     if let Some((old, run_type)) = flipped {
-                        self.reindex_run(&key, run_type, Some(old), Some(state));
+                        self.reindex_run(key, run_type, Some(old), Some(state));
                         changes.push(Change::DagRun { dag_id, run_id, state });
                     }
                 }
                 Write::PromoteRun { dag_id, run_id } => {
-                    let key = (dag_id.clone(), run_id);
+                    let key = (dag_id, run_id);
                     // Non-backfill promotions re-check the pause flag at
                     // commit time: a pause landing between the pass
                     // snapshot and this commit keeps the run parked (the
                     // unpause edge re-promotes it). Backfill ignores the
                     // pause flag by design.
-                    let paused = self.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(false);
+                    let paused =
+                        self.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(false);
                     let mut promoted: Option<RunType> = None;
                     if let Some(row) = self.dag_runs.get_mut(&key) {
                         if row.state == RunState::Queued
@@ -420,7 +611,7 @@ impl MetaDb {
                     match promoted {
                         Some(run_type) => {
                             self.reindex_run(
-                                &key,
+                                key,
                                 run_type,
                                 Some(RunState::Queued),
                                 Some(RunState::Running),
@@ -440,11 +631,11 @@ impl MetaDb {
                 Write::InsertTi(row) => {
                     // Same delete-race guard as `InsertDagRun`: no orphan
                     // task-instance rows for a removed DAG.
-                    if !self.dag_known(&row.dag_id) {
+                    if !self.dag_known(row.dag_id) {
                         self.stats.dropped_inserts += 1;
                         continue;
                     }
-                    let key = (row.dag_id.clone(), row.run_id, row.task_id);
+                    let key = (row.dag_id, row.run_id, row.task_id);
                     self.task_instances.insert(key, row);
                     // TI creation in state None is not CDC-routed (nothing
                     // reacts to it); the `scheduled`/`queued` transition is.
@@ -526,7 +717,7 @@ impl MetaDb {
                         // scheduler ("task-cleared" rule) so the next pass
                         // re-schedules and re-queues the task.
                         changes.push(Change::Ti {
-                            dag_id: key.0.clone(),
+                            dag_id: key.0,
                             run_id: key.1,
                             task_id: key.2,
                             state: TiState::None,
@@ -542,44 +733,39 @@ impl MetaDb {
                         // gate, `max_active_runs` and the backfill
                         // budget; the promotion step is the single
                         // admission point for parked runs.
+                        let run_key = (key.0, key.1);
                         let mut requeued: Option<(RunState, RunType)> = None;
-                        if let Some(run) = self.dag_runs.get_mut(&(key.0.clone(), key.1)) {
+                        if let Some(run) = self.dag_runs.get_mut(&run_key) {
                             if run.state.is_terminal() {
                                 requeued = Some((run.state, run.run_type));
                                 run.state = RunState::Queued;
                                 run.end = None;
                                 changes.push(Change::DagRun {
-                                    dag_id: key.0.clone(),
+                                    dag_id: key.0,
                                     run_id: key.1,
                                     state: RunState::Queued,
                                 });
                             }
                         }
                         if let Some((old, run_type)) = requeued {
-                            let k = (key.0, key.1);
-                            self.reindex_run(&k, run_type, Some(old), Some(RunState::Queued));
+                            self.reindex_run(run_key, run_type, Some(old), Some(RunState::Queued));
                         }
                     }
                 }
                 Write::DeleteDag { dag_id } => {
                     let existed = self.dags.remove(&dag_id).is_some()
                         | self.serialized.remove(&dag_id).is_some();
-                    let run_keys: Vec<RunKey> = self
-                        .dag_runs
-                        .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
-                        .map(|(k, _)| k.clone())
-                        .collect();
+                    let run_keys: Vec<RunKey> =
+                        self.dag_runs.of_dag(dag_id).map(|(k, _)| *k).collect();
                     for k in run_keys {
                         if let Some(run) = self.dag_runs.remove(&k) {
-                            self.reindex_run(&k, run.run_type, Some(run.state), None);
+                            self.reindex_run(k, run.run_type, Some(run.state), None);
                         }
                     }
                     let ti_keys: Vec<TiKey> = self
                         .task_instances
-                        .range(
-                            (dag_id.clone(), 0, 0)..=(dag_id.clone(), u64::MAX, u32::MAX),
-                        )
-                        .map(|(k, _)| k.clone())
+                        .range((dag_id, 0, 0)..=(dag_id, u64::MAX, u32::MAX))
+                        .map(|(k, _)| *k)
                         .collect();
                     for k in ti_keys {
                         if let Some(row) = self.task_instances.remove(&k) {
@@ -600,15 +786,22 @@ impl MetaDb {
             let lsn = self.next_lsn;
             self.next_lsn += 1;
             self.stats.wal_records += 1;
-            self.wal.push((lsn, commit_ts, c.clone()));
+            self.wal.push_back((lsn, commit_ts, *c));
+        }
+        // Checkpoint + truncate: the WAL is a bounded window. CDC already
+        // received every change (the return value below); truncation only
+        // drops replay history past the retained horizon.
+        while self.wal.len() > self.wal_retain {
+            self.wal.pop_front();
+            self.stats.wal_truncated += 1;
         }
         changes
     }
 
-    /// Task instances of one DAG run.
-    pub fn tis_of_run(&self, dag_id: &str, run_id: u64) -> Vec<&TiRow> {
+    /// Task instances of one DAG run — a range scan with `Copy` bounds.
+    pub fn tis_of_run(&self, dag_id: DagId, run_id: u64) -> Vec<&TiRow> {
         self.task_instances
-            .range((dag_id.to_string(), run_id, 0)..=(dag_id.to_string(), run_id, u32::MAX))
+            .range((dag_id, run_id, 0)..=(dag_id, run_id, u32::MAX))
             .map(|(_, v)| v)
             .collect()
     }
@@ -626,8 +819,8 @@ impl MetaDb {
 
     /// Whether a DAG still exists (dag row or serialized spec) — the
     /// apply-time guard for run/TI inserts racing `DeleteDag`.
-    fn dag_known(&self, dag_id: &str) -> bool {
-        self.dags.contains_key(dag_id) || self.serialized.contains_key(dag_id)
+    fn dag_known(&self, dag_id: DagId) -> bool {
+        self.dags.map.contains_key(&dag_id) || self.serialized.contains_key(&dag_id)
     }
 
     /// Keep the parked/active run indexes (`backfill_queued` +
@@ -638,7 +831,7 @@ impl MetaDb {
     /// counters drift.
     fn reindex_run(
         &mut self,
-        key: &RunKey,
+        key: RunKey,
         run_type: RunType,
         old: Option<RunState>,
         new: Option<RunState>,
@@ -646,12 +839,12 @@ impl MetaDb {
         if run_type == RunType::Backfill {
             match old {
                 Some(RunState::Queued) => {
-                    if let Some(seq) = self.backfill_seq.remove(key) {
+                    if let Some(seq) = self.backfill_seq.remove(&key) {
                         self.backfill_queued.remove(&seq);
                     }
                 }
                 Some(RunState::Running) => {
-                    let tenant = tenant_of(&key.0);
+                    let tenant = key.0.tenant();
                     let drained = match self.backfill_running.get_mut(tenant) {
                         Some(c) => {
                             *c -= 1;
@@ -671,23 +864,20 @@ impl MetaDb {
                     // run) goes to the back of the FIFO.
                     let seq = self.next_backfill_seq;
                     self.next_backfill_seq += 1;
-                    self.backfill_queued.insert(seq, key.clone());
-                    self.backfill_seq.insert(key.clone(), seq);
+                    self.backfill_queued.insert(seq, key);
+                    self.backfill_seq.insert(key, seq);
                 }
                 Some(RunState::Running) => {
-                    *self
-                        .backfill_running
-                        .entry(tenant_of(&key.0).to_string())
-                        .or_insert(0) += 1;
+                    *self.backfill_running.entry(key.0.tenant()).or_insert(0) += 1;
                 }
                 _ => {}
             }
         } else {
             if old == Some(RunState::Queued) {
-                self.fg_queued.remove(key);
+                self.fg_queued.remove(&key);
             }
             if new == Some(RunState::Queued) {
-                self.fg_queued.insert(key.clone());
+                self.fg_queued.insert(key);
             }
         }
     }
@@ -717,7 +907,7 @@ impl MetaDb {
                 .filter(|r| {
                     r.run_type == RunType::Backfill
                         && r.state == RunState::Running
-                        && r.tenant_id == tenant
+                        && r.dag_id.tenant() == tenant
                 })
                 .count()
         );
@@ -756,19 +946,17 @@ impl MetaDb {
     /// freed capacity).
     pub fn tenant_backfill_promotable(&self, tenant: &str, default_cap: usize) -> bool {
         self.active_backfill_count_of(tenant) < self.backfill_cap_of(tenant, default_cap)
-            && self.queued_backfill().any(|k| tenant_of(&k.0) == tenant)
+            && self.queued_backfill().any(|k| k.0.tenant() == tenant)
     }
 
     /// The logical dates that already have a run (any type, any state)
     /// for `dag_id` — the backfill dedup probe set (Airflow skips dates
     /// that already ran; re-POSTing an overlapping range must not
-    /// duplicate). One range scan; callers probe the set per candidate
-    /// date instead of rescanning the run table per date.
-    pub fn logical_dates_of(&self, dag_id: &str) -> HashSet<SimTime> {
-        self.dag_runs
-            .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
-            .map(|(_, r)| r.logical_ts)
-            .collect()
+    /// duplicate). One range scan with `Copy` bounds; callers probe the
+    /// set per candidate date instead of rescanning the run table per
+    /// date.
+    pub fn logical_dates_of(&self, dag_id: DagId) -> HashSet<SimTime> {
+        self.dag_runs.of_dag(dag_id).map(|(_, r)| r.logical_ts).collect()
     }
 
     /// Count of backfill runs waiting in state `Queued` (for the health
@@ -874,7 +1062,8 @@ impl DbService {
         let (idx, &server_free) =
             self.free_at.iter().enumerate().min_by_key(|(_, &t)| t).expect(">=1 server");
         let mut start = now.max(server_free);
-        // Hot-row locks: wait for every lock this txn needs.
+        // Hot-row locks: wait for every lock this txn needs. `Copy` keys:
+        // collecting and indexing them allocates no strings.
         let hold = secs(self.cfg.hot_row_hold);
         let mut keys: Vec<RunKey> = txn.writes.iter().filter_map(|w| w.hot_key()).collect();
         keys.sort();
@@ -935,7 +1124,6 @@ mod tests {
     fn ti(dag: &str, run: u64, task: u32) -> TiRow {
         TiRow {
             dag_id: dag.into(),
-            tenant_id: tenant_of(dag).to_string(),
             run_id: run,
             task_id: task,
             state: TiState::None,
@@ -961,7 +1149,6 @@ mod tests {
     fn run_row(dag: &str, run: u64, run_type: RunType, state: RunState) -> DagRunRow {
         DagRunRow {
             dag_id: dag.into(),
-            tenant_id: tenant_of(dag).to_string(),
             run_id: run,
             logical_ts: 0,
             run_type,
@@ -988,6 +1175,29 @@ mod tests {
     }
 
     #[test]
+    fn wal_is_bounded_and_lsns_stay_monotonic() {
+        let mut db = MetaDb::new();
+        db.wal_retain = 8;
+        let mut setup = Txn::new();
+        setup.push(dag_row("d"));
+        db.apply(setup, 0);
+        // 30 changes through a retain-8 window.
+        for i in 0..30u64 {
+            let mut txn = Txn::new();
+            txn.push(Write::InsertTi(ti("d", i, 0)));
+            txn.push(Write::SetTiState { key: ("d".into(), i, 0), state: TiState::Scheduled });
+            db.apply(txn, i);
+        }
+        assert_eq!(db.wal.len(), 8, "window truncated to retain");
+        assert_eq!(db.stats.wal_records, 30, "every change was logged");
+        assert_eq!(db.stats.wal_truncated, 22, "truncation counted");
+        // LSNs are monotonic and continue past truncation.
+        let lsns: Vec<u64> = db.wal.iter().map(|(l, _, _)| *l).collect();
+        assert!(lsns.windows(2).all(|p| p[0] + 1 == p[1]));
+        assert_eq!(*lsns.last().unwrap(), 29);
+    }
+
+    #[test]
     fn illegal_transition_rejected() {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
@@ -1007,9 +1217,9 @@ mod tests {
         let mut txn = Txn::new();
         txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
+        txn.push(Write::SetTiState { key, state: TiState::Running });
         db.apply(txn, 3);
         let row = &db.task_instances[&key];
         assert_eq!(row.start, Some(3));
@@ -1023,15 +1233,15 @@ mod tests {
         let mut txn = Txn::new();
         txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
+        txn.push(Write::SetTiState { key, state: TiState::Running });
+        txn.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(txn, 4);
         assert_eq!(db.active_ti_count(), 0);
 
         let mut clear = Txn::new();
-        clear.push(Write::ClearTi { key: key.clone() });
+        clear.push(Write::ClearTi { key });
         let changes = db.apply(clear, 9);
         assert_eq!(changes.len(), 1);
         assert!(matches!(&changes[0], Change::Ti { state: TiState::None, .. }));
@@ -1052,12 +1262,12 @@ mod tests {
         let mut txn = Txn::new();
         txn.push(dag_row("d"));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
         db.apply(txn, 1);
         assert_eq!(db.active_ti_count(), 1);
         let mut clear = Txn::new();
-        clear.push(Write::ClearTi { key: key.clone() });
+        clear.push(Write::ClearTi { key });
         let changes = db.apply(clear, 2);
         assert!(changes.is_empty(), "dropped clear emits no change");
         assert_eq!(db.task_instances[&key].state, TiState::Queued, "row untouched");
@@ -1076,15 +1286,15 @@ mod tests {
         txn.push(dag_row("d"));
         txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Manual, RunState::Running)));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
+        txn.push(Write::SetTiState { key, state: TiState::Running });
+        txn.push(Write::SetTiState { key, state: TiState::Success });
         txn.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
         db.apply(txn, 5);
 
         let mut clear = Txn::new();
-        clear.push(Write::ClearTi { key: key.clone() });
+        clear.push(Write::ClearTi { key });
         let changes = db.apply(clear, 9);
         assert!(matches!(&changes[0], Change::Ti { state: TiState::None, .. }));
         assert!(
@@ -1095,10 +1305,10 @@ mod tests {
         assert_eq!(run.state, RunState::Queued);
         assert_eq!(run.end, None);
         assert_eq!(run.start, Some(1), "original start kept");
-        assert_eq!(db.queued_foreground().next(), Some(&("d".to_string(), 1)));
+        assert_eq!(db.queued_foreground().next(), Some(&("d".into(), 1)));
         // Clearing inside a non-terminal run emits no run change.
         let mut txn = Txn::new();
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
         db.apply(txn, 10);
         let mut clear = Txn::new();
         clear.push(Write::ClearTi { key });
@@ -1116,10 +1326,10 @@ mod tests {
         txn.push(dag_row("d"));
         txn.push(Write::InsertDagRun(run_row("d", 1, RunType::Backfill, RunState::Running)));
         txn.push(Write::InsertTi(ti("d", 1, 0)));
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Queued });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
+        txn.push(Write::SetTiState { key, state: TiState::Running });
+        txn.push(Write::SetTiState { key, state: TiState::Success });
         txn.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
         db.apply(txn, 5);
         assert_eq!(db.active_backfill_count(), 0);
@@ -1168,7 +1378,7 @@ mod tests {
         pause.push(Write::SetDagPaused { dag_id: "d".into(), paused: true });
         let changes = db.apply(pause, 1);
         assert!(
-            matches!(&changes[..], [Change::DagPaused { dag_id, paused: true }] if dag_id == "d")
+            matches!(&changes[..], [Change::DagPaused { dag_id, paused: true }] if dag_id.as_str() == "d")
         );
         assert!(db.dags["d"].is_paused);
         assert_eq!(db.stats.txns, 2, "pause went through a transaction");
@@ -1327,7 +1537,7 @@ mod tests {
         db.apply(t, 2);
         assert_eq!(db.queued_backfill_count(), 1);
         assert_eq!(db.active_backfill_count(), 1);
-        assert_eq!(db.queued_backfill().next(), Some(&("d".to_string(), 2)));
+        assert_eq!(db.queued_backfill().next(), Some(&("d".into(), 2)));
         // Complete run 1: running -> success.
         let mut t = Txn::new();
         t.push(Write::SetRunState { dag_id: "d".into(), run_id: 1, state: RunState::Success });
@@ -1357,11 +1567,7 @@ mod tests {
         let order: Vec<RunKey> = db.queued_backfill().cloned().collect();
         assert_eq!(
             order,
-            vec![
-                ("zzz".to_string(), 1),
-                ("aaa".to_string(), 1),
-                ("zzz".to_string(), 2),
-            ],
+            vec![("zzz".into(), 1), ("aaa".into(), 1), ("zzz".into(), 2)],
             "FIFO by arrival, not key order"
         );
         // Leaving `Queued` removes the entry; re-entering goes to the back.
@@ -1374,11 +1580,7 @@ mod tests {
         let order: Vec<RunKey> = db.queued_backfill().cloned().collect();
         assert_eq!(
             order,
-            vec![
-                ("aaa".to_string(), 1),
-                ("zzz".to_string(), 2),
-                ("zzz".to_string(), 1),
-            ],
+            vec![("aaa".into(), 1), ("zzz".into(), 2), ("zzz".into(), 1)],
             "requeued run re-enters at the back"
         );
     }
@@ -1401,7 +1603,11 @@ mod tests {
         assert_eq!(db.active_backfill_count_of("globex"), 1);
         assert_eq!(db.active_backfill_count_of("default"), 0);
         let mut t = Txn::new();
-        t.push(Write::SetRunState { dag_id: a.clone(), run_id: 1, state: RunState::Success });
+        t.push(Write::SetRunState {
+            dag_id: a.as_str().into(),
+            run_id: 1,
+            state: RunState::Success,
+        });
         db.apply(t, 2);
         assert_eq!(db.active_backfill_count_of("acme"), 1);
         assert_eq!(db.active_backfill_count_of("globex"), 1);
@@ -1475,9 +1681,8 @@ mod tests {
 
     #[test]
     fn change_records_are_tenant_attributable() {
-        use crate::dag::state::scoped_dag_id;
         let c = Change::Ti {
-            dag_id: scoped_dag_id("acme", "etl"),
+            dag_id: DagId::scoped("acme", "etl"),
             run_id: 1,
             task_id: 0,
             state: TiState::Queued,
@@ -1496,10 +1701,10 @@ mod tests {
         r.logical_ts = 120;
         txn.push(Write::InsertDagRun(r));
         db.apply(txn, 1);
-        let dates = db.logical_dates_of("d");
+        let dates = db.logical_dates_of("d".into());
         assert!(dates.contains(&120));
         assert!(!dates.contains(&60));
-        assert!(db.logical_dates_of("other").is_empty());
+        assert!(db.logical_dates_of("other".into()).is_empty());
     }
 
     #[test]
@@ -1520,7 +1725,9 @@ mod tests {
         let mut del = Txn::new();
         del.push(Write::DeleteDag { dag_id: "d".into() });
         let changes = db.apply(del, 1);
-        assert!(matches!(&changes[..], [Change::DagDeleted { dag_id }] if dag_id == "d"));
+        assert!(
+            matches!(&changes[..], [Change::DagDeleted { dag_id }] if dag_id.as_str() == "d")
+        );
         assert!(!db.dags.contains_key("d"));
         assert!(db.dag_runs.is_empty());
         assert!(db.task_instances.contains_key(&("e".into(), 1, 0)));
@@ -1530,6 +1737,39 @@ mod tests {
         let mut del2 = Txn::new();
         del2.push(Write::DeleteDag { dag_id: "ghost".into() });
         assert!(db.apply(del2, 2).is_empty());
+    }
+
+    #[test]
+    fn string_probe_surface_still_works_on_symbol_tables() {
+        // The pre-symbol call shapes — `(String, u64)` probes/ranges and
+        // str-keyed dag lookups — must keep working on the rekeyed tables.
+        let mut db = MetaDb::new();
+        let mut txn = Txn::new();
+        txn.push(dag_row("probe"));
+        txn.push(Write::InsertDagRun(run_row("probe", 1, RunType::Manual, RunState::Running)));
+        txn.push(Write::InsertDagRun(run_row("probe", 2, RunType::Manual, RunState::Queued)));
+        db.apply(txn, 1);
+        assert!(db.dag_runs.contains_key(&("probe".to_string(), 1)));
+        assert!(!db.dag_runs.contains_key(&("probe".to_string(), 9)));
+        assert!(!db.dag_runs.contains_key(&("never-interned-dag".to_string(), 1)));
+        assert_eq!(db.dag_runs[&("probe".to_string(), 1)].run_id, 1);
+        let n = db
+            .dag_runs
+            .range(("probe".to_string(), 0)..=("probe".to_string(), u64::MAX))
+            .count();
+        assert_eq!(n, 2);
+        assert_eq!(db.dag_runs.of_dag("probe".into()).count(), 2);
+        assert!(db.dags.contains_key("probe"));
+        assert!(db.dags.contains_key(&"probe".to_string()));
+        // String probes are non-inserting: ranging over a never-interned
+        // id yields an empty scan and must not grow the intern table.
+        let ghost = "never-interned-range-probe".to_string();
+        let n = db.dag_runs.range((ghost.clone(), 0)..=(ghost.clone(), u64::MAX)).count();
+        assert_eq!(n, 0, "unknown id scans empty");
+        assert!(
+            crate::dag::state::DagId::lookup(&ghost).is_none(),
+            "probing must not intern the probe string"
+        );
     }
 
     struct World {

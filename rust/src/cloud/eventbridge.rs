@@ -9,17 +9,18 @@
 //! dispatches the targets.
 
 use crate::cloud::db::Change;
-use crate::dag::state::{RunState, TiState};
+use crate::dag::state::{DagId, RunState, TiState};
 use crate::sim::engine::Sim;
 use crate::sim::time::{SimDuration, SimTime};
 use std::collections::HashMap;
 
 /// An event on the bus: a database change (via CDC) or a cron fire.
-#[derive(Debug, Clone, PartialEq)]
+/// All-`Copy` — routing an event copies 24 bytes, never a heap string.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BusEvent {
     Change(Change),
     /// A periodic trigger for a scheduled DAG (single launch of a workflow).
-    CronFire { dag_id: String, logical_ts: SimTime },
+    CronFire { dag_id: DagId, logical_ts: SimTime },
 }
 
 /// Rule predicates, mirroring EventBridge event patterns.
@@ -136,11 +137,12 @@ pub struct CronStats {
 /// The cron-like scheduled-event service. A registered DAG fires every
 /// `period`, starting one period after registration (Airflow semantics:
 /// the first run happens at the end of the first interval). Entries are
-/// keyed by the tenant-qualified DAG id, so same-named DAGs of different
-/// tenants hold independent schedules.
+/// keyed by the [`DagId`] symbol of the tenant-qualified id, so same-named
+/// DAGs of different tenants hold independent schedules and each fire
+/// re-arms by copying a symbol, not cloning a string.
 #[derive(Debug, Default)]
 pub struct CronService {
-    entries: HashMap<String, CronEntry>,
+    entries: HashMap<DagId, CronEntry>,
     next_gen: u64,
     pub stats: CronStats,
 }
@@ -149,7 +151,7 @@ pub struct CronService {
 /// (in sAirflow: a periodic event sent to the scheduler feed).
 pub trait CronHost: Sized + 'static {
     fn cron(&mut self) -> &mut CronService;
-    fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: String, logical_ts: SimTime);
+    fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: DagId, logical_ts: SimTime);
 }
 
 impl CronService {
@@ -157,12 +159,14 @@ impl CronService {
         CronService::default()
     }
 
+    /// Whether a schedule is registered — addressed by (qualified) string
+    /// (`DagId: Borrow<str>` makes the symbol table str-probeable).
     pub fn is_registered(&self, dag_id: &str) -> bool {
         self.entries.contains_key(dag_id)
     }
 
-    pub fn unregister(&mut self, dag_id: &str) {
-        self.entries.remove(dag_id);
+    pub fn unregister(&mut self, dag_id: impl AsRef<str>) {
+        self.entries.remove(dag_id.as_ref());
     }
 }
 
@@ -170,28 +174,29 @@ impl CronService {
 pub fn set_schedule<W: CronHost>(
     sim: &mut Sim<W>,
     w: &mut W,
-    dag_id: &str,
+    dag_id: impl Into<DagId>,
     period: SimDuration,
 ) {
+    let dag_id = dag_id.into();
     let cron = w.cron();
     cron.stats.registrations += 1;
     let gen = cron.next_gen;
     cron.next_gen += 1;
-    let prev = cron.entries.insert(dag_id.to_string(), CronEntry { period, gen });
+    let prev = cron.entries.insert(dag_id, CronEntry { period, gen });
     // Keep the original phase when only re-registering with same period
     // would double-fire; simplest faithful model: (re)arm from now.
     let _ = prev;
-    arm_fire(sim, dag_id.to_string(), gen, period);
+    arm_fire(sim, dag_id, gen, period);
 }
 
-fn arm_fire<W: CronHost>(sim: &mut Sim<W>, dag_id: String, gen: u64, period: SimDuration) {
+fn arm_fire<W: CronHost>(sim: &mut Sim<W>, dag_id: DagId, gen: u64, period: SimDuration) {
     sim.after(period, "cron.fire", move |sim, w| {
         let cron = w.cron();
         match cron.entries.get(&dag_id) {
             Some(e) if e.gen == gen => {
                 cron.stats.fires += 1;
                 let next_period = e.period;
-                arm_fire(sim, dag_id.clone(), gen, next_period);
+                arm_fire(sim, dag_id, gen, next_period);
                 let ts = sim.now();
                 W::on_cron_fire(sim, w, dag_id, ts);
             }
@@ -289,13 +294,13 @@ mod tests {
 
     struct World {
         cron: CronService,
-        fires: Vec<(String, SimTime)>,
+        fires: Vec<(DagId, SimTime)>,
     }
     impl CronHost for World {
         fn cron(&mut self) -> &mut CronService {
             &mut self.cron
         }
-        fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: String, _ts: SimTime) {
+        fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: DagId, _ts: SimTime) {
             w.fires.push((dag_id, sim.now()));
         }
     }

@@ -20,8 +20,50 @@
 //! pre-tenancy caller (experiments, MWAA baseline, legacy wire format)
 //! bit-compatible. [`tenant_of`] / [`local_dag_id`] split a qualified id
 //! back into its parts at the serialization boundary.
+//!
+//! # Symbolized identifiers ([`DagId`])
+//!
+//! The event fabric — DB keys, WAL/CDC records, scheduler messages, cron
+//! entries, executor task refs — is keyed by [`DagId`], a `Copy` symbol
+//! interned from the tenant-qualified string. Interning happens at the
+//! system boundary (the API router, the parse function's apply step); the
+//! hot paths only ever copy 8-byte symbols, so a scheduling pass or a DB
+//! range probe performs **zero string allocation**.
+//!
+//! ## Interner concurrency and lifetime
+//!
+//! The interner is a process-global, append-only table behind a `Mutex`:
+//! one entry per distinct qualified id, ever. Entries are leaked
+//! (`&'static`), which makes symbol resolution (`as_str`/`tenant`/`local`)
+//! lock-free pointer reads — the lock is taken only when interning a
+//! string, i.e. at the boundary, never per comparison. The table grows
+//! monotonically with the number of *distinct* DAG ids the process has
+//! seen; read paths use the non-inserting [`DagId::lookup`] so unknown-id
+//! probes (404 traffic) cannot grow it.
+//!
+//! A symbol is an *identity*, not a liveness token: it never dangles and
+//! never recycles. Deleting a DAG removes its rows but not its intern
+//! entry; re-uploading the same qualified name yields the *same* symbol
+//! (stable identity, exactly like holding the string). Isolation is
+//! preserved structurally: `tenant` and `local` are precomputed at intern
+//! time from the single reserved separator, so two tenants' same-named
+//! DAGs intern to distinct symbols and a stale symbol can never
+//! cross-match another tenant's rows.
+//!
+//! ## Ordering and hashing
+//!
+//! `Ord`/`Hash` delegate to the underlying string (with a pointer-equality
+//! fast path for `Eq`), so `BTreeMap<DagId, _>` iterates in exactly the
+//! lexicographic order the string-keyed tables used — wire payload
+//! ordering is byte-identical and independent of intern order — and
+//! `Borrow<str>` is implemented contract-correctly, letting string-typed
+//! callers keep probing symbol-keyed tables.
 
+use std::borrow::Borrow;
+use std::collections::HashMap;
 use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::{Mutex, OnceLock};
 
 /// The implicit tenant of all un-prefixed API paths and of every internal
 /// caller that predates multi-tenancy.
@@ -62,6 +104,190 @@ pub fn tenant_of(scoped: &str) -> &str {
 /// The tenant-local DAG id (what API payloads show) of a qualified id.
 pub fn local_dag_id(scoped: &str) -> &str {
     scoped.split_once(TENANT_SEP).map(|(_, d)| d).unwrap_or(scoped)
+}
+
+/// One interned identifier: the qualified string plus its precomputed
+/// tenant split. Entries are leaked (`&'static`) so symbol resolution is a
+/// lock-free pointer read; the interner guarantees one entry per distinct
+/// string, which is what makes pointer equality a valid `Eq`.
+#[doc(hidden)]
+pub struct DagIdEntry {
+    full: &'static str,
+    tenant: &'static str,
+    local: &'static str,
+}
+
+/// An interned, `Copy` DAG identifier — the key type of the entire event
+/// fabric (metadata-DB tables, WAL/CDC change records, scheduler messages,
+/// cron entries, task refs). See the module docs for the interner's
+/// concurrency and lifetime story.
+#[derive(Clone, Copy)]
+pub struct DagId(&'static DagIdEntry);
+
+fn interner() -> &'static Mutex<HashMap<&'static str, &'static DagIdEntry>> {
+    static TABLE: OnceLock<Mutex<HashMap<&'static str, &'static DagIdEntry>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl DagId {
+    /// Intern a (tenant-qualified) DAG id, creating the symbol if needed.
+    /// Use at write boundaries (upload, apply); read paths should prefer
+    /// the non-inserting [`DagId::lookup`].
+    pub fn intern(s: &str) -> DagId {
+        let mut table = interner().lock().unwrap();
+        if let Some(e) = table.get(s) {
+            return DagId(e);
+        }
+        let full: &'static str = Box::leak(s.to_owned().into_boxed_str());
+        // Precompute the tenant split once — `tenant()`/`local()` are
+        // field reads, never per-call separator scans.
+        let (tenant, local) = match full.split_once(TENANT_SEP) {
+            Some((t, l)) => (t, l),
+            None => (DEFAULT_TENANT, full),
+        };
+        let entry: &'static DagIdEntry =
+            Box::leak(Box::new(DagIdEntry { full, tenant, local }));
+        table.insert(full, entry);
+        DagId(entry)
+    }
+
+    /// Non-inserting lookup: `None` when the id was never interned — i.e.
+    /// no resource under this name can exist anywhere in the fabric.
+    /// Keeps unknown-id probe traffic (404s) from growing the table.
+    pub fn lookup(s: &str) -> Option<DagId> {
+        interner().lock().unwrap().get(s).map(|e| DagId(*e))
+    }
+
+    /// Intern the symbol of a tenant-scoped DAG id (see [`scoped_dag_id`]).
+    pub fn scoped(tenant: &str, local: &str) -> DagId {
+        if tenant == DEFAULT_TENANT {
+            DagId::intern(local)
+        } else {
+            DagId::intern(&scoped_dag_id(tenant, local))
+        }
+    }
+
+    /// Non-inserting scoped lookup (the API router's resolution step).
+    pub fn lookup_scoped(tenant: &str, local: &str) -> Option<DagId> {
+        if tenant == DEFAULT_TENANT {
+            DagId::lookup(local)
+        } else {
+            DagId::lookup(&scoped_dag_id(tenant, local))
+        }
+    }
+
+    /// Number of distinct identifiers ever interned. The table is
+    /// append-only and deliberately never shrinks (symbols are leaked
+    /// identities — see the module docs), so this is the observability
+    /// hook for its growth: surfaced as `interned_dag_ids` in the
+    /// operator health payload.
+    pub fn interned_count() -> usize {
+        interner().lock().unwrap().len()
+    }
+
+    /// A reserved symbol that can never name a real workflow: its string
+    /// is the bare [`TENANT_SEP`], which tenant-id validation and the
+    /// upload path both reject. Used to build guaranteed-empty ranges
+    /// over symbol-keyed tables when a string probe's id was never
+    /// interned (one static entry, instead of interning attacker-supplied
+    /// probe strings).
+    pub fn probe_sentinel() -> DagId {
+        static SENTINEL: OnceLock<DagId> = OnceLock::new();
+        *SENTINEL.get_or_init(|| DagId::intern(&TENANT_SEP.to_string()))
+    }
+
+    /// The full tenant-qualified id (what the string fabric carried).
+    pub fn as_str(self) -> &'static str {
+        self.0.full
+    }
+
+    /// Owning tenant — precomputed at intern time, no separator scan.
+    pub fn tenant(self) -> &'static str {
+        self.0.tenant
+    }
+
+    /// Tenant-local id (what API payloads show) — precomputed.
+    pub fn local(self) -> &'static str {
+        self.0.local
+    }
+}
+
+impl PartialEq for DagId {
+    fn eq(&self, other: &DagId) -> bool {
+        // One entry per distinct string (global dedup under one lock), so
+        // pointer equality IS string equality.
+        std::ptr::eq(self.0, other.0)
+    }
+}
+impl Eq for DagId {}
+
+impl PartialOrd for DagId {
+    fn partial_cmp(&self, other: &DagId) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for DagId {
+    fn cmp(&self, other: &DagId) -> std::cmp::Ordering {
+        if std::ptr::eq(self.0, other.0) {
+            std::cmp::Ordering::Equal
+        } else {
+            // String order, NOT intern order: symbol-keyed BTreeMaps
+            // iterate exactly like the string-keyed tables did (stable,
+            // deterministic wire ordering), and `Borrow<str>` stays
+            // contract-correct (Ord(DagId) ≡ Ord(str)).
+            self.0.full.cmp(other.0.full)
+        }
+    }
+}
+
+impl Hash for DagId {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        // Hash like the string so `Borrow<str>` lookups stay correct.
+        self.0.full.hash(state)
+    }
+}
+
+impl Borrow<str> for DagId {
+    fn borrow(&self) -> &str {
+        self.0.full
+    }
+}
+
+impl AsRef<str> for DagId {
+    fn as_ref(&self) -> &str {
+        self.0.full
+    }
+}
+
+impl fmt::Display for DagId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0.full)
+    }
+}
+
+impl fmt::Debug for DagId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0.full)
+    }
+}
+
+impl From<&str> for DagId {
+    fn from(s: &str) -> DagId {
+        DagId::intern(s)
+    }
+}
+
+impl From<&String> for DagId {
+    fn from(s: &String) -> DagId {
+        DagId::intern(s)
+    }
+}
+
+impl From<String> for DagId {
+    fn from(s: String) -> DagId {
+        DagId::intern(&s)
+    }
 }
 
 /// State of a task instance.
@@ -310,6 +536,48 @@ mod tests {
         assert!(!valid_tenant_id("slash/y"));
         assert!(!valid_tenant_id(&"x".repeat(65)));
         assert!(!valid_tenant_id(&format!("a{TENANT_SEP}b")));
+    }
+
+    #[test]
+    fn symbols_are_stable_deduped_and_tenant_split() {
+        let a = DagId::intern("sym_test_etl");
+        let b = DagId::intern("sym_test_etl");
+        assert_eq!(a, b, "same string, same symbol");
+        assert_eq!(a.as_str(), "sym_test_etl");
+        assert_eq!(a.tenant(), DEFAULT_TENANT);
+        assert_eq!(a.local(), "sym_test_etl");
+        let s = DagId::scoped("acme", "sym_test_etl");
+        assert_ne!(a, s, "tenant-scoped symbol is distinct");
+        assert_eq!(s.tenant(), "acme");
+        assert_eq!(s.local(), "sym_test_etl");
+        assert_eq!(s.as_str(), scoped_dag_id("acme", "sym_test_etl"));
+        // Scoped constructor and plain intern of the qualified string
+        // agree (one identity per qualified name).
+        assert_eq!(s, DagId::intern(&scoped_dag_id("acme", "sym_test_etl")));
+    }
+
+    #[test]
+    fn symbol_order_is_string_order_not_intern_order() {
+        // Interned in reverse lexicographic order on purpose.
+        let z = DagId::intern("sym_order_zzz");
+        let a = DagId::intern("sym_order_aaa");
+        assert!(a < z, "Ord must follow the string, not the intern sequence");
+        let mut m: std::collections::BTreeMap<DagId, u32> = std::collections::BTreeMap::new();
+        m.insert(z, 1);
+        m.insert(a, 2);
+        let keys: Vec<&str> = m.keys().map(|k| k.as_str()).collect();
+        assert_eq!(keys, vec!["sym_order_aaa", "sym_order_zzz"]);
+        // Borrow<str> lookups work (Ord/Hash are str-consistent).
+        assert_eq!(m.get("sym_order_zzz"), Some(&1));
+    }
+
+    #[test]
+    fn lookup_is_non_inserting() {
+        assert!(DagId::lookup("sym_never_interned_xyz").is_none());
+        let s = DagId::intern("sym_lookup_hit");
+        assert_eq!(DagId::lookup("sym_lookup_hit"), Some(s));
+        assert!(DagId::lookup_scoped("ghost-tenant", "sym_lookup_hit").is_none());
+        assert_eq!(DagId::lookup_scoped(DEFAULT_TENANT, "sym_lookup_hit"), Some(s));
     }
 
     #[test]

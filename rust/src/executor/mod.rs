@@ -15,21 +15,24 @@
 
 use crate::cloud::db::{self, Txn, Write};
 use crate::cloud::{caas, faas, stepfn};
-use crate::dag::state::TiState;
+use crate::dag::state::{DagId, TiState};
 use crate::sairflow::world::{FnPayload, World};
 use crate::sim::engine::Sim;
 
-/// Reference to one task instance (queue/worker payload).
-#[derive(Debug, Clone, PartialEq)]
+/// Reference to one task instance (queue/worker payload). `Copy`: the
+/// symbolized dag id makes every executor hand-off — queue sends, Step
+/// Functions closures, worker invocations — a 16-byte copy instead of a
+/// string clone.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaskRef {
-    pub dag_id: String,
+    pub dag_id: DagId,
     pub run_id: u64,
     pub task_id: u32,
 }
 
 impl TaskRef {
     pub fn key(&self) -> crate::cloud::db::TiKey {
-        (self.dag_id.clone(), self.run_id, self.task_id)
+        (self.dag_id, self.run_id, self.task_id)
     }
 }
 
@@ -42,7 +45,7 @@ impl TaskRef {
 pub fn forward_function(sim: &mut Sim<World>, w: &mut World, tr: TaskRef) {
     stepfn::begin(sim, w, move |sim, w| {
         let worker_fn = w.fns.worker;
-        let tr2 = tr.clone();
+        let tr2 = tr;
         faas::invoke_cb(sim, w, worker_fn, FnPayload::Worker(tr), move |sim, w, ok| {
             stepfn::transition(sim, w, move |sim, w| {
                 if ok {
@@ -67,7 +70,7 @@ pub fn forward_function(sim: &mut Sim<World>, w: &mut World, tr: TaskRef) {
 /// Container executor (Fig. 1 (14)): same machine, worker on Batch/Fargate.
 pub fn forward_container(sim: &mut Sim<World>, w: &mut World, tr: TaskRef) {
     stepfn::begin(sim, w, move |sim, w| {
-        let tr2 = tr.clone();
+        let tr2 = tr;
         caas::submit_cb(sim, w, tr, move |sim, w, ok| {
             stepfn::transition(sim, w, move |sim, w| {
                 if ok {
@@ -124,6 +127,6 @@ mod tests {
     #[test]
     fn taskref_key_roundtrip() {
         let tr = TaskRef { dag_id: "d".into(), run_id: 3, task_id: 7 };
-        assert_eq!(tr.key(), ("d".to_string(), 3, 7));
+        assert_eq!(tr.key(), ("d".into(), 3, 7));
     }
 }

@@ -81,7 +81,7 @@ pub fn collect_sink(db: &MetaDb) -> MetricsSink {
             .map(|t| t.name.clone())
             .unwrap_or_else(|| format!("t{}", ti.task_id));
         sink.record_task(TaskObs {
-            dag_id: ti.dag_id.clone(),
+            dag_id: ti.dag_id.to_string(),
             run_id: ti.run_id,
             task_id: ti.task_id,
             name,
@@ -97,12 +97,12 @@ pub fn collect_sink(db: &MetaDb) -> MetricsSink {
     for run in db.dag_runs.values() {
         let (Some(start), Some(end)) = (run.start, run.end) else { continue };
         // Makespan uses min v_i .. max c_i (§5); fall back to run bounds.
-        let tis = db.tis_of_run(&run.dag_id, run.run_id);
+        let tis = db.tis_of_run(run.dag_id, run.run_id);
         let first_ready: SimTime =
             tis.iter().filter_map(|t| t.ready).min().unwrap_or(start);
         let last_end: SimTime = tis.iter().filter_map(|t| t.end).max().unwrap_or(end);
         sink.record_run(RunObs {
-            dag_id: run.dag_id.clone(),
+            dag_id: run.dag_id.to_string(),
             run_id: run.run_id,
             first_ready,
             last_end,

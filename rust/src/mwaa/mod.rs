@@ -23,7 +23,7 @@ use crate::cloud::db::{Change, DbHost, DbService, DbServiceConfig, Txn, Write};
 use crate::cloud::eventbridge::{self, CronHost, CronService};
 use crate::cloud::mq::SqsQueue;
 use crate::dag::spec::{DagSpec, Payload};
-use crate::dag::state::{RunType, TiState};
+use crate::dag::state::{DagId, RunType, TiState};
 use crate::executor::TaskRef;
 use crate::parser::parse_batch_txn;
 use crate::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
@@ -151,7 +151,7 @@ impl CronHost for MwaaWorld {
     fn cron(&mut self) -> &mut CronService {
         &mut self.cron
     }
-    fn on_cron_fire(_sim: &mut Sim<Self>, w: &mut Self, dag_id: String, logical_ts: u64) {
+    fn on_cron_fire(_sim: &mut Sim<Self>, w: &mut Self, dag_id: DagId, logical_ts: u64) {
         w.pending_msgs.push(SchedMsg::Trigger {
             dag_id,
             logical_ts,
@@ -202,7 +202,7 @@ pub fn deploy(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, specs: &[DagSpec]) {
     crate::cloud::db::commit(sim, w, txn, |_sim, _w| {});
     for s in specs {
         if let Some(period) = s.period {
-            eventbridge::set_schedule(sim, w, &s.dag_id, period);
+            eventbridge::set_schedule(sim, w, s.dag_id.as_str(), period);
         }
     }
     scheduler_loop(sim, w);
@@ -213,9 +213,9 @@ pub fn deploy(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, specs: &[DagSpec]) {
 }
 
 /// Trigger a DAG manually (next loop picks it up).
-pub fn trigger_dag(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, dag_id: &str) {
+pub fn trigger_dag(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, dag_id: impl Into<DagId>) {
     w.pending_msgs.push(SchedMsg::Trigger {
-        dag_id: dag_id.to_string(),
+        dag_id: dag_id.into(),
         logical_ts: sim.now(),
         run_type: RunType::Manual,
     });
@@ -228,9 +228,9 @@ fn scheduler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {
         w.stats.scheduler_loops += 1;
         // Poll: every non-terminal run is dirty, plus buffered triggers.
         let mut batch: Vec<SchedMsg> = std::mem::take(&mut w.pending_msgs);
-        for ((dag_id, run_id), run) in &w.db.read().dag_runs {
+        for (&(dag_id, run_id), run) in w.db.read().dag_runs.iter() {
             if !run.state.is_terminal() {
-                batch.push(SchedMsg::RunChanged { dag_id: dag_id.clone(), run_id: *run_id });
+                batch.push(SchedMsg::RunChanged { dag_id, run_id });
             }
         }
         let now = sim.now();
@@ -255,11 +255,9 @@ fn scheduler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {
             .writes
             .iter()
             .filter_map(|wr| match wr {
-                Write::SetTiState { key, state: TiState::Queued } => Some(TaskRef {
-                    dag_id: key.0.clone(),
-                    run_id: key.1,
-                    task_id: key.2,
-                }),
+                Write::SetTiState { key, state: TiState::Queued } => {
+                    Some(TaskRef { dag_id: key.0, run_id: key.1, task_id: key.2 })
+                }
                 _ => None,
             })
             .collect();
@@ -342,8 +340,8 @@ fn start_task(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, worker_id: u32, tr: T
     let launch = secs(sim.rng.uniform(w.cfg.task_launch.0, w.cfg.task_launch.1) * contention);
     sim.after(launch, "mwaa.task_launch", move |sim, w| {
         let mut txn = Txn::new();
-        txn.push(Write::SetTiHost { key: key.clone(), host: format!("celery-{worker_id}") });
-        txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        txn.push(Write::SetTiHost { key, host: format!("celery-{worker_id}") });
+        txn.push(Write::SetTiState { key, state: TiState::Running });
         crate::cloud::db::commit(sim, w, txn, move |sim, w| {
             let overhead =
                 secs(sim.rng.uniform(w.cfg.task_overhead.0, w.cfg.task_overhead.1) * contention);
@@ -391,7 +389,7 @@ fn start_task(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, worker_id: u32, tr: T
                 let mut txn = Txn::new();
                 // Same completion-time mini-scheduler scan as sAirflow's
                 // worker — both run unmodified Airflow task code.
-                txn.scan_rows = w.db.read().tis_of_run(&key.0, key.1).len() as u32;
+                txn.scan_rows = w.db.read().tis_of_run(key.0, key.1).len() as u32;
                 txn.push(Write::SetTiState { key, state });
                 crate::cloud::db::commit(sim, w, txn, move |_sim, w| {
                     release_slot(w, worker_id);

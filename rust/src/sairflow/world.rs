@@ -31,7 +31,7 @@ use crate::cloud::kinesis::{self, KinesisHost, KinesisStream};
 use crate::cloud::mq::{self, Esm, EsmConfig, SqsQueue};
 use crate::cloud::stepfn::{StepFnHost, StepFunctions};
 use crate::dag::spec::{DagSpec, ExecKind};
-use crate::dag::state::{tenant_of, RunState, RunType, TiState};
+use crate::dag::state::{DagId, RunState, RunType, TiState};
 use crate::executor::{self, TaskRef};
 use crate::parser::{self, UploadEvent};
 use crate::sairflow::config::Config;
@@ -51,12 +51,14 @@ pub enum Target {
     Updater,
 }
 
-/// Payloads of all FaaS functions in the deployment.
+/// Payloads of all FaaS functions in the deployment. Everything past the
+/// parse stage carries `Copy` symbols/refs — invoking a function never
+/// clones an identifier.
 pub enum FnPayload {
     ParseBatch(Vec<UploadEvent>),
     SchedBatch(Vec<SchedMsg>),
     CdcBatch { shard: usize, changes: Vec<Change> },
-    ScheduleUpdate { dag_id: String },
+    ScheduleUpdate { dag_id: DagId },
     ExecForward(TaskRef),
     Worker(TaskRef),
     FailureHandle(TaskRef),
@@ -156,14 +158,14 @@ impl CronHost for World {
     fn cron(&mut self) -> &mut CronService {
         &mut self.cron
     }
-    fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: String, logical_ts: u64) {
+    fn on_cron_fire(sim: &mut Sim<Self>, w: &mut Self, dag_id: DagId, logical_ts: u64) {
         // A periodic event is routed like any other bus event (Fig. 1 (7)).
-        let ev = BusEvent::CronFire { dag_id: dag_id.clone(), logical_ts };
+        let ev = BusEvent::CronFire { dag_id, logical_ts };
         let targets = w.router.route(&ev);
         for t in targets {
             if t == Target::Scheduler {
                 w.sched_q.send(SchedMsg::Trigger {
-                    dag_id: dag_id.clone(),
+                    dag_id,
                     logical_ts,
                     run_type: RunType::Scheduled,
                 });
@@ -296,10 +298,12 @@ fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload
     let inv = ctx.inv;
     sim.after(cpu, "preparse.work", move |sim, w| {
         for change in changes {
-            let ev = BusEvent::Change(change.clone());
+            // `Change` is `Copy`: routing + dispatch fan-out share the
+            // same 24-byte value — the CDC hot path allocates nothing.
+            let ev = BusEvent::Change(change);
             let targets = w.router.route(&ev);
             for t in targets {
-                dispatch(sim, w, t, &change);
+                dispatch(sim, w, t, change);
             }
         }
         faas::complete(sim, w, inv, true);
@@ -309,45 +313,36 @@ fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload
 }
 
 /// Dispatch one routed event to its target (EventBridge → queue/function).
-fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: &Change) {
+fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: Change) {
     match (target, change) {
         (Target::Updater, Change::SerializedDag { dag_id })
         | (Target::Updater, Change::DagDeleted { dag_id }) => {
             let f = w.fns.updater;
-            faas::invoke(sim, w, f, FnPayload::ScheduleUpdate { dag_id: dag_id.clone() });
+            faas::invoke(sim, w, f, FnPayload::ScheduleUpdate { dag_id });
         }
         (Target::Scheduler, Change::DagRun { dag_id, run_id, .. }) => {
-            w.sched_q.send(SchedMsg::RunChanged { dag_id: dag_id.clone(), run_id: *run_id });
+            w.sched_q.send(SchedMsg::RunChanged { dag_id, run_id });
             mq::pump(sim, w, sched_acc, sched_handler);
         }
         (Target::Scheduler, Change::DagPaused { dag_id, paused: false }) => {
             // Unpause: the next pass promotes manual runs queued while
             // the DAG was paused ("dag-resumed" rule).
-            w.sched_q.send(SchedMsg::DagResumed { dag_id: dag_id.clone() });
+            w.sched_q.send(SchedMsg::DagResumed { dag_id });
             mq::pump(sim, w, sched_acc, sched_handler);
         }
         (Target::Scheduler, Change::Ti { dag_id, run_id, task_id, state }) => {
-            w.sched_q.send(SchedMsg::TaskFinished {
-                dag_id: dag_id.clone(),
-                run_id: *run_id,
-                task_id: *task_id,
-                state: *state,
-            });
+            w.sched_q.send(SchedMsg::TaskFinished { dag_id, run_id, task_id, state });
             mq::pump(sim, w, sched_acc, sched_handler);
         }
         (Target::Executor, Change::Ti { dag_id, run_id, task_id, .. }) => {
-            let tr = TaskRef {
-                dag_id: dag_id.clone(),
-                run_id: *run_id,
-                task_id: *task_id,
-            };
+            let tr = TaskRef { dag_id, run_id, task_id };
             // Resolve the executor kind from the serialized DAG (§4.4).
             let kind = w
                 .db
                 .read()
                 .serialized
-                .get(dag_id)
-                .and_then(|s| s.tasks.get(*task_id as usize))
+                .get(&dag_id)
+                .and_then(|s| s.tasks.get(task_id as usize))
                 .map(|t| t.executor)
                 .unwrap_or(ExecKind::Faas);
             match kind {
@@ -371,10 +366,10 @@ fn updater_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload>
     let inv = ctx.inv;
     sim.after(cpu, "updater.work", move |sim, w| {
         match w.db.read().serialized.get(&dag_id).and_then(|s| s.period) {
-            Some(period) => eventbridge::set_schedule(sim, w, &dag_id, period),
+            Some(period) => eventbridge::set_schedule(sim, w, dag_id, period),
             // The DAG was deleted (or re-uploaded without a schedule):
             // drop any cron entry so it stops firing.
-            None => w.cron.unregister(&dag_id),
+            None => w.cron.unregister(dag_id),
         }
         faas::complete(sim, w, inv, true);
     });
@@ -522,9 +517,14 @@ pub fn upload_dag(sim: &mut Sim<World>, _w: &mut World, spec: &DagSpec) {
 /// are never dropped — on a paused DAG (or past `max_active_runs`) the
 /// run is created in state `Queued` and starts when the DAG is unpaused
 /// and capacity frees (Airflow parity).
-pub fn trigger_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
+///
+/// Like every control op below, the DAG is addressed by its [`DagId`]
+/// symbol; `impl Into<DagId>` keeps string callers working (the
+/// conversion interns once at this boundary — the fabric beyond it only
+/// copies symbols).
+pub fn trigger_dag(sim: &mut Sim<World>, w: &mut World, dag_id: impl Into<DagId>) {
     w.sched_q.send(SchedMsg::Trigger {
-        dag_id: dag_id.to_string(),
+        dag_id: dag_id.into(),
         logical_ts: sim.now(),
         run_type: RunType::Manual,
     });
@@ -537,13 +537,15 @@ pub fn trigger_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
 /// trigger. The pass materializes every run immediately in state
 /// `Queued` and promotes them under `SchedLimits::max_active_backfill_runs`,
 /// so a large range cannot starve cron traffic.
-pub fn backfill_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str, logical_ts: &[SimTime]) {
+pub fn backfill_dag(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: impl Into<DagId>,
+    logical_ts: &[SimTime],
+) {
+    let dag_id = dag_id.into();
     for &ts in logical_ts {
-        w.sched_q.send(SchedMsg::Trigger {
-            dag_id: dag_id.to_string(),
-            logical_ts: ts,
-            run_type: RunType::Backfill,
-        });
+        w.sched_q.send(SchedMsg::Trigger { dag_id, logical_ts: ts, run_type: RunType::Backfill });
     }
     mq::pump(sim, w, sched_acc, sched_handler);
 }
@@ -558,9 +560,14 @@ pub fn backfill_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str, logical_t
 /// Pause / unpause a DAG (`PATCH /api/v1/dags/{id}`). The flag is written
 /// through a DB transaction; the next scheduler pass reads it from its
 /// snapshot and skips (or resumes) periodic triggers.
-pub fn set_dag_paused(sim: &mut Sim<World>, w: &mut World, dag_id: &str, paused: bool) {
+pub fn set_dag_paused(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    dag_id: impl Into<DagId>,
+    paused: bool,
+) {
     let mut txn = Txn::new();
-    txn.push(Write::SetDagPaused { dag_id: dag_id.to_string(), paused });
+    txn.push(Write::SetDagPaused { dag_id: dag_id.into(), paused });
     db::commit(sim, w, txn, |_sim, _w| {});
 }
 
@@ -577,13 +584,14 @@ pub fn set_dag_paused(sim: &mut Sim<World>, w: &mut World, dag_id: &str, paused:
 pub fn clear_task_instances(
     sim: &mut Sim<World>,
     w: &mut World,
-    dag_id: &str,
+    dag_id: impl Into<DagId>,
     run_id: u64,
     task_ids: &[u32],
 ) {
+    let dag_id = dag_id.into();
     let mut txn = Txn::new();
     for &t in task_ids {
-        txn.push(Write::ClearTi { key: (dag_id.to_string(), run_id, t) });
+        txn.push(Write::ClearTi { key: (dag_id, run_id, t) });
     }
     db::commit(sim, w, txn, |_sim, _w| {});
 }
@@ -595,22 +603,22 @@ pub fn clear_task_instances(
 pub fn mark_run_state(
     sim: &mut Sim<World>,
     w: &mut World,
-    dag_id: &str,
+    dag_id: impl Into<DagId>,
     run_id: u64,
     state: RunState,
 ) {
+    let dag = dag_id.into();
     let mut txn = Txn::new();
-    txn.push(Write::SetRunState { dag_id: dag_id.to_string(), run_id, state });
+    txn.push(Write::SetRunState { dag_id: dag, run_id, state });
     // The marked run's provenance decides which capacity a terminal mark
     // can free (read before the row may change).
     let marked_type = w
         .db
         .read()
         .dag_runs
-        .get(&(dag_id.to_string(), run_id))
+        .get(&(dag, run_id))
         .map(|r| r.run_type)
         .unwrap_or(RunType::Manual);
-    let dag = dag_id.to_string();
     db::commit(sim, w, txn, move |sim, w| {
         // Terminal run changes are not CDC-routed to the scheduler, but a
         // forced-terminal run may have freed a backfill budget slot or
@@ -624,7 +632,7 @@ pub fn mark_run_state(
                 // Budgets are per tenant: only this tenant's queued runs
                 // can use the freed slot, checked against its own cap.
                 RunType::Backfill => db.tenant_backfill_promotable(
-                    tenant_of(&dag),
+                    dag.tenant(),
                     w.cfg.limits.max_active_backfill_runs,
                 ),
                 _ => db.queued_foreground().any(|k| k.0 == dag),
@@ -641,18 +649,18 @@ pub fn mark_run_state(
 /// blob file goes away immediately; one transaction removes all metadata
 /// rows, and the resulting `DagDeleted` change reaches the schedule
 /// updater, which unregisters the cron entry.
-pub fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
+pub fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: impl Into<DagId>) {
+    let dag_id = dag_id.into();
     let fileloc = w
         .db
         .read()
         .dags
-        .get(dag_id)
+        .get(&dag_id)
         .map(|d| d.fileloc.clone())
         .unwrap_or_else(|| format!("dags/{dag_id}.json"));
     w.blob.remove(&fileloc);
     let mut txn = Txn::new();
-    txn.push(Write::DeleteDag { dag_id: dag_id.to_string() });
-    let dag_id = dag_id.to_string();
+    txn.push(Write::DeleteDag { dag_id });
     db::commit(sim, w, txn, move |sim, w| {
         // Deleting a DAG may have freed backfill budget (its running
         // backfill runs vanish with it), and `DagDeleted` routes only to
@@ -660,7 +668,7 @@ pub fn delete_dag(sim: &mut Sim<World>, w: &mut World, dag_id: &str) {
         // queued work plus actual budget headroom — per tenant, since the
         // freed slots belong to the deleted DAG's tenant alone.
         let freed_work = w.db.read().tenant_backfill_promotable(
-            tenant_of(&dag_id),
+            dag_id.tenant(),
             w.cfg.limits.max_active_backfill_runs,
         );
         if freed_work {

@@ -19,15 +19,25 @@
 //! `rust/tests/prop_scheduler.rs`). The MWAA baseline reuses this exact
 //! pass inside its polling loop — same Airflow semantics, different
 //! triggering model.
+//!
+//! # Allocation-free hot path
+//!
+//! Every message, key and write the pass handles is keyed by the `Copy`
+//! [`DagId`] symbol: the per-message work is map probes and 8-byte copies
+//! — no `clone()`/`to_string()` anywhere in the loop, and every DB range
+//! probe uses `Copy` bounds ([`crate::cloud::db::RunTable::of_dag`]).
+//! This is what keeps a pass over a large snapshot cheap at high fan-out
+//! (`bench_hotpath` cell 3), which the paper's scale-out result rests on.
 
 use crate::cloud::db::{MetaDb, RunKey, TiRow, Txn, Write};
 use crate::dag::graph::DagGraph;
-use crate::dag::state::{tenant_of, RunState, RunType, TiState};
+use crate::dag::state::{DagId, RunState, RunType, TiState};
 use crate::sim::time::SimTime;
 use std::collections::{BTreeSet, HashMap, HashSet};
 
-/// Messages feeding the scheduler (the FIFO queue payload).
-#[derive(Debug, Clone, PartialEq)]
+/// Messages feeding the scheduler (the FIFO queue payload). All-`Copy`:
+/// enqueue, redelivery and batch processing never touch the heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SchedMsg {
     /// A typed trigger: one launch of a workflow. `run_type` is the
     /// trigger's provenance and drives the scheduling policy — cron fires
@@ -36,18 +46,18 @@ pub enum SchedMsg {
     /// paused or gate-saturated DAG parks a *queued* run, Airflow
     /// parity); backfill triggers create queued runs promoted under the
     /// separate backfill budget.
-    Trigger { dag_id: String, logical_ts: SimTime, run_type: RunType },
+    Trigger { dag_id: DagId, logical_ts: SimTime, run_type: RunType },
     /// A promotion nudge for a DAG whose parked runs may now be able to
     /// start: sent on unpause (the CDC-routed `DagPaused` edge) and after
     /// API actions that free capacity outside the event fabric
     /// (mark-terminal, delete). The pass itself carries the promotion
     /// logic; this message exists to cause one.
-    DagResumed { dag_id: String },
+    DagResumed { dag_id: DagId },
     /// A DAG run row changed (e.g. the run was created).
-    RunChanged { dag_id: String, run_id: u64 },
+    RunChanged { dag_id: DagId, run_id: u64 },
     /// A task instance reached a terminal-ish state
     /// (success / failed / up-for-retry).
-    TaskFinished { dag_id: String, run_id: u64, task_id: u32, state: TiState },
+    TaskFinished { dag_id: DagId, run_id: u64, task_id: u32, state: TiState },
 }
 
 /// Scheduler limits, matching the paper's deployment (§5): both systems
@@ -100,14 +110,11 @@ pub struct PassOutput {
     pub stats: PassStats,
 }
 
-/// Next run id for a DAG (1-based, dense).
-fn next_run_id(db: &MetaDb, dag_id: &str) -> u64 {
-    db.dag_runs
-        .range((dag_id.to_string(), 0)..=(dag_id.to_string(), u64::MAX))
-        .map(|((_, r), _)| *r)
-        .max()
-        .unwrap_or(0)
-        + 1
+/// Next run id for a DAG (1-based, dense). The run table is ordered, so
+/// the current maximum is the last key of the DAG's range — one `Copy`
+/// range probe, not a scan.
+fn next_run_id(db: &MetaDb, dag_id: DagId) -> u64 {
+    db.dag_runs.of_dag(dag_id).next_back().map(|((_, r), _)| *r).unwrap_or(0) + 1
 }
 
 /// Execute one scheduling pass over a database snapshot.
@@ -123,8 +130,9 @@ pub fn scheduling_pass(
     limits: &SchedLimits,
 ) -> PassOutput {
     let mut out = PassOutput::default();
-    // Runs that this pass must (re)examine.
-    let mut dirty_runs: BTreeSet<(String, u64)> = BTreeSet::new();
+    // Runs that this pass must (re)examine. `Copy` keys: inserting per
+    // message copies 16 bytes, never a heap string.
+    let mut dirty_runs: BTreeSet<RunKey> = BTreeSet::new();
 
     // Per-DAG bookkeeping shared by every trigger of this pass. The seed
     // code recomputed `next_run_id(db, ..) + already` and
@@ -142,7 +150,7 @@ pub fn scheduling_pass(
         /// Active non-backfill runs in the snapshot, computed once.
         snapshot_active_fg: u64,
     }
-    let mut pass_dags: HashMap<String, PassDag> = HashMap::new();
+    let mut pass_dags: HashMap<DagId, PassDag> = HashMap::new();
     // Backfill runs created by this pass, candidates for same-pass
     // promotion under the backfill budget (below).
     let mut created_backfill: Vec<RunKey> = Vec::new();
@@ -151,41 +159,41 @@ pub fn scheduling_pass(
     // and extended with the dates this pass creates, so overlapping
     // POSTs dedup whether the earlier range is already committed or
     // still in this very batch.
-    let mut bf_dates: HashMap<String, HashSet<SimTime>> = HashMap::new();
+    let mut bf_dates: HashMap<DagId, HashSet<SimTime>> = HashMap::new();
 
     // Step 1: create DAG runs for triggers.
     for msg in batch {
-        match msg {
+        match *msg {
             SchedMsg::Trigger { dag_id, logical_ts, run_type } => {
-                let Some(spec) = db.serialized.get(dag_id) else { continue };
-                let paused = db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false);
+                let Some(spec) = db.serialized.get(&dag_id) else { continue };
+                let paused = db.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(false);
                 // Cron fires are silently dropped while the DAG is
                 // paused; manual and backfill triggers bypass the pause
                 // gate (Airflow parity: the run is created, parked in
                 // `Queued` until unpause for manual runs).
-                if *run_type == RunType::Scheduled && paused {
+                if run_type == RunType::Scheduled && paused {
                     continue;
                 }
                 // Backfill dedup (Airflow parity): a logical date that
                 // already has a run for this DAG — in the snapshot or
                 // created earlier in this very pass — is skipped, so
                 // re-POSTing an overlapping range cannot duplicate runs.
-                if *run_type == RunType::Backfill {
+                if run_type == RunType::Backfill {
                     let dates = bf_dates
-                        .entry(dag_id.clone())
+                        .entry(dag_id)
                         .or_insert_with(|| db.logical_dates_of(dag_id));
-                    if !dates.insert(*logical_ts) {
+                    if !dates.insert(logical_ts) {
                         out.stats.backfill_deduped += 1;
                         continue;
                     }
                 }
-                let st = pass_dags.entry(dag_id.clone()).or_insert_with(|| PassDag {
+                let st = pass_dags.entry(dag_id).or_insert_with(|| PassDag {
                     base_id: next_run_id(db, dag_id),
                     created: 0,
                     created_fg: 0,
                     snapshot_active_fg: db
                         .dag_runs
-                        .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                        .of_dag(dag_id)
                         .filter(|(_, r)| {
                             !r.state.is_terminal() && r.run_type != RunType::Backfill
                         })
@@ -199,9 +207,9 @@ pub fn scheduling_pass(
                 // neither consume this gate nor are dropped by it (a
                 // dropped backfill trigger would leave a hole in the
                 // range).
-                let gate_full = *run_type != RunType::Backfill
+                let gate_full = run_type != RunType::Backfill
                     && st.snapshot_active_fg + st.created_fg >= spec.max_active_runs as u64;
-                if gate_full && *run_type == RunType::Scheduled {
+                if gate_full && run_type == RunType::Scheduled {
                     out.stats.runs_skipped += 1;
                     continue;
                 }
@@ -210,25 +218,23 @@ pub fn scheduling_pass(
                 // under the backfill budget); a manual run on a paused
                 // DAG or past the gate starts `Queued` until it can run;
                 // everything else starts `Running`.
-                let state = if *run_type == RunType::Backfill || paused || gate_full {
+                let state = if run_type == RunType::Backfill || paused || gate_full {
                     RunState::Queued
                 } else {
                     RunState::Running
                 };
                 out.txn.push(Write::InsertDagRun(crate::cloud::db::DagRunRow {
-                    dag_id: dag_id.clone(),
-                    tenant_id: tenant_of(dag_id).to_string(),
+                    dag_id,
                     run_id,
-                    logical_ts: *logical_ts,
-                    run_type: *run_type,
+                    logical_ts,
+                    run_type,
                     state,
                     start: if state == RunState::Running { Some(now) } else { None },
                     end: None,
                 }));
                 for t in &spec.tasks {
                     out.txn.push(Write::InsertTi(TiRow {
-                        dag_id: dag_id.clone(),
-                        tenant_id: tenant_of(dag_id).to_string(),
+                        dag_id,
                         run_id,
                         task_id: t.id,
                         state: TiState::None,
@@ -240,8 +246,8 @@ pub fn scheduling_pass(
                     }));
                 }
                 st.created += 1;
-                if *run_type == RunType::Backfill {
-                    created_backfill.push((dag_id.clone(), run_id));
+                if run_type == RunType::Backfill {
+                    created_backfill.push((dag_id, run_id));
                 } else {
                     st.created_fg += 1;
                 }
@@ -254,10 +260,10 @@ pub fn scheduling_pass(
                 // right after the unpause commit.
             }
             SchedMsg::RunChanged { dag_id, run_id } => {
-                dirty_runs.insert((dag_id.clone(), *run_id));
+                dirty_runs.insert((dag_id, run_id));
             }
             SchedMsg::TaskFinished { dag_id, run_id, .. } => {
-                dirty_runs.insert((dag_id.clone(), *run_id));
+                dirty_runs.insert((dag_id, run_id));
             }
         }
     }
@@ -275,20 +281,21 @@ pub fn scheduling_pass(
     // Runs this pass moves Running -> terminal free capacity for the
     // promotion steps below: backfill completions free their *tenant's*
     // backfill budget, foreground completions free their DAG's
-    // `max_active_runs` capacity.
-    let mut backfill_freed: HashMap<String, usize> = HashMap::new();
-    let mut fg_freed: HashMap<String, u64> = HashMap::new();
+    // `max_active_runs` capacity. Tenant keys are the interned `'static`
+    // strings (field reads, no allocation).
+    let mut backfill_freed: HashMap<&'static str, usize> = HashMap::new();
+    let mut fg_freed: HashMap<DagId, u64> = HashMap::new();
 
     // Steps 2+3 for existing dirty runs, plus run-completion detection.
     // Graphs are built once per DAG per pass (perf: a batch often carries
     // many events of the same DAG).
-    let mut graphs: HashMap<&str, DagGraph> = HashMap::new();
-    for (dag_id, run_id) in &dirty_runs {
-        let Some(run) = db.dag_runs.get(&(dag_id.clone(), *run_id)) else { continue };
+    let mut graphs: HashMap<DagId, DagGraph> = HashMap::new();
+    for &(dag_id, run_id) in &dirty_runs {
+        let Some(run) = db.dag_runs.get(&(dag_id, run_id)) else { continue };
         if run.state.is_terminal() {
             continue;
         }
-        let Some(spec) = db.serialized.get(dag_id) else {
+        let Some(spec) = db.serialized.get(&dag_id) else {
             // The DAG was deleted while this run's events were in flight.
             // Apply-time insert guards keep orphan rows from landing, but
             // a run inserted *before* the delete can still be referenced
@@ -296,14 +303,14 @@ pub fn scheduling_pass(
             // forever.
             if run.state == RunState::Running {
                 if run.run_type == RunType::Backfill {
-                    *backfill_freed.entry(run.tenant_id.clone()).or_insert(0) += 1;
+                    *backfill_freed.entry(dag_id.tenant()).or_insert(0) += 1;
                 } else {
-                    *fg_freed.entry(dag_id.clone()).or_insert(0) += 1;
+                    *fg_freed.entry(dag_id).or_insert(0) += 1;
                 }
             }
             out.txn.push(Write::SetRunState {
-                dag_id: dag_id.clone(),
-                run_id: *run_id,
+                dag_id,
+                run_id,
                 state: RunState::Failed,
             });
             out.stats.runs_completed += 1;
@@ -316,10 +323,8 @@ pub fn scheduling_pass(
             // out; nothing to schedule yet.
             continue;
         }
-        let graph = graphs
-            .entry(spec.dag_id.as_str())
-            .or_insert_with(|| DagGraph::of(spec));
-        let tis = db.tis_of_run(dag_id, *run_id);
+        let graph = graphs.entry(dag_id).or_insert_with(|| DagGraph::of(spec));
+        let tis = db.tis_of_run(dag_id, run_id);
         if tis.is_empty() {
             continue;
         }
@@ -340,13 +345,13 @@ pub fn scheduling_pass(
         }
         if all_terminal {
             if run.run_type == RunType::Backfill {
-                *backfill_freed.entry(run.tenant_id.clone()).or_insert(0) += 1;
+                *backfill_freed.entry(dag_id.tenant()).or_insert(0) += 1;
             } else {
-                *fg_freed.entry(dag_id.clone()).or_insert(0) += 1;
+                *fg_freed.entry(dag_id).or_insert(0) += 1;
             }
             out.txn.push(Write::SetRunState {
-                dag_id: dag_id.clone(),
-                run_id: *run_id,
+                dag_id,
+                run_id,
                 state: if any_failed { RunState::Failed } else { RunState::Success },
             });
             out.stats.runs_completed += 1;
@@ -379,21 +384,18 @@ pub fn scheduling_pass(
                     }
                     if doomed {
                         out.txn.push(Write::SetTiState {
-                            key: (dag_id.clone(), *run_id, ti.task_id),
+                            key: (dag_id, run_id, ti.task_id),
                             state: TiState::UpstreamFailed,
                         });
                         continue;
                     }
                     if all_ok {
-                        let key = (dag_id.clone(), *run_id, ti.task_id);
-                        out.txn.push(Write::SetTiReady { key: key.clone(), ts: ready_at });
-                        out.txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+                        let key = (dag_id, run_id, ti.task_id);
+                        out.txn.push(Write::SetTiReady { key, ts: ready_at });
+                        out.txn.push(Write::SetTiState { key, state: TiState::Scheduled });
                         out.stats.tis_scheduled += 1;
                         if active < limits.parallelism {
-                            out.txn.push(Write::SetTiState {
-                                key,
-                                state: TiState::Queued,
-                            });
+                            out.txn.push(Write::SetTiState { key, state: TiState::Queued });
                             out.stats.tis_queued += 1;
                             active += 1;
                         }
@@ -404,7 +406,7 @@ pub fn scheduling_pass(
                     // parallelism limit.
                     if active < limits.parallelism {
                         out.txn.push(Write::SetTiState {
-                            key: (dag_id.clone(), *run_id, ti.task_id),
+                            key: (dag_id, run_id, ti.task_id),
                             state: TiState::Queued,
                         });
                         out.stats.tis_queued += 1;
@@ -413,8 +415,8 @@ pub fn scheduling_pass(
                 }
                 TiState::UpForRetry => {
                     // Reschedule a failed-but-retryable task.
-                    let key = (dag_id.clone(), *run_id, ti.task_id);
-                    out.txn.push(Write::SetTiState { key: key.clone(), state: TiState::Scheduled });
+                    let key = (dag_id, run_id, ti.task_id);
+                    out.txn.push(Write::SetTiState { key, state: TiState::Scheduled });
                     out.stats.retries += 1;
                     if active < limits.parallelism {
                         out.txn.push(Write::SetTiState { key, state: TiState::Queued });
@@ -433,22 +435,22 @@ pub fn scheduling_pass(
     // capacity immediately; the promotion's `Running` change routes back
     // through CDC and the next pass launches the roots. `DagResumed` and
     // run-completion events are what bring the pass here.
-    let mut fg_capacity: HashMap<String, u64> = HashMap::new();
-    for key in db.queued_foreground() {
-        let dag_id = &key.0;
-        let Some(spec) = db.serialized.get(dag_id) else { continue };
-        if db.dags.get(dag_id).map(|d| d.is_paused).unwrap_or(false) {
+    let mut fg_capacity: HashMap<DagId, u64> = HashMap::new();
+    for &key in db.queued_foreground() {
+        let dag_id = key.0;
+        let Some(spec) = db.serialized.get(&dag_id) else { continue };
+        if db.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(false) {
             continue;
         }
-        let cap = fg_capacity.entry(dag_id.clone()).or_insert_with(|| {
+        let cap = fg_capacity.entry(dag_id).or_insert_with(|| {
             let running = db
                 .dag_runs
-                .range((dag_id.clone(), 0)..=(dag_id.clone(), u64::MAX))
+                .of_dag(dag_id)
                 .filter(|(_, r)| {
                     r.state == RunState::Running && r.run_type != RunType::Backfill
                 })
                 .count() as u64;
-            let freed = fg_freed.get(dag_id).copied().unwrap_or(0);
+            let freed = fg_freed.get(&dag_id).copied().unwrap_or(0);
             (spec.max_active_runs as u64).saturating_sub(running.saturating_sub(freed))
         });
         if *cap == 0 {
@@ -458,7 +460,7 @@ pub fn scheduling_pass(
         // `PromoteRun` (not a blind state write): at apply time it only
         // lands while the row is still `Queued`, so a promotion racing a
         // concurrent mark-terminal cannot revive the cancelled run.
-        out.txn.push(Write::PromoteRun { dag_id: dag_id.clone(), run_id: key.1 });
+        out.txn.push(Write::PromoteRun { dag_id, run_id: key.1 });
         out.stats.runs_promoted += 1;
     }
 
@@ -476,7 +478,7 @@ pub fn scheduling_pass(
     fn bf_budget_left(
         db: &MetaDb,
         limits: &SchedLimits,
-        freed: &HashMap<String, usize>,
+        freed: &HashMap<&'static str, usize>,
         tenant: &str,
     ) -> usize {
         let cap = db.backfill_cap_of(tenant, limits.max_active_backfill_runs);
@@ -485,27 +487,27 @@ pub fn scheduling_pass(
             .saturating_sub(freed.get(tenant).copied().unwrap_or(0));
         cap.saturating_sub(active)
     }
-    let mut bf_remaining: HashMap<String, usize> = HashMap::new();
-    for key in db.queued_backfill() {
+    let mut bf_remaining: HashMap<&'static str, usize> = HashMap::new();
+    for &key in db.queued_backfill() {
         // Skip runs whose DAG vanished (the dirty loop fails them).
         if !db.serialized.contains_key(&key.0) {
             continue;
         }
-        let tenant = tenant_of(&key.0);
+        let tenant = key.0.tenant();
         let rem = bf_remaining
-            .entry(tenant.to_string())
+            .entry(tenant)
             .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
         if *rem == 0 {
             continue; // this tenant is saturated; others still drain
         }
         *rem -= 1;
-        out.txn.push(Write::PromoteRun { dag_id: key.0.clone(), run_id: key.1 });
+        out.txn.push(Write::PromoteRun { dag_id: key.0, run_id: key.1 });
         out.stats.runs_promoted += 1;
     }
     for (dag_id, run_id) in created_backfill {
-        let tenant = tenant_of(&dag_id);
+        let tenant = dag_id.tenant();
         let rem = bf_remaining
-            .entry(tenant.to_string())
+            .entry(tenant)
             .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
         if *rem == 0 {
             continue;
@@ -528,7 +530,7 @@ mod tests {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
         txn.push(Write::UpsertDag(DagRow {
-            dag_id: spec.dag_id.clone(),
+            dag_id: spec.dag_id.as_str().into(),
             fileloc: format!("dags/{}.json", spec.dag_id),
             period: spec.period,
             is_paused: false,
@@ -586,10 +588,10 @@ mod tests {
         db.apply(out.txn, 0);
         advance(&mut db, "p", 1, 0); // queue the root
         // Simulate root running + success.
-        let key = ("p".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("p".into(), 1, 0u32);
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Success });
+        t.push(Write::SetTiState { key, state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(t, 2 * SECOND);
         let msg = vec![SchedMsg::TaskFinished {
             dag_id: "p".into(),
@@ -615,9 +617,9 @@ mod tests {
         db.apply(out.txn, 0);
         advance(&mut db, "p", 1, 0); // queue the root
         // Root success.
-        let key = ("p".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("p".into(), 1, 0u32);
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Running });
         t.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(t, 2);
         let msg = vec![SchedMsg::TaskFinished {
@@ -648,9 +650,9 @@ mod tests {
         let out = scheduling_pass(&db, 0, &periodic("c"), &SchedLimits::default());
         db.apply(out.txn, 0);
         advance(&mut db, "c", 1, 0); // queue the root
-        let key = ("c".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("c".into(), 1, 0u32);
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Running });
         t.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(t, 11 * SECOND);
         let msg = vec![SchedMsg::TaskFinished {
@@ -675,11 +677,11 @@ mod tests {
         let out = scheduling_pass(&db, 0, &periodic("c"), &SchedLimits::default());
         db.apply(out.txn, 0);
         advance(&mut db, "c", 1, 0); // queue the root
-        let key = ("c".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("c".into(), 1, 0u32);
         // First try fails -> UpForRetry.
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::UpForRetry });
+        t.push(Write::SetTiState { key, state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::UpForRetry });
         db.apply(t, 2);
         let msg = vec![SchedMsg::TaskFinished {
             dag_id: "c".into(),
@@ -693,8 +695,8 @@ mod tests {
         assert_eq!(db.task_instances[&key].state, TiState::Queued);
         // Second try fails terminally.
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Failed });
+        t.push(Write::SetTiState { key, state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Failed });
         db.apply(t, 5);
         let msg = vec![SchedMsg::TaskFinished {
             dag_id: "c".into(),
@@ -757,9 +759,9 @@ mod tests {
         assert_eq!(out.stats.runs_skipped, 1);
         // Complete run 1, then the next trigger goes through.
         advance(&mut db, "slow", 1, 2);
-        let key = ("slow".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("slow".into(), 1, 0u32);
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Running });
         t.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(t, 3);
         advance(&mut db, "slow", 1, 4); // marks run terminal
@@ -828,9 +830,9 @@ mod tests {
         assert_eq!(stats.runs_promoted, 0, "gate still full");
         // Complete run 1; the completion pass promotes run 2.
         advance(&mut db, "g", 1, 3); // queue run 1's root
-        let key = ("g".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("g".into(), 1, 0u32);
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Running });
         t.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(t, 4);
         let msg = vec![SchedMsg::TaskFinished {
@@ -881,9 +883,9 @@ mod tests {
         db.apply(out.txn, 2 * SECOND); // queues run 1's root
         // Complete run 1's task; the pass that detects the completion
         // frees budget and promotes the next queued run in the same txn.
-        let key = ("b".to_string(), 1, 0u32);
+        let key: crate::cloud::db::TiKey = ("b".into(), 1, 0u32);
         let mut t = Txn::new();
-        t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+        t.push(Write::SetTiState { key, state: TiState::Running });
         t.push(Write::SetTiState { key, state: TiState::Success });
         db.apply(t, 3 * SECOND);
         let msg = vec![SchedMsg::TaskFinished {
@@ -1001,7 +1003,7 @@ mod tests {
         let mut db = db_with(&zzz);
         let mut txn = Txn::new();
         txn.push(Write::UpsertDag(DagRow {
-            dag_id: aaa.dag_id.clone(),
+            dag_id: aaa.dag_id.as_str().into(),
             fileloc: "dags/aaa.json".into(),
             period: aaa.period,
             is_paused: false,
@@ -1031,16 +1033,16 @@ mod tests {
                 .dag_runs
                 .iter()
                 .find(|(_, r)| r.state == RunState::Running)
-                .map(|(k, r)| (k.clone(), r.run_id))
+                .map(|(k, r)| (*k, r.run_id))
                 .expect("one running backfill");
             let mut t = Txn::new();
             t.push(Write::SetRunState {
-                dag_id: key.0.clone(),
+                dag_id: key.0,
                 run_id: key.1,
                 state: RunState::Success,
             });
             db.apply(t, 10 + step);
-            let msg = vec![SchedMsg::DagResumed { dag_id: key.0.clone() }];
+            let msg = vec![SchedMsg::DagResumed { dag_id: key.0 }];
             let out = scheduling_pass(&db, 11 + step, &msg, &limits);
             assert_eq!(out.stats.runs_promoted, 1, "freed slot promotes next arrival");
             db.apply(out.txn, 11 + step);
@@ -1048,17 +1050,17 @@ mod tests {
                 .dag_runs
                 .iter()
                 .find(|(_, r)| r.state == RunState::Running)
-                .map(|(k, _)| k.clone())
+                .map(|(k, _)| *k)
                 .expect("next backfill promoted");
             promoted_order.push(next);
         }
         assert_eq!(
             promoted_order,
             vec![
-                ("zzz".to_string(), 1),
-                ("zzz".to_string(), 2),
-                ("aaa".to_string(), 1),
-                ("aaa".to_string(), 2),
+                ("zzz".into(), 1),
+                ("zzz".into(), 2),
+                ("aaa".into(), 1),
+                ("aaa".into(), 2),
             ],
             "FIFO by arrival across DAGs"
         );
@@ -1079,7 +1081,7 @@ mod tests {
         spec_g.period = None;
         let mut txn = Txn::new();
         txn.push(Write::UpsertDag(DagRow {
-            dag_id: globex_dag.clone(),
+            dag_id: globex_dag.as_str().into(),
             fileloc: String::new(),
             period: None,
             is_paused: false,

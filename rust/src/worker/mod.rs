@@ -44,7 +44,7 @@ pub fn run_faas_worker(
         local_task_job(
             sim,
             w,
-            tr.clone(),
+            tr,
             host,
             overhead,
             move |w| w.faas.is_live(inv),
@@ -71,7 +71,7 @@ pub fn run_container_worker(sim: &mut Sim<World>, w: &mut World, job: caas::JobI
         local_task_job(
             sim,
             w,
-            tr.clone(),
+            tr,
             host,
             overhead,
             move |w| w.caas.is_live(job),
@@ -117,8 +117,8 @@ pub fn local_task_job(
 
     // Mark running (sets s_i and increments try_number at commit time).
     let mut txn = Txn::new();
-    txn.push(Write::SetTiHost { key: key.clone(), host });
-    txn.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+    txn.push(Write::SetTiHost { key, host });
+    txn.push(Write::SetTiState { key, state: TiState::Running });
     db::commit(sim, w, txn, move |sim, w| {
         // Decide the outcome and the payload runtime.
         let launch = secs(sim.rng.uniform(overhead.0, overhead.1));
@@ -165,8 +165,7 @@ pub fn local_task_job(
                 // (the "mini scheduler") before writing success — this is
                 // what makes completion bursts contend superlinearly
                 // (§6.1's 10 s task taking 17 s at n=125).
-                txn.scan_rows =
-                    w.db.read().tis_of_run(&key.0, key.1).len() as u32;
+                txn.scan_rows = w.db.read().tis_of_run(key.0, key.1).len() as u32;
                 txn.push(Write::SetTiState { key, state: TiState::Success });
                 db::commit(sim, w, txn, move |sim, w| on_exit(sim, w, true));
             } else {

@@ -750,3 +750,103 @@ fn legacy_shim_escapes_dag_ids_with_path_metacharacters() {
     assert_eq!(detail.get("ok").unwrap().as_bool(), Some(true));
     assert_eq!(detail.get("dag").unwrap().get("dag_id").unwrap().as_str(), Some("team/etl"));
 }
+
+#[test]
+fn cursor_pagination_walks_run_and_task_histories() {
+    // Added with the cursor-pagination satellite (PR 5): `?cursor` walks
+    // a large history by range scans from the last-seen key, while plain
+    // limit/offset responses stay bit-identical (no `next_cursor` key).
+    let (mut sim, mut w) = deployed(&manual_chain("cur"));
+    for _ in 0..7 {
+        trigger(&mut sim, &mut w, "cur");
+        sim.run_until(&mut w, sim.now() + mins(4.0), 10_000_000);
+    }
+
+    let list = |sim: &mut Sim<World>, w: &mut World, q: &str| {
+        dispatch(sim, w, Method::Get, &format!("/api/v1/dags/cur/dagRuns{q}"), None)
+    };
+    let ids = |resp: &Json| -> Vec<u64> {
+        resp.get("dag_runs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.get("run_id").unwrap().as_u64().unwrap())
+            .collect()
+    };
+
+    // Offset mode is untouched: same envelope as ever, no cursor key.
+    let offset_all = list(&mut sim, &mut w, "?limit=100");
+    assert_eq!(ids(&offset_all), vec![7, 6, 5, 4, 3, 2, 1], "most recent first");
+    assert!(offset_all.get("next_cursor").is_none(), "offset responses unchanged");
+    assert_eq!(offset_all.get("total_entries").unwrap().as_u64(), Some(7));
+
+    // Cursor walk: pages of 3 chained by next_cursor, ending with null.
+    let p1 = list(&mut sim, &mut w, "?cursor&limit=3");
+    assert_eq!(ids(&p1), vec![7, 6, 5], "{p1}");
+    assert!(p1.get("total_entries").is_none(), "no count on cursor pages");
+    assert_eq!(p1.get("next_cursor").unwrap().as_u64(), Some(5));
+    let p2 = list(&mut sim, &mut w, "?cursor=5&limit=3");
+    assert_eq!(ids(&p2), vec![4, 3, 2]);
+    assert_eq!(p2.get("next_cursor").unwrap().as_u64(), Some(2));
+    let p3 = list(&mut sim, &mut w, "?cursor=2&limit=3");
+    assert_eq!(ids(&p3), vec![1]);
+    assert_eq!(p3.get("next_cursor"), Some(&Json::Null), "walk complete");
+
+    // A page that fills exactly at the end of the history resumes after
+    // the last examined row; the follow-up page is empty with a null
+    // cursor (only `next_cursor: null` ends the walk).
+    let p = list(&mut sim, &mut w, "?cursor=2&limit=1");
+    assert_eq!(ids(&p), vec![1]);
+    assert_eq!(p.get("next_cursor").unwrap().as_u64(), Some(1));
+    let p = list(&mut sim, &mut w, "?cursor=1&limit=1");
+    assert!(ids(&p).is_empty());
+    assert_eq!(p.get("next_cursor"), Some(&Json::Null));
+
+    // Filters compose with the cursor walk.
+    let p = list(&mut sim, &mut w, "?cursor&state=failed&limit=3");
+    assert!(ids(&p).is_empty());
+    assert_eq!(p.get("next_cursor"), Some(&Json::Null));
+
+    // Task instances walk the same way (ascending task id).
+    let tis = |sim: &mut Sim<World>, w: &mut World, q: &str| {
+        dispatch(
+            sim,
+            w,
+            Method::Get,
+            &format!("/api/v1/dags/cur/dagRuns/1/taskInstances{q}"),
+            None,
+        )
+    };
+    let task_ids = |resp: &Json| -> Vec<u64> {
+        resp.get("task_instances")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.get("task_id").unwrap().as_u64().unwrap())
+            .collect()
+    };
+    let p1 = tis(&mut sim, &mut w, "?cursor&limit=1");
+    assert_eq!(task_ids(&p1), vec![0], "{p1}");
+    assert_eq!(p1.get("next_cursor").unwrap().as_u64(), Some(0));
+    let p2 = tis(&mut sim, &mut w, "?cursor=0&limit=1");
+    assert_eq!(task_ids(&p2), vec![1]);
+    assert_eq!(p2.get("next_cursor").unwrap().as_u64(), Some(1));
+    let p3 = tis(&mut sim, &mut w, "?cursor=1&limit=1");
+    assert!(task_ids(&p3).is_empty());
+    assert_eq!(p3.get("next_cursor"), Some(&Json::Null));
+    let plain = tis(&mut sim, &mut w, "?limit=1");
+    assert!(plain.get("next_cursor").is_none());
+    assert_eq!(plain.get("total_entries").unwrap().as_u64(), Some(2));
+
+    // Malformed cursors are a 400, as is the limit=0 count probe in
+    // cursor mode (a zero-item page would fake a completed walk);
+    // unknown DAGs stay a 404.
+    let e = list(&mut sim, &mut w, "?cursor=abc");
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    let e = list(&mut sim, &mut w, "?cursor&limit=0");
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(400));
+    let e = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags/ghost/dagRuns?cursor", None);
+    assert_eq!(e.get("status").unwrap().as_u64(), Some(404));
+}

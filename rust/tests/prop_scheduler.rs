@@ -36,7 +36,7 @@ fn db_with(spec: &DagSpec) -> MetaDb {
     let mut db = MetaDb::new();
     let mut txn = Txn::new();
     txn.push(Write::UpsertDag(DagRow {
-        dag_id: spec.dag_id.clone(),
+        dag_id: spec.dag_id.as_str().into(),
         fileloc: String::new(),
         period: spec.period,
         is_paused: false,
@@ -56,14 +56,15 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
         &db,
         now,
         &[SchedMsg::Trigger {
-            dag_id: spec.dag_id.clone(),
+            dag_id: spec.dag_id.as_str().into(),
             logical_ts: 0,
             run_type: RunType::Scheduled,
         }],
         limits,
     );
     db.apply(out.txn, now);
-    let mut pending_msgs = vec![SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 }];
+    let mut pending_msgs =
+        vec![SchedMsg::RunChanged { dag_id: spec.dag_id.as_str().into(), run_id: 1 }];
 
     for _ in 0..10_000 {
         now += 1;
@@ -87,7 +88,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             );
             if started {
                 for &p in &graph.upstream[ti.task_id as usize] {
-                    let pred = &db.task_instances[&(ti.dag_id.clone(), ti.run_id, p)];
+                    let pred = &db.task_instances[&(ti.dag_id, ti.run_id, p)];
                     if pred.state != TiState::Success {
                         return Err(format!(
                             "task {} is {:?} but pred {p} is {:?}",
@@ -103,7 +104,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             .task_instances
             .values()
             .filter(|t| t.state == TiState::Queued)
-            .map(|t| (t.dag_id.clone(), t.run_id, t.task_id))
+            .map(|t| (t.dag_id, t.run_id, t.task_id))
             .collect();
         if queued.is_empty() && pending_msgs.is_empty() {
             let run = &db.dag_runs[&(spec.dag_id.clone(), 1)];
@@ -122,7 +123,8 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             if !waiting && !unreached && !all_term {
                 return Err("stuck: no queued tasks, run not terminal".into());
             }
-            pending_msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
+            pending_msgs
+                .push(SchedMsg::RunChanged { dag_id: spec.dag_id.as_str().into(), run_id: 1 });
             continue;
         }
         for key in queued {
@@ -131,7 +133,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             }
             now += 1;
             let mut t = Txn::new();
-            t.push(Write::SetTiState { key: key.clone(), state: TiState::Running });
+            t.push(Write::SetTiState { key, state: TiState::Running });
             db.apply(t, now);
             now += 1;
             let fail = fail_some && g.rng.chance(0.2);
@@ -145,17 +147,18 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
                 TiState::Failed
             };
             let mut t = Txn::new();
-            t.push(Write::SetTiState { key: key.clone(), state });
+            t.push(Write::SetTiState { key, state });
             db.apply(t, now);
             pending_msgs.push(SchedMsg::TaskFinished {
-                dag_id: key.0.clone(),
+                dag_id: key.0,
                 run_id: key.1,
                 task_id: key.2,
                 state,
             });
         }
         if pending_msgs.is_empty() {
-            pending_msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id.clone(), run_id: 1 });
+            pending_msgs
+                .push(SchedMsg::RunChanged { dag_id: spec.dag_id.as_str().into(), run_id: 1 });
         }
     }
 
@@ -175,7 +178,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             let preds = &graph.upstream[ti.task_id as usize];
             let expect = preds
                 .iter()
-                .map(|&p| db.task_instances[&(ti.dag_id.clone(), ti.run_id, p)].end.unwrap())
+                .map(|&p| db.task_instances[&(ti.dag_id, ti.run_id, p)].end.unwrap())
                 .max()
                 .unwrap_or(run.start.unwrap());
             if ti.ready != Some(expect) {
@@ -225,7 +228,7 @@ fn pass_is_deterministic() {
         let spec = gen_dag(g, "det");
         let db = db_with(&spec);
         let msgs = vec![SchedMsg::Trigger {
-            dag_id: spec.dag_id.clone(),
+            dag_id: spec.dag_id.as_str().into(),
             logical_ts: 0,
             run_type: RunType::Scheduled,
         }];

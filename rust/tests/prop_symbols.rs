@@ -1,0 +1,192 @@
+//! Property and regression tests of the symbolized identifier fabric
+//! ([`sairflow::dag::state::DagId`]): interning must preserve tenant
+//! isolation (a symbol *is* a tenant-qualified identity), and a symbol
+//! outliving `DELETE /dags/{id}` must neither resurrect rows nor
+//! cross-match another upload's rows after the name is reused.
+
+use sairflow::api::{dispatch, dispatch_auth, Method};
+use sairflow::dag::state::{local_dag_id, scoped_dag_id, tenant_of, DagId, DEFAULT_TENANT};
+use sairflow::sairflow::{Config, World};
+use sairflow::sim::engine::Sim;
+use sairflow::sim::time::{mins, MINUTE};
+use sairflow::util::json::Json;
+use sairflow::util::prop::{check, Gen};
+use sairflow::workloads::synthetic::chain_dag;
+
+/// A random well-formed tenant id (the charset `valid_tenant_id` allows).
+fn gen_tenant(g: &mut Gen) -> String {
+    const CH: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_";
+    let n = g.sized(1, 16);
+    (0..n).map(|_| CH[g.u64_in(0, CH.len() as u64 - 1) as usize] as char).collect()
+}
+
+/// A random DAG id — deliberately nastier than tenant ids: path
+/// metacharacters and non-ASCII are legal in dag ids, only the reserved
+/// separator is not.
+fn gen_dag_id(g: &mut Gen) -> String {
+    const CH: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_./";
+    let n = g.sized(1, 24);
+    (0..n).map(|_| CH[g.u64_in(0, CH.len() as u64 - 1) as usize] as char).collect()
+}
+
+#[test]
+fn interning_preserves_tenant_isolation() {
+    check("symbol tenant isolation", 300, |g| {
+        let tenant = gen_tenant(g);
+        let local = gen_dag_id(g);
+
+        // Scoped string and symbol agree on every projection: the symbol
+        // round-trips the (tenant, local) pair it was interned from.
+        let scoped = scoped_dag_id(&tenant, &local);
+        let sym = DagId::scoped(&tenant, &local);
+        if sym.as_str() != scoped {
+            return Err(format!("as_str {:?} != scoped string {scoped:?}", sym.as_str()));
+        }
+        let want_tenant =
+            if tenant == DEFAULT_TENANT { DEFAULT_TENANT } else { tenant.as_str() };
+        if sym.tenant() != want_tenant || sym.tenant() != tenant_of(&scoped) {
+            return Err(format!("tenant {:?} != {want_tenant:?}", sym.tenant()));
+        }
+        if sym.local() != local || sym.local() != local_dag_id(&scoped) {
+            return Err(format!("local {:?} != {local:?}", sym.local()));
+        }
+
+        // Interning is stable: the same qualified name is the same symbol,
+        // however it is reached.
+        if sym != DagId::intern(&scoped) || sym != DagId::scoped(&tenant, &local) {
+            return Err("same qualified name interned to a different symbol".into());
+        }
+
+        // Two tenants' same-named DAGs always map to distinct symbols
+        // (unless the tenants are equal) — the isolation property every
+        // symbol-keyed table inherits structurally.
+        let other = gen_tenant(g);
+        let other_sym = DagId::scoped(&other, &local);
+        if (other == tenant) != (other_sym == sym) {
+            return Err(format!(
+                "tenants {tenant:?}/{other:?}, same dag {local:?}: symbol equality {} \
+                 disagrees with tenant equality",
+                other_sym == sym
+            ));
+        }
+        // And the default tenant's bare id never collides with a scoped one.
+        let bare = DagId::intern(&local);
+        if tenant != DEFAULT_TENANT && bare == sym {
+            return Err("scoped symbol collided with the bare (default-tenant) id".into());
+        }
+
+        // Ord/Hash follow the string: symbol comparison agrees with the
+        // qualified-string comparison (wire ordering stays byte-identical).
+        let other_scoped = scoped_dag_id(&other, &local);
+        if sym.cmp(&other_sym) != scoped.as_str().cmp(other_scoped.as_str()) {
+            return Err("symbol Ord disagrees with string Ord".into());
+        }
+        Ok(())
+    });
+}
+
+/// Upload one manually-triggered DAG through a tenant's namespace.
+fn upload(sim: &mut Sim<World>, w: &mut World, tenant: &str, auth: Option<&str>, dag: &str) {
+    let mut spec = chain_dag(dag, 2, 1.0, 5.0);
+    spec.period = None;
+    let body = Json::obj().set("file_text", spec.to_json().to_string_pretty());
+    let path = if tenant == DEFAULT_TENANT {
+        "/api/v1/dags".to_string()
+    } else {
+        format!("/api/v1/tenants/{tenant}/dags")
+    };
+    let resp = dispatch_auth(sim, w, Method::Post, &path, Some(&body), auth);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "upload {tenant}: {resp}");
+}
+
+#[test]
+fn stale_symbol_cannot_resurrect_or_cross_match_after_delete_and_reupload() {
+    let w = World::new(Config::seeded(2024));
+    let mut sim = w.sim();
+    let mut w = w;
+    // Tenant acme (tokened) and the default tenant both own "etl".
+    let mint = Json::obj().set("tenant_id", "acme").set("token", "tok");
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/tenants", Some(&mint));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    sim.run_until(&mut w, MINUTE, 1_000_000);
+    let acme = Some("Bearer tok");
+    upload(&mut sim, &mut w, "acme", acme, "etl");
+    upload(&mut sim, &mut w, DEFAULT_TENANT, None, "etl");
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+
+    // Hold acme's symbol across the delete — the "stale handle" a caller
+    // could have kept from before the DAG was removed.
+    let stale = DagId::scoped("acme", "etl");
+    assert!(w.db.read().dags.contains_key(&stale));
+
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Delete,
+        "/api/v1/tenants/acme/dags/etl",
+        None,
+        acme,
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+
+    {
+        let db = w.db.read();
+        // The stale symbol still *resolves* (symbols are identities, not
+        // liveness tokens) but matches no rows of its own tenant…
+        assert_eq!(DagId::lookup_scoped("acme", "etl"), Some(stale));
+        assert!(!db.dags.contains_key(&stale));
+        assert!(!db.serialized.contains_key(&stale));
+        assert_eq!(db.dag_runs.of_dag(stale).count(), 0);
+        // …and cannot cross-match the default tenant's same-named DAG,
+        // which is untouched by the delete.
+        let bare = DagId::lookup_scoped(DEFAULT_TENANT, "etl").expect("default etl interned");
+        assert_ne!(stale, bare);
+        assert!(db.dags.contains_key(&bare));
+    }
+
+    // Probing the deleted resource through the API is a plain 404; the
+    // stale symbol gives nothing away.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(resp.get("status").unwrap().as_u64(), Some(404), "{resp}");
+
+    // Re-upload the same name: the identity is *stable* — the new upload
+    // interns to the very same symbol (exactly like holding the string),
+    // and the stale handle now addresses the new resource, with no rows
+    // carried over from the deleted incarnation.
+    upload(&mut sim, &mut w, "acme", acme, "etl");
+    sim.run_until(&mut w, sim.now() + mins(2.0), 10_000_000);
+    assert_eq!(DagId::scoped("acme", "etl"), stale, "re-upload reuses the identity");
+    {
+        let db = w.db.read();
+        assert!(db.dags.contains_key(&stale));
+        assert_eq!(db.dag_runs.of_dag(stale).count(), 0, "no resurrected runs");
+        assert_eq!(db.tis_of_run(stale, 1).len(), 0, "no resurrected task instances");
+    }
+    // The revived DAG runs cleanly under the same symbol.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let db = w.db.read();
+    assert_eq!(db.dag_runs.of_dag(stale).count(), 1);
+    let run = db.dag_runs.of_dag(stale).next().unwrap().1;
+    assert_eq!(run.state, sairflow::dag::RunState::Success);
+    // The default tenant's "etl" never ran — the whole exercise stayed
+    // inside acme's namespace.
+    let bare = DagId::scoped(DEFAULT_TENANT, "etl");
+    assert_eq!(db.dag_runs.of_dag(bare).count(), 0);
+}

@@ -1,0 +1,169 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment is hermetic (no crates.io), so the repository
+//! vendors the exact surface `sairflow` uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the [`anyhow!`]/[`bail!`]
+//! macros. Semantics match upstream where it matters here:
+//!
+//! * any `std::error::Error` converts into [`Error`] via `?`;
+//! * `context`/`with_context` push an outer message onto the chain;
+//! * `{}` displays the outermost message, `{:#}` the whole chain joined
+//!   with `": "` (what upstream's alternate Display prints).
+//!
+//! [`Error`] deliberately does **not** implement `std::error::Error`,
+//! exactly like upstream — that is what keeps the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// A dynamically-typed error with a context chain. `frames[0]` is the
+/// outermost (most recently attached) message.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message (what [`anyhow!`] expands to).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Push an outer context message onto the chain.
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.frames.insert(0, message.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first — upstream's
+            // alternate Display.
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Upstream Debug prints the message plus a "Caused by" list; the
+        // joined chain carries the same information.
+        f.write_str(&self.frames.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    /// Wrap the error with an outer message.
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Like [`Context::context`], with the message built lazily (only on
+    /// the error path).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(msg))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.context(msg))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`]-constructed error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "missing"))
+    }
+
+    #[test]
+    fn context_chain_and_alternate_display() {
+        let err = io_fail().with_context(|| "reading manifest.json".to_string()).unwrap_err();
+        assert_eq!(format!("{err}"), "reading manifest.json");
+        let full = format!("{err:#}");
+        assert!(full.contains("manifest.json") && full.contains("missing"), "{full}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("value {n} and {}", 4);
+        assert_eq!(b.to_string(), "value 3 and 4");
+        let c = anyhow!(String::from("owned message"));
+        assert_eq!(c.to_string(), "owned message");
+        fn bails() -> Result<()> {
+            bail!("stopped at {}", 7)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stopped at 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<u32> {
+            let v: u32 = "x".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+}

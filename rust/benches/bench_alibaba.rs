@@ -48,7 +48,15 @@ fn main() {
             skip_first_run: false,
         });
         let (s_mk, m_mk) = (sa.report.makespan.median, mw.report.makespan.median);
-        rows.push((d.dag_id.clone(), cp, norm, s_mk, m_mk, sa.report.duration_overhead.mean, mw.report.duration_overhead.mean));
+        rows.push((
+            d.dag_id,
+            cp,
+            norm,
+            s_mk,
+            m_mk,
+            sa.report.duration_overhead.mean,
+            mw.report.duration_overhead.mean,
+        ));
         json_rows.push(
             Json::obj()
                 .set("dag", d.dag_id.as_str())

@@ -103,7 +103,7 @@ fn bench_scheduling_pass(iters: u32) -> (f64, usize) {
     let mut msgs = Vec::new();
     for d in 0..40 {
         let spec = parallel_dag(&format!("d{d}"), 80, 10.0, 5.0);
-        let dag: DagId = spec.dag_id.as_str().into();
+        let dag: DagId = spec.dag_id;
         let mut txn = Txn::new();
         txn.push(Write::UpsertDag(DagRow {
             dag_id: dag,
@@ -140,7 +140,6 @@ fn bench_scheduling_pass(iters: u32) -> (f64, usize) {
 /// plain scheduling path. Symbols make the tenant attribution a field
 /// read per row; pre-symbol code re-split every id per check.
 fn bench_scheduling_pass_multitenant(iters: u32, tenants: u32, dags_per: u32) -> (f64, usize) {
-    use sairflow::dag::state::scoped_dag_id;
     let mut db = MetaDb::new();
     let mut msgs = Vec::new();
     for t in 0..tenants {
@@ -148,8 +147,8 @@ fn bench_scheduling_pass_multitenant(iters: u32, tenants: u32, dags_per: u32) ->
         for d in 0..dags_per {
             let local = format!("dag{d:02}");
             let mut spec = parallel_dag(&local, 30, 10.0, 5.0);
-            spec.dag_id = scoped_dag_id(&tenant, &local);
-            let dag: DagId = spec.dag_id.as_str().into();
+            spec.dag_id = DagId::scoped(&tenant, &local);
+            let dag: DagId = spec.dag_id;
             let mut txn = Txn::new();
             txn.push(Write::UpsertDag(DagRow {
                 dag_id: dag,

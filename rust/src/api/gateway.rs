@@ -20,7 +20,7 @@ use crate::api::error::ApiError;
 use crate::cloud::db::TenantRow;
 use crate::sim::time::{as_secs, SimTime};
 use crate::util::json::Json;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// One tenant's token bucket. Buckets start full (a fresh tenant gets its
 /// whole burst) and are created lazily on first request.
@@ -46,7 +46,7 @@ impl AdmissionStats {
 /// The admission-control state of the API gateway.
 #[derive(Debug, Default)]
 pub struct Gateway {
-    buckets: HashMap<String, TokenBucket>,
+    buckets: BTreeMap<String, TokenBucket>,
     /// Totals across all tenants.
     pub totals: AdmissionStats,
     /// Per-tenant counters (BTreeMap: deterministic health serialization).

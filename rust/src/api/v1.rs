@@ -47,8 +47,7 @@ use crate::api::page::{Cursor, Page};
 use crate::api::router::{self, Endpoint, Method, Query};
 use crate::cloud::db::{DagRunRow, MetaDb, TenantRow, TiRow, Txn, Write};
 use crate::dag::state::{
-    scoped_dag_id, valid_tenant_id, DagId, RunState, RunType, TiState, DEFAULT_TENANT,
-    TENANT_SEP,
+    valid_tenant_id, DagId, RunState, RunType, TiState, DEFAULT_TENANT, TENANT_SEP,
 };
 use crate::sairflow::{self, World};
 use crate::sim::engine::Sim;
@@ -361,7 +360,7 @@ fn get_dag(w: &World, tenant: &str, dag_id: &str) -> ApiResult {
     let n_runs = db.dag_runs.of_dag(dag).count();
     Ok(Json::obj()
         .set("dag", dag_json(db, dag).set("n_runs", n_runs))
-        .set("cron_registered", w.cron.is_registered(dag.as_str())))
+        .set("cron_registered", w.cron.is_registered(dag)))
 }
 
 fn parse_run_state_filter(q: &Query) -> Result<Option<RunState>, ApiError> {
@@ -697,17 +696,17 @@ fn upload_dag(
         .map_err(|e| ApiError::bad_request(format!("invalid DAG file: {e}")))?;
     // The tenant separator is reserved: a crafted DAG id containing it
     // could impersonate another tenant's namespace.
-    if spec.dag_id.contains(TENANT_SEP) {
+    if spec.dag_id.as_str().contains(TENANT_SEP) {
         return Err(ApiError::bad_request("dag_id contains a reserved character"));
     }
-    let local = spec.dag_id.clone();
+    let local = spec.dag_id;
     // Qualify the id once at the boundary; from here on the upload flows
-    // blob → parse function → DB under the tenant-qualified id like any
-    // other upload. (This is the *creating* side of the boundary — the
-    // parse function's apply step interns the symbol.)
-    spec.dag_id = scoped_dag_id(tenant, &spec.dag_id);
+    // blob → parse function → DB under the tenant-qualified symbol like
+    // any other upload. (This is the *creating* side of the boundary —
+    // the only re-intern on the upload path.)
+    spec.dag_id = DagId::scoped(tenant, local.as_str());
     sairflow::upload_dag(sim, w, &spec);
-    Ok(Json::obj().set("uploaded", local))
+    Ok(Json::obj().set("uploaded", local.as_str()))
 }
 
 fn patch_dag(

@@ -85,7 +85,7 @@ pub struct CaasPlatform<W: CaasHost> {
     pub cfg: CaasConfig,
     body: Option<Body<W>>,
     queue: VecDeque<(W::Job, Option<OnDone<W>>)>,
-    running: std::collections::HashMap<JobId, RunningJob<W>>,
+    running: std::collections::BTreeMap<JobId, RunningJob<W>>,
     inflight: u32,
     next_job: JobId,
     pub stats: CaasStats,
@@ -103,7 +103,7 @@ impl<W: CaasHost> CaasPlatform<W> {
             cfg,
             body: None,
             queue: VecDeque::new(),
-            running: std::collections::HashMap::new(),
+            running: std::collections::BTreeMap::new(),
             inflight: 0,
             next_job: 0,
             stats: CaasStats::default(),

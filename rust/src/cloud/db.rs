@@ -33,7 +33,7 @@ use crate::dag::spec::DagSpec;
 use crate::dag::state::{DagId, RunState, RunType, TiState, DEFAULT_TENANT};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration, SimTime};
-use std::collections::{btree_map, BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+use std::collections::{btree_map, BTreeMap, BTreeSet, VecDeque};
 use std::ops::{Bound, Deref, DerefMut, Index, RangeBounds};
 
 /// Key of a DAG run: (dag id symbol, run_id). `Copy` — range bounds and
@@ -366,7 +366,14 @@ impl Write {
             | Write::SetTiReady { key, .. }
             | Write::SetTiHost { key, .. }
             | Write::ClearTi { key } => Some((key.0, key.1)),
-            _ => None,
+            // DAG- and tenant-level writes contend on no single run; they
+            // are enumerated (no `_`) so a new `Write` variant must pick a
+            // lock scope here explicitly.
+            Write::UpsertTenant { .. }
+            | Write::UpsertDag(_)
+            | Write::PutSerializedDag(_)
+            | Write::SetDagPaused { .. }
+            | Write::DeleteDag { .. } => None,
         }
     }
 }
@@ -454,7 +461,7 @@ pub struct MetaDb {
     backfill_queued: BTreeMap<u64, RunKey>,
     /// Reverse index of `backfill_queued` for O(log n) removal when a
     /// queued run leaves `Queued` (promotion, mark-state, delete).
-    backfill_seq: HashMap<RunKey, u64>,
+    backfill_seq: BTreeMap<RunKey, u64>,
     /// Next arrival sequence number for `backfill_queued`.
     next_backfill_seq: u64,
     /// Maintained per-tenant count of backfill runs in state `Running`
@@ -483,7 +490,7 @@ impl Default for MetaDb {
             next_lsn: 0,
             active_count: 0,
             backfill_queued: BTreeMap::new(),
-            backfill_seq: HashMap::new(),
+            backfill_seq: BTreeMap::new(),
             next_backfill_seq: 0,
             backfill_running: BTreeMap::new(),
             fg_queued: BTreeSet::new(),
@@ -534,9 +541,10 @@ impl MetaDb {
                     self.dags.insert(row.dag_id, row);
                 }
                 Write::PutSerializedDag(spec) => {
-                    // The one interning point of the upload path: from here
-                    // on the workflow exists as a symbol.
-                    let dag_id = DagId::intern(&spec.dag_id);
+                    // The spec already carries the interned symbol (the
+                    // interning boundary is `DagSpec::parse`/`new`), so the
+                    // apply path only copies it.
+                    let dag_id = spec.dag_id;
                     self.serialized.insert(dag_id, spec);
                     changes.push(Change::SerializedDag { dag_id });
                 }
@@ -955,7 +963,7 @@ impl MetaDb {
     /// duplicate). One range scan with `Copy` bounds; callers probe the
     /// set per candidate date instead of rescanning the run table per
     /// date.
-    pub fn logical_dates_of(&self, dag_id: DagId) -> HashSet<SimTime> {
+    pub fn logical_dates_of(&self, dag_id: DagId) -> BTreeSet<SimTime> {
         self.dag_runs.of_dag(dag_id).map(|(_, r)| r.logical_ts).collect()
     }
 
@@ -1019,7 +1027,7 @@ pub struct DbService {
     /// Per-server next-free time.
     free_at: Vec<SimTime>,
     /// Hot-row (per DAG run) lock release times.
-    locks: HashMap<RunKey, SimTime>,
+    locks: BTreeMap<RunKey, SimTime>,
     pub stats_commits_inflight: u32,
 }
 
@@ -1038,7 +1046,7 @@ impl DbService {
             meta: MetaDb::new(),
             cfg,
             free_at: vec![0; servers],
-            locks: HashMap::new(),
+            locks: BTreeMap::new(),
             stats_commits_inflight: 0,
         }
     }

@@ -12,7 +12,7 @@ use crate::cloud::db::Change;
 use crate::dag::state::{DagId, RunState, TiState};
 use crate::sim::engine::Sim;
 use crate::sim::time::{SimDuration, SimTime};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// An event on the bus: a database change (via CDC) or a cron fire.
 /// All-`Copy` — routing an event copies 24 bytes, never a heap string.
@@ -42,23 +42,34 @@ pub enum Matcher {
 }
 
 impl Matcher {
+    /// One `matches!` per predicate — deliberately no catch-all over the
+    /// `(Matcher, BusEvent)` product: a new [`Change`]/[`BusEvent`] variant
+    /// must be classified per matcher here or the fabric lint fails, never
+    /// silently unmatched.
     pub fn matches(&self, ev: &BusEvent) -> bool {
-        match (self, ev) {
-            (Matcher::SerializedDagChanged, BusEvent::Change(Change::SerializedDag { .. })) => {
-                true
+        match self {
+            Matcher::SerializedDagChanged => {
+                matches!(ev, BusEvent::Change(Change::SerializedDag { .. }))
             }
-            (Matcher::DagRunIn(states), BusEvent::Change(Change::DagRun { state, .. })) => {
-                states.contains(state)
+            Matcher::DagRunIn(states) => {
+                if let BusEvent::Change(Change::DagRun { state, .. }) = ev {
+                    states.contains(state)
+                } else {
+                    false
+                }
             }
-            (Matcher::TiIn(states), BusEvent::Change(Change::Ti { state, .. })) => {
-                states.contains(state)
+            Matcher::TiIn(states) => {
+                if let BusEvent::Change(Change::Ti { state, .. }) = ev {
+                    states.contains(state)
+                } else {
+                    false
+                }
             }
-            (Matcher::CronFired, BusEvent::CronFire { .. }) => true,
-            (Matcher::DagUnpaused, BusEvent::Change(Change::DagPaused { paused: false, .. })) => {
-                true
+            Matcher::CronFired => matches!(ev, BusEvent::CronFire { .. }),
+            Matcher::DagUnpaused => {
+                matches!(ev, BusEvent::Change(Change::DagPaused { paused: false, .. }))
             }
-            (Matcher::DagDeleted, BusEvent::Change(Change::DagDeleted { .. })) => true,
-            _ => false,
+            Matcher::DagDeleted => matches!(ev, BusEvent::Change(Change::DagDeleted { .. })),
         }
     }
 }
@@ -142,7 +153,7 @@ pub struct CronStats {
 /// re-arms by copying a symbol, not cloning a string.
 #[derive(Debug, Default)]
 pub struct CronService {
-    entries: HashMap<DagId, CronEntry>,
+    entries: BTreeMap<DagId, CronEntry>,
     next_gen: u64,
     pub stats: CronStats,
 }
@@ -159,10 +170,10 @@ impl CronService {
         CronService::default()
     }
 
-    /// Whether a schedule is registered — addressed by (qualified) string
-    /// (`DagId: Borrow<str>` makes the symbol table str-probeable).
-    pub fn is_registered(&self, dag_id: &str) -> bool {
-        self.entries.contains_key(dag_id)
+    /// Whether a schedule is registered — addressed by the [`DagId`]
+    /// symbol of the tenant-qualified id, like every entry operation.
+    pub fn is_registered(&self, dag_id: DagId) -> bool {
+        self.entries.contains_key(&dag_id)
     }
 
     pub fn unregister(&mut self, dag_id: impl AsRef<str>) {

@@ -22,7 +22,7 @@
 
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration, SimTime};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
 
 /// Function handle.
@@ -111,7 +111,7 @@ struct Running<W: FaasHost> {
 /// The FaaS platform: function registry + execution state.
 pub struct FaasPlatform<W: FaasHost> {
     funcs: Vec<Function<W>>,
-    running: HashMap<InvId, Running<W>>,
+    running: BTreeMap<InvId, Running<W>>,
     next_inv: InvId,
 }
 
@@ -130,7 +130,7 @@ impl<W: FaasHost> Default for FaasPlatform<W> {
 
 impl<W: FaasHost> FaasPlatform<W> {
     pub fn new() -> FaasPlatform<W> {
-        FaasPlatform { funcs: Vec::new(), running: HashMap::new(), next_inv: 0 }
+        FaasPlatform { funcs: Vec::new(), running: BTreeMap::new(), next_inv: 0 }
     }
 
     /// Register a function. The body receives every invocation and must

@@ -7,6 +7,7 @@
 //! [`DagSpec::to_json`]/[`DagSpec::parse`]) and the serialized form stored
 //! in the metadata DB.
 
+use crate::dag::state::DagId;
 use crate::sim::time::{secs, SimDuration};
 use crate::util::json::Json;
 
@@ -72,9 +73,13 @@ pub struct TaskSpec {
 }
 
 /// A workflow definition.
+///
+/// `dag_id` is the interned [`DagId`] symbol: construction and parsing are
+/// interning boundaries, so the spec shares id identity with every DB row,
+/// CDC record and cron entry downstream — no re-interning on the hot path.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DagSpec {
-    pub dag_id: String,
+    pub dag_id: DagId,
     /// Schedule period (the paper's `T`); `None` = manual triggering only.
     pub period: Option<SimDuration>,
     /// Airflow's `max_active_runs`: concurrent non-terminal runs of this
@@ -85,14 +90,9 @@ pub struct DagSpec {
 }
 
 impl DagSpec {
-    /// Create an unscheduled DAG.
-    pub fn new(dag_id: &str) -> DagSpec {
-        DagSpec {
-            dag_id: dag_id.to_string(),
-            period: None,
-            max_active_runs: 16,
-            tasks: Vec::new(),
-        }
+    /// Create an unscheduled DAG (string callers intern here).
+    pub fn new(dag_id: impl Into<DagId>) -> DagSpec {
+        DagSpec { dag_id: dag_id.into(), period: None, max_active_runs: 16, tasks: Vec::new() }
     }
 
     /// Builder-style: set schedule period in minutes (the paper's `T`).
@@ -146,7 +146,7 @@ impl DagSpec {
             if t.id as usize != i {
                 return Err(format!("task id {} at position {i}", t.id));
             }
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             for &d in &t.deps {
                 if d >= t.id {
                     return Err(format!("task {} depends on later/equal task {d}", t.id));
@@ -202,7 +202,7 @@ impl DagSpec {
     /// Parse a DAG file. This is what the parse function (component (3) in
     /// Fig. 1) runs on upload notifications.
     pub fn parse(doc: &Json) -> Result<DagSpec, String> {
-        let dag_id = doc.str_field("dag_id")?.to_string();
+        let dag_id = DagId::intern(doc.str_field("dag_id")?);
         let period = match doc.get("period_secs") {
             Some(Json::Null) | None => None,
             Some(v) => Some(secs(v.as_f64().ok_or("period_secs must be a number")?)),

@@ -262,7 +262,8 @@ impl AsRef<str> for DagId {
 
 impl fmt::Display for DagId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.0.full)
+        // `pad`, not `write_str`: callers use width specifiers in reports.
+        f.pad(self.0.full)
     }
 }
 

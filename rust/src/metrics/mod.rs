@@ -9,6 +9,7 @@
 //! reports to JSON.
 
 pub mod gantt;
+pub mod wallclock;
 
 use crate::sim::time::{as_secs, SimTime};
 use crate::util::json::Json;

@@ -202,7 +202,7 @@ pub fn deploy(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld, specs: &[DagSpec]) {
     crate::cloud::db::commit(sim, w, txn, |_sim, _w| {});
     for s in specs {
         if let Some(period) = s.period {
-            eventbridge::set_schedule(sim, w, s.dag_id.as_str(), period);
+            eventbridge::set_schedule(sim, w, s.dag_id, period);
         }
     }
     scheduler_loop(sim, w);
@@ -241,12 +241,13 @@ fn scheduler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {
         // writes are never dropped.
         let budget = w.cfg.max_tis_per_loop;
         let mut queued_count = 0usize;
-        out.txn.writes.retain(|wr| match wr {
-            Write::SetTiState { state: TiState::Queued, .. } => {
+        out.txn.writes.retain(|wr| {
+            if let Write::SetTiState { state: TiState::Queued, .. } = wr {
                 queued_count += 1;
                 queued_count <= budget
+            } else {
+                true
             }
-            _ => true,
         });
         // Collect the tasks this loop queued and hand them to Celery after
         // the commit.
@@ -254,11 +255,12 @@ fn scheduler_loop(sim: &mut Sim<MwaaWorld>, w: &mut MwaaWorld) {
             .txn
             .writes
             .iter()
-            .filter_map(|wr| match wr {
-                Write::SetTiState { key, state: TiState::Queued } => {
+            .filter_map(|wr| {
+                if let Write::SetTiState { key, state: TiState::Queued } = wr {
                     Some(TaskRef { dag_id: key.0, run_id: key.1, task_id: key.2 })
+                } else {
+                    None
                 }
-                _ => None,
             })
             .collect();
         if out.txn.is_empty() {

@@ -11,7 +11,6 @@
 
 use crate::cloud::db::{DagRow, Txn, Write};
 use crate::dag::spec::DagSpec;
-use crate::dag::state::DagId;
 use crate::util::json::Json;
 
 /// An upload notification (the queue message between blob storage and the
@@ -30,14 +29,14 @@ pub fn parse_dag_file(text: &str) -> Result<DagSpec, String> {
 
 /// Build the metadata-DB transaction for a batch of parsed DAGs: upsert
 /// the `dag` row and write the serialized DAG (the CDC-visible change).
-/// This is the interning boundary of the upload path: the file's string
-/// id becomes a [`DagId`] symbol here, and everything downstream of the
-/// DB (CDC, router, scheduler, executors) only ever copies it.
+/// The interning boundary of the upload path is [`DagSpec::parse`] — the
+/// spec already carries the [`crate::dag::state::DagId`] symbol, so this txn and everything
+/// downstream of the DB (CDC, router, scheduler, executors) only copy it.
 pub fn parse_batch_txn(parsed: &[(String, DagSpec)]) -> Txn {
     let mut txn = Txn::new();
     for (fileloc, spec) in parsed {
         txn.push(Write::UpsertDag(DagRow {
-            dag_id: DagId::intern(&spec.dag_id),
+            dag_id: spec.dag_id,
             fileloc: fileloc.clone(),
             period: spec.period,
             // The file knows nothing about the operator's pause decision;

@@ -356,7 +356,24 @@ fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: Change)
                 }
             }
         }
-        _ => {}
+        // The remaining (target, change) pairs are inert by construction:
+        // no routing rule installed in `World::new` produces them. They
+        // are enumerated — not swallowed by `_` — so adding a `Change`
+        // variant or a routing rule forces a decision here at compile
+        // time, and a rule/dispatch mismatch trips the assert in tests
+        // instead of dropping the event silently.
+        (Target::Scheduler, Change::SerializedDag { .. })
+        | (Target::Scheduler, Change::DagPaused { paused: true, .. })
+        | (Target::Scheduler, Change::DagDeleted { .. })
+        | (Target::Executor, Change::SerializedDag { .. })
+        | (Target::Executor, Change::DagRun { .. })
+        | (Target::Executor, Change::DagPaused { .. })
+        | (Target::Executor, Change::DagDeleted { .. })
+        | (Target::Updater, Change::DagRun { .. })
+        | (Target::Updater, Change::Ti { .. })
+        | (Target::Updater, Change::DagPaused { .. }) => {
+            debug_assert!(false, "routed event has no consumer: {target:?} x {change:?}");
+        }
     }
 }
 

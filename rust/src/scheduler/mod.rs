@@ -33,7 +33,7 @@ use crate::cloud::db::{MetaDb, RunKey, TiRow, Txn, Write};
 use crate::dag::graph::DagGraph;
 use crate::dag::state::{DagId, RunState, RunType, TiState};
 use crate::sim::time::SimTime;
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Messages feeding the scheduler (the FIFO queue payload). All-`Copy`:
 /// enqueue, redelivery and batch processing never touch the heap.
@@ -150,7 +150,7 @@ pub fn scheduling_pass(
         /// Active non-backfill runs in the snapshot, computed once.
         snapshot_active_fg: u64,
     }
-    let mut pass_dags: HashMap<DagId, PassDag> = HashMap::new();
+    let mut pass_dags: BTreeMap<DagId, PassDag> = BTreeMap::new();
     // Backfill runs created by this pass, candidates for same-pass
     // promotion under the backfill budget (below).
     let mut created_backfill: Vec<RunKey> = Vec::new();
@@ -159,7 +159,7 @@ pub fn scheduling_pass(
     // and extended with the dates this pass creates, so overlapping
     // POSTs dedup whether the earlier range is already committed or
     // still in this very batch.
-    let mut bf_dates: HashMap<DagId, HashSet<SimTime>> = HashMap::new();
+    let mut bf_dates: BTreeMap<DagId, BTreeSet<SimTime>> = BTreeMap::new();
 
     // Step 1: create DAG runs for triggers.
     for msg in batch {
@@ -283,13 +283,13 @@ pub fn scheduling_pass(
     // backfill budget, foreground completions free their DAG's
     // `max_active_runs` capacity. Tenant keys are the interned `'static`
     // strings (field reads, no allocation).
-    let mut backfill_freed: HashMap<&'static str, usize> = HashMap::new();
-    let mut fg_freed: HashMap<DagId, u64> = HashMap::new();
+    let mut backfill_freed: BTreeMap<&'static str, usize> = BTreeMap::new();
+    let mut fg_freed: BTreeMap<DagId, u64> = BTreeMap::new();
 
     // Steps 2+3 for existing dirty runs, plus run-completion detection.
     // Graphs are built once per DAG per pass (perf: a batch often carries
     // many events of the same DAG).
-    let mut graphs: HashMap<DagId, DagGraph> = HashMap::new();
+    let mut graphs: BTreeMap<DagId, DagGraph> = BTreeMap::new();
     for &(dag_id, run_id) in &dirty_runs {
         let Some(run) = db.dag_runs.get(&(dag_id, run_id)) else { continue };
         if run.state.is_terminal() {
@@ -435,7 +435,7 @@ pub fn scheduling_pass(
     // capacity immediately; the promotion's `Running` change routes back
     // through CDC and the next pass launches the roots. `DagResumed` and
     // run-completion events are what bring the pass here.
-    let mut fg_capacity: HashMap<DagId, u64> = HashMap::new();
+    let mut fg_capacity: BTreeMap<DagId, u64> = BTreeMap::new();
     for &key in db.queued_foreground() {
         let dag_id = key.0;
         let Some(spec) = db.serialized.get(&dag_id) else { continue };
@@ -478,7 +478,7 @@ pub fn scheduling_pass(
     fn bf_budget_left(
         db: &MetaDb,
         limits: &SchedLimits,
-        freed: &HashMap<&'static str, usize>,
+        freed: &BTreeMap<&'static str, usize>,
         tenant: &str,
     ) -> usize {
         let cap = db.backfill_cap_of(tenant, limits.max_active_backfill_runs);
@@ -487,7 +487,7 @@ pub fn scheduling_pass(
             .saturating_sub(freed.get(tenant).copied().unwrap_or(0));
         cap.saturating_sub(active)
     }
-    let mut bf_remaining: HashMap<&'static str, usize> = HashMap::new();
+    let mut bf_remaining: BTreeMap<&'static str, usize> = BTreeMap::new();
     for &key in db.queued_backfill() {
         // Skip runs whose DAG vanished (the dirty loop fails them).
         if !db.serialized.contains_key(&key.0) {
@@ -530,7 +530,7 @@ mod tests {
         let mut db = MetaDb::new();
         let mut txn = Txn::new();
         txn.push(Write::UpsertDag(DagRow {
-            dag_id: spec.dag_id.as_str().into(),
+            dag_id: spec.dag_id,
             fileloc: format!("dags/{}.json", spec.dag_id),
             period: spec.period,
             is_paused: false,

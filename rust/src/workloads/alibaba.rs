@@ -240,7 +240,7 @@ pub fn dag_stats(spec: &DagSpec) -> DagStats {
         .count();
     let total: f64 = spec.tasks.iter().map(|t| as_secs(t.payload.nominal())).sum();
     DagStats {
-        dag_id: spec.dag_id.clone(),
+        dag_id: spec.dag_id.to_string(),
         n_tasks: spec.n_tasks(),
         critical_path_secs: as_secs(g.critical_path_duration()),
         longest_path_nodes: g.longest_path_nodes(),

@@ -96,7 +96,7 @@ mod tests {
     fn forest_ids_distinct() {
         let f = parallel_forest("f", 8, 8, 10.0, 5.0);
         assert_eq!(f.len(), 8);
-        let ids: std::collections::HashSet<_> = f.iter().map(|d| d.dag_id.clone()).collect();
+        let ids: std::collections::BTreeSet<_> = f.iter().map(|d| d.dag_id).collect();
         assert_eq!(ids.len(), 8);
         for d in &f {
             assert_eq!(d.n_tasks(), 9);

@@ -36,7 +36,7 @@ fn db_with(spec: &DagSpec) -> MetaDb {
     let mut db = MetaDb::new();
     let mut txn = Txn::new();
     txn.push(Write::UpsertDag(DagRow {
-        dag_id: spec.dag_id.as_str().into(),
+        dag_id: spec.dag_id,
         fileloc: String::new(),
         period: spec.period,
         is_paused: false,
@@ -55,16 +55,11 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
     let out = scheduling_pass(
         &db,
         now,
-        &[SchedMsg::Trigger {
-            dag_id: spec.dag_id.as_str().into(),
-            logical_ts: 0,
-            run_type: RunType::Scheduled,
-        }],
+        &[SchedMsg::Trigger { dag_id: spec.dag_id, logical_ts: 0, run_type: RunType::Scheduled }],
         limits,
     );
     db.apply(out.txn, now);
-    let mut pending_msgs =
-        vec![SchedMsg::RunChanged { dag_id: spec.dag_id.as_str().into(), run_id: 1 }];
+    let mut pending_msgs = vec![SchedMsg::RunChanged { dag_id: spec.dag_id, run_id: 1 }];
 
     for _ in 0..10_000 {
         now += 1;
@@ -107,7 +102,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             .map(|t| (t.dag_id, t.run_id, t.task_id))
             .collect();
         if queued.is_empty() && pending_msgs.is_empty() {
-            let run = &db.dag_runs[&(spec.dag_id.clone(), 1)];
+            let run = &db.dag_runs[&(spec.dag_id, 1)];
             if run.state.is_terminal() {
                 break;
             }
@@ -123,8 +118,7 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             if !waiting && !unreached && !all_term {
                 return Err("stuck: no queued tasks, run not terminal".into());
             }
-            pending_msgs
-                .push(SchedMsg::RunChanged { dag_id: spec.dag_id.as_str().into(), run_id: 1 });
+            pending_msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id, run_id: 1 });
             continue;
         }
         for key in queued {
@@ -157,13 +151,12 @@ fn drive(g: &mut Gen, spec: &DagSpec, limits: &SchedLimits, fail_some: bool) -> 
             });
         }
         if pending_msgs.is_empty() {
-            pending_msgs
-                .push(SchedMsg::RunChanged { dag_id: spec.dag_id.as_str().into(), run_id: 1 });
+            pending_msgs.push(SchedMsg::RunChanged { dag_id: spec.dag_id, run_id: 1 });
         }
     }
 
     // INVARIANT: the run terminated consistently.
-    let run = &db.dag_runs[&(spec.dag_id.clone(), 1)];
+    let run = &db.dag_runs[&(spec.dag_id, 1)];
     if !run.state.is_terminal() {
         return Err("run did not terminate".into());
     }
@@ -228,7 +221,7 @@ fn pass_is_deterministic() {
         let spec = gen_dag(g, "det");
         let db = db_with(&spec);
         let msgs = vec![SchedMsg::Trigger {
-            dag_id: spec.dag_id.as_str().into(),
+            dag_id: spec.dag_id,
             logical_ts: 0,
             run_type: RunType::Scheduled,
         }];

@@ -13,6 +13,19 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo test =="
 cargo test -q
 
+echo "== sairflow-lint (determinism + event fabric) =="
+# The linter's own tests first (they include the HEAD-is-clean check),
+# then the negative control — the gate must *fail* on the seeded fixture
+# corpus, or it proves nothing — then the real gate over rust/src.
+cargo test -q -p sairflow-lint
+if cargo run -q -p sairflow-lint -- \
+     --config ../tools/sairflow-lint/tests/fixtures/lint.toml \
+     ../tools/sairflow-lint/tests/fixtures > /dev/null; then
+  echo "ERROR: sairflow-lint passed on the known-bad fixture corpus" >&2
+  exit 1
+fi
+cargo run -q -p sairflow-lint -- --config ../lint.toml src
+
 echo "== sairflow api --demo (smoke) =="
 # Drive the v1 control-plane API end-to-end (upload → trigger → clear →
 # pause → trigger-while-paused → unpause → backfill → health → delete)

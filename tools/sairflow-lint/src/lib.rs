@@ -1,0 +1,748 @@
+//! sairflow-lint: determinism & event-fabric static analysis.
+//!
+//! The simulator's core promise is bit-for-bit replay: the whole serverless
+//! cloud runs in virtual time, so any wall-clock read, OS thread, entropy
+//! source or hash-order-dependent iteration silently breaks determinism —
+//! and the event fabric (CDC changes, scheduler feed, bus events) is only
+//! trustworthy if every enum variant has a consumer. The compiler enforces
+//! neither property, so this tool does, with hand-rolled line/token
+//! scanning (no `syn`, no dependencies): fast, hermetic, reviewable.
+//!
+//! Two rule families, both declared in a checked-in `lint.toml`:
+//!
+//! * **token rules** — forbidden token lists scoped to path prefixes with
+//!   per-path allowlists (wall clock, thread spawn, unseeded RNG,
+//!   hash-ordered collections, `String` dag ids, unwrap in API handlers);
+//! * **fabric rules** — for each declared fabric enum, every variant must
+//!   be named by every listed consumer file, and no bare wildcard arm may
+//!   sit among match arms over a fabric enum (a `_` that swallows a newly
+//!   added variant is exactly the silent routing gap the paper's CDC
+//!   argument forbids).
+//!
+//! All scanning skips `//`/`/* */` comments, string-literal contents and
+//! `#[cfg(test)]` regions, and the output is deterministic: violations are
+//! sorted by (path, line, rule).
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+// ---- configuration ---------------------------------------------------------
+
+/// A token rule: forbidden tokens scoped to path prefixes, with allowlisted
+/// path prefixes (every suppression lives in `lint.toml`, reviewable).
+#[derive(Debug, Clone, Default)]
+pub struct TokenRule {
+    pub id: String,
+    pub message: String,
+    pub tokens: Vec<String>,
+    /// Path prefixes (relative to the scan root) the rule applies to; an
+    /// empty list or an empty-string prefix means the whole tree.
+    pub paths: Vec<String>,
+    /// Path prefixes exempt from the rule.
+    pub allow: Vec<String>,
+}
+
+/// A fabric enum: its declaration file and the files that must consume
+/// (name) every one of its variants.
+#[derive(Debug, Clone, Default)]
+pub struct Fabric {
+    pub name: String,
+    /// File (relative to the scan root) declaring `enum <name>`.
+    pub decl: String,
+    /// Files that must reference every `<name>::<Variant>` token.
+    pub consumers: Vec<String>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub rules: Vec<TokenRule>,
+    pub fabrics: Vec<Fabric>,
+}
+
+/// Parse the TOML subset used by `lint.toml`: `[[rule]]` / `[[fabric]]`
+/// tables with `key = "string"` and `key = ["a", "b"]` entries, `#`
+/// comments. Hand-rolled so the tool stays dependency-free.
+pub fn parse_config(text: &str) -> Result<Config, String> {
+    enum Cur {
+        None,
+        Rule,
+        Fabric,
+    }
+    let mut cfg = Config::default();
+    let mut cur = Cur::None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = strip_toml_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[rule]]" {
+            cfg.rules.push(TokenRule::default());
+            cur = Cur::Rule;
+            continue;
+        }
+        if line == "[[fabric]]" {
+            cfg.fabrics.push(Fabric::default());
+            cur = Cur::Fabric;
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(format!("lint.toml:{}: unknown table {line}", idx + 1));
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("lint.toml:{}: expected key = value", idx + 1))?;
+        let key = key.trim();
+        let val = val.trim();
+        match cur {
+            Cur::None => {
+                return Err(format!("lint.toml:{}: key outside a table", idx + 1));
+            }
+            Cur::Rule => {
+                let rule = cfg.rules.last_mut().expect("current rule");
+                match key {
+                    "id" => rule.id = toml_str(val, idx)?,
+                    "message" => rule.message = toml_str(val, idx)?,
+                    "tokens" => rule.tokens = toml_arr(val, idx)?,
+                    "paths" => rule.paths = toml_arr(val, idx)?,
+                    "allow" => rule.allow = toml_arr(val, idx)?,
+                    k => return Err(format!("lint.toml:{}: unknown rule key {k}", idx + 1)),
+                }
+            }
+            Cur::Fabric => {
+                let fab = cfg.fabrics.last_mut().expect("current fabric");
+                match key {
+                    "name" => fab.name = toml_str(val, idx)?,
+                    "decl" => fab.decl = toml_str(val, idx)?,
+                    "consumers" => fab.consumers = toml_arr(val, idx)?,
+                    k => return Err(format!("lint.toml:{}: unknown fabric key {k}", idx + 1)),
+                }
+            }
+        }
+    }
+    for r in &cfg.rules {
+        if r.id.is_empty() || r.message.is_empty() || r.tokens.is_empty() {
+            return Err(format!("rule '{}' needs id, message and tokens", r.id));
+        }
+    }
+    for f in &cfg.fabrics {
+        if f.name.is_empty() || f.decl.is_empty() || f.consumers.is_empty() {
+            return Err(format!("fabric '{}' needs name, decl and consumers", f.name));
+        }
+    }
+    Ok(cfg)
+}
+
+fn strip_toml_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn toml_str(val: &str, idx: usize) -> Result<String, String> {
+    let v = val.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("lint.toml:{}: expected a quoted string, got {v}", idx + 1))
+    }
+}
+
+fn toml_arr(val: &str, idx: usize) -> Result<Vec<String>, String> {
+    let v = val.trim();
+    if !(v.starts_with('[') && v.ends_with(']')) {
+        return Err(format!("lint.toml:{}: expected a single-line array, got {v}", idx + 1));
+    }
+    let mut out = Vec::new();
+    let mut cur: Option<String> = None;
+    for c in v[1..v.len() - 1].chars() {
+        match (&mut cur, c) {
+            (None, '"') => cur = Some(String::new()),
+            (None, ',') | (None, ' ') | (None, '\t') => {}
+            (None, other) => {
+                return Err(format!("lint.toml:{}: unexpected '{other}' in array", idx + 1));
+            }
+            (Some(s), '"') => {
+                out.push(std::mem::take(s));
+                cur = None;
+            }
+            (Some(s), other) => s.push(other),
+        }
+    }
+    if cur.is_some() {
+        return Err(format!("lint.toml:{}: unterminated string in array", idx + 1));
+    }
+    Ok(out)
+}
+
+// ---- violations ------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    /// Path relative to the scan root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+// ---- source preprocessing --------------------------------------------------
+
+/// Strip comments and string-literal contents, preserving line structure
+/// (output has exactly one entry per input line). String literals collapse
+/// to `""`, char literals to `''`; lifetimes are left alone. Block
+/// comments nest, raw strings honor their `#` count.
+pub fn strip_source(src: &str) -> Vec<String> {
+    enum St {
+        Code,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut line = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    while i < chars.len() && chars[i] != '\n' {
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = St::Str;
+                    line.push('"');
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' {
+                    // Possible raw string r"..." / r#"..."#; `r#ident` (raw
+                    // identifier) falls through to plain code.
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        line.push('"');
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        line.push_str("''");
+                        i = j + 1;
+                        continue;
+                    }
+                    if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        line.push_str("''");
+                        i += 3;
+                        continue;
+                    }
+                    // A lifetime: keep the tick, scan on.
+                    line.push('\'');
+                    i += 1;
+                    continue;
+                }
+                line.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Skip the escaped char unless it is a line continuation
+                    // (the newline must still be counted above).
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    st = St::Code;
+                    line.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0u32;
+                    while k < h && chars.get(j) == Some(&'#') {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == h {
+                        st = St::Code;
+                        line.push('"');
+                        i = j;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    out.push(line);
+    out
+}
+
+/// Mark lines inside `#[cfg(test)]` items (the attribute line, the item
+/// header and everything through the closing brace). Runs over stripped
+/// lines so braces in strings/comments cannot skew the depth tracking.
+pub fn test_mask(lines: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    let mut skip_above: Option<i64> = None;
+    for (idx, l) in lines.iter().enumerate() {
+        if skip_above.is_some() {
+            mask[idx] = true;
+        }
+        if skip_above.is_none() && l.contains("#[cfg(test)]") {
+            pending_attr = true;
+            mask[idx] = true;
+        }
+        for c in l.chars() {
+            match c {
+                '{' => {
+                    if pending_attr && skip_above.is_none() {
+                        skip_above = Some(depth);
+                        pending_attr = false;
+                        mask[idx] = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(d) = skip_above {
+                        if depth <= d {
+                            skip_above = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    mask
+}
+
+// ---- token scanning --------------------------------------------------------
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Find `token` in `line` with identifier-boundary checks on whichever of
+/// its edges are identifier characters (so `HashMap` does not match
+/// `HashMapExt`, but `.unwrap()` matches mid-expression).
+pub fn find_token(line: &str, token: &str) -> bool {
+    if token.is_empty() {
+        return false;
+    }
+    let tb = token.as_bytes();
+    let lb = line.as_bytes();
+    let check_before = is_ident_byte(tb[0]);
+    let check_after = is_ident_byte(tb[tb.len() - 1]);
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(token) {
+        let abs = start + pos;
+        let before_ok = !check_before || abs == 0 || !is_ident_byte(lb[abs - 1]);
+        let end = abs + token.len();
+        let after_ok = !check_after || end >= lb.len() || !is_ident_byte(lb[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = abs + 1;
+    }
+    false
+}
+
+fn in_scope(rel: &str, rule: &TokenRule) -> bool {
+    let applies =
+        rule.paths.is_empty() || rule.paths.iter().any(|p| p.is_empty() || rel.starts_with(p));
+    let allowed = rule.allow.iter().any(|p| !p.is_empty() && rel.starts_with(p));
+    applies && !allowed
+}
+
+fn scan_tokens(rel: &str, lines: &[String], mask: &[bool], cfg: &Config, out: &mut Vec<Violation>) {
+    for rule in &cfg.rules {
+        if !in_scope(rel, rule) {
+            continue;
+        }
+        for (idx, l) in lines.iter().enumerate() {
+            if mask[idx] {
+                continue;
+            }
+            if rule.tokens.iter().any(|t| find_token(l, t)) {
+                out.push(Violation {
+                    path: rel.to_string(),
+                    line: idx + 1,
+                    rule: rule.id.clone(),
+                    message: rule.message.clone(),
+                });
+            }
+        }
+    }
+}
+
+// ---- fabric rules ----------------------------------------------------------
+
+fn indent_of(l: &str) -> usize {
+    l.len() - l.trim_start().len()
+}
+
+/// The match-arm "head" of a line: the pattern text before `=>`, or the
+/// whole line for `| Pattern` continuation lines without one.
+fn arm_head(l: &str) -> &str {
+    match l.find("=>") {
+        Some(p) => &l[..p],
+        None => l,
+    }
+}
+
+/// True if the head is a bare catch-all: `_`, `_ if ...`, or a lone
+/// lowercase binding identifier (`other`). Typed patterns like `Some(_)`
+/// or `Change::Ti { .. }` are not catch-alls.
+fn is_catch_all(head: &str) -> bool {
+    let t = head.trim();
+    if t == "_" || t.starts_with("_ if ") {
+        return true;
+    }
+    !t.is_empty()
+        && t.bytes().all(is_ident_byte)
+        && t.as_bytes()[0].is_ascii_lowercase()
+        && !matches!(t, "true" | "false")
+}
+
+/// Flag bare wildcard arms whose sibling arms (same indentation, same
+/// match block) pattern-match a fabric enum. rustfmt keeps every arm of
+/// one `match` at equal indentation, so siblings are the `=>`-bearing (or
+/// `| Pattern` continuation) lines at the wildcard's indent, bounded by
+/// the first shallower-indented line in each direction.
+fn scan_wildcards(
+    rel: &str,
+    lines: &[String],
+    mask: &[bool],
+    cfg: &Config,
+    out: &mut Vec<Violation>,
+) {
+    if cfg.fabrics.is_empty() {
+        return;
+    }
+    let enum_tokens: Vec<String> = cfg.fabrics.iter().map(|f| format!("{}::", f.name)).collect();
+    for (idx, l) in lines.iter().enumerate() {
+        if mask[idx] || !l.contains("=>") || !is_catch_all(arm_head(l)) {
+            continue;
+        }
+        let indent = indent_of(l);
+        let mut fabric_sibling: Option<&str> = None;
+        // Scan both directions to the match-block boundary.
+        let mut probe = |j: usize| -> bool {
+            let s = &lines[j];
+            if s.trim().is_empty() {
+                return true;
+            }
+            if indent_of(s) < indent {
+                return false;
+            }
+            if indent_of(s) == indent {
+                let head = arm_head(s);
+                if let Some(tok) =
+                    enum_tokens.iter().find(|t| head.contains(t.as_str())).map(|t| t.as_str())
+                {
+                    fabric_sibling = Some(tok);
+                }
+            }
+            true
+        };
+        for j in (0..idx).rev() {
+            if !probe(j) {
+                break;
+            }
+        }
+        for j in idx + 1..lines.len() {
+            if !probe(j) {
+                break;
+            }
+        }
+        if let Some(tok) = fabric_sibling {
+            let name = tok.trim_end_matches(':');
+            out.push(Violation {
+                path: rel.to_string(),
+                line: idx + 1,
+                rule: "fabric-wildcard".to_string(),
+                message: format!(
+                    "catch-all arm swallows fabric enum {name}: a variant added later \
+                     routes nowhere silently; enumerate every variant instead"
+                ),
+            });
+        }
+    }
+}
+
+/// Extract the variants of `enum <name>` from its (stripped, masked)
+/// declaration file: lines one brace level inside the declaration whose
+/// first token is a capitalized identifier.
+pub fn enum_variants(lines: &[String], mask: &[bool], name: &str) -> Option<Vec<(usize, String)>> {
+    let needle = format!("enum {name}");
+    let decl = (0..lines.len()).find(|&i| !mask[i] && find_token(&lines[i], &needle))?;
+    let mut vars = Vec::new();
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (j, l) in lines.iter().enumerate().skip(decl) {
+        if opened && depth == 1 {
+            let t = l.trim();
+            if t.as_bytes().first().is_some_and(|b| b.is_ascii_uppercase()) {
+                let ident: String =
+                    t.bytes().take_while(|&b| is_ident_byte(b)).map(char::from).collect();
+                vars.push((j + 1, ident));
+            }
+        }
+        for c in l.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth == 0 {
+            break;
+        }
+    }
+    Some(vars)
+}
+
+// ---- driver ----------------------------------------------------------------
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, files)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+    Ok(())
+}
+
+struct SourceFile {
+    rel: String,
+    lines: Vec<String>,
+    mask: Vec<bool>,
+}
+
+/// Run every configured rule over the `.rs` files under `root`. Violations
+/// come back sorted by (path, line, rule) — deterministic output is a
+/// requirement the tool shares with the tree it checks.
+pub fn run(root: &Path, cfg: &Config) -> Result<Vec<Violation>, String> {
+    let mut paths = Vec::new();
+    walk(root, &mut paths)?;
+    let mut sources = Vec::new();
+    for p in &paths {
+        let text = fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .map_err(|e| format!("relativize {}: {e}", p.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let lines = strip_source(&text);
+        let mask = test_mask(&lines);
+        sources.push(SourceFile { rel, lines, mask });
+    }
+    let mut out = Vec::new();
+    for s in &sources {
+        scan_tokens(&s.rel, &s.lines, &s.mask, cfg, &mut out);
+        scan_wildcards(&s.rel, &s.lines, &s.mask, cfg, &mut out);
+    }
+    for fab in &cfg.fabrics {
+        let decl = sources
+            .iter()
+            .find(|s| s.rel == fab.decl)
+            .ok_or_else(|| format!("fabric {}: decl file {} not found", fab.name, fab.decl))?;
+        let vars = enum_variants(&decl.lines, &decl.mask, &fab.name)
+            .ok_or_else(|| format!("fabric {}: enum not found in {}", fab.name, fab.decl))?;
+        if vars.is_empty() {
+            return Err(format!("fabric {}: no variants parsed from {}", fab.name, fab.decl));
+        }
+        for consumer in &fab.consumers {
+            let cons = sources.iter().find(|s| s.rel == *consumer).ok_or_else(|| {
+                format!("fabric {}: consumer file {consumer} not found", fab.name)
+            })?;
+            for (line, var) in &vars {
+                let token = format!("{}::{var}", fab.name);
+                let consumed = cons
+                    .lines
+                    .iter()
+                    .enumerate()
+                    .any(|(i, l)| !cons.mask[i] && find_token(l, &token));
+                if !consumed {
+                    out.push(Violation {
+                        path: fab.decl.clone(),
+                        line: *line,
+                        rule: "fabric-coverage".to_string(),
+                        message: format!(
+                            "variant {token} has no consumer in {consumer}: \
+                             it would flow through the fabric and route nowhere"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    let dedup: BTreeSet<Violation> = out.into_iter().collect();
+    Ok(dedup.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip1(src: &str) -> String {
+        strip_source(src).join("\n")
+    }
+
+    #[test]
+    fn strips_comments_and_strings() {
+        assert_eq!(strip1("let x = 1; // Instant::now()"), "let x = 1; ");
+        assert_eq!(strip1("let s = \"HashMap inside\";"), "let s = \"\";");
+        assert_eq!(strip1("/* a /* nested */ b */ok"), "ok");
+        assert_eq!(strip1("let r = r#\"raw \"quote\" HashMap\"#;"), "let r = \"\";");
+        assert_eq!(
+            strip1("let c = '\\u{1f}'; let t: &'static str = \"x\";"),
+            "let c = ''; let t: &'static str = \"\";"
+        );
+    }
+
+    #[test]
+    fn strip_preserves_line_count() {
+        let src = "a\n\"two\nlines\"\n/* c\nd */\ne";
+        assert_eq!(strip_source(src).len(), src.lines().count());
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(find_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!find_token("struct HashMapExt;", "HashMap"));
+        assert!(find_token("x.unwrap()", ".unwrap()"));
+        assert!(!find_token("x.unwrap_or(3)", ".unwrap()"));
+        assert!(find_token("pub dag_id: String,", "dag_id: String"));
+        assert!(!find_token("pub other_dag_id2: String,", "dag_id: String"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_masked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false, false]);
+    }
+
+    #[test]
+    fn parses_config_subset() {
+        let cfg = parse_config(
+            "# comment\n[[rule]]\nid = \"wall-clock\"\nmessage = \"no wall clock\"\n\
+             tokens = [\"Instant::now\", \"SystemTime\"]\npaths = [\"\"]\n\
+             allow = [\"metrics/wallclock.rs\"]\n\n[[fabric]]\nname = \"Change\"\n\
+             decl = \"cloud/db.rs\"\nconsumers = [\"sairflow/world.rs\"]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.rules.len(), 1);
+        assert_eq!(cfg.rules[0].tokens, vec!["Instant::now", "SystemTime"]);
+        assert_eq!(cfg.rules[0].allow, vec!["metrics/wallclock.rs"]);
+        assert_eq!(cfg.fabrics[0].name, "Change");
+    }
+
+    #[test]
+    fn config_rejects_junk() {
+        assert!(parse_config("[[rule]]\nid = \"x\"\n").is_err());
+        assert!(parse_config("key = \"outside\"\n").is_err());
+        assert!(parse_config("[section]\n").is_err());
+    }
+
+    #[test]
+    fn wildcard_heuristic_flags_fabric_siblings_only() {
+        let src = "fn f(c: Change) {\n    match c {\n        Change::Ti { .. } => {}\n        \
+                   _ => {}\n    }\n    match 1u8 {\n        0 => {}\n        _ => {}\n    }\n}\n";
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        let cfg = Config {
+            rules: Vec::new(),
+            fabrics: vec![Fabric {
+                name: "Change".into(),
+                decl: "x.rs".into(),
+                consumers: vec!["x.rs".into()],
+            }],
+        };
+        let mut out = Vec::new();
+        scan_wildcards("x.rs", &lines, &mask, &cfg, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 4);
+    }
+
+    #[test]
+    fn extracts_enum_variants() {
+        let src = "/// doc\npub enum Msg {\n    A,\n    B { x: u32 },\n    C(Vec<u8>),\n}\n";
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        let vars = enum_variants(&lines, &mask, "Msg").unwrap();
+        let names: Vec<&str> = vars.iter().map(|(_, v)| v.as_str()).collect();
+        assert_eq!(names, vec!["A", "B", "C"]);
+        assert_eq!(vars[0].0, 3);
+    }
+}

@@ -1,0 +1,53 @@
+//! CLI for the sairflow determinism & event-fabric linter.
+//!
+//! Usage: `sairflow-lint --config <lint.toml> <scan-root>`
+//!
+//! Exit codes: 0 = clean, 1 = violations (printed to stdout, path-sorted),
+//! 2 = usage / configuration / IO error (printed to stderr).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: sairflow-lint --config <lint.toml> <scan-root>");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (config_path, root) = match args.as_slice() {
+        [flag, config, root] if flag == "--config" => (config.clone(), root.clone()),
+        _ => return usage(),
+    };
+    let text = match std::fs::read_to_string(&config_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("sairflow-lint: read {config_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match sairflow_lint::parse_config(&text) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("sairflow-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match sairflow_lint::run(Path::new(&root), &cfg) {
+        Ok(violations) if violations.is_empty() => {
+            println!("sairflow-lint: clean ({root})");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("sairflow-lint: {} violation(s)", violations.len());
+            ExitCode::from(1)
+        }
+        Err(e) => {
+            eprintln!("sairflow-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The fixture corpus: one known-bad file per rule must produce its
+//! expected diagnostic, and the allowlisted / masked files must stay
+//! silent. This is the test CI's `lint` job re-runs via the binary to
+//! prove the gate goes red on a seeded violation.
+
+use sairflow_lint::{parse_config, run, Violation};
+use std::path::{Path, PathBuf};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn fixture_violations() -> Vec<Violation> {
+    let root = fixtures_root();
+    let text = std::fs::read_to_string(root.join("lint.toml")).expect("fixture lint.toml");
+    let cfg = parse_config(&text).expect("fixture config parses");
+    run(&root, &cfg).expect("fixture scan runs")
+}
+
+#[test]
+fn each_rule_fires_on_its_bad_fixture() {
+    let vs = fixture_violations();
+    let has = |path: &str, rule: &str| vs.iter().any(|v| v.path == path && v.rule == rule);
+    assert!(has("bad/wall_clock.rs", "wall-clock"), "{vs:#?}");
+    assert!(has("bad/thread_spawn.rs", "thread-spawn"), "{vs:#?}");
+    assert!(has("bad/unseeded_rng.rs", "unseeded-rng"), "{vs:#?}");
+    assert!(has("bad/hash_collections.rs", "hash-collections"), "{vs:#?}");
+    assert!(has("bad/string_dag_id.rs", "string-dag-id"), "{vs:#?}");
+    assert!(has("bad/api/handlers.rs", "unwrap-in-handlers"), "{vs:#?}");
+    assert!(has("bad/fabric.rs", "fabric-wildcard"), "{vs:#?}");
+    assert!(has("bad/fabric.rs", "fabric-coverage"), "{vs:#?}");
+}
+
+#[test]
+fn diagnostics_carry_the_expected_details() {
+    let vs = fixture_violations();
+    let coverage = vs
+        .iter()
+        .find(|v| v.rule == "fabric-coverage")
+        .expect("coverage violation present");
+    assert!(coverage.message.contains("FabricMsg::Deleted"), "{coverage:?}");
+    let wildcard = vs
+        .iter()
+        .find(|v| v.rule == "fabric-wildcard")
+        .expect("wildcard violation present");
+    assert!(wildcard.message.contains("FabricMsg"), "{wildcard:?}");
+    let wall = vs.iter().find(|v| v.rule == "wall-clock").expect("wall-clock present");
+    assert_eq!(wall.path, "bad/wall_clock.rs");
+    assert!(wall.line >= 3, "points at a source line, not the doc header: {wall:?}");
+}
+
+#[test]
+fn allowlisted_and_masked_files_stay_silent() {
+    let vs = fixture_violations();
+    assert!(
+        !vs.iter().any(|v| v.path.starts_with("allowed/")),
+        "allowlisted path must be exempt: {vs:#?}"
+    );
+    assert!(
+        !vs.iter().any(|v| v.path.starts_with("clean/")),
+        "comments, strings and #[cfg(test)] must be masked: {vs:#?}"
+    );
+}
+
+#[test]
+fn path_scoping_limits_the_unwrap_rule() {
+    let vs = fixture_violations();
+    assert!(
+        !vs.iter().any(|v| v.path == "bad/string_dag_id.rs" && v.rule == "unwrap-in-handlers"),
+        "unwrap rule is scoped to bad/api/ only: {vs:#?}"
+    );
+}
+
+#[test]
+fn output_is_sorted_and_deduplicated() {
+    let vs = fixture_violations();
+    assert!(!vs.is_empty());
+    for pair in vs.windows(2) {
+        let a = (&pair[0].path, pair[0].line, &pair[0].rule);
+        let b = (&pair[1].path, pair[1].line, &pair[1].rule);
+        assert!(a < b, "violations must be strictly ordered: {a:?} !< {b:?}");
+    }
+}

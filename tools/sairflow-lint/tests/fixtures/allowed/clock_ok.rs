@@ -1,0 +1,18 @@
+//! Allowlisted fixture (mirrors rust/src/metrics/wallclock.rs): wall-clock
+//! reads here are exempted by the config's allow entry and must not fire.
+
+use std::time::Instant;
+
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}

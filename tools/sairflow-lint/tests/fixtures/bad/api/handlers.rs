@@ -1,0 +1,6 @@
+//! Known-bad fixture: a panicking API handler (inside the rule's path).
+
+pub fn get_dag(body: &str) -> String {
+    let doc: Option<&str> = body.lines().next();
+    doc.unwrap().to_string()
+}

@@ -1,0 +1,17 @@
+//! Known-bad fixture for both fabric rules: `Deleted` has no consumer
+//! anywhere in this file (fabric-coverage), and the catch-all arm sits
+//! among `FabricMsg::` siblings (fabric-wildcard).
+
+pub enum FabricMsg {
+    Created,
+    Updated,
+    Deleted,
+}
+
+pub fn consume(m: &FabricMsg) -> u32 {
+    match m {
+        FabricMsg::Created => 1,
+        FabricMsg::Updated => 2,
+        _ => 0,
+    }
+}

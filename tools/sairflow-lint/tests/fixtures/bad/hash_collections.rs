@@ -1,0 +1,9 @@
+//! Known-bad fixture: hash-ordered collection in (pretend) hot-path code.
+
+use std::collections::HashMap;
+
+pub fn build() -> HashMap<String, u64> {
+    let mut m = HashMap::new();
+    m.insert("k".to_string(), 1);
+    m
+}

@@ -1,0 +1,13 @@
+//! Known-bad fixture: string-typed dag ids in a hot-path module. The
+//! trailing unwrap is deliberate — this file is outside the
+//! unwrap-in-handlers rule's path scope, so it must NOT fire here.
+
+pub struct RunRef {
+    pub dag_id: String,
+    pub run_id: u64,
+}
+
+pub fn lookup(dag_id: &str) -> Option<RunRef> {
+    let _ = dag_id.parse::<u64>().unwrap();
+    None
+}

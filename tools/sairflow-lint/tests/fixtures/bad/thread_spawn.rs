@@ -1,0 +1,5 @@
+//! Known-bad fixture: spawns an OS thread inside the simulator.
+
+pub fn background() {
+    std::thread::spawn(|| {});
+}

@@ -1,0 +1,6 @@
+//! Known-bad fixture: entropy-seeded randomness (unreproducible runs).
+
+pub fn entropy() -> u64 {
+    let _rng = rand::thread_rng();
+    rand::random()
+}

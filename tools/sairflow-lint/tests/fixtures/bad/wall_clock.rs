@@ -1,0 +1,7 @@
+//! Known-bad fixture: reads the wall clock outside the metrics allowlist.
+
+use std::time::{Instant, SystemTime};
+
+pub fn now_pair() -> (Instant, SystemTime) {
+    (Instant::now(), SystemTime::now())
+}

@@ -1,0 +1,25 @@
+//! Clean fixture: forbidden tokens appear only where the scanner must
+//! ignore them — comments (Instant::now() right here), string literals,
+//! and #[cfg(test)] regions.
+
+/* Block comments too: thread_rng, SystemTime::now(), dag_id: String */
+
+pub fn label() -> &'static str {
+    // HashMap::new() in a line comment is not a violation.
+    "thread_rng inside a string literal"
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn test_code_may_use_wall_clock_and_hash_order() {
+        let _ = Instant::now();
+        let mut m: HashMap<u32, u32> = HashMap::new();
+        m.insert(1, 2);
+        let x: Option<u32> = Some(1);
+        assert_eq!(x.unwrap(), 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! The acceptance gate: HEAD's `rust/src` must lint clean under the
+//! repo-root `lint.toml` — zero violations, with every suppression living
+//! in that reviewable config. A new wall-clock read, hash-ordered
+//! collection, string dag id or unconsumed fabric variant fails this test
+//! (and therefore check.sh and CI) at the line that introduced it.
+
+use sairflow_lint::{parse_config, run};
+use std::path::Path;
+
+#[test]
+fn head_rust_src_is_clean() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let text = std::fs::read_to_string(repo.join("lint.toml")).expect("repo-root lint.toml");
+    let cfg = parse_config(&text).expect("lint.toml parses");
+    let violations = run(&repo.join("rust/src"), &cfg).expect("scan rust/src");
+    let rendered: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+    assert!(violations.is_empty(), "rust/src must lint clean:\n{}", rendered.join("\n"));
+}
+
+#[test]
+fn exhaustiveness_covers_all_four_fabric_enums() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let text = std::fs::read_to_string(repo.join("lint.toml")).expect("repo-root lint.toml");
+    let cfg = parse_config(&text).expect("lint.toml parses");
+    let names: Vec<&str> = cfg.fabrics.iter().map(|f| f.name.as_str()).collect();
+    for required in ["Write", "Change", "SchedMsg", "BusEvent"] {
+        assert!(names.contains(&required), "lint.toml must cross-reference enum {required}");
+    }
+}

@@ -14,7 +14,7 @@
 //!
 //! | Method | Path | Action |
 //! |--------|------|--------|
-//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters (operator surface adds WAL window counters) |
+//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters (operator surface adds WAL window + durability gauges: `checkpoint_epoch`, `last_checkpoint_lsn`, `wal_tail_len`, `recoveries`, `live_dag_ids`) |
 //! | GET    | `/api/v1/dags` | list DAGs (`limit`, `offset`, `paused=true\|false`) |
 //! | POST   | `/api/v1/dags` | upload a DAG file (body `{"file_text": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
@@ -353,7 +353,12 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
                     "admission_totals",
                     "wal_retained",
                     "wal_truncated",
+                    "wal_tail_len",
+                    "checkpoint_epoch",
+                    "last_checkpoint_lsn",
+                    "recoveries",
                     "interned_dag_ids",
+                    "live_dag_ids",
                 ],
             )
             .set("active_runs", legacy_active)

@@ -560,15 +560,22 @@ fn health(w: &World, tenant: &str) -> Json {
                 .set("upstream_failed", t_counts[7]),
         );
     // The operator surface (default tenant) additionally sees the WAL
-    // window counters, the intern-table size (append-only by design —
-    // the hook for watching its growth) and the gateway-wide admission
-    // totals with the per-tenant breakdown.
+    // window counters, the durability gauges (checkpoint epoch/LSN, the
+    // un-checkpointed tail, recovery count), the intern-table size
+    // (append-only by design — `live_dag_ids` is the census taken at the
+    // last recovery, the hook for watching dead-id growth between them)
+    // and the gateway-wide admission totals with the per-tenant breakdown.
     if tenant == DEFAULT_TENANT {
         resp = resp
             .set("admission_totals", w.gateway.totals_json())
-            .set("wal_retained", db.wal.len() as u64)
+            .set("wal_retained", db.wal_retained_len() as u64)
             .set("wal_truncated", db.stats.wal_truncated)
-            .set("interned_dag_ids", DagId::interned_count() as u64);
+            .set("wal_tail_len", db.wal_tail_len() as u64)
+            .set("checkpoint_epoch", w.dur.epoch)
+            .set("last_checkpoint_lsn", w.dur.last_checkpoint_lsn)
+            .set("recoveries", w.dur.recoveries)
+            .set("interned_dag_ids", DagId::interned_count() as u64)
+            .set("live_dag_ids", DagId::live_count() as u64);
     }
     resp
 }

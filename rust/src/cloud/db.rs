@@ -347,6 +347,13 @@ pub enum Write {
     /// step under the pause/`max_active_runs`/backfill-budget policy (see
     /// `MetaDb::apply`).
     ClearTi { key: TiKey },
+    /// Recovery repair: reset a task instance that was queued or running
+    /// when the process died — the worker executing it is gone, so unlike
+    /// [`Write::ClearTi`] this targets *active* rows (and is a no-op on
+    /// everything else, making replayed repair transactions idempotent).
+    /// State back to `None`, timestamps/host wiped, `try_number` kept;
+    /// the scheduler's next pass re-schedules and re-queues the task.
+    ResetOrphanTi { key: TiKey },
     /// Remove a DAG and every row that references it (serialized spec,
     /// DAG runs, task instances).
     DeleteDag { dag_id: DagId },
@@ -365,7 +372,8 @@ impl Write {
             Write::SetTiState { key, .. }
             | Write::SetTiReady { key, .. }
             | Write::SetTiHost { key, .. }
-            | Write::ClearTi { key } => Some((key.0, key.1)),
+            | Write::ClearTi { key }
+            | Write::ResetOrphanTi { key } => Some((key.0, key.1)),
             // DAG- and tenant-level writes contend on no single run; they
             // are enumerated (no `_`) so a new `Write` variant must pick a
             // lock scope here explicitly.
@@ -433,6 +441,30 @@ pub struct DbStats {
     pub dropped_tenant_upserts: u64,
 }
 
+/// Everything a durable checkpoint captures to rebuild a [`MetaDb`]
+/// equivalent to the one that wrote it: the tables, the log position
+/// (`next_lsn`), and the backfill FIFO's arrival order. The private
+/// indexes (`active_count`, `backfill_running`, `fg_queued`) are *not*
+/// part of the image — they are derivable from the rows — but the
+/// arrival sequence of parked backfill runs is carried explicitly
+/// (`backfill_arrival` + `next_backfill_seq`) because FIFO promotion
+/// order is authoritative state a rebuild cannot derive. `DbStats` are
+/// deliberately excluded: counters restart at zero on recovery.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct RestoreImage {
+    pub tenants: BTreeMap<String, TenantRow>,
+    pub dags: Vec<DagRow>,
+    pub serialized: Vec<DagSpec>,
+    pub dag_runs: Vec<DagRunRow>,
+    pub task_instances: Vec<TiRow>,
+    pub next_lsn: u64,
+    pub next_backfill_seq: u64,
+    /// Arrival sequence of each backfill run parked in `Queued` at
+    /// checkpoint time.
+    pub backfill_arrival: BTreeMap<RunKey, u64>,
+    pub wal_retain: usize,
+}
+
 /// The metadata database state: tables + bounded write-ahead log.
 #[derive(Debug)]
 pub struct MetaDb {
@@ -445,11 +477,21 @@ pub struct MetaDb {
     pub task_instances: BTreeMap<TiKey, TiRow>,
     /// Write-ahead log window: (lsn, commit time, change). Bounded to the
     /// most recent `wal_retain` records (checkpoint + truncate on apply);
-    /// LSNs stay monotonic across truncation.
-    pub wal: VecDeque<(u64, SimTime, Change)>,
+    /// LSNs stay monotonic across truncation. Private: the durability
+    /// layer is the only consumer of the log (enforced by the
+    /// `wal-access` lint rule); everything else reads the
+    /// [`MetaDb::wal_retained_len`]/[`MetaDb::wal_tail_len`] gauges.
+    wal: VecDeque<(u64, SimTime, Change)>,
     /// Retained WAL window size ([`DEFAULT_WAL_RETAIN`] by default).
     pub wal_retain: usize,
     next_lsn: u64,
+    /// LSN up to which the log is durable (exclusive): everything below it
+    /// is covered by the last blob-store checkpoint. `None` = no
+    /// durability subsystem attached (legacy window truncation). When set,
+    /// truncation never drops a record at or above it — the in-memory tail
+    /// since the checkpoint stays replayable even past `wal_retain`
+    /// pressure (the window may temporarily exceed its nominal size).
+    durable_lsn: Option<u64>,
     /// Maintained count of queued+running task instances (the scheduler's
     /// parallelism check) — O(1) instead of a full-table scan per pass.
     active_count: usize,
@@ -488,6 +530,7 @@ impl Default for MetaDb {
             wal: VecDeque::new(),
             wal_retain: DEFAULT_WAL_RETAIN,
             next_lsn: 0,
+            durable_lsn: None,
             active_count: 0,
             backfill_queued: BTreeMap::new(),
             backfill_seq: BTreeMap::new(),
@@ -760,6 +803,30 @@ impl MetaDb {
                         }
                     }
                 }
+                Write::ResetOrphanTi { key } => {
+                    if let Some(row) = self.task_instances.get_mut(&key) {
+                        // Only rows a dead worker owned are reset; a
+                        // non-active row (never started, already terminal,
+                        // or reset by an earlier replay of this repair) is
+                        // left untouched — idempotence is what makes the
+                        // repair transaction safe to persist and replay.
+                        if !row.state.is_active() {
+                            continue;
+                        }
+                        self.active_count -= 1;
+                        row.state = TiState::None;
+                        row.ready = None;
+                        row.start = None;
+                        row.end = None;
+                        row.host = None;
+                        changes.push(Change::Ti {
+                            dag_id: key.0,
+                            run_id: key.1,
+                            task_id: key.2,
+                            state: TiState::None,
+                        });
+                    }
+                }
                 Write::DeleteDag { dag_id } => {
                     let existed = self.dags.remove(&dag_id).is_some()
                         | self.serialized.remove(&dag_id).is_some();
@@ -798,12 +865,151 @@ impl MetaDb {
         }
         // Checkpoint + truncate: the WAL is a bounded window. CDC already
         // received every change (the return value below); truncation only
-        // drops replay history past the retained horizon.
-        while self.wal.len() > self.wal_retain {
-            self.wal.pop_front();
-            self.stats.wal_truncated += 1;
-        }
+        // drops replay history past the retained horizon — and, when a
+        // durability subsystem is attached, never past the last durable
+        // checkpoint LSN (the tail since the checkpoint must stay
+        // replayable).
+        self.truncate_wal();
         changes
+    }
+
+    /// Drop records from the front of the WAL window while it exceeds
+    /// `wal_retain`, but only up to the durable checkpoint LSN: a record
+    /// not yet covered by a checkpoint is never dropped, whatever the
+    /// window pressure (the satellite property test pins this invariant).
+    fn truncate_wal(&mut self) {
+        while self.wal.len() > self.wal_retain {
+            match self.wal.front() {
+                Some(&(lsn, _, _)) if self.durable_lsn.map_or(true, |d| lsn < d) => {
+                    self.wal.pop_front();
+                    self.stats.wal_truncated += 1;
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// LSN the next change will get (monotonic, never reset).
+    pub fn next_lsn(&self) -> u64 {
+        self.next_lsn
+    }
+
+    /// The durable checkpoint LSN (exclusive), if a durability subsystem
+    /// has attached one.
+    pub fn durable_lsn(&self) -> Option<u64> {
+        self.durable_lsn
+    }
+
+    /// Record that everything below `lsn` is durable (covered by a
+    /// checkpoint in external storage) and release the now-coverable part
+    /// of the WAL window. Called by the durability layer after a
+    /// checkpoint write completes.
+    pub fn set_durable_lsn(&mut self, lsn: u64) {
+        debug_assert!(lsn <= self.next_lsn, "durable LSN cannot lead the log");
+        debug_assert!(self.durable_lsn.map_or(true, |d| lsn >= d), "durable LSN regressed");
+        self.durable_lsn = Some(lsn);
+        self.truncate_wal();
+    }
+
+    /// Records currently held in the in-memory WAL window (the
+    /// `wal_retained` health gauge).
+    pub fn wal_retained_len(&self) -> usize {
+        self.wal.len()
+    }
+
+    /// Records appended since the last durable checkpoint — the tail a
+    /// recovery would replay. Without an attached durability subsystem
+    /// this is the whole retained window.
+    pub fn wal_tail_len(&self) -> usize {
+        match self.durable_lsn {
+            Some(d) => (self.next_lsn - d) as usize,
+            None => self.wal.len(),
+        }
+    }
+
+    /// `(front, back)` LSNs of the retained window, if non-empty. WAL LSNs
+    /// are contiguous, so this fully describes the retained set — the
+    /// accessor the no-un-replayable-gap property test reads.
+    pub fn wal_lsn_range(&self) -> Option<(u64, u64)> {
+        match (self.wal.front(), self.wal.back()) {
+            (Some(&(f, _, _)), Some(&(b, _, _))) => Some((f, b)),
+            _ => None,
+        }
+    }
+
+    /// Extract a consistent [`RestoreImage`] of the current state — what
+    /// the durability layer serializes to the blob store at a checkpoint.
+    pub fn snapshot(&self) -> RestoreImage {
+        RestoreImage {
+            tenants: self.tenants.clone(),
+            dags: self.dags.values().cloned().collect(),
+            serialized: self.serialized.values().cloned().collect(),
+            dag_runs: self.dag_runs.values().copied().collect(),
+            task_instances: self.task_instances.values().cloned().collect(),
+            next_lsn: self.next_lsn,
+            next_backfill_seq: self.next_backfill_seq,
+            backfill_arrival: self.backfill_seq.clone(),
+            wal_retain: self.wal_retain,
+        }
+    }
+
+    /// Rebuild a `MetaDb` from a checkpoint image. The row tables are
+    /// loaded verbatim; every private index is recomputed from them —
+    /// except the backfill promotion FIFO, whose arrival order comes from
+    /// `image.backfill_arrival` so queued backfills promote in the same
+    /// order the killed process would have promoted them. The restored
+    /// database starts with `durable_lsn = image.next_lsn` (everything it
+    /// contains *is* the checkpoint) and an empty WAL window; the caller
+    /// then replays the durable log tail through [`MetaDb::apply`].
+    pub fn restore(image: RestoreImage) -> MetaDb {
+        let mut db = MetaDb {
+            tenants: image.tenants,
+            next_lsn: image.next_lsn,
+            next_backfill_seq: image.next_backfill_seq,
+            wal_retain: image.wal_retain,
+            durable_lsn: Some(image.next_lsn),
+            ..MetaDb::default()
+        };
+        if !db.tenants.contains_key(DEFAULT_TENANT) {
+            db.tenants.insert(DEFAULT_TENANT.to_string(), TenantRow::default_tenant());
+        }
+        for row in image.dags {
+            db.dags.insert(row.dag_id, row);
+        }
+        for spec in image.serialized {
+            db.serialized.insert(spec.dag_id, spec);
+        }
+        for row in image.dag_runs {
+            let key = (row.dag_id, row.run_id);
+            match (row.run_type, row.state) {
+                (RunType::Backfill, RunState::Queued) => {
+                    // Preserved FIFO: the checkpointed arrival sequence,
+                    // not a fresh one (which would reorder promotions to
+                    // key order).
+                    let seq = image.backfill_arrival.get(&key).copied().unwrap_or_else(|| {
+                        debug_assert!(false, "queued backfill {key:?} missing arrival seq");
+                        u64::MAX
+                    });
+                    db.backfill_queued.insert(seq, key);
+                    db.backfill_seq.insert(key, seq);
+                }
+                (RunType::Backfill, RunState::Running) => {
+                    *db.backfill_running.entry(row.dag_id.tenant()).or_insert(0) += 1;
+                }
+                (_, RunState::Queued) => {
+                    db.fg_queued.insert(key);
+                }
+                _ => {}
+            }
+            db.dag_runs.insert(key, row);
+        }
+        for row in image.task_instances {
+            if row.state.is_active() {
+                db.active_count += 1;
+            }
+            db.task_instances.insert((row.dag_id, row.run_id, row.task_id), row);
+        }
+        db
     }
 
     /// Task instances of one DAG run — a range scan with `Copy` bounds.
@@ -1037,6 +1243,16 @@ pub struct DbService {
 pub trait DbHost: Sized + 'static {
     fn db(&mut self) -> &mut DbService;
     fn on_committed(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>);
+
+    /// Durability hook: called inside the commit event, immediately
+    /// *before* the write set is applied. A durable host serializes the
+    /// transaction to external storage here (write-ahead discipline: the
+    /// log holds a commit before its effects become visible, so a kill
+    /// between the two can at worst replay a transaction whose effects no
+    /// one observed — harmless, because replay goes through the same
+    /// deterministic [`MetaDb::apply`]). Default: no durable log (MWAA,
+    /// benches, unit hosts).
+    fn persist_txn(_sim: &mut Sim<Self>, _w: &mut Self, _txn: &Txn, _commit_ts: SimTime) {}
 }
 
 impl DbService {
@@ -1114,9 +1330,11 @@ pub fn commit<W: DbHost>(
     let finish = db.reserve_commit_slot(now, &txn, service);
     db.stats_commits_inflight += 1;
     sim.at(finish, "db.commit", move |sim, w| {
+        let now = sim.now();
+        W::persist_txn(sim, w, &txn, now);
         let db = w.db();
         db.stats_commits_inflight -= 1;
-        let changes = db.meta.apply(txn, sim.now());
+        let changes = db.meta.apply(txn, now);
         if !changes.is_empty() {
             W::on_committed(sim, w, changes);
         }

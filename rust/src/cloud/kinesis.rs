@@ -34,6 +34,11 @@ struct Shard<R> {
     buf: VecDeque<(u64, SimTime, R)>,
     /// A delivery is in flight (per-shard serialization).
     delivering: bool,
+    /// Recycled batch buffer: per-shard delivery is serialized, so one
+    /// spare `Vec` per shard makes the hand-off allocation-free — [`arm`]
+    /// takes it, the consumer hands it back through [`delivered`]. After
+    /// warm-up its capacity is `batch_limit` and it never reallocates.
+    spare: Vec<R>,
 }
 
 /// A Kinesis-like stream of records of type `R`.
@@ -50,7 +55,9 @@ pub struct KinesisStream<R> {
 
 /// World types consuming a Kinesis stream. `on_records` receives each
 /// delivered batch and MUST call [`delivered`] when processing finishes
-/// (releases the shard for its next batch).
+/// (releases the shard for its next batch). Hand the records `Vec` back
+/// to [`delivered`] so the shard can recycle it — per-shard delivery is
+/// serialized, which makes the hand-off allocation-free.
 pub trait KinesisHost: Sized + 'static {
     type Record: 'static;
     fn kinesis(&mut self) -> &mut KinesisStream<Self::Record>;
@@ -62,7 +69,7 @@ impl<R> KinesisStream<R> {
     pub fn new(nshards: usize) -> KinesisStream<R> {
         KinesisStream {
             shards: (0..nshards.max(1))
-                .map(|_| Shard { buf: VecDeque::new(), delivering: false })
+                .map(|_| Shard { buf: VecDeque::new(), delivering: false, spare: Vec::new() })
                 .collect(),
             next_seq: 0,
             delivery_latency: (0.02, 0.06),
@@ -122,7 +129,11 @@ fn arm<W: KinesisHost>(sim: &mut Sim<W>, w: &mut W, shard: usize) {
         let limit = stream.batch_limit;
         let s = &mut stream.shards[shard];
         let k = limit.min(s.buf.len());
-        let mut out = Vec::with_capacity(k);
+        // Reuse the shard's spare buffer instead of allocating a fresh
+        // Vec per delivery; steady-state capacity is `batch_limit`.
+        let mut out = std::mem::take(&mut s.spare);
+        debug_assert!(out.is_empty());
+        out.reserve(k);
         for _ in 0..k {
             let (_, enq, r) = s.buf.pop_front().unwrap();
             stream.stats.records_out += 1;
@@ -139,10 +150,18 @@ fn arm<W: KinesisHost>(sim: &mut Sim<W>, w: &mut W, shard: usize) {
 }
 
 /// Release the shard after the consumer finished a batch; delivers the
-/// next batch if records are waiting.
-pub fn delivered<W: KinesisHost>(sim: &mut Sim<W>, w: &mut W, shard: usize) {
+/// next batch if records are waiting. `batch` is the records `Vec` the
+/// consumer received — it is cleared and recycled for the next delivery.
+pub fn delivered<W: KinesisHost>(
+    sim: &mut Sim<W>,
+    w: &mut W,
+    shard: usize,
+    mut batch: Vec<W::Record>,
+) {
     let stream = w.kinesis();
     let shard = shard % stream.shards.len();
+    batch.clear();
+    stream.shards[shard].spare = batch;
     stream.shards[shard].delivering = false;
     arm(sim, w, shard);
 }
@@ -163,14 +182,14 @@ mod tests {
             &mut self.k
         }
         fn on_records(sim: &mut Sim<Self>, w: &mut Self, shard: usize, records: Vec<u64>) {
-            for r in records {
+            for &r in &records {
                 w.got.push((shard, r));
             }
             if w.hold {
                 // Slow consumer: release after 1 s.
-                sim.after(SECOND, "done", move |sim, w| delivered(sim, w, shard));
+                sim.after(SECOND, "done", move |sim, w| delivered(sim, w, shard, records));
             } else {
-                delivered(sim, w, shard);
+                delivered(sim, w, shard, records);
             }
         }
     }
@@ -213,6 +232,21 @@ mod tests {
         sim.run(&mut w, 100_000);
         assert_eq!(w.got.len(), 35);
         assert!(w.k.stats.batches >= 4, "35 records / limit 10 => >= 4 batches");
+    }
+
+    #[test]
+    fn batch_buffer_is_recycled_across_deliveries() {
+        let mut sim: Sim<World> = Sim::new(5);
+        let mut w = World { k: KinesisStream::new(1), got: Vec::new(), hold: false };
+        put_records(&mut sim, &mut w, 0, (0..35).collect());
+        sim.run(&mut w, 100_000);
+        assert_eq!(w.got.len(), 35);
+        let spare = &w.k.shards[0].spare;
+        assert!(spare.is_empty());
+        assert!(
+            spare.capacity() >= 10.min(w.k.batch_limit),
+            "the delivery buffer should be parked on the shard between batches"
+        );
     }
 
     #[test]

@@ -29,16 +29,40 @@ pub struct SqsQueue<M> {
     /// a time (single shard / message group).
     pub fifo: bool,
     msgs: VecDeque<M>,
+    /// SQS visibility-timeout model: when `track_inflight` is set, a taken
+    /// batch stays here (invisible, not deleted) until the consumer acks it
+    /// via [`done`]. A process kill between take and ack leaves the batch
+    /// in this buffer; [`SqsQueue::recover_inflight`] makes it visible
+    /// again in original order — SQS redelivers after the visibility
+    /// timeout, so queued work survives a scheduler crash.
+    track_inflight: bool,
+    inflight: VecDeque<Vec<M>>,
     pub stats: MqStats,
 }
 
 impl<M> SqsQueue<M> {
     pub fn standard(name: &'static str) -> SqsQueue<M> {
-        SqsQueue { name, fifo: false, msgs: VecDeque::new(), stats: MqStats::default() }
+        SqsQueue {
+            name,
+            fifo: false,
+            msgs: VecDeque::new(),
+            track_inflight: false,
+            inflight: VecDeque::new(),
+            stats: MqStats::default(),
+        }
     }
 
     pub fn fifo(name: &'static str) -> SqsQueue<M> {
-        SqsQueue { name, fifo: true, msgs: VecDeque::new(), stats: MqStats::default() }
+        SqsQueue { fifo: true, ..SqsQueue::standard(name) }
+    }
+
+    /// Enable the visibility-timeout model (see `track_inflight`). Durable
+    /// feeds (the scheduler feed, the upload notification queue) turn this
+    /// on; purely derived feeds (executor fan-out) stay untracked because
+    /// recovery regenerates their messages from the database instead.
+    pub fn with_inflight_tracking(mut self) -> SqsQueue<M> {
+        self.track_inflight = true;
+        self
     }
 
     pub fn send(&mut self, msg: M) {
@@ -62,15 +86,68 @@ impl<M> SqsQueue<M> {
         self.msgs.is_empty()
     }
 
-    /// Remove and return up to `n` messages in order.
-    pub fn take_batch(&mut self, n: usize) -> Vec<M> {
+    /// Remove and return up to `n` messages in order. Under inflight
+    /// tracking the batch is retained (invisible) until [`done`] acks it.
+    pub fn take_batch(&mut self, n: usize) -> Vec<M>
+    where
+        M: Clone,
+    {
         let k = n.min(self.msgs.len());
         let batch: Vec<M> = self.msgs.drain(..k).collect();
         self.stats.delivered += batch.len() as u64;
         if !batch.is_empty() {
             self.stats.batches += 1;
+            if self.track_inflight {
+                self.inflight.push_back(batch.clone());
+            }
         }
         batch
+    }
+
+    /// Ack the oldest unacked batch (the consumer finished it — SQS
+    /// DeleteMessageBatch). Called by [`done`]; a no-op without tracking.
+    pub fn ack_batch(&mut self) {
+        if self.track_inflight {
+            debug_assert!(!self.inflight.is_empty(), "ack without an inflight batch");
+            self.inflight.pop_front();
+        }
+    }
+
+    /// Messages taken but not yet acked.
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.iter().map(Vec::len).sum()
+    }
+
+    /// Make every unacked batch visible again, at the *front* of the queue
+    /// in original order (the visibility timeout expired because the
+    /// consumer process died). Returns the number of redelivered messages.
+    pub fn recover_inflight(&mut self) -> usize {
+        self.recover_inflight_filtered(|_| true)
+    }
+
+    /// [`SqsQueue::recover_inflight`] with a per-message `keep` predicate.
+    /// An unacked batch is *ambiguous* — the consumer may have processed
+    /// part of it before dying — so recovery can drop messages whose
+    /// effect is already visible in durable state (exactly-once dedup)
+    /// while redelivering the rest.
+    pub fn recover_inflight_filtered(&mut self, mut keep: impl FnMut(&M) -> bool) -> usize {
+        let mut n = 0;
+        while let Some(batch) = self.inflight.pop_back() {
+            for m in batch.into_iter().rev() {
+                if keep(&m) {
+                    n += 1;
+                    self.msgs.push_front(m);
+                }
+            }
+        }
+        self.stats.sent += n as u64; // redeliveries count as new sends
+        self.stats.max_depth = self.stats.max_depth.max(self.msgs.len());
+        n
+    }
+
+    /// Iterate the visible messages in delivery order.
+    pub fn iter(&self) -> impl Iterator<Item = &M> {
+        self.msgs.iter()
     }
 }
 
@@ -132,7 +209,7 @@ pub type QHandler<W, M> = fn(&mut Sim<W>, &mut W, Vec<M>);
 
 /// Drive the mapping: if messages are pending and a concurrency slot is
 /// free, schedule a batch delivery. Call after `send()` and after `done()`.
-pub fn pump<W: 'static, M: 'static>(
+pub fn pump<W: 'static, M: Clone + 'static>(
     sim: &mut Sim<W>,
     w: &mut W,
     acc: QAcc<W, M>,
@@ -168,15 +245,17 @@ pub fn pump<W: 'static, M: 'static>(
 }
 
 /// Release the consumer slot taken by a delivered batch and re-arm the
-/// pump (delivers the next batch if messages are waiting).
-pub fn done<W: 'static, M: 'static>(
+/// pump (delivers the next batch if messages are waiting). Also acks the
+/// batch under inflight tracking — after this, a crash cannot redeliver it.
+pub fn done<W: 'static, M: Clone + 'static>(
     sim: &mut Sim<W>,
     w: &mut W,
     acc: QAcc<W, M>,
     handler: QHandler<W, M>,
 ) {
-    let (_, esm) = acc(w);
+    let (q, esm) = acc(w);
     debug_assert!(esm.inflight > 0, "mq::done without matching delivery");
+    q.ack_batch();
     esm.inflight = esm.inflight.saturating_sub(1);
     pump(sim, w, acc, handler);
 }
@@ -263,6 +342,29 @@ mod tests {
         sim.run(&mut w, 10_000);
         assert_eq!(w.seen.len(), 10);
         assert!(w.seen.iter().all(|b| b.len() == 1));
+    }
+
+    #[test]
+    fn inflight_tracking_redelivers_unacked_batches() {
+        let mut q: SqsQueue<u32> = SqsQueue::fifo("t").with_inflight_tracking();
+        for i in 0..15 {
+            q.send(i);
+        }
+        let first = q.take_batch(10);
+        assert_eq!(first, (0..10).collect::<Vec<_>>());
+        assert_eq!(q.inflight_len(), 10);
+        q.ack_batch(); // consumer finished — gone for good
+        assert_eq!(q.inflight_len(), 0);
+
+        let second = q.take_batch(10);
+        assert_eq!(second, (10..15).collect::<Vec<_>>());
+        // The consumer dies before acking: recovery makes the batch
+        // visible again, in order, ahead of anything sent later.
+        q.send(99);
+        assert_eq!(q.recover_inflight(), 5);
+        assert_eq!(q.inflight_len(), 0);
+        let redelivered = q.take_batch(10);
+        assert_eq!(redelivered, vec![10, 11, 12, 13, 14, 99]);
     }
 
     #[test]

@@ -63,7 +63,12 @@ use std::borrow::Borrow;
 use std::collections::HashMap;
 use std::fmt;
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
+
+/// Current liveness epoch of the intern table. 0 = no census has ever run
+/// (everything counts as live). Bumped by [`DagId::begin_live_epoch`].
+static LIVE_EPOCH: AtomicU64 = AtomicU64::new(0);
 
 /// The implicit tenant of all un-prefixed API paths and of every internal
 /// caller that predates multi-tenancy.
@@ -115,6 +120,13 @@ pub struct DagIdEntry {
     full: &'static str,
     tenant: &'static str,
     local: &'static str,
+    /// Liveness epoch this entry was last marked in (see
+    /// [`DagId::begin_live_epoch`]). Entries are never removed — pointer
+    /// identity is the whole point — so "garbage collection" is an
+    /// epoch-stamped liveness census: recovery bumps the epoch and
+    /// re-marks every symbol reachable from the restored state, and the
+    /// `live_dag_ids` gauge counts current-epoch entries.
+    live_epoch: AtomicU64,
 }
 
 /// An interned, `Copy` DAG identifier — the key type of the entire event
@@ -145,8 +157,14 @@ impl DagId {
             Some((t, l)) => (t, l),
             None => (DEFAULT_TENANT, full),
         };
-        let entry: &'static DagIdEntry =
-            Box::leak(Box::new(DagIdEntry { full, tenant, local }));
+        let entry: &'static DagIdEntry = Box::leak(Box::new(DagIdEntry {
+            full,
+            tenant,
+            local,
+            // A freshly interned id is live in the current epoch: new
+            // symbols appearing after a census must not read as garbage.
+            live_epoch: AtomicU64::new(LIVE_EPOCH.load(Ordering::Relaxed)),
+        }));
         table.insert(full, entry);
         DagId(entry)
     }
@@ -183,6 +201,35 @@ impl DagId {
     /// operator health payload.
     pub fn interned_count() -> usize {
         interner().lock().unwrap().len()
+    }
+
+    /// Start a new liveness epoch. The table itself never shrinks (symbols
+    /// are leaked pointer identities; removing an entry would violate
+    /// pointer-equality semantics for copies still in flight), so GC is a
+    /// *census*: bump the epoch, then [`DagId::mark_live`] every symbol
+    /// reachable from authoritative state. Recovery is the natural census
+    /// point — the restored checkpoint enumerates exactly the ids the
+    /// control plane still references.
+    pub fn begin_live_epoch() {
+        LIVE_EPOCH.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark this symbol live in the current epoch.
+    pub fn mark_live(self) {
+        self.0.live_epoch.store(LIVE_EPOCH.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Number of interned ids live in the current epoch — the
+    /// `live_dag_ids` health gauge. Before any census (`epoch == 0`)
+    /// every entry counts; after a recovery it shrinks to the ids the
+    /// restored state actually references (plus anything interned since).
+    pub fn live_count() -> usize {
+        let epoch = LIVE_EPOCH.load(Ordering::Relaxed);
+        let table = interner().lock().unwrap();
+        if epoch == 0 {
+            return table.len();
+        }
+        table.values().filter(|e| e.live_epoch.load(Ordering::Relaxed) == epoch).count()
     }
 
     /// A reserved symbol that can never name a real workflow: its string

@@ -30,6 +30,7 @@ pub mod api;
 pub mod cloud;
 pub mod cost;
 pub mod dag;
+pub mod durability;
 pub mod executor;
 pub mod exp;
 pub mod metrics;

@@ -8,6 +8,7 @@
 use crate::cloud::caas::CaasConfig;
 use crate::cloud::db::DbServiceConfig;
 use crate::cloud::faas::{specs, FunctionSpec};
+use crate::durability::DurabilityConfig;
 use crate::scheduler::SchedLimits;
 use crate::sim::time::SimDuration;
 
@@ -46,6 +47,10 @@ pub struct Config {
     pub caas_task_overhead: (f64, f64),
     /// Virtual-time horizon guard for experiment loops.
     pub max_events: u64,
+    /// Checkpoint + durable-WAL settings. Disabled by default: the armed
+    /// checkpoint tick keeps the event heap non-empty, so worlds that
+    /// `run()` to quiescence must opt in (and drive with `run_until`).
+    pub durability: DurabilityConfig,
 }
 
 impl Default for Config {
@@ -67,6 +72,7 @@ impl Default for Config {
             faas_task_overhead: (0.7, 1.2),
             caas_task_overhead: (0.1, 0.4),
             max_events: 50_000_000,
+            durability: DurabilityConfig::default(),
         }
     }
 }

@@ -32,6 +32,7 @@ use crate::cloud::mq::{self, Esm, EsmConfig, SqsQueue};
 use crate::cloud::stepfn::{StepFnHost, StepFunctions};
 use crate::dag::spec::{DagSpec, ExecKind};
 use crate::dag::state::{DagId, RunState, RunType, TiState};
+use crate::durability::{self, Durability, DurabilityHost};
 use crate::executor::{self, TaskRef};
 use crate::parser::{self, UploadEvent};
 use crate::sairflow::config::Config;
@@ -100,6 +101,8 @@ pub struct World {
     /// API gateway admission control: per-tenant token buckets + counters
     /// (Fig. 1 (14) — the interface of the shared control plane).
     pub gateway: Gateway,
+    /// Checkpoint + durable-WAL state ([`crate::durability`]).
+    pub dur: Durability,
     /// Optional PJRT engine for `Compute` task payloads (the data plane).
     pub engine: Option<crate::runtime::Engine>,
 }
@@ -127,6 +130,20 @@ impl DbHost for World {
     fn on_committed(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>) {
         // Fig. 1 (5): the only event source of the control plane.
         cdc::on_commit(sim, w, changes);
+    }
+    fn persist_txn(_sim: &mut Sim<Self>, w: &mut Self, txn: &Txn, commit_ts: SimTime) {
+        // Write-ahead: the durable log records the transaction before its
+        // write set is applied (no-op unless durability is enabled).
+        durability::persist_txn(w, txn, commit_ts);
+    }
+}
+
+impl DurabilityHost for World {
+    fn durability(&mut self) -> &mut Durability {
+        &mut self.dur
+    }
+    fn blob_store(&mut self) -> &mut BlobStore {
+        &mut self.blob
     }
 }
 
@@ -297,7 +314,7 @@ fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload
     let cpu = secs(sim.rng.uniform(0.005, 0.02));
     let inv = ctx.inv;
     sim.after(cpu, "preparse.work", move |sim, w| {
-        for change in changes {
+        for &change in &changes {
             // `Change` is `Copy`: routing + dispatch fan-out share the
             // same 24-byte value — the CDC hot path allocates nothing.
             let ev = BusEvent::Change(change);
@@ -307,8 +324,9 @@ fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload
             }
         }
         faas::complete(sim, w, inv, true);
-        // Release the Kinesis shard for its next batch.
-        kinesis::delivered(sim, w, shard);
+        // Release the Kinesis shard for its next batch, handing the batch
+        // buffer back so the shard recycles it (allocation-free hand-off).
+        kinesis::delivered(sim, w, shard, changes);
     });
 }
 
@@ -480,14 +498,16 @@ impl World {
             cron: CronService::new(),
             blob: BlobStore::new(),
             stepfn: StepFunctions::default(),
-            upload_q: SqsQueue::standard("dag-uploads"),
+            // Both durable queues track taken-but-unacked batches so a
+            // recovery can redeliver them (SQS visibility timeout).
+            upload_q: SqsQueue::standard("dag-uploads").with_inflight_tracking(),
             upload_esm: Esm::new(EsmConfig {
                 batch_size: 10,
                 batch_window: secs(0.5),
                 delivery_latency: (0.02, 0.08),
                 max_concurrency: 8,
             }),
-            sched_q: SqsQueue::fifo("scheduler-feed"),
+            sched_q: SqsQueue::fifo("scheduler-feed").with_inflight_tracking(),
             sched_esm: Esm::new(EsmConfig::fifo_scheduler_feed()),
             fexec_q: SqsQueue::standard("function-executor"),
             fexec_esm: Esm::new(EsmConfig::executor_feed()),
@@ -495,6 +515,7 @@ impl World {
             cexec_esm: Esm::new(EsmConfig::executor_feed()),
             fns,
             gateway: Gateway::new(),
+            dur: Durability::new(cfg.durability.clone()),
             engine: None,
             faas: faas_platform,
             caas: caas_platform,

@@ -52,18 +52,43 @@ pub struct Sim<W> {
     pub executed: u64,
     /// When set, every executed event is appended as `(time, label)`.
     pub trace: Option<Vec<(SimTime, &'static str)>>,
+    /// Fault-injection kill switch: once set, the run loops stop before
+    /// popping another event. Pending events (in-flight invocations,
+    /// undelivered CDC batches, uncommitted transactions) die with the
+    /// engine — exactly the atomicity a process kill has.
+    halted: bool,
 }
 
 impl<W> Sim<W> {
     pub fn new(seed: u64) -> Self {
+        Self::starting_at(seed, 0)
+    }
+
+    /// An engine whose clock starts at `start` instead of 0. Recovery uses
+    /// this so a cold-started control plane resumes virtual time where the
+    /// killed one stopped (timestamps stay monotonic across the crash).
+    pub fn starting_at(seed: u64, start: SimTime) -> Self {
         Sim {
-            now: 0,
+            now: start,
             seq: 0,
             heap: BinaryHeap::new(),
             rng: Rng::new(seed),
             executed: 0,
             trace: None,
+            halted: false,
         }
+    }
+
+    /// Kill the engine: no further events execute in `run`/`run_until`.
+    /// Call from a scheduled fault-injection event to model the platform
+    /// terminating the process mid-flight.
+    pub fn halt(&mut self) {
+        self.halted = true;
+    }
+
+    /// Whether [`Sim::halt`] has been called.
+    pub fn halted(&self) -> bool {
+        self.halted
     }
 
     /// Current virtual time.
@@ -121,7 +146,7 @@ impl<W> Sim<W> {
     /// runaway self-scheduling loops.
     pub fn run(&mut self, world: &mut W, max_events: u64) {
         let mut n = 0;
-        while self.step(world) {
+        while !self.halted && self.step(world) {
             n += 1;
             assert!(n < max_events, "simulation exceeded {max_events} events — runaway loop?");
         }
@@ -132,14 +157,16 @@ impl<W> Sim<W> {
     pub fn run_until(&mut self, world: &mut W, t: SimTime, max_events: u64) {
         let mut n = 0;
         while let Some(head) = self.heap.peek() {
-            if head.at > t {
+            if self.halted || head.at > t {
                 break;
             }
             self.step(world);
             n += 1;
             assert!(n < max_events, "simulation exceeded {max_events} events — runaway loop?");
         }
-        self.now = self.now.max(t);
+        if !self.halted {
+            self.now = self.now.max(t);
+        }
     }
 
     /// Time of the next pending event, if any.
@@ -219,6 +246,30 @@ mod tests {
         }
         sim.soon("start", forever);
         sim.run(&mut w, 1000);
+    }
+
+    #[test]
+    fn halt_stops_the_run_and_strands_pending_events() {
+        let mut sim: Sim<World> = Sim::new(1);
+        let mut w = World::default();
+        sim.after(SECOND, "a", |s, w| w.log.push((s.now(), 1)));
+        sim.after(2 * SECOND, "kill", |s, _w| s.halt());
+        sim.after(3 * SECOND, "b", |s, w| w.log.push((s.now(), 2)));
+        sim.run(&mut w, 100);
+        assert!(sim.halted());
+        assert_eq!(w.log, vec![(SECOND, 1)]);
+        assert_eq!(sim.pending(), 1, "the in-flight event dies with the engine");
+        assert_eq!(sim.now(), 2 * SECOND, "the clock froze at the kill instant");
+    }
+
+    #[test]
+    fn starting_at_resumes_the_clock() {
+        let mut sim: Sim<World> = Sim::starting_at(1, 10 * SECOND);
+        let mut w = World::default();
+        assert_eq!(sim.now(), 10 * SECOND);
+        sim.after(SECOND, "a", |s, w| w.log.push((s.now(), 1)));
+        sim.run(&mut w, 100);
+        assert_eq!(w.log, vec![(11 * SECOND, 1)]);
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Kill-the-scheduler recovery scenarios for the durability subsystem.
+//!
+//! Each scenario drives a scripted workload on a durability-enabled
+//! world, kills the process at a chosen virtual time (dropping the engine
+//! strands every in-flight event — undelivered CDC batches, running
+//! workers, pending commits), cold-starts a fresh control plane with
+//! [`durability::recover`], and compares the final state against an
+//! uninterrupted run of the same script and seed.
+//!
+//! The comparison is over *logical* outcomes — runs keyed by
+//! `(dag, logical_ts, run_type)` and task states per run — not wall-clock
+//! fields: a recovered world re-executes orphaned work, so `try_number`,
+//! hosts and timestamps legitimately differ while the set of runs and
+//! their terminal states must not (exactly-once: no lost runs, no doubled
+//! runs).
+//!
+//! All external inputs of a script land (and commit) before the earliest
+//! kill point, so everything in flight at the kill is *internal* work the
+//! durable state can regenerate. An input whose commit is still in flight
+//! when the process dies is lost with it — that is correct crash
+//! semantics, not a recovery bug (see docs/DURABILITY.md).
+
+use sairflow::cloud::db::{DagRow, DagRunRow, MetaDb, Txn, Write};
+use sairflow::dag::spec::DagSpec;
+use sairflow::dag::state::{DagId, RunState, RunType};
+use sairflow::durability::{self, recover};
+use sairflow::sairflow::{backfill_dag, delete_dag, trigger_dag, upload_dag, Config, World};
+use sairflow::sim::engine::Sim;
+use sairflow::sim::time::{secs, SimTime, MINUTE, SECOND};
+use sairflow::util::prop::check;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+const MAX_EVENTS: u64 = 10_000_000;
+
+/// Recovery runs the process-global interner liveness census
+/// ([`DagId::begin_live_epoch`]); serialize this binary's tests so two
+/// censuses never interleave.
+static EPOCH_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    EPOCH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A world with checkpoints + durable WAL enabled and the tick armed.
+fn durable_world(seed: u64) -> (Sim<World>, World) {
+    let mut cfg = Config::seeded(seed);
+    cfg.durability.enabled = true;
+    cfg.durability.checkpoint_interval = secs(15.0);
+    let w = World::new(cfg);
+    let mut sim = w.sim();
+    let mut w = w;
+    durability::arm(&mut sim, &mut w);
+    (sim, w)
+}
+
+/// A chain DAG without a schedule (manual/backfill triggering only —
+/// recovery re-arms cron from "now", which would shift scheduled fire
+/// times relative to the uninterrupted run and make equality vacuous).
+fn manual_chain(dag_id: &str, n: u32, p_secs: f64) -> DagSpec {
+    let mut spec = sairflow::workloads::synthetic::chain_dag(dag_id, n, p_secs, 5.0);
+    spec.period = None;
+    spec
+}
+
+/// Logical run outcomes: `(dag, logical_ts, run_type) → run state`, plus
+/// each run's task states. Every field that survives a crash must match
+/// the uninterrupted run; everything execution-dependent (timestamps,
+/// hosts, try numbers) is deliberately excluded.
+type Outcomes = BTreeMap<(String, SimTime, String), (String, Vec<String>)>;
+
+fn outcomes(w: &World) -> Outcomes {
+    let db = w.db.read();
+    db.dag_runs
+        .values()
+        .map(|r| {
+            let tis: Vec<String> = db
+                .tis_of_run(r.dag_id, r.run_id)
+                .iter()
+                .map(|t| t.state.to_string())
+                .collect();
+            (
+                (r.dag_id.to_string(), r.logical_ts, r.run_type.to_string()),
+                (r.state.to_string(), tis),
+            )
+        })
+        .collect()
+}
+
+/// The scripted workload of the crash matrix: two manual DAGs, repeated
+/// triggers, a backfill. Every input is issued (and, commit latency being
+/// milliseconds, committed) before t = 14 s.
+fn crash_matrix_script(sim: &mut Sim<World>) {
+    sim.at(0, "script.upload", |sim, w| {
+        upload_dag(sim, w, &manual_chain("etl", 2, 1.0));
+        upload_dag(sim, w, &manual_chain("ops", 2, 1.0));
+    });
+    sim.at(10 * SECOND, "script.trigger", |sim, w| trigger_dag(sim, w, "etl"));
+    sim.at(11 * SECOND, "script.trigger", |sim, w| {
+        trigger_dag(sim, w, "ops");
+        trigger_dag(sim, w, "etl");
+    });
+    sim.at(13 * SECOND, "script.backfill", |sim, w| {
+        backfill_dag(sim, w, "etl", &[SECOND, 2 * SECOND, 3 * SECOND]);
+    });
+}
+
+/// Run the script uninterrupted to `horizon`.
+fn uninterrupted(seed: u64, script: fn(&mut Sim<World>), horizon: SimTime) -> World {
+    let (mut sim, mut w) = durable_world(seed);
+    script(&mut sim);
+    sim.run_until(&mut w, horizon, MAX_EVENTS);
+    w
+}
+
+/// Run the script, kill the process at `kill_at` (drop the engine:
+/// everything in flight is stranded), recover, and drive the recovered
+/// world to `horizon`.
+fn killed_and_recovered(
+    seed: u64,
+    script: fn(&mut Sim<World>),
+    kill_at: SimTime,
+    horizon: SimTime,
+) -> World {
+    let (mut sim, mut w) = durable_world(seed);
+    script(&mut sim);
+    sim.run_until(&mut w, kill_at, MAX_EVENTS);
+    sim.halt();
+    drop(sim); // the kill: pending events die with the engine
+    let (mut sim, mut w) = recover(w, kill_at);
+    assert_eq!(w.dur.recoveries, 1);
+    sim.run_until(&mut w, horizon, MAX_EVENTS);
+    w
+}
+
+#[test]
+fn kill_matrix_recovers_exactly_once() {
+    let _g = lock();
+    let horizon = 3 * MINUTE;
+    let reference = uninterrupted(901, crash_matrix_script, horizon);
+    let want = outcomes(&reference);
+    // Sanity on the reference itself: 5 etl runs (2 manual + 3 backfill)
+    // + 1 ops run, all successful.
+    assert_eq!(want.len(), 6, "reference runs: {want:?}");
+    assert!(want.values().all(|(state, _)| state == "success"), "{want:?}");
+
+    // Kill times sweep the active window: scheduler passes, commit→CDC
+    // gaps, backfill expansion/promotion and task execution are all in
+    // flight at one sweep point or another.
+    for kill_at in [15 * SECOND, 18 * SECOND, 21 * SECOND, 25 * SECOND, 30 * SECOND, 40 * SECOND]
+    {
+        let w = killed_and_recovered(901, crash_matrix_script, kill_at, horizon);
+        let got = outcomes(&w);
+        assert_eq!(got, want, "kill at {}s diverged", kill_at / SECOND);
+        // No doubled runs hiding behind the keyed map: row count matches.
+        assert_eq!(w.db.read().dag_runs.len(), want.len(), "kill at {}s", kill_at / SECOND);
+        assert!(w.dur.epoch >= 1, "recovery re-checkpointed");
+    }
+}
+
+#[test]
+fn kill_mid_backfill_preserves_fifo_order_and_budget() {
+    let _g = lock();
+    // Budget 1 serializes backfill promotion, making the FIFO order
+    // observable as strictly non-overlapping (start_next >= end_prev)
+    // execution in *arrival* order — which differs from key order here.
+    let script: fn(&mut Sim<World>) = |sim| {
+        sim.at(0, "script.upload", |sim, w| {
+            upload_dag(sim, w, &manual_chain("bf", 2, 5.0));
+        });
+        sim.at(10 * SECOND, "script.backfill", |sim, w| {
+            backfill_dag(sim, w, "bf", &[3 * SECOND, SECOND, 2 * SECOND]);
+        });
+    };
+    let horizon = 4 * MINUTE;
+    let build = |kill: Option<SimTime>| -> World {
+        let mut cfg = Config::seeded(902);
+        cfg.durability.enabled = true;
+        cfg.durability.checkpoint_interval = secs(15.0);
+        cfg.limits.max_active_backfill_runs = 1;
+        let w = World::new(cfg);
+        let mut sim = w.sim();
+        let mut w = w;
+        durability::arm(&mut sim, &mut w);
+        script(&mut sim);
+        match kill {
+            None => {
+                sim.run_until(&mut w, horizon, MAX_EVENTS);
+                w
+            }
+            Some(at) => {
+                sim.run_until(&mut w, at, MAX_EVENTS);
+                drop(sim);
+                let (mut sim, mut w) = recover(w, at);
+                sim.run_until(&mut w, horizon, MAX_EVENTS);
+                w
+            }
+        }
+    };
+
+    let reference = build(None);
+    // Kill while run #1 (arrival order) executes and the other two are
+    // still parked in the FIFO.
+    let recovered = build(Some(25 * SECOND));
+
+    for (label, w) in [("uninterrupted", &reference), ("recovered", &recovered)] {
+        let db = w.db.read();
+        let runs: Vec<_> = db
+            .dag_runs
+            .values()
+            .filter(|r| r.run_type == RunType::Backfill)
+            .copied()
+            .collect();
+        assert_eq!(runs.len(), 3, "{label}: exactly the 3 submitted dates");
+        assert!(
+            runs.iter().all(|r| r.state == RunState::Success),
+            "{label}: all complete: {runs:?}"
+        );
+        // Arrival order was 3s, 1s, 2s — promotion must follow it, not
+        // the logical-date order.
+        let mut by_start = runs.clone();
+        by_start.sort_by_key(|r| r.start.unwrap());
+        let order: Vec<SimTime> = by_start.iter().map(|r| r.logical_ts).collect();
+        assert_eq!(
+            order,
+            vec![3 * SECOND, SECOND, 2 * SECOND],
+            "{label}: FIFO promotion order"
+        );
+        // Budget 1: executions never overlap.
+        for pair in by_start.windows(2) {
+            assert!(
+                pair[1].start.unwrap() >= pair[0].end.unwrap(),
+                "{label}: budget-1 runs overlapped: {pair:?}"
+            );
+        }
+    }
+    assert_eq!(outcomes(&recovered), outcomes(&reference));
+}
+
+#[test]
+fn kill_with_delete_and_triggers_in_flight() {
+    let _g = lock();
+    // A delete committed just before the kill: its CDC fan-out (updater
+    // unregistration) and the victim's in-flight run events die with the
+    // process. Recovery must keep the DAG deleted, not resurrect rows
+    // from stale queue messages, and still complete the survivor.
+    let script: fn(&mut Sim<World>) = |sim| {
+        sim.at(0, "script.upload", |sim, w| {
+            upload_dag(sim, w, &manual_chain("keep", 2, 2.0));
+            upload_dag(sim, w, &manual_chain("victim", 2, 8.0));
+        });
+        sim.at(10 * SECOND, "script.trigger", |sim, w| {
+            trigger_dag(sim, w, "victim");
+            trigger_dag(sim, w, "keep");
+        });
+        sim.at(14 * SECOND, "script.delete", |sim, w| delete_dag(sim, w, "victim"));
+    };
+    let horizon = 3 * MINUTE;
+    let reference = uninterrupted(903, script, horizon);
+    for kill_at in [15 * SECOND, 16 * SECOND, 20 * SECOND] {
+        let w = killed_and_recovered(903, script, kill_at, horizon);
+        let db = w.db.read();
+        assert!(!db.dags.contains_key("victim"), "kill {}s: dag row gone", kill_at / SECOND);
+        assert!(
+            !db.serialized.contains_key("victim"),
+            "kill {}s: spec gone",
+            kill_at / SECOND
+        );
+        assert!(
+            db.dag_runs.values().all(|r| r.dag_id.as_str() != "victim"),
+            "kill {}s: no resurrected runs",
+            kill_at / SECOND
+        );
+        assert_eq!(outcomes(&w), outcomes(&reference), "kill at {}s", kill_at / SECOND);
+    }
+}
+
+#[test]
+fn recovery_shrinks_the_interner_to_live_ids() {
+    let _g = lock();
+    // Upload three DAGs, delete two, then crash: the dead names stay in
+    // the intern table forever (symbols are identity), but the liveness
+    // census run by recovery must count only the ids the recovered state
+    // still references — the `live_dag_ids` gauge shrinks to the live set.
+    let script: fn(&mut Sim<World>) = |sim| {
+        sim.at(0, "script.upload", |sim, w| {
+            upload_dag(sim, w, &manual_chain("alive", 2, 1.0));
+            upload_dag(sim, w, &manual_chain("dead-a", 1, 1.0));
+            upload_dag(sim, w, &manual_chain("dead-b", 1, 1.0));
+        });
+        sim.at(10 * SECOND, "script.trigger", |sim, w| trigger_dag(sim, w, "alive"));
+        sim.at(12 * SECOND, "script.delete", |sim, w| {
+            delete_dag(sim, w, "dead-a");
+            delete_dag(sim, w, "dead-b");
+        });
+    };
+    let (mut sim, mut w) = durable_world(904);
+    script(&mut sim);
+    // Quiesce fully before the kill so the live set is exactly the table
+    // contents (no queued messages referencing other ids).
+    sim.run_until(&mut w, MINUTE, MAX_EVENTS);
+    let now = sim.now();
+    drop(sim);
+
+    assert!(DagId::interned_count() >= 3, "all three names interned");
+    let (_sim, w) = recover(w, now);
+    let expected: std::collections::BTreeSet<&str> = {
+        let db = w.db.read();
+        db.dags
+            .keys()
+            .map(|d| d.as_str())
+            .chain(db.serialized.keys().map(|d| d.as_str()))
+            .chain(db.dag_runs.keys().map(|k| k.0.as_str()))
+            .chain(db.task_instances.keys().map(|k| k.0.as_str()))
+            .collect()
+    };
+    assert!(expected.contains("alive"));
+    assert!(!expected.contains("dead-a") && !expected.contains("dead-b"));
+    assert_eq!(
+        DagId::live_count(),
+        expected.len(),
+        "gauge shrank to the census of the recovered state"
+    );
+    assert!(DagId::live_count() < DagId::interned_count(), "dead names excluded");
+}
+
+#[test]
+fn durability_counters_after_recovery() {
+    let _g = lock();
+    let horizon = 3 * MINUTE;
+    let w = killed_and_recovered(905, crash_matrix_script, 20 * SECOND, horizon);
+    assert_eq!(w.dur.recoveries, 1);
+    assert!(w.dur.stats.checkpoints >= 1, "recovery checkpoint taken");
+    assert!(w.dur.stats.wal_objects > 0, "post-recovery commits logged");
+    assert!(w.dur.epoch >= 1);
+    assert_eq!(w.dur.last_checkpoint_lsn, w.db.read().durable_lsn().unwrap_or(0));
+    // The in-memory WAL tail never reaches past the durable LSN backwards:
+    // whatever is retained below it is windowed surplus, everything at or
+    // above it is present (checked structurally by the property test
+    // below; here just the gauge relation).
+    let db = w.db.read();
+    assert_eq!(db.wal_tail_len() as u64, db.next_lsn() - w.dur.last_checkpoint_lsn);
+}
+
+/// Satellite property: the checkpoint (durable) LSN always dominates the
+/// truncated WAL tail — after any interleaving of commits, checkpoints
+/// and `wal_retain` pressure, every LSN in `[durable_lsn, next_lsn)` is
+/// still in the in-memory window (no un-replayable gap), and the window
+/// shrinks back toward `wal_retain` once a checkpoint covers it.
+#[test]
+fn checkpoint_lsn_always_dominates_truncated_wal_tail() {
+    let _g = lock();
+    check("no un-replayable WAL gap", 120, |g| {
+        let mut db = MetaDb::new();
+        db.wal_retain = g.sized(1, 12);
+        db.set_durable_lsn(0);
+        let mut setup = Txn::new();
+        setup.push(Write::UpsertDag(DagRow {
+            dag_id: "prop".into(),
+            fileloc: "dags/prop.json".into(),
+            period: None,
+            is_paused: false,
+        }));
+        db.apply(setup, 0);
+
+        let mut next_run: u64 = 0;
+        let steps = g.sized(5, 60);
+        for step in 0..steps {
+            if g.u64_in(0, 4) == 0 {
+                // Checkpoint: everything below next_lsn becomes durable.
+                let lsn = db.next_lsn();
+                db.set_durable_lsn(lsn);
+                if db.wal_retained_len() > db.wal_retain {
+                    return Err(format!(
+                        "step {step}: window {} above retain {} right after checkpoint",
+                        db.wal_retained_len(),
+                        db.wal_retain
+                    ));
+                }
+            } else {
+                // A commit of 1–4 run inserts/state flips (each emits one
+                // change record).
+                let mut txn = Txn::new();
+                for _ in 0..g.sized(1, 4) {
+                    if next_run > 0 && g.bool() {
+                        let run_id = g.u64_in(1, next_run);
+                        txn.push(Write::SetRunState {
+                            dag_id: "prop".into(),
+                            run_id,
+                            state: RunState::Success,
+                        });
+                    } else {
+                        next_run += 1;
+                        txn.push(Write::InsertDagRun(DagRunRow {
+                            dag_id: "prop".into(),
+                            run_id: next_run,
+                            logical_ts: next_run * SECOND,
+                            run_type: RunType::Manual,
+                            state: RunState::Queued,
+                            start: None,
+                            end: None,
+                        }));
+                    }
+                }
+                db.apply(txn, step as u64 * SECOND);
+            }
+
+            // Invariant: the tail [durable_lsn, next_lsn) is fully
+            // retained, whatever the wal_retain pressure.
+            let d = db.durable_lsn().expect("attached");
+            let n = db.next_lsn();
+            if d > n {
+                return Err(format!("step {step}: durable {d} leads log {n}"));
+            }
+            if n > d {
+                let (front, back) =
+                    db.wal_lsn_range().ok_or_else(|| format!("step {step}: tail missing"))?;
+                if front > d {
+                    return Err(format!(
+                        "step {step}: un-replayable gap — front {front} > durable {d}"
+                    ));
+                }
+                if back + 1 != n {
+                    return Err(format!("step {step}: back {back} != next {n} - 1"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

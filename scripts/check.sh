@@ -13,6 +13,12 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo test =="
 cargo test -q
 
+echo "== kill-the-scheduler recovery scenarios =="
+# Run the durability suite by name (it is part of `cargo test` above, but
+# a green gate must say so explicitly): checkpoint + WAL replay must
+# reproduce uninterrupted runs exactly-once at every swept crash point.
+cargo test -q --test recovery
+
 echo "== sairflow-lint (determinism + event fabric) =="
 # The linter's own tests first (they include the HEAD-is-clean check),
 # then the negative control — the gate must *fail* on the seeded fixture

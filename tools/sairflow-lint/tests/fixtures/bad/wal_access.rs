@@ -1,0 +1,10 @@
+//! Known-bad fixture for the `wal-access` rule: a health gauge poking at
+//! the database's WAL field directly instead of the accessor surface.
+
+pub fn wal_depth_gauge(db: &MetaDb) -> u64 {
+    db.wal.len() as u64
+}
+
+pub fn first_record(db: &MetaDb) -> Option<u64> {
+    db.wal[0].0.into()
+}

@@ -34,7 +34,7 @@ use crate::dag::state::{DagId, RunState, RunType, TiState, DEFAULT_TENANT};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration, SimTime};
 use std::collections::{btree_map, BTreeMap, BTreeSet, VecDeque};
-use std::ops::{Bound, Deref, DerefMut, Index, RangeBounds};
+use std::ops::{Bound, Deref, DerefMut, RangeBounds};
 
 /// Key of a DAG run: (dag id symbol, run_id). `Copy` — range bounds and
 /// write-set keys never allocate.
@@ -169,17 +169,9 @@ impl DerefMut for RunTable {
     }
 }
 
-impl Index<&(String, u64)> for RunTable {
-    type Output = DagRunRow;
-    fn index(&self, key: &(String, u64)) -> &DagRunRow {
-        // Non-inserting: a never-interned id keys no row, so indexing it
-        // panics exactly like a missing `BTreeMap` key — without growing
-        // the intern table as a side effect.
-        DagId::lookup(&key.0)
-            .and_then(|d| self.map.get(&(d, key.1)))
-            .unwrap_or_else(|| panic!("no dag_run row for ({:?}, {})", key.0, key.1))
-    }
-}
+// The string-keyed `Index<&(String, u64)>` convenience lives in
+// [`crate::cloud::testkit`]: it panics on a missing row by design (test
+// ergonomics), and this file is held to the panic-freedom lint standard.
 
 /// Row of the `tenant` table: one tenant of the shared control plane.
 /// Resolved by the API router before dispatch (auth + admission) and by
@@ -1282,9 +1274,16 @@ impl DbService {
         txn: &Txn,
         service: SimDuration,
     ) -> SimTime {
-        // Earliest-free server.
-        let (idx, &server_free) =
-            self.free_at.iter().enumerate().min_by_key(|(_, &t)| t).expect(">=1 server");
+        // Earliest-free server. `free_at` always holds at least one slot
+        // (`new` clamps `servers` to 1); an impossible empty pool degrades
+        // to "slot 0, free now" rather than panicking mid-commit.
+        let (idx, server_free) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .map(|(i, &t)| (i, t))
+            .unwrap_or((0, 0));
         let mut start = now.max(server_free);
         // Hot-row locks: wait for every lock this txn needs. `Copy` keys:
         // collecting and indexing them allocates no strings.
@@ -1301,7 +1300,9 @@ impl DbService {
         for k in keys {
             self.locks.insert(k, finish + hold);
         }
-        self.free_at[idx] = finish;
+        if let Some(slot) = self.free_at.get_mut(idx) {
+            *slot = finish;
+        }
         let wait = start - now;
         self.meta.stats.queue_wait_total += wait;
         self.meta.stats.max_queue_wait = self.meta.stats.max_queue_wait.max(wait);

@@ -29,3 +29,4 @@ pub mod faas;
 pub mod kinesis;
 pub mod mq;
 pub mod stepfn;
+pub mod testkit;

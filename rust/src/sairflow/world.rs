@@ -205,9 +205,24 @@ pub fn upload_acc(w: &mut World) -> (&mut SqsQueue<UploadEvent>, &mut Esm) {
 }
 
 pub fn upload_handler(sim: &mut Sim<World>, w: &mut World, batch: Vec<UploadEvent>) {
+    // Ack-after-commit, mirroring `sched_handler`: the batch is acked only
+    // once the parse lambda's DB commit callback has run. Acking before the
+    // commit landed left a window where a crash dropped the upload event
+    // *and* the rows it should have produced (the "Upload ack" window in
+    // DURABILITY.md). If the invocation fails the batch is redelivered at
+    // the front of the queue; parsing is idempotent (UpsertDag +
+    // PutSerializedDag overwrite), so redelivery is safe.
     let f = w.fns.parser;
-    faas::invoke(sim, w, f, FnPayload::ParseBatch(batch));
-    mq::done(sim, w, upload_acc, upload_handler);
+    let retry = batch.clone();
+    faas::invoke_cb(sim, w, f, FnPayload::ParseBatch(batch), move |sim, w, ok| {
+        if !ok {
+            w.upload_q.stats.sent += retry.len() as u64; // redelivery
+            for ev in retry.into_iter().rev() {
+                w.upload_q.send_front(ev); // restore original order
+            }
+        }
+        mq::done(sim, w, upload_acc, upload_handler);
+    });
 }
 
 pub fn sched_acc(w: &mut World) -> (&mut SqsQueue<SchedMsg>, &mut Esm) {

@@ -127,7 +127,7 @@ fn killed_and_recovered(
     sim.run_until(&mut w, kill_at, MAX_EVENTS);
     sim.halt();
     drop(sim); // the kill: pending events die with the engine
-    let (mut sim, mut w) = recover(w, kill_at);
+    let (mut sim, mut w) = recover(w, kill_at).expect("durable state readable");
     assert_eq!(w.dur.recoveries, 1);
     sim.run_until(&mut w, horizon, MAX_EVENTS);
     w
@@ -191,7 +191,7 @@ fn kill_mid_backfill_preserves_fifo_order_and_budget() {
             Some(at) => {
                 sim.run_until(&mut w, at, MAX_EVENTS);
                 drop(sim);
-                let (mut sim, mut w) = recover(w, at);
+                let (mut sim, mut w) = recover(w, at).expect("durable state readable");
                 sim.run_until(&mut w, horizon, MAX_EVENTS);
                 w
             }
@@ -276,6 +276,57 @@ fn kill_with_delete_and_triggers_in_flight() {
 }
 
 #[test]
+fn kill_inside_the_upload_ack_window_replays_the_parse() {
+    let _g = lock();
+    // Probes the former "Upload ack" window (docs/DURABILITY.md): the
+    // upload event used to be acked when the parse lambda was *invoked*,
+    // so a crash between the ack and the parse commit lost the DAG — the
+    // event was gone from the durable queue and its rows never committed.
+    // `upload_handler` now acks in the invocation-completion callback,
+    // which the parser runs only after `db::commit` lands, so at every
+    // kill point below either (a) the commit already made the rows
+    // durable, or (b) the unacked event is still inflight and
+    // `recover_inflight` redelivers it to a fresh parse. Both end with
+    // the DAG present; parsing is idempotent so redelivery never doubles.
+    //
+    // This script deliberately violates the "inputs settle before the
+    // earliest kill" convention of the other tests: the late upload's
+    // blob PUT + queue send are durable by 20s + 40ms (put_latency max),
+    // but the parse→commit pipeline (~0.1–1 s of invoke, blob GETs and
+    // parse CPU) is exactly what the sweep kills mid-flight.
+    let script: fn(&mut Sim<World>) = |sim| {
+        sim.at(0, "script.upload", |sim, w| {
+            upload_dag(sim, w, &manual_chain("early", 2, 1.0));
+        });
+        sim.at(10 * SECOND, "script.trigger", |sim, w| trigger_dag(sim, w, "early"));
+        sim.at(20 * SECOND, "script.upload", |sim, w| {
+            upload_dag(sim, w, &manual_chain("late", 2, 1.0));
+        });
+    };
+    let horizon = 3 * MINUTE;
+    let reference = uninterrupted(906, script, horizon);
+    {
+        let db = reference.db.read();
+        assert!(db.dags.contains_key("late") && db.serialized.contains_key("late"));
+    }
+    let want = outcomes(&reference);
+    for kill_at in [secs(20.2), secs(20.45), secs(20.8), 22 * SECOND] {
+        let w = killed_and_recovered(906, script, kill_at, horizon);
+        let db = w.db.read();
+        assert!(
+            db.dags.contains_key("late"),
+            "kill at {kill_at}us: dag row lost in the ack window"
+        );
+        assert!(
+            db.serialized.contains_key("late"),
+            "kill at {kill_at}us: serialized spec lost in the ack window"
+        );
+        drop(db);
+        assert_eq!(outcomes(&w), want, "kill at {kill_at}us diverged");
+    }
+}
+
+#[test]
 fn recovery_shrinks_the_interner_to_live_ids() {
     let _g = lock();
     // Upload three DAGs, delete two, then crash: the dead names stay in
@@ -303,7 +354,7 @@ fn recovery_shrinks_the_interner_to_live_ids() {
     drop(sim);
 
     assert!(DagId::interned_count() >= 3, "all three names interned");
-    let (_sim, w) = recover(w, now);
+    let (_sim, w) = recover(w, now).expect("durable state readable");
     let expected: std::collections::BTreeSet<&str> = {
         let db = w.db.read();
         db.dags

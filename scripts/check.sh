@@ -32,6 +32,25 @@ if cargo run -q -p sairflow-lint -- \
 fi
 cargo run -q -p sairflow-lint -- --config ../lint.toml src
 
+echo "== fabric flow-graph drift =="
+# Regenerate the flow-graph artifacts into a scratch dir and diff against
+# the committed copies: the graph in docs/FABRIC.md must never drift from
+# the code it describes. (head_clean.rs asserts the graph is *total*;
+# byte-exactness of the committed artifacts is gated here and in CI only,
+# so a regeneration-only change cannot fail the test suite.)
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+cargo run -q -p sairflow-lint -- --config ../lint.toml \
+  --graph-json "$tmp/fabric_graph.json" \
+  --graph-dot "$tmp/fabric_graph.dot" \
+  --graph-md "$tmp/FABRIC.md" src
+cmp "$tmp/fabric_graph.json" ../reports/fabric_graph.json \
+  || { echo "ERROR: reports/fabric_graph.json drifted — regenerate (see docs/LINTS.md)" >&2; exit 1; }
+cmp "$tmp/fabric_graph.dot" ../reports/fabric_graph.dot \
+  || { echo "ERROR: reports/fabric_graph.dot drifted — regenerate (see docs/LINTS.md)" >&2; exit 1; }
+cmp "$tmp/FABRIC.md" ../docs/FABRIC.md \
+  || { echo "ERROR: docs/FABRIC.md drifted — regenerate (see docs/LINTS.md)" >&2; exit 1; }
+
 echo "== sairflow api --demo (smoke) =="
 # Drive the v1 control-plane API end-to-end (upload → trigger → clear →
 # pause → trigger-while-paused → unpause → backfill → health → delete)

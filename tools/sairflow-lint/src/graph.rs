@@ -1,0 +1,588 @@
+//! The fabric flow graph: every producer site and consumer site of the
+//! configured fabric enums across the scan root, linked into cross-enum
+//! edges.
+//!
+//! A **producer** is a constructor expression (`SchedMsg::Trigger { .. }`,
+//! `BusEvent::Change(c)` in expression position); a **consumer** is a
+//! pattern position (a match arm head, an `if let`/`while let` pattern, a
+//! `matches!` predicate). Classification is a bounded forward token scan
+//! from the occurrence: the first structural terminator at or below the
+//! occurrence's bracket depth decides — `=>`, a bare `=` (destructuring
+//! binding) or an or-pattern `|` mean pattern position; `,`, `;` or a
+//! closing `}` that leaves the enclosing block mean expression position.
+//!
+//! **Edges** link dataflow through functions: when a consumer site sits in
+//! a `match` block, the arm's span (from the arm head to the next arm of
+//! the same enum, bounded by the `match` block) is scanned for producer
+//! sites of *other* fabric enums — `MetaDb::apply` consumes a `Write` and
+//! constructs `Change`s in that arm, `World::dispatch` consumes a `Change`
+//! and constructs `SchedMsg`s, the scheduling pass consumes a `SchedMsg`
+//! and pushes the next `Write`s. That chain is the event fabric, and the
+//! graph is the committed, CI-verified record of it
+//! (`reports/fabric_graph.json`, rendered to `docs/FABRIC.md`).
+
+use std::collections::BTreeSet;
+
+use crate::items::{ItemIndex, Shape};
+use crate::{find_token_positions, Fabric, SourceFile, Violation};
+
+/// One occurrence of `Enum::Variant`, attributed to its enclosing fn.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Site {
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Qualified enclosing function (`MetaDb::apply`), or `<top>`.
+    pub func: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantFlow {
+    pub name: String,
+    pub shape: Shape,
+    /// 1-based declaration line in the enum's decl file.
+    pub decl_line: usize,
+    pub producers: Vec<Site>,
+    pub consumers: Vec<Site>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EnumFlow {
+    pub name: String,
+    pub decl_file: String,
+    pub variants: Vec<VariantFlow>,
+}
+
+/// `from` was consumed and `to` was constructed inside the consuming arm.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Edge {
+    pub from: String,
+    pub to: String,
+    pub via: String,
+    pub file: String,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FabricGraph {
+    /// Sorted by enum name; variants in declaration order.
+    pub enums: Vec<EnumFlow>,
+    /// Sorted by (from, to, via, file, line), deduplicated.
+    pub edges: Vec<Edge>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Class {
+    Producer,
+    Consumer,
+}
+
+/// Classify one occurrence by scanning forward from the end of the token
+/// (bounded to 20 lines) for the first structural terminator at or below
+/// the occurrence's depth. See the module docs for the rules.
+fn classify(lines: &[String], li: usize, tok_start: usize, tok_end: usize) -> Class {
+    if lines[li][..tok_start].contains("matches!(") {
+        return Class::Consumer;
+    }
+    let mut depth: i64 = 0;
+    let limit = (li + 20).min(lines.len());
+    for (lj, line) in lines.iter().enumerate().take(limit).skip(li) {
+        let l = line.as_bytes();
+        let mut j = if lj == li { tok_end } else { 0 };
+        while j < l.len() {
+            let b = l[j];
+            let nxt = l.get(j + 1).copied();
+            let prv = if j > 0 { Some(l[j - 1]) } else { None };
+            match b {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        // Left the enclosing block: the occurrence was a
+                        // tail expression.
+                        return Class::Producer;
+                    }
+                }
+                b'=' => {
+                    if nxt == Some(b'>') {
+                        if depth <= 0 {
+                            return Class::Consumer;
+                        }
+                        j += 2;
+                        continue;
+                    }
+                    if nxt == Some(b'=') {
+                        j += 2;
+                        continue;
+                    }
+                    if !prv.is_some_and(|p| b"<>!+-*/%&|^=".contains(&p)) && depth <= 0 {
+                        // `let PAT = ...` / `if let PAT = ...` binding.
+                        return Class::Consumer;
+                    }
+                }
+                b',' | b';' => {
+                    if depth <= 0 {
+                        return Class::Producer;
+                    }
+                }
+                b'|' => {
+                    if nxt == Some(b'|') {
+                        j += 2;
+                        continue;
+                    }
+                    if prv != Some(b'|') && depth <= 0 {
+                        // Or-pattern continuation (`A { .. } | B { .. } =>`).
+                        return Class::Consumer;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    Class::Producer
+}
+
+/// Build the flow graph for `fabrics` over the loaded sources. `indices`
+/// is parallel to `files`.
+pub fn build(
+    files: &[SourceFile],
+    indices: &[ItemIndex],
+    fabrics: &[Fabric],
+) -> Result<FabricGraph, String> {
+    let mut graph = FabricGraph::default();
+    let mut sorted: Vec<&Fabric> = fabrics.iter().collect();
+    sorted.sort_by(|a, b| a.name.cmp(&b.name));
+
+    for fab in sorted {
+        let decl_items = files
+            .iter()
+            .zip(indices)
+            .find(|(f, _)| f.rel == fab.decl)
+            .map(|(_, i)| i)
+            .ok_or_else(|| format!("fabric {}: decl file {} not found", fab.name, fab.decl))?;
+        let def = decl_items
+            .enum_def(&fab.name)
+            .ok_or_else(|| format!("fabric {}: enum not found in {}", fab.name, fab.decl))?;
+        if def.variants.is_empty() {
+            return Err(format!("fabric {}: no variants parsed from {}", fab.name, fab.decl));
+        }
+        let mut flows: Vec<VariantFlow> = def
+            .variants
+            .iter()
+            .map(|v| VariantFlow {
+                name: v.name.clone(),
+                shape: v.shape,
+                decl_line: v.line,
+                producers: Vec::new(),
+                consumers: Vec::new(),
+            })
+            .collect();
+        for (file, items) in files.iter().zip(indices) {
+            for flow in &mut flows {
+                let token = format!("{}::{}", fab.name, flow.name);
+                for (li, line) in file.lines.iter().enumerate() {
+                    if file.mask[li] {
+                        continue;
+                    }
+                    for start in find_token_positions(line, &token) {
+                        let site = Site {
+                            file: file.rel.clone(),
+                            line: li + 1,
+                            func: items
+                                .enclosing_fn(li + 1)
+                                .map_or_else(|| "<top>".to_string(), |f| f.qual.clone()),
+                        };
+                        match classify(&file.lines, li, start, start + token.len()) {
+                            Class::Producer => flow.producers.push(site),
+                            Class::Consumer => flow.consumers.push(site),
+                        }
+                    }
+                }
+            }
+        }
+        for flow in &mut flows {
+            flow.producers.sort();
+            flow.consumers.sort();
+        }
+        graph.enums.push(EnumFlow {
+            name: fab.name.clone(),
+            decl_file: fab.decl.clone(),
+            variants: flows,
+        });
+    }
+
+    graph.edges = link_edges(&graph, files, indices);
+    Ok(graph)
+}
+
+/// For every consumer site inside a `match` block, scan its arm span for
+/// producer sites of *other* fabric enums in the same file.
+fn link_edges(graph: &FabricGraph, files: &[SourceFile], indices: &[ItemIndex]) -> Vec<Edge> {
+    let file_index = |rel: &str| files.iter().position(|f| f.rel == rel);
+    let mut edges: BTreeSet<Edge> = BTreeSet::new();
+    for e1 in &graph.enums {
+        for v1 in &e1.variants {
+            for site in &v1.consumers {
+                let Some(fi) = file_index(&site.file) else { continue };
+                let items = &indices[fi];
+                let Some(m) = items.enclosing_match(site.line) else { continue };
+                // Next arm of the same enum at the same match level bounds
+                // this arm's span; sites sharing a line share the span
+                // (or-patterns share one body).
+                let next = e1
+                    .variants
+                    .iter()
+                    .flat_map(|v| v.consumers.iter())
+                    .filter(|s| {
+                        s.file == site.file
+                            && s.line > site.line
+                            && s.line <= m.end
+                            && items.enclosing_match(s.line) == Some(m)
+                    })
+                    .map(|s| s.line)
+                    .min()
+                    .unwrap_or(m.end + 1);
+                for e2 in &graph.enums {
+                    if e2.name == e1.name {
+                        continue;
+                    }
+                    for v2 in &e2.variants {
+                        for p in &v2.producers {
+                            if p.file == site.file && p.line >= site.line && p.line < next {
+                                edges.insert(Edge {
+                                    from: format!("{}::{}", e1.name, v1.name),
+                                    to: format!("{}::{}", e2.name, v2.name),
+                                    via: site.func.clone(),
+                                    file: p.file.clone(),
+                                    line: p.line,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    edges.into_iter().collect()
+}
+
+// ---- graph-derived rules ---------------------------------------------------
+
+/// Flow totality: every fabric variant must have at least one producer
+/// (or it is dead weight no handler can ever emit) and at least one
+/// consumer (or it flows through the fabric and routes nowhere).
+pub fn flow_violations(graph: &FabricGraph) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for e in &graph.enums {
+        for v in &e.variants {
+            let token = format!("{}::{}", e.name, v.name);
+            if v.producers.is_empty() {
+                out.push(Violation {
+                    path: e.decl_file.clone(),
+                    line: v.decl_line,
+                    rule: "fabric-dead".to_string(),
+                    message: format!(
+                        "fabric variant {token} is never constructed anywhere under the \
+                         scan root: dead variants hide unreachable routing paths"
+                    ),
+                });
+            }
+            if v.consumers.is_empty() {
+                out.push(Violation {
+                    path: e.decl_file.clone(),
+                    line: v.decl_line,
+                    rule: "fabric-coverage".to_string(),
+                    message: format!(
+                        "fabric variant {token} has no consumer match arm anywhere under \
+                         the scan root: it would flow through the fabric and route nowhere"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---- emitters --------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn site_json(s: &Site) -> String {
+    format!(
+        "{{\"file\": \"{}\", \"line\": {}, \"fn\": \"{}\"}}",
+        json_escape(&s.file),
+        s.line,
+        json_escape(&s.func)
+    )
+}
+
+fn site_list_json(sites: &[Site], indent: &str) -> String {
+    if sites.is_empty() {
+        return "[]".to_string();
+    }
+    let inner: Vec<String> = sites.iter().map(|s| format!("{indent}  {}", site_json(s))).collect();
+    format!("[\n{}\n{indent}]", inner.join(",\n"))
+}
+
+/// Deterministic JSON rendering of the graph (2-space indent, sites and
+/// edges one object per line). This is the committed artifact format —
+/// CI regenerates it and fails on drift, so the rendering is part of the
+/// contract.
+pub fn to_json(graph: &FabricGraph) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"schema\": \"sairflow-fabric-graph/v1\",\n  \"enums\": [\n");
+    for (ei, e) in graph.enums.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"enum\": \"{}\",\n", json_escape(&e.name)));
+        out.push_str(&format!("      \"decl\": \"{}\",\n", json_escape(&e.decl_file)));
+        out.push_str("      \"variants\": [\n");
+        for (vi, v) in e.variants.iter().enumerate() {
+            out.push_str("        {\n");
+            out.push_str(&format!("          \"variant\": \"{}\",\n", json_escape(&v.name)));
+            out.push_str(&format!("          \"shape\": \"{}\",\n", v.shape.as_str()));
+            out.push_str(&format!("          \"decl_line\": {},\n", v.decl_line));
+            out.push_str(&format!(
+                "          \"producers\": {},\n",
+                site_list_json(&v.producers, "          ")
+            ));
+            out.push_str(&format!(
+                "          \"consumers\": {}\n",
+                site_list_json(&v.consumers, "          ")
+            ));
+            out.push_str(if vi + 1 < e.variants.len() { "        },\n" } else { "        }\n" });
+        }
+        out.push_str("      ]\n");
+        out.push_str(if ei + 1 < graph.enums.len() { "    },\n" } else { "    }\n" });
+    }
+    out.push_str("  ],\n  \"edges\": [\n");
+    for (i, ed) in graph.edges.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"from\": \"{}\", \"to\": \"{}\", \"via\": \"{}\", \"file\": \"{}\", \"line\": {}}}{}\n",
+            json_escape(&ed.from),
+            json_escape(&ed.to),
+            json_escape(&ed.via),
+            json_escape(&ed.file),
+            ed.line,
+            if i + 1 < graph.edges.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Graphviz rendering: one cluster per enum, one edge per distinct
+/// (from, to, via) triple.
+pub fn to_dot(graph: &FabricGraph) -> String {
+    let mut out = String::new();
+    out.push_str("digraph fabric {\n  rankdir=LR;\n  node [shape=box, fontname=\"monospace\"];\n");
+    for e in &graph.enums {
+        out.push_str(&format!("  subgraph cluster_{} {{\n    label=\"{}\";\n", e.name, e.name));
+        for v in &e.variants {
+            out.push_str(&format!("    \"{}::{}\";\n", e.name, v.name));
+        }
+        out.push_str("  }\n");
+    }
+    let mut seen: BTreeSet<(String, String, String)> = BTreeSet::new();
+    for ed in &graph.edges {
+        if seen.insert((ed.from.clone(), ed.to.clone(), ed.via.clone())) {
+            out.push_str(&format!(
+                "  \"{}\" -> \"{}\" [label=\"{}\"];\n",
+                ed.from, ed.to, ed.via
+            ));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn site_cell(sites: &[Site]) -> String {
+    if sites.is_empty() {
+        return "(none)".to_string();
+    }
+    let cells: Vec<String> =
+        sites.iter().map(|s| format!("`{}` ({}:{})", s.func, s.file, s.line)).collect();
+    cells.join(", ")
+}
+
+/// Markdown rendering: the generated body of `docs/FABRIC.md`.
+pub fn to_markdown(graph: &FabricGraph) -> String {
+    let mut out = String::new();
+    out.push_str("# Event-fabric flow graph\n\n");
+    out.push_str(
+        "<!-- GENERATED FILE - do not edit by hand.\n     Regenerate (from rust/):\n       \
+         cargo run -q -p sairflow-lint -- --config ../lint.toml \\\n         \
+         --graph-json ../reports/fabric_graph.json \\\n         \
+         --graph-dot ../reports/fabric_graph.dot \\\n         \
+         --graph-md ../docs/FABRIC.md src\n     \
+         CI regenerates all three and fails if the committed copies drift. -->\n\n",
+    );
+    out.push_str(
+        "Statically derived by `sairflow-lint` from `rust/src/**`: every producer\n\
+         site (constructor) and consumer site (match arm, `if let`, `matches!`)\n\
+         of the fabric enums, plus the cross-enum edges linking a consumed\n\
+         variant to the variants constructed inside its match arm. End to end:\n\
+         API handlers and the scheduler push `Write`s; `MetaDb::apply` consumes\n\
+         them and emits `Change`s; CDC wraps them into `BusEvent`s for the\n\
+         router; `World::dispatch` turns routed changes into `SchedMsg`s; the\n\
+         scheduling pass consumes those and pushes the next `Write`s.\n\n",
+    );
+    for e in &graph.enums {
+        out.push_str(&format!("## `{}` — declared in `{}`\n\n", e.name, e.decl_file));
+        out.push_str("| Variant | Shape | Producers | Consumers |\n");
+        out.push_str("| --- | --- | --- | --- |\n");
+        for v in &e.variants {
+            out.push_str(&format!(
+                "| `{}` | {} | {} | {} |\n",
+                v.name,
+                v.shape.as_str(),
+                site_cell(&v.producers),
+                site_cell(&v.consumers)
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str("## Cross-enum edges\n\n");
+    out.push_str("| Consumed | Constructs | Via |\n");
+    out.push_str("| --- | --- | --- |\n");
+    let mut seen: BTreeSet<(String, String, String)> = BTreeSet::new();
+    for ed in &graph.edges {
+        if seen.insert((ed.from.clone(), ed.to.clone(), ed.via.clone())) {
+            out.push_str(&format!(
+                "| `{}` | `{}` | `{}` ({}:{}) |\n",
+                ed.from, ed.to, ed.via, ed.file, ed.line
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::items::index_items;
+    use crate::{strip_source, test_mask};
+
+    fn source(rel: &str, src: &str) -> (SourceFile, ItemIndex) {
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        let idx = index_items(&lines, &mask);
+        (SourceFile { rel: rel.to_string(), lines, mask }, idx)
+    }
+
+    fn one_file_graph(src: &str, fabric: &str) -> FabricGraph {
+        let (f, i) = source("m.rs", src);
+        let fabrics =
+            vec![Fabric { name: fabric.to_string(), decl: "m.rs".to_string() }];
+        build(&[f], &[i], &fabrics).expect("graph")
+    }
+
+    const SRC: &str = "pub enum Msg {\n    Go { id: u32 },\n    Stop(u32),\n    Idle,\n}\n\
+                       pub enum Out {\n    Done { id: u32 },\n}\n\
+                       fn produce(id: u32) -> Msg {\n    Msg::Go { id }\n}\n\
+                       fn consume(m: Msg) -> Option<Out> {\n    match m {\n        \
+                       Msg::Go { id } => Some(Out::Done { id }),\n        \
+                       Msg::Stop(_) | Msg::Idle => None,\n    }\n}\n\
+                       fn also(m: &Msg) -> bool {\n    matches!(m, Msg::Stop(_))\n}\n\
+                       fn mk() -> Msg {\n    let m = Msg::Stop(1);\n    \
+                       if let Msg::Idle = m {\n        return Msg::Idle;\n    }\n    m\n}\n";
+
+    #[test]
+    fn classifies_producers_and_consumers() {
+        let g = one_file_graph(SRC, "Msg");
+        let msg = &g.enums[0];
+        let by_name = |n: &str| msg.variants.iter().find(|v| v.name == n).expect("variant");
+        let go = by_name("Go");
+        assert_eq!(go.producers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![10]);
+        assert_eq!(go.consumers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![14]);
+        let stop = by_name("Stop");
+        // `matches!` and the or-pattern arm are consumers; `Msg::Stop(1)`
+        // is a producer.
+        assert_eq!(stop.producers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![22]);
+        assert_eq!(stop.consumers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![15, 19]);
+        let idle = by_name("Idle");
+        // Tail-position `return Msg::Idle;` produces; `if let` consumes.
+        assert_eq!(idle.producers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![24]);
+        assert_eq!(idle.consumers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![15, 23]);
+    }
+
+    #[test]
+    fn sites_carry_their_enclosing_fn() {
+        let g = one_file_graph(SRC, "Msg");
+        let go = g.enums[0].variants.iter().find(|v| v.name == "Go").expect("variant");
+        assert_eq!(go.producers[0].func, "produce");
+        assert_eq!(go.consumers[0].func, "consume");
+    }
+
+    #[test]
+    fn edges_link_consumed_arm_to_constructed_variant() {
+        let (f, i) = source("m.rs", SRC);
+        let fabrics = vec![
+            Fabric { name: "Msg".to_string(), decl: "m.rs".to_string() },
+            Fabric { name: "Out".to_string(), decl: "m.rs".to_string() },
+        ];
+        let g = build(&[f], &[i], &fabrics).expect("graph");
+        let edge = g.edges.iter().find(|e| e.from == "Msg::Go").expect("edge");
+        assert_eq!(edge.to, "Out::Done");
+        assert_eq!(edge.via, "consume");
+        assert_eq!(edge.line, 14);
+        // The Stop|Idle arm constructs nothing: no edges from it.
+        assert!(!g.edges.iter().any(|e| e.from == "Msg::Stop" || e.from == "Msg::Idle"));
+    }
+
+    #[test]
+    fn flow_totality_flags_dead_and_unconsumed_variants() {
+        let src = "pub enum Msg {\n    Used,\n    NeverMade,\n    NeverRead,\n}\n\
+                   fn p() -> Msg {\n    Msg::Used\n}\n\
+                   fn p2() -> Msg {\n    Msg::NeverRead\n}\n\
+                   fn c(m: &Msg) -> u8 {\n    match m {\n        Msg::Used => 1,\n        \
+                   Msg::NeverMade => 2,\n        Msg::NeverRead => 3,\n    }\n}\n";
+        let g = one_file_graph(src, "Msg");
+        let v = flow_violations(&g);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "fabric-dead");
+        assert!(v[0].message.contains("Msg::NeverMade"));
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn multiline_constructors_and_or_pattern_heads_classify() {
+        let src = "pub enum Msg {\n    Big { a: u32, b: u32 },\n    Two,\n}\n\
+                   fn p(q: &mut Vec<Msg>) {\n    q.push(Msg::Big {\n        a: 1,\n        \
+                   b: 2,\n    });\n}\n\
+                   fn c(m: &Msg, t: u8) -> u8 {\n    match (t, m) {\n        \
+                   (0, Msg::Big { .. })\n        | (1, Msg::Two) => 1,\n        \
+                   (_, Msg::Big { .. }) | (_, Msg::Two) => 2,\n    }\n}\n";
+        let g = one_file_graph(src, "Msg");
+        let big = g.enums[0].variants.iter().find(|v| v.name == "Big").expect("variant");
+        assert_eq!(big.producers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![6]);
+        assert_eq!(big.consumers.iter().map(|s| s.line).collect::<Vec<_>>(), vec![13, 15]);
+    }
+
+    #[test]
+    fn json_rendering_is_stable() {
+        let g = one_file_graph("pub enum Msg {\n    A,\n}\nfn p() -> Msg {\n    Msg::A\n}\nfn c(m: Msg) -> u8 {\n    match m {\n        Msg::A => 1,\n    }\n}\n", "Msg");
+        let js = to_json(&g);
+        assert!(js.starts_with("{\n  \"schema\": \"sairflow-fabric-graph/v1\""));
+        assert!(js.contains("\"variant\": \"A\""));
+        assert!(js.contains("{\"file\": \"m.rs\", \"line\": 5, \"fn\": \"p\"}"));
+        assert!(js.ends_with("]\n}\n"));
+        let dot = to_dot(&g);
+        assert!(dot.contains("subgraph cluster_Msg"));
+        assert!(dot.contains("\"Msg::A\";"));
+    }
+}

@@ -1,0 +1,432 @@
+//! Item-level parsing over stripped source: `fn`/`impl` spans, `enum`
+//! declarations with variant shapes, and `match`-block extents.
+//!
+//! This is deliberately not a Rust parser. It is a line/brace tracker over
+//! [`crate::strip_source`] output that recovers just enough structure for
+//! the fabric flow graph: which function a line belongs to (qualified by
+//! its `impl` block), where each fabric enum declares its variants, and
+//! where `match` blocks begin and end (so a consumer arm's "span" — the
+//! code a matched variant flows into — can be bounded). Test-masked lines
+//! still participate in brace counting (depth must stay consistent) but
+//! never start an item, so `#[cfg(test)]` code is structurally invisible.
+
+/// A function body span, 1-based inclusive lines, qualified by the
+/// innermost enclosing `impl` block (`MetaDb::apply`) or bare (`recover`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnSpan {
+    pub qual: String,
+    /// Line of the `fn` keyword.
+    pub start: usize,
+    /// Line of the matching closing brace.
+    pub end: usize,
+}
+
+/// A `match` block span, 1-based inclusive, from the `match` keyword line
+/// to its closing brace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatchSpan {
+    pub start: usize,
+    pub end: usize,
+}
+
+/// How a variant carries data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Unit,
+    Tuple,
+    Struct,
+}
+
+impl Shape {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Shape::Unit => "unit",
+            Shape::Tuple => "tuple",
+            Shape::Struct => "struct",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantDef {
+    pub name: String,
+    /// 1-based declaration line.
+    pub line: usize,
+    pub shape: Shape,
+}
+
+#[derive(Debug, Clone)]
+pub struct EnumDef {
+    pub name: String,
+    /// 1-based line of the `enum` keyword.
+    pub line: usize,
+    /// 1-based inclusive body span (opening to closing brace lines).
+    pub body_start: usize,
+    pub body_end: usize,
+    pub variants: Vec<VariantDef>,
+}
+
+/// Everything the graph builder needs to know about one file's structure.
+#[derive(Debug, Clone, Default)]
+pub struct ItemIndex {
+    pub fns: Vec<FnSpan>,
+    pub enums: Vec<EnumDef>,
+    pub matches: Vec<MatchSpan>,
+}
+
+impl ItemIndex {
+    /// Innermost function span containing `line` (1-based): the candidate
+    /// with the greatest start line, since spans nest.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .max_by_key(|f| f.start)
+    }
+
+    /// Innermost `match` block containing `line`.
+    pub fn enclosing_match(&self, line: usize) -> Option<MatchSpan> {
+        self.matches
+            .iter()
+            .filter(|m| m.start <= line && line <= m.end)
+            .max_by_key(|m| m.start)
+            .copied()
+    }
+
+    /// The declaration of `enum name`, if this file holds it.
+    pub fn enum_def(&self, name: &str) -> Option<&EnumDef> {
+        self.enums.iter().find(|e| e.name == name)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Position of keyword `kw` in `line` at/after `from` with identifier
+/// boundaries on both sides.
+fn find_kw(line: &str, kw: &str, from: usize) -> Option<usize> {
+    let lb = line.as_bytes();
+    let mut start = from;
+    while let Some(pos) = line.get(start..).and_then(|s| s.find(kw)) {
+        let abs = start + pos;
+        let before_ok = abs == 0 || !is_ident(lb[abs - 1]);
+        let end = abs + kw.len();
+        let after_ok = end >= lb.len() || !is_ident(lb[end]);
+        if before_ok && after_ok {
+            return Some(abs);
+        }
+        start = abs + 1;
+    }
+    None
+}
+
+fn ident_after(line: &str, from: usize) -> Option<String> {
+    let rest = line.get(from..)?.trim_start();
+    let ident: String = rest.bytes().take_while(|&b| is_ident(b)).map(char::from).collect();
+    if ident.is_empty() {
+        None
+    } else {
+        Some(ident)
+    }
+}
+
+/// Extract the `Self` type name from an accumulated `impl` header (the
+/// text between the `impl` keyword and the opening brace): skip leading
+/// generics, prefer the type after ` for `, strip references/generics and
+/// take the last path segment.
+fn impl_type(header: &str) -> String {
+    let mut h = header.trim();
+    // The accumulated header starts at the `impl` keyword itself.
+    if let Some(rest) = h.strip_prefix("impl") {
+        h = rest.trim_start();
+    }
+    if h.starts_with('<') {
+        let mut depth = 0i32;
+        for (i, c) in h.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        h = h[i + 1..].trim_start();
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    if let Some(pos) = h.rfind(" for ") {
+        h = h[pos + 5..].trim_start();
+    }
+    let h = h.trim_start_matches('&').trim_start_matches("mut ").trim_start_matches("dyn ");
+    let cut = h.find(['<', ' ']).unwrap_or(h.len());
+    let path = &h[..cut];
+    path.rsplit("::").next().unwrap_or(path).to_string()
+}
+
+/// What kind of block a pending header will open at its `{`.
+enum PendKind {
+    Fn(String),
+    Impl(String),
+    Enum(String),
+    Match,
+}
+
+struct Pending {
+    kind: PendKind,
+    /// Header text accumulated so far (only used by `Impl`).
+    header: String,
+    /// Paren/bracket depth since the keyword: a `;` at depth 0 cancels
+    /// (trait method signatures have no body).
+    pend_depth: i32,
+}
+
+enum OpenKind {
+    Fn(usize),
+    Impl(String),
+    Enum(usize),
+    Match(usize),
+    Other,
+}
+
+struct Open {
+    kind: OpenKind,
+    depth: i64,
+}
+
+/// Build the [`ItemIndex`] for one stripped, masked file. Braces on masked
+/// lines still count toward depth; item keywords on masked lines are
+/// ignored.
+pub fn index_items(lines: &[String], mask: &[bool]) -> ItemIndex {
+    let mut idx = ItemIndex::default();
+    let mut depth: i64 = 0;
+    let mut stack: Vec<Open> = Vec::new();
+    let mut pendings: Vec<Pending> = Vec::new();
+
+    for (li, line) in lines.iter().enumerate() {
+        let lineno = li + 1;
+        let masked = mask[li];
+        let lb = line.as_bytes();
+        // Keyword starts on this line (unmasked only). Collect positions so
+        // the char walk below can open pendings in order.
+        let mut kw_at: Vec<(usize, PendKind)> = Vec::new();
+        if !masked {
+            for kw in ["fn", "impl", "enum", "match"] {
+                let mut from = 0;
+                while let Some(pos) = find_kw(line, kw, from) {
+                    let kind = match kw {
+                        "fn" => ident_after(line, pos + 2).map(PendKind::Fn),
+                        "enum" => ident_after(line, pos + 4).map(PendKind::Enum),
+                        "impl" => Some(PendKind::Impl(String::new())),
+                        _ => Some(PendKind::Match),
+                    };
+                    if let Some(kind) = kind {
+                        kw_at.push((pos, kind));
+                    }
+                    from = pos + kw.len();
+                }
+            }
+            kw_at.sort_by_key(|(pos, _)| *pos);
+        }
+        let mut kw_iter = kw_at.into_iter().peekable();
+
+        for (ci, &b) in lb.iter().enumerate() {
+            while kw_iter.peek().is_some_and(|(pos, _)| *pos == ci) {
+                let (_, kind) = kw_iter.next().expect("peeked");
+                // `impl` only opens a block at item position; inside a
+                // pending header it is `impl Trait` in type position
+                // (`on_done: impl FnOnce(..)`) and must not steal the
+                // pending's body brace.
+                if matches!(kind, PendKind::Impl(_)) && !pendings.is_empty() {
+                    continue;
+                }
+                pendings.push(Pending { kind, header: String::new(), pend_depth: 0 });
+            }
+            // Accumulate impl header text (anything between `impl` and `{`).
+            if b != b'{' {
+                if let Some(p) = pendings.last_mut() {
+                    if matches!(p.kind, PendKind::Impl(_)) {
+                        p.header.push(b as char);
+                    }
+                }
+            }
+            match b {
+                b'(' | b'[' => {
+                    if let Some(p) = pendings.last_mut() {
+                        p.pend_depth += 1;
+                    }
+                }
+                b')' | b']' => {
+                    if let Some(p) = pendings.last_mut() {
+                        p.pend_depth -= 1;
+                    }
+                }
+                b';' => {
+                    if pendings.last().is_some_and(|p| p.pend_depth <= 0) {
+                        pendings.pop();
+                    }
+                }
+                b'{' => {
+                    let kind = match pendings.pop() {
+                        Some(Pending { kind: PendKind::Fn(name), .. }) => {
+                            // Qualify by the nearest enclosing impl unless an
+                            // fn sits in between (nested fns stay bare).
+                            let qual = stack
+                                .iter()
+                                .rev()
+                                .find_map(|o| match &o.kind {
+                                    OpenKind::Impl(t) => Some(Some(t.clone())),
+                                    OpenKind::Fn(_) => Some(None),
+                                    _ => None,
+                                })
+                                .flatten()
+                                .map_or_else(|| name.clone(), |t| format!("{t}::{name}"));
+                            idx.fns.push(FnSpan { qual, start: lineno, end: lineno });
+                            OpenKind::Fn(idx.fns.len() - 1)
+                        }
+                        Some(Pending { kind: PendKind::Impl(_), header, .. }) => {
+                            OpenKind::Impl(impl_type(&header))
+                        }
+                        Some(Pending { kind: PendKind::Enum(name), .. }) => {
+                            idx.enums.push(EnumDef {
+                                name,
+                                line: lineno,
+                                body_start: lineno,
+                                body_end: lineno,
+                                variants: Vec::new(),
+                            });
+                            OpenKind::Enum(idx.enums.len() - 1)
+                        }
+                        Some(Pending { kind: PendKind::Match, .. }) => {
+                            idx.matches.push(MatchSpan { start: lineno, end: lineno });
+                            OpenKind::Match(idx.matches.len() - 1)
+                        }
+                        None => OpenKind::Other,
+                    };
+                    stack.push(Open { kind, depth });
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if stack.last().is_some_and(|o| o.depth == depth) {
+                        match stack.pop().expect("non-empty stack").kind {
+                            OpenKind::Fn(i) => idx.fns[i].end = lineno,
+                            OpenKind::Enum(i) => idx.enums[i].body_end = lineno,
+                            OpenKind::Match(i) => idx.matches[i].end = lineno,
+                            OpenKind::Impl(_) | OpenKind::Other => {}
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Variant lines: directly inside an open enum body (the enum block
+        // is the innermost open block), first token capitalized.
+        if let Some(Open { kind: OpenKind::Enum(i), depth: d }) = stack.last() {
+            if depth == d + 1 && lineno > idx.enums[*i].body_start {
+                let t = line.trim();
+                if t.as_bytes().first().is_some_and(|b| b.is_ascii_uppercase()) {
+                    let name: String =
+                        t.bytes().take_while(|&b| is_ident(b)).map(char::from).collect();
+                    let rest = t[name.len()..].trim_start();
+                    let shape = match rest.as_bytes().first() {
+                        Some(b'(') => Shape::Tuple,
+                        Some(b'{') => Shape::Struct,
+                        _ => Shape::Unit,
+                    };
+                    idx.enums[*i].variants.push(VariantDef { name, line: lineno, shape });
+                }
+            }
+        }
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{strip_source, test_mask};
+
+    fn index(src: &str) -> ItemIndex {
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        index_items(&lines, &mask)
+    }
+
+    #[test]
+    fn fns_are_qualified_by_impl() {
+        let src = "impl MetaDb {\n    pub fn apply(&mut self) {\n        let x = 1;\n    }\n}\n\
+                   fn free() {}\n";
+        let idx = index(src);
+        let quals: Vec<&str> = idx.fns.iter().map(|f| f.qual.as_str()).collect();
+        assert_eq!(quals, vec!["MetaDb::apply", "free"]);
+        assert_eq!((idx.fns[0].start, idx.fns[0].end), (2, 4));
+    }
+
+    #[test]
+    fn trait_impls_qualify_by_self_type() {
+        let src = "impl Index<&(String, u64)> for RunTable {\n    fn index(&self) {}\n}\n\
+                   impl<W: Host> Ext for W {\n    fn go(&self) {}\n}\n";
+        let idx = index(src);
+        let quals: Vec<&str> = idx.fns.iter().map(|f| f.qual.as_str()).collect();
+        assert_eq!(quals, vec!["RunTable::index", "W::go"]);
+    }
+
+    #[test]
+    fn multiline_fn_headers_attach_to_their_body() {
+        let src = "fn reserve(\n    a: u64,\n) -> u64 {\n    a\n}\n";
+        let idx = index(src);
+        assert_eq!(idx.fns.len(), 1);
+        assert_eq!((idx.fns[0].start, idx.fns[0].end), (1, 5));
+    }
+
+    #[test]
+    fn trait_method_signatures_do_not_open_spans() {
+        let src = "trait T {\n    fn sig(&self) -> u64;\n    fn with_default(&self) {}\n}\n";
+        let idx = index(src);
+        let quals: Vec<&str> = idx.fns.iter().map(|f| f.qual.as_str()).collect();
+        assert_eq!(quals, vec!["T::with_default"]);
+    }
+
+    #[test]
+    fn enums_record_variant_lines_and_shapes() {
+        let src = "pub enum Msg {\n    A,\n    B { x: u32 },\n    C(Vec<u8>),\n}\n";
+        let idx = index(src);
+        let e = idx.enum_def("Msg").expect("enum");
+        assert_eq!((e.body_start, e.body_end), (1, 5));
+        let got: Vec<(usize, &str, Shape)> =
+            e.variants.iter().map(|v| (v.line, v.name.as_str(), v.shape)).collect();
+        assert_eq!(
+            got,
+            vec![(2, "A", Shape::Unit), (3, "B", Shape::Struct), (4, "C", Shape::Tuple)]
+        );
+    }
+
+    #[test]
+    fn match_spans_nest_and_bound() {
+        let src = "fn f(x: u8) -> u8 {\n    match x {\n        0 => match x {\n            _ => 1,\n        },\n        _ => 2,\n    }\n}\n";
+        let idx = index(src);
+        assert_eq!(idx.matches.len(), 2);
+        assert_eq!(idx.enclosing_match(4), Some(MatchSpan { start: 3, end: 5 }));
+        assert_eq!(idx.enclosing_match(6), Some(MatchSpan { start: 2, end: 7 }));
+    }
+
+    #[test]
+    fn test_mod_items_are_invisible_but_braces_count() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn hidden() {}\n}\nfn b() {}\n";
+        let idx = index(src);
+        let quals: Vec<&str> = idx.fns.iter().map(|f| f.qual.as_str()).collect();
+        assert_eq!(quals, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn enclosing_fn_picks_innermost() {
+        let src = "fn outer() {\n    fn inner() {\n        let x = 1;\n    }\n}\n";
+        let idx = index(src);
+        assert_eq!(idx.enclosing_fn(3).map(|f| f.qual.as_str()), Some("inner"));
+        assert_eq!(idx.enclosing_fn(5).map(|f| f.qual.as_str()), Some("outer"));
+    }
+}

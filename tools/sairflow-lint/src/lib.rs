@@ -8,16 +8,25 @@
 //! neither property, so this tool does, with hand-rolled line/token
 //! scanning (no `syn`, no dependencies): fast, hermetic, reviewable.
 //!
-//! Two rule families, both declared in a checked-in `lint.toml`:
+//! The rule families, all declared in a checked-in `lint.toml`:
 //!
 //! * **token rules** — forbidden token lists scoped to path prefixes with
 //!   per-path allowlists (wall clock, thread spawn, unseeded RNG,
 //!   hash-ordered collections, `String` dag ids, unwrap in API handlers);
-//! * **fabric rules** — for each declared fabric enum, every variant must
-//!   be named by every listed consumer file, and no bare wildcard arm may
-//!   sit among match arms over a fabric enum (a `_` that swallows a newly
-//!   added variant is exactly the silent routing gap the paper's CDC
-//!   argument forbids).
+//!   a rule may additionally set `index = true` to forbid direct
+//!   `container[i]` indexing (panic-freedom in the durability domain);
+//! * **fabric rules** — for each declared fabric enum the [`graph`] module
+//!   builds a cross-module flow graph (every producer site and consumer
+//!   match arm under the scan root) and enforces flow totality: no dead
+//!   variants (`fabric-dead`), no variant without a consumer arm anywhere
+//!   (`fabric-coverage`); and no bare wildcard arm may sit among match
+//!   arms over a fabric enum (`fabric-wildcard` — a `_` that swallows a
+//!   newly added variant is exactly the silent routing gap the paper's
+//!   CDC argument forbids);
+//! * **matrix rules** — every variant of a listed enum must appear in each
+//!   required function span (`write-matrix`: `MetaDb::apply`,
+//!   `Write::hot_key` and both durability codec directions for `Write`),
+//!   catching "added a Write, forgot the WAL codec/lock scope".
 //!
 //! All scanning skips `//`/`/* */` comments, string-literal contents and
 //! `#[cfg(test)]` regions, and the output is deterministic: violations are
@@ -27,6 +36,9 @@ use std::collections::BTreeSet;
 use std::fmt;
 use std::fs;
 use std::path::{Path, PathBuf};
+
+pub mod graph;
+pub mod items;
 
 // ---- configuration ---------------------------------------------------------
 
@@ -42,33 +54,50 @@ pub struct TokenRule {
     pub paths: Vec<String>,
     /// Path prefixes exempt from the rule.
     pub allow: Vec<String>,
+    /// Also forbid direct `container[i]` index expressions (panicking
+    /// sugar for `.get(i).unwrap()`).
+    pub index: bool,
 }
 
-/// A fabric enum: its declaration file and the files that must consume
-/// (name) every one of its variants.
+/// A fabric enum: its declaration file. Producers and consumers are not
+/// configured — the flow graph discovers every site under the scan root.
 #[derive(Debug, Clone, Default)]
 pub struct Fabric {
     pub name: String,
     /// File (relative to the scan root) declaring `enum <name>`.
     pub decl: String,
-    /// Files that must reference every `<name>::<Variant>` token.
-    pub consumers: Vec<String>,
+}
+
+/// A completeness matrix: every variant of `name` must appear inside each
+/// required function, written `"file#Qualified::fn"` (e.g.
+/// `"cloud/db.rs#MetaDb::apply"`).
+#[derive(Debug, Clone, Default)]
+pub struct Matrix {
+    pub name: String,
+    /// File (relative to the scan root) declaring `enum <name>`.
+    pub decl: String,
+    /// `"file#qualified_fn"` cells that must each cover every variant.
+    pub requires: Vec<String>,
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct Config {
     pub rules: Vec<TokenRule>,
     pub fabrics: Vec<Fabric>,
+    pub matrices: Vec<Matrix>,
 }
 
-/// Parse the TOML subset used by `lint.toml`: `[[rule]]` / `[[fabric]]`
-/// tables with `key = "string"` and `key = ["a", "b"]` entries, `#`
-/// comments. Hand-rolled so the tool stays dependency-free.
+/// Parse the TOML subset used by `lint.toml`: `[[rule]]` / `[[fabric]]` /
+/// `[[matrix]]` tables with `key = "string"`, `key = ["a", "b"]` and
+/// `key = true` entries, `#` comments. Hand-rolled so the tool stays
+/// dependency-free. Every malformed input is a `Err` (the CLI's exit-code-2
+/// path), never a panic.
 pub fn parse_config(text: &str) -> Result<Config, String> {
     enum Cur {
         None,
         Rule,
         Fabric,
+        Matrix,
     }
     let mut cfg = Config::default();
     let mut cur = Cur::None;
@@ -88,6 +117,11 @@ pub fn parse_config(text: &str) -> Result<Config, String> {
             cur = Cur::Fabric;
             continue;
         }
+        if line == "[[matrix]]" {
+            cfg.matrices.push(Matrix::default());
+            cur = Cur::Matrix;
+            continue;
+        }
         if line.starts_with('[') {
             return Err(format!("lint.toml:{}: unknown table {line}", idx + 1));
         }
@@ -96,40 +130,66 @@ pub fn parse_config(text: &str) -> Result<Config, String> {
             .ok_or_else(|| format!("lint.toml:{}: expected key = value", idx + 1))?;
         let key = key.trim();
         let val = val.trim();
+        // A table header always precedes its keys, so the corresponding
+        // list is non-empty here; a missing entry is a config error, not a
+        // panic.
+        let no_table = || format!("lint.toml:{}: key {key} outside a table", idx + 1);
         match cur {
             Cur::None => {
                 return Err(format!("lint.toml:{}: key outside a table", idx + 1));
             }
             Cur::Rule => {
-                let rule = cfg.rules.last_mut().expect("current rule");
+                let rule = cfg.rules.last_mut().ok_or_else(no_table)?;
                 match key {
                     "id" => rule.id = toml_str(val, idx)?,
                     "message" => rule.message = toml_str(val, idx)?,
                     "tokens" => rule.tokens = toml_arr(val, idx)?,
                     "paths" => rule.paths = toml_arr(val, idx)?,
                     "allow" => rule.allow = toml_arr(val, idx)?,
+                    "index" => rule.index = toml_bool(val, idx)?,
                     k => return Err(format!("lint.toml:{}: unknown rule key {k}", idx + 1)),
                 }
             }
             Cur::Fabric => {
-                let fab = cfg.fabrics.last_mut().expect("current fabric");
+                let fab = cfg.fabrics.last_mut().ok_or_else(no_table)?;
                 match key {
                     "name" => fab.name = toml_str(val, idx)?,
                     "decl" => fab.decl = toml_str(val, idx)?,
-                    "consumers" => fab.consumers = toml_arr(val, idx)?,
                     k => return Err(format!("lint.toml:{}: unknown fabric key {k}", idx + 1)),
+                }
+            }
+            Cur::Matrix => {
+                let mat = cfg.matrices.last_mut().ok_or_else(no_table)?;
+                match key {
+                    "enum" => mat.name = toml_str(val, idx)?,
+                    "decl" => mat.decl = toml_str(val, idx)?,
+                    "requires" => mat.requires = toml_arr(val, idx)?,
+                    k => return Err(format!("lint.toml:{}: unknown matrix key {k}", idx + 1)),
                 }
             }
         }
     }
     for r in &cfg.rules {
-        if r.id.is_empty() || r.message.is_empty() || r.tokens.is_empty() {
-            return Err(format!("rule '{}' needs id, message and tokens", r.id));
+        if r.id.is_empty() || r.message.is_empty() || (r.tokens.is_empty() && !r.index) {
+            return Err(format!("rule '{}' needs id, message and tokens (or index = true)", r.id));
         }
     }
     for f in &cfg.fabrics {
-        if f.name.is_empty() || f.decl.is_empty() || f.consumers.is_empty() {
-            return Err(format!("fabric '{}' needs name, decl and consumers", f.name));
+        if f.name.is_empty() || f.decl.is_empty() {
+            return Err(format!("fabric '{}' needs name and decl", f.name));
+        }
+    }
+    for m in &cfg.matrices {
+        if m.name.is_empty() || m.decl.is_empty() || m.requires.is_empty() {
+            return Err(format!("matrix '{}' needs enum, decl and requires", m.name));
+        }
+        for req in &m.requires {
+            if !req.contains('#') {
+                return Err(format!(
+                    "matrix '{}': require {req} must be \"file#Qualified::fn\"",
+                    m.name
+                ));
+            }
         }
     }
     Ok(cfg)
@@ -153,6 +213,14 @@ fn toml_str(val: &str, idx: usize) -> Result<String, String> {
         Ok(v[1..v.len() - 1].to_string())
     } else {
         Err(format!("lint.toml:{}: expected a quoted string, got {v}", idx + 1))
+    }
+}
+
+fn toml_bool(val: &str, idx: usize) -> Result<bool, String> {
+    match val.trim() {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        v => Err(format!("lint.toml:{}: expected true or false, got {v}", idx + 1)),
     }
 }
 
@@ -379,12 +447,14 @@ fn is_ident_byte(b: u8) -> bool {
     b.is_ascii_alphanumeric() || b == b'_'
 }
 
-/// Find `token` in `line` with identifier-boundary checks on whichever of
-/// its edges are identifier characters (so `HashMap` does not match
-/// `HashMapExt`, but `.unwrap()` matches mid-expression).
-pub fn find_token(line: &str, token: &str) -> bool {
+/// Every byte offset where `token` occurs in `line`, with
+/// identifier-boundary checks on whichever of its edges are identifier
+/// characters (so `HashMap` does not match `HashMapExt`, but `.unwrap()`
+/// matches mid-expression).
+pub fn find_token_positions(line: &str, token: &str) -> Vec<usize> {
+    let mut out = Vec::new();
     if token.is_empty() {
-        return false;
+        return out;
     }
     let tb = token.as_bytes();
     let lb = line.as_bytes();
@@ -397,11 +467,31 @@ pub fn find_token(line: &str, token: &str) -> bool {
         let end = abs + token.len();
         let after_ok = !check_after || end >= lb.len() || !is_ident_byte(lb[end]);
         if before_ok && after_ok {
-            return true;
+            out.push(abs);
         }
         start = abs + 1;
     }
-    false
+    out
+}
+
+/// True if `token` occurs in `line` (boundary rules as above).
+pub fn find_token(line: &str, token: &str) -> bool {
+    !find_token_positions(line, token).is_empty()
+}
+
+/// True if the (stripped) line contains a direct index expression:
+/// a `[` directly preceded by an identifier character, `)` or `]` —
+/// `v[0]`, `self.free_at[idx]`, `rows()[i]`, `grid[r][c]`. Attribute
+/// brackets (`#[...]`), slice types (`&[u8]`), array literals and
+/// `vec![...]` never match: their `[` follows `#`, `&`, `!` or
+/// punctuation.
+pub fn has_direct_index(line: &str) -> bool {
+    let lb = line.as_bytes();
+    lb.iter().enumerate().any(|(i, &b)| {
+        b == b'['
+            && i > 0
+            && (is_ident_byte(lb[i - 1]) || lb[i - 1] == b')' || lb[i - 1] == b']')
+    })
 }
 
 fn in_scope(rel: &str, rule: &TokenRule) -> bool {
@@ -420,7 +510,7 @@ fn scan_tokens(rel: &str, lines: &[String], mask: &[bool], cfg: &Config, out: &m
             if mask[idx] {
                 continue;
             }
-            if rule.tokens.iter().any(|t| find_token(l, t)) {
+            if rule.tokens.iter().any(|t| find_token(l, t)) || (rule.index && has_direct_index(l)) {
                 out.push(Violation {
                     path: rel.to_string(),
                     line: idx + 1,
@@ -581,16 +671,17 @@ fn walk(dir: &Path, files: &mut Vec<PathBuf>) -> Result<(), String> {
     Ok(())
 }
 
-struct SourceFile {
-    rel: String,
-    lines: Vec<String>,
-    mask: Vec<bool>,
+/// A loaded source file: root-relative `/`-separated path, stripped lines
+/// (comments/strings removed, line structure preserved) and the
+/// `#[cfg(test)]` mask.
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<String>,
+    pub mask: Vec<bool>,
 }
 
-/// Run every configured rule over the `.rs` files under `root`. Violations
-/// come back sorted by (path, line, rule) — deterministic output is a
-/// requirement the tool shares with the tree it checks.
-pub fn run(root: &Path, cfg: &Config) -> Result<Vec<Violation>, String> {
+/// Load every `.rs` file under `root`, stripped and masked, sorted by path.
+pub fn load_sources(root: &Path) -> Result<Vec<SourceFile>, String> {
     let mut paths = Vec::new();
     walk(root, &mut paths)?;
     let mut sources = Vec::new();
@@ -605,48 +696,99 @@ pub fn run(root: &Path, cfg: &Config) -> Result<Vec<Violation>, String> {
         let mask = test_mask(&lines);
         sources.push(SourceFile { rel, lines, mask });
     }
+    Ok(sources)
+}
+
+/// Check one completeness matrix: every variant of the enum must appear
+/// (as `Enum::Variant`) inside each required function span. Unknown files
+/// or functions in `requires` are config errors, not violations — the
+/// matrix must never silently check nothing.
+fn scan_matrix(
+    mat: &Matrix,
+    sources: &[SourceFile],
+    indices: &[items::ItemIndex],
+    out: &mut Vec<Violation>,
+) -> Result<(), String> {
+    let decl_items = sources
+        .iter()
+        .zip(indices)
+        .find(|(s, _)| s.rel == mat.decl)
+        .map(|(_, i)| i)
+        .ok_or_else(|| format!("matrix {}: decl file {} not found", mat.name, mat.decl))?;
+    let def = decl_items
+        .enum_def(&mat.name)
+        .ok_or_else(|| format!("matrix {}: enum not found in {}", mat.name, mat.decl))?;
+    for req in &mat.requires {
+        let (file, qual) = req
+            .split_once('#')
+            .ok_or_else(|| format!("matrix {}: malformed require {req}", mat.name))?;
+        let (src, idx) = sources
+            .iter()
+            .zip(indices)
+            .find(|(s, _)| s.rel == file)
+            .ok_or_else(|| format!("matrix {}: require file {file} not found", mat.name))?;
+        let spans: Vec<&items::FnSpan> = idx.fns.iter().filter(|f| f.qual == qual).collect();
+        if spans.is_empty() {
+            return Err(format!("matrix {}: fn {qual} not found in {file}", mat.name));
+        }
+        for v in &def.variants {
+            let token = format!("{}::{}", mat.name, v.name);
+            let covered = spans.iter().any(|span| {
+                (span.start..=span.end).any(|ln| {
+                    let i = ln - 1;
+                    !src.mask[i] && find_token(&src.lines[i], &token)
+                })
+            });
+            if !covered {
+                out.push(Violation {
+                    path: mat.decl.clone(),
+                    line: v.line,
+                    rule: "write-matrix".to_string(),
+                    message: format!(
+                        "variant {token} does not appear in {req}: every {} variant \
+                         must be handled there (apply/hot_key/codec completeness)",
+                        mat.name
+                    ),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The full analysis result: sorted violations plus the fabric flow graph
+/// they were derived from (the graph is emitted as a committed artifact
+/// even when the tree is clean).
+pub struct Analysis {
+    pub violations: Vec<Violation>,
+    pub graph: graph::FabricGraph,
+}
+
+/// Run every configured rule over the `.rs` files under `root` and build
+/// the fabric flow graph. Violations come back sorted by (path, line,
+/// rule) — deterministic output is a requirement the tool shares with the
+/// tree it checks.
+pub fn analyze(root: &Path, cfg: &Config) -> Result<Analysis, String> {
+    let sources = load_sources(root)?;
+    let indices: Vec<items::ItemIndex> =
+        sources.iter().map(|s| items::index_items(&s.lines, &s.mask)).collect();
     let mut out = Vec::new();
     for s in &sources {
         scan_tokens(&s.rel, &s.lines, &s.mask, cfg, &mut out);
         scan_wildcards(&s.rel, &s.lines, &s.mask, cfg, &mut out);
     }
-    for fab in &cfg.fabrics {
-        let decl = sources
-            .iter()
-            .find(|s| s.rel == fab.decl)
-            .ok_or_else(|| format!("fabric {}: decl file {} not found", fab.name, fab.decl))?;
-        let vars = enum_variants(&decl.lines, &decl.mask, &fab.name)
-            .ok_or_else(|| format!("fabric {}: enum not found in {}", fab.name, fab.decl))?;
-        if vars.is_empty() {
-            return Err(format!("fabric {}: no variants parsed from {}", fab.name, fab.decl));
-        }
-        for consumer in &fab.consumers {
-            let cons = sources.iter().find(|s| s.rel == *consumer).ok_or_else(|| {
-                format!("fabric {}: consumer file {consumer} not found", fab.name)
-            })?;
-            for (line, var) in &vars {
-                let token = format!("{}::{var}", fab.name);
-                let consumed = cons
-                    .lines
-                    .iter()
-                    .enumerate()
-                    .any(|(i, l)| !cons.mask[i] && find_token(l, &token));
-                if !consumed {
-                    out.push(Violation {
-                        path: fab.decl.clone(),
-                        line: *line,
-                        rule: "fabric-coverage".to_string(),
-                        message: format!(
-                            "variant {token} has no consumer in {consumer}: \
-                             it would flow through the fabric and route nowhere"
-                        ),
-                    });
-                }
-            }
-        }
+    let graph = graph::build(&sources, &indices, &cfg.fabrics)?;
+    out.extend(graph::flow_violations(&graph));
+    for mat in &cfg.matrices {
+        scan_matrix(mat, &sources, &indices, &mut out)?;
     }
     let dedup: BTreeSet<Violation> = out.into_iter().collect();
-    Ok(dedup.into_iter().collect())
+    Ok(Analysis { violations: dedup.into_iter().collect(), graph })
+}
+
+/// Violations only — see [`analyze`] for the graph as well.
+pub fn run(root: &Path, cfg: &Config) -> Result<Vec<Violation>, String> {
+    analyze(root, cfg).map(|a| a.violations)
 }
 
 #[cfg(test)]
@@ -698,14 +840,19 @@ mod tests {
         let cfg = parse_config(
             "# comment\n[[rule]]\nid = \"wall-clock\"\nmessage = \"no wall clock\"\n\
              tokens = [\"Instant::now\", \"SystemTime\"]\npaths = [\"\"]\n\
-             allow = [\"metrics/wallclock.rs\"]\n\n[[fabric]]\nname = \"Change\"\n\
-             decl = \"cloud/db.rs\"\nconsumers = [\"sairflow/world.rs\"]\n",
+             allow = [\"metrics/wallclock.rs\"]\nindex = true\n\n[[fabric]]\n\
+             name = \"Change\"\ndecl = \"cloud/db.rs\"\n\n[[matrix]]\n\
+             enum = \"Write\"\ndecl = \"cloud/db.rs\"\n\
+             requires = [\"cloud/db.rs#MetaDb::apply\"]\n",
         )
         .unwrap();
         assert_eq!(cfg.rules.len(), 1);
         assert_eq!(cfg.rules[0].tokens, vec!["Instant::now", "SystemTime"]);
         assert_eq!(cfg.rules[0].allow, vec!["metrics/wallclock.rs"]);
+        assert!(cfg.rules[0].index);
         assert_eq!(cfg.fabrics[0].name, "Change");
+        assert_eq!(cfg.matrices[0].name, "Write");
+        assert_eq!(cfg.matrices[0].requires, vec!["cloud/db.rs#MetaDb::apply"]);
     }
 
     #[test]
@@ -713,6 +860,53 @@ mod tests {
         assert!(parse_config("[[rule]]\nid = \"x\"\n").is_err());
         assert!(parse_config("key = \"outside\"\n").is_err());
         assert!(parse_config("[section]\n").is_err());
+        // Errors, not panics: the CLI maps these onto exit code 2.
+        assert!(parse_config("[[rule]]\nindex = \"yes\"\n").is_err());
+        assert!(parse_config("[[matrix]]\nenum = \"W\"\ndecl = \"a.rs\"\nrequires = [\"no-hash\"]\n").is_err());
+        assert!(parse_config("[[fabric]]\nname = \"Change\"\n").is_err());
+    }
+
+    #[test]
+    fn direct_index_detector() {
+        assert!(has_direct_index("self.free_at[idx] = finish;"));
+        assert!(has_direct_index("let a = v[0].as_f64();"));
+        assert!(has_direct_index("rows()[i]"));
+        assert!(has_direct_index("grid[r][c]"));
+        assert!(!has_direct_index("#[derive(Debug)]"));
+        assert!(!has_direct_index("fn f(xs: &[u8]) -> Vec<u8> { vec![1, 2] }"));
+        assert!(!has_direct_index("let a = [0u8; 4];"));
+        assert!(!has_direct_index("if let [a, b] = xs {}"));
+    }
+
+    #[test]
+    fn matrix_flags_missing_variant_and_rejects_unknown_fn() {
+        let src = "pub enum W {\n    A,\n    B,\n}\nimpl Db {\n    fn apply(&self, w: W) {\n        \
+                   match w {\n            W::A => {}\n            W::B => {}\n        }\n    }\n}\n\
+                   fn codec(w: &W) -> u8 {\n    match w {\n        W::A => 1,\n        \
+                   _ => 0,\n    }\n}\n";
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        let idx = items::index_items(&lines, &mask);
+        let sources =
+            vec![SourceFile { rel: "w.rs".to_string(), lines, mask }];
+        let mat = Matrix {
+            name: "W".to_string(),
+            decl: "w.rs".to_string(),
+            requires: vec!["w.rs#Db::apply".to_string(), "w.rs#codec".to_string()],
+        };
+        let mut out = Vec::new();
+        scan_matrix(&mat, &sources, &[idx.clone()], &mut out).unwrap();
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "write-matrix");
+        assert!(out[0].message.contains("W::B"));
+        assert!(out[0].message.contains("w.rs#codec"));
+
+        let bad = Matrix {
+            name: "W".to_string(),
+            decl: "w.rs".to_string(),
+            requires: vec!["w.rs#Db::nonexistent".to_string()],
+        };
+        assert!(scan_matrix(&bad, &sources, &[idx], &mut Vec::new()).is_err());
     }
 
     #[test]
@@ -723,11 +917,8 @@ mod tests {
         let mask = test_mask(&lines);
         let cfg = Config {
             rules: Vec::new(),
-            fabrics: vec![Fabric {
-                name: "Change".into(),
-                decl: "x.rs".into(),
-                consumers: vec!["x.rs".into()],
-            }],
+            fabrics: vec![Fabric { name: "Change".into(), decl: "x.rs".into() }],
+            matrices: Vec::new(),
         };
         let mut out = Vec::new();
         scan_wildcards("x.rs", &lines, &mask, &cfg, &mut out);

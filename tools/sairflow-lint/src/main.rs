@@ -1,28 +1,106 @@
 //! CLI for the sairflow determinism & event-fabric linter.
 //!
-//! Usage: `sairflow-lint --config <lint.toml> <scan-root>`
+//! Usage:
+//!   sairflow-lint --config <lint.toml> [--json]
+//!                 [--graph-json <path>] [--graph-dot <path>]
+//!                 [--graph-md <path>] <scan-root>
 //!
-//! Exit codes: 0 = clean, 1 = violations (printed to stdout, path-sorted),
-//! 2 = usage / configuration / IO error (printed to stderr).
+//! `--json` prints machine-readable findings (one JSON document) instead
+//! of the path-sorted text lines. The `--graph-*` flags write the fabric
+//! flow graph artifacts (JSON / Graphviz DOT / Markdown) regardless of
+//! whether violations were found — CI regenerates them and fails on drift
+//! against the committed copies.
+//!
+//! Exit codes: 0 = clean, 1 = violations, 2 = usage / configuration / IO
+//! error (printed to stderr).
 
 use std::path::Path;
 use std::process::ExitCode;
 
+use sairflow_lint::graph;
+
 fn usage() -> ExitCode {
-    eprintln!("usage: sairflow-lint --config <lint.toml> <scan-root>");
+    eprintln!(
+        "usage: sairflow-lint --config <lint.toml> [--json] \
+         [--graph-json <path>] [--graph-dot <path>] [--graph-md <path>] <scan-root>"
+    );
     ExitCode::from(2)
+}
+
+struct Cli {
+    config: String,
+    root: String,
+    json: bool,
+    graph_json: Option<String>,
+    graph_dot: Option<String>,
+    graph_md: Option<String>,
+}
+
+fn parse_cli(args: &[String]) -> Option<Cli> {
+    let mut config = None;
+    let mut root = None;
+    let mut json = false;
+    let mut graph_json = None;
+    let mut graph_dot = None;
+    let mut graph_md = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--config" => config = Some(it.next()?.clone()),
+            "--json" => json = true,
+            "--graph-json" => graph_json = Some(it.next()?.clone()),
+            "--graph-dot" => graph_dot = Some(it.next()?.clone()),
+            "--graph-md" => graph_md = Some(it.next()?.clone()),
+            _ if a.starts_with('-') => return None,
+            _ if root.is_none() => root = Some(a.clone()),
+            _ => return None,
+        }
+    }
+    Some(Cli { config: config?, root: root?, json, graph_json, graph_dot, graph_md })
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable findings: one JSON document, violations in the same
+/// deterministic (path, line, rule) order as the text output.
+fn findings_json(violations: &[sairflow_lint::Violation]) -> String {
+    let mut out = String::from("{\n  \"violations\": [\n");
+    for (i, v) in violations.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}{}\n",
+            json_escape(&v.path),
+            v.line,
+            json_escape(&v.rule),
+            json_escape(&v.message),
+            if i + 1 < violations.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!("  ],\n  \"count\": {}\n}}\n", violations.len()));
+    out
 }
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (config_path, root) = match args.as_slice() {
-        [flag, config, root] if flag == "--config" => (config.clone(), root.clone()),
-        _ => return usage(),
+    let Some(cli) = parse_cli(&args) else {
+        return usage();
     };
-    let text = match std::fs::read_to_string(&config_path) {
+    let text = match std::fs::read_to_string(&cli.config) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("sairflow-lint: read {config_path}: {e}");
+            eprintln!("sairflow-lint: read {}: {e}", cli.config);
             return ExitCode::from(2);
         }
     };
@@ -33,21 +111,40 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
-    match sairflow_lint::run(Path::new(&root), &cfg) {
-        Ok(violations) if violations.is_empty() => {
-            println!("sairflow-lint: clean ({root})");
-            ExitCode::SUCCESS
-        }
-        Ok(violations) => {
-            for v in &violations {
-                println!("{v}");
-            }
-            println!("sairflow-lint: {} violation(s)", violations.len());
-            ExitCode::from(1)
-        }
+    let analysis = match sairflow_lint::analyze(Path::new(&cli.root), &cfg) {
+        Ok(a) => a,
         Err(e) => {
             eprintln!("sairflow-lint: {e}");
-            ExitCode::from(2)
+            return ExitCode::from(2);
         }
+    };
+    let emits: [(&Option<String>, fn(&graph::FabricGraph) -> String); 3] = [
+        (&cli.graph_json, graph::to_json),
+        (&cli.graph_dot, graph::to_dot),
+        (&cli.graph_md, graph::to_markdown),
+    ];
+    for (path, render) in emits {
+        if let Some(p) = path {
+            if let Err(e) = std::fs::write(p, render(&analysis.graph)) {
+                eprintln!("sairflow-lint: write {p}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let violations = analysis.violations;
+    if cli.json {
+        print!("{}", findings_json(&violations));
+    } else if violations.is_empty() {
+        println!("sairflow-lint: clean ({})", cli.root);
+    } else {
+        for v in &violations {
+            println!("{v}");
+        }
+        println!("sairflow-lint: {} violation(s)", violations.len());
+    }
+    if violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
     }
 }

@@ -30,6 +30,9 @@ fn each_rule_fires_on_its_bad_fixture() {
     assert!(has("bad/api/handlers.rs", "unwrap-in-handlers"), "{vs:#?}");
     assert!(has("bad/fabric.rs", "fabric-wildcard"), "{vs:#?}");
     assert!(has("bad/fabric.rs", "fabric-coverage"), "{vs:#?}");
+    assert!(has("bad/flow_dead.rs", "fabric-dead"), "{vs:#?}");
+    assert!(has("bad/codec.rs", "write-matrix"), "{vs:#?}");
+    assert!(has("bad/durability/unwrap.rs", "panic-freedom"), "{vs:#?}");
 }
 
 #[test]
@@ -48,6 +51,51 @@ fn diagnostics_carry_the_expected_details() {
     let wall = vs.iter().find(|v| v.rule == "wall-clock").expect("wall-clock present");
     assert_eq!(wall.path, "bad/wall_clock.rs");
     assert!(wall.line >= 3, "points at a source line, not the doc header: {wall:?}");
+    let dead = vs.iter().find(|v| v.rule == "fabric-dead").expect("dead-variant present");
+    assert!(dead.message.contains("DeadMsg::Ghost"), "{dead:?}");
+    let matrix = vs.iter().find(|v| v.rule == "write-matrix").expect("matrix violation present");
+    assert!(matrix.message.contains("MiniWrite::Evict"), "{matrix:?}");
+    assert!(matrix.message.contains("mini_from_json"), "{matrix:?}");
+    let panics: Vec<usize> = vs
+        .iter()
+        .filter(|v| v.rule == "panic-freedom")
+        .map(|v| v.line)
+        .collect();
+    // unwrap, expect and the two direct-index reads (one line).
+    assert_eq!(panics, vec![6, 7, 11], "{vs:#?}");
+}
+
+#[test]
+fn fixture_graph_records_the_seeded_flow_gaps() {
+    let root = fixtures_root();
+    let text = std::fs::read_to_string(root.join("lint.toml")).expect("fixture lint.toml");
+    let cfg = parse_config(&text).expect("fixture config parses");
+    let analysis = sairflow_lint::analyze(&root, &cfg).expect("fixture scan runs");
+    let dead = analysis
+        .graph
+        .enums
+        .iter()
+        .find(|e| e.name == "DeadMsg")
+        .expect("DeadMsg in graph")
+        .variants
+        .iter()
+        .find(|v| v.name == "Ghost")
+        .expect("Ghost in graph");
+    assert!(dead.producers.is_empty(), "{dead:?}");
+    assert_eq!(dead.consumers.len(), 1, "{dead:?}");
+    let deleted = analysis
+        .graph
+        .enums
+        .iter()
+        .find(|e| e.name == "FabricMsg")
+        .expect("FabricMsg in graph")
+        .variants
+        .iter()
+        .find(|v| v.name == "Deleted")
+        .expect("Deleted in graph");
+    assert_eq!(deleted.producers.len(), 1, "{deleted:?}");
+    assert!(deleted.consumers.is_empty(), "{deleted:?}");
+    assert_eq!(deleted.producers[0].func, "emit_deleted");
 }
 
 #[test]

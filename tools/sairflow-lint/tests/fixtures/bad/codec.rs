@@ -1,0 +1,52 @@
+//! Known-bad fixture for the completeness matrix: `Evict` is handled by
+//! `MiniDb::apply`, `MiniWrite::hot_key` and the encoder, but the decoder
+//! (`mini_from_json`) has no arm for it — exactly the "added a Write,
+//! forgot the WAL codec" bug class (write-matrix).
+
+pub enum MiniWrite {
+    Put { key: u64 },
+    Evict { key: u64 },
+}
+
+pub struct MiniDb {
+    pub rows: u64,
+}
+
+impl MiniDb {
+    pub fn apply(&mut self, w: &MiniWrite) {
+        match w {
+            MiniWrite::Put { key } => self.rows += key,
+            MiniWrite::Evict { key } => self.rows -= key,
+        }
+    }
+}
+
+impl MiniWrite {
+    pub fn hot_key(&self) -> u64 {
+        match self {
+            MiniWrite::Put { key } => *key,
+            MiniWrite::Evict { key } => *key,
+        }
+    }
+}
+
+pub fn mini_to_json(w: &MiniWrite) -> String {
+    match w {
+        MiniWrite::Put { key } => format!("put:{key}"),
+        MiniWrite::Evict { key } => format!("evict:{key}"),
+    }
+}
+
+pub fn mini_from_json(text: &str) -> Option<MiniWrite> {
+    let (kind, key) = text.split_once(':')?;
+    let key = key.parse().ok()?;
+    match kind {
+        "put" => Some(MiniWrite::Put { key }),
+        "evict" => None,
+        _ => None,
+    }
+}
+
+pub fn make_evict(key: u64) -> MiniWrite {
+    MiniWrite::Evict { key }
+}

@@ -1,0 +1,12 @@
+//! Known-bad fixture for the panic-freedom rule: unwrap/expect and direct
+//! indexing inside the durability domain. Recovery code must degrade to
+//! structured errors, never panic mid-restore.
+
+pub fn read_epoch(keys: &[String]) -> u64 {
+    let first = keys.first().unwrap();
+    first.parse().expect("epoch parses")
+}
+
+pub fn first_pair(v: &[f64]) -> (f64, f64) {
+    (v[0], v[1])
+}

@@ -1,11 +1,25 @@
-//! Known-bad fixture for both fabric rules: `Deleted` has no consumer
-//! anywhere in this file (fabric-coverage), and the catch-all arm sits
-//! among `FabricMsg::` siblings (fabric-wildcard).
+//! Known-bad fixture for two fabric rules: `Deleted` is produced but has
+//! no consumer match arm anywhere (fabric-coverage), and the catch-all
+//! arm sits among `FabricMsg::` siblings (fabric-wildcard). Every variant
+//! has a producer so the dead-variant rule stays quiet — `flow_dead.rs`
+//! owns that one.
 
 pub enum FabricMsg {
     Created,
     Updated,
     Deleted,
+}
+
+pub fn emit_created() -> FabricMsg {
+    FabricMsg::Created
+}
+
+pub fn emit_updated() -> FabricMsg {
+    FabricMsg::Updated
+}
+
+pub fn emit_deleted() -> FabricMsg {
+    FabricMsg::Deleted
 }
 
 pub fn consume(m: &FabricMsg) -> u32 {

@@ -1,0 +1,20 @@
+//! Known-bad fixture for the dead-variant rule: `Ghost` has a consumer
+//! match arm but no constructor site anywhere in the corpus, so the flow
+//! graph reports it as dead weight (fabric-dead). `Used` flows normally
+//! and keeps the rest of the enum clean.
+
+pub enum DeadMsg {
+    Used,
+    Ghost,
+}
+
+pub fn emit() -> DeadMsg {
+    DeadMsg::Used
+}
+
+pub fn route(m: &DeadMsg) -> u32 {
+    match m {
+        DeadMsg::Used => 1,
+        DeadMsg::Ghost => 2,
+    }
+}

@@ -16,7 +16,12 @@
 //!      whole binary runs under a counting `#[global_allocator]`, and the
 //!      steady-state delivery loop is asserted allocation-free per record
 //!      (the recycled batch buffer of `cloud/kinesis.rs` — the only
-//!      allocation per delivery is the engine's boxed event closure).
+//!      allocation per delivery is the engine's boxed event closure);
+//!   7. shard scaling of the partitioned scheduling pass (PR 9): full-batch
+//!      vs critical-path pass latency at 1/2/4/8 control-plane shards on
+//!      the multi-tenant workload. Run with `--bench9` to save the summary
+//!      as `rust/reports/BENCH_9.json` and copy the cells into the
+//!      committed trajectory file `reports/BENCH_9.json`.
 //!
 //! Cells 2/3/3b are the payoff metric of the symbolized identifier
 //! fabric (PR 5): every key the DB commit and the scheduling pass touch
@@ -39,7 +44,7 @@ use sairflow::cloud::db::{Change, DagRow, MetaDb, Txn, Write};
 use sairflow::cloud::kinesis::{delivered, put_records, KinesisHost, KinesisStream};
 use sairflow::dag::state::{DagId, RunType, TiState};
 use sairflow::exp::{self, ExperimentSpec, SystemKind};
-use sairflow::scheduler::{scheduling_pass, SchedLimits, SchedMsg};
+use sairflow::scheduler::{scheduling_pass, scheduling_pass_sharded, SchedLimits, SchedMsg};
 use sairflow::sim::engine::Sim;
 use sairflow::sim::time::SECOND;
 use sairflow::util::json::Json;
@@ -173,7 +178,27 @@ fn bench_scheduling_pass(iters: u32) -> (f64, usize) {
 /// plain scheduling path. Symbols make the tenant attribution a field
 /// read per row; pre-symbol code re-split every id per check.
 fn bench_scheduling_pass_multitenant(iters: u32, tenants: u32, dags_per: u32) -> (f64, usize) {
-    let mut db = MetaDb::new();
+    let (db, msgs) = build_multitenant_snapshot(1, tenants, dags_per);
+    let limits = SchedLimits { parallelism: 100_000, ..SchedLimits::default() };
+    let t0 = Instant::now();
+    let mut total_writes = 0;
+    for _ in 0..iters {
+        let out = scheduling_pass(&db, 1, &msgs, &limits);
+        total_writes += out.txn.writes.len();
+    }
+    let per_pass = t0.elapsed().as_secs_f64() / iters as f64;
+    (per_pass * 1e3, total_writes / iters.max(1) as usize)
+}
+
+/// The multi-tenant snapshot behind cells 3b and 7, at a chosen shard
+/// count: `tenants` × `dags_per` DAGs × 30 tasks with one running
+/// foreground run each, plus the mixed per-pass message batch.
+fn build_multitenant_snapshot(
+    n_shards: usize,
+    tenants: u32,
+    dags_per: u32,
+) -> (MetaDb, Vec<SchedMsg>) {
+    let mut db = MetaDb::with_shards(n_shards);
     let mut msgs = Vec::new();
     for t in 0..tenants {
         let tenant = format!("tenant{t:02}");
@@ -211,15 +236,42 @@ fn bench_scheduling_pass_multitenant(iters: u32, tenants: u32, dags_per: u32) ->
             }
         }
     }
+    (db, msgs)
+}
+
+/// Cell 7: shard scaling of the partitioned scheduling pass (PR 9). For
+/// each shard count, the *full batch* pass measures total work (flat by
+/// construction — partitioning adds no per-message overhead), and the
+/// *critical path* measures the slowest single shard fed only its own
+/// slice of the batch: the wall-clock of a deployment running one
+/// scheduler lambda per shard (`world.rs`'s single-lambda sweep is the
+/// sequential degenerate case). Near-linear scaling means critical path
+/// ≈ t₁/n until the shared floor — the global promotion FIFO drain and
+/// budget accounting each lambda repeats — dominates. Returns
+/// `(n_shards, full_ms, critical_path_ms)` per shard count.
+fn bench_shard_scaling(iters: u32, tenants: u32, dags_per: u32) -> Vec<(usize, f64, f64)> {
     let limits = SchedLimits { parallelism: 100_000, ..SchedLimits::default() };
-    let t0 = Instant::now();
-    let mut total_writes = 0;
-    for _ in 0..iters {
-        let out = scheduling_pass(&db, 1, &msgs, &limits);
-        total_writes += out.txn.writes.len();
+    let mut cells = Vec::new();
+    for n in [1usize, 2, 4, 8] {
+        let (db, msgs) = build_multitenant_snapshot(n, tenants, dags_per);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let _ = scheduling_pass_sharded(&db, 1, &msgs, &limits, n);
+        }
+        let full_ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+        let mut critical_ms = 0.0f64;
+        for s in 0..n {
+            let part: Vec<SchedMsg> =
+                msgs.iter().copied().filter(|m| m.shard_of(n) == s).collect();
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let _ = scheduling_pass_sharded(&db, 1, &part, &limits, n);
+            }
+            critical_ms = critical_ms.max(t0.elapsed().as_secs_f64() / iters as f64 * 1e3);
+        }
+        cells.push((n, full_ms, critical_ms));
     }
-    let per_pass = t0.elapsed().as_secs_f64() / iters as f64;
-    (per_pass * 1e3, total_writes / iters.max(1) as usize)
+    cells
 }
 
 /// Cell 6: steady-state allocation profile of the per-shard CDC →
@@ -293,6 +345,7 @@ fn main() {
     // CI smoke: tiny iteration counts, no stats — proves the paths run.
     let ci = std::env::args().any(|a| a == "--test" || a == "--ci-smoke");
     let bench5 = std::env::args().any(|a| a == "--bench5");
+    let bench9 = std::env::args().any(|a| a == "--bench9");
     let (des_target, db_n, pass_iters, e2e_tasks) =
         if ci { (100_000, 5_000, 5, 16) } else { (2_000_000, 100_000, 200, 125) };
     if ci {
@@ -312,6 +365,24 @@ fn main() {
     println!(
         "scheduling pass (mt {mt_tenants}x{mt_dags}) : {mt_ms:>9.3} ms/pass ({mt_writes} writes)"
     );
+    // Cell 7: shard scaling on the same multi-tenant workload shape.
+    let sc_iters = if ci { 2 } else { 50 };
+    let scaling = bench_shard_scaling(sc_iters, mt_tenants, mt_dags);
+    let t1_ms = scaling[0].1;
+    let mut scaling_json = Vec::new();
+    for &(n, full_ms, critical_ms) in &scaling {
+        let speedup = t1_ms / critical_ms.max(1e-9);
+        println!(
+            "sched pass {n} shard(s)    : {full_ms:>9.3} ms full batch, {critical_ms:>9.3} ms critical path ({speedup:.2}x vs 1 shard)"
+        );
+        scaling_json.push(
+            Json::obj()
+                .set("n_shards", n as u64)
+                .set("full_pass_ms", full_ms)
+                .set("critical_path_ms", critical_ms)
+                .set("speedup_vs_1_shard", speedup),
+        );
+    }
     let handoff_total = if ci { 2_000 } else { 50_000 };
     let (ho_per_delivery, ho_per_record, ho_rps) = bench_cdc_handoff(handoff_total);
     println!(
@@ -343,7 +414,12 @@ fn main() {
         .set("e2e_wall_secs", e2e_wall)
         .set("cdc_handoff_allocs_per_delivery", ho_per_delivery)
         .set("cdc_handoff_allocs_per_record", ho_per_record)
-        .set("cdc_handoff_records_per_sec", ho_rps);
+        .set("cdc_handoff_records_per_sec", ho_rps)
+        .set(
+            "shard_scaling_workload",
+            format!("{mt_tenants} tenants x {mt_dags} dags x 30 tasks"),
+        )
+        .set("shard_scaling", Json::Arr(scaling_json));
 
     // L1/L2: PJRT execution latency (skipped without artifacts).
     match sairflow::runtime::Engine::load_dir(&sairflow::runtime::default_artifacts_dir()) {
@@ -362,6 +438,8 @@ fn main() {
     }
     let report = if ci {
         "BENCH_ci"
+    } else if bench9 {
+        "BENCH_9"
     } else if bench5 {
         "BENCH_5"
     } else {

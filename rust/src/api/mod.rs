@@ -14,7 +14,7 @@
 //!
 //! | Method | Path | Action |
 //! |--------|------|--------|
-//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters (operator surface adds WAL window + durability gauges: `checkpoint_epoch`, `last_checkpoint_lsn`, `wal_tail_len`, `recoveries`, `live_dag_ids`) |
+//! | GET    | `/api/v1/health` | control-plane health: queue depths, in-flight work, the tenant's run/task state breakdowns + admission counters (operator surface adds WAL window + durability gauges — `checkpoint_epoch`, `last_checkpoint_lsn`, `wal_tail_len`, `recoveries`, `live_dag_ids` — and the `shards` block: cross-shard `aggregate` + `per_shard` breakdown) |
 //! | GET    | `/api/v1/dags` | list DAGs (`limit`, `offset`, `paused=true\|false`) |
 //! | POST   | `/api/v1/dags` | upload a DAG file (body `{"file_text": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
@@ -30,6 +30,8 @@
 //! | GET    | `/api/v1/tenants` | list tenants (operator surface; tokens are never returned) |
 //! | POST   | `/api/v1/tenants` | create/update a tenant (body `{"tenant_id", "token"?, "rate_rps"?, "rate_burst"?, "max_active_backfill_runs"?}`) |
 //! | GET    | `/api/v1/tenants/{tenant_id}` | tenant detail + live admission counters |
+//! | GET    | `/api/v1/shards` | shard topology (operator surface): shard count + every shard's dag/run/TI counts, WAL tail length, checkpoint epoch, last scheduling-pass time/duration |
+//! | GET    | `/api/v1/shards/{shard}` | one shard's gauges (404 past the shard count) |
 //!
 //! # Multi-tenancy
 //!
@@ -359,6 +361,7 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
                     "recoveries",
                     "interned_dag_ids",
                     "live_dag_ids",
+                    "shards",
                 ],
             )
             .set("active_runs", legacy_active)
@@ -478,9 +481,11 @@ mod tests {
         assert_eq!(h.get("n_dags").unwrap().as_u64(), Some(1));
         assert!(h.get("run_states").unwrap().get("success").is_some());
         assert!(h.get("task_states").unwrap().get("queued").is_some());
-        // v1-only backfill counters are stripped for legacy clients.
+        // v1-only backfill counters are stripped for legacy clients, and
+        // so is the operator-surface shard breakdown.
         assert!(h.get("active_backfill_runs").is_none());
         assert!(h.get("queued_backfill_runs").is_none());
+        assert!(h.get("shards").is_none());
     }
 
     #[test]

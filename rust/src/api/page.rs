@@ -38,6 +38,25 @@
 //! key today, but clients must only echo it back. Requests without a
 //! `cursor` parameter are served by the `limit`/`offset` path unchanged,
 //! bit-for-bit.
+//!
+//! # Sharded control plane
+//!
+//! Tables are partitioned across control-plane shards by
+//! `hash(DagId) % n_shards`, which splits the list endpoints into two
+//! fan-in disciplines:
+//!
+//! * **cursor walks** are per-DAG collections, and a DAG's rows live on
+//!   exactly one shard — so a cursor position is logically a
+//!   `(shard, key)` pair ([`ShardedCursor`]) whose shard component is
+//!   *derived* from the resolved dag id at request time rather than
+//!   encoded in the cursor value. The wire format stays the bare resume
+//!   key, byte-identical with the un-sharded protocol, and the walk
+//!   never touches another shard's slice;
+//! * **offset lists** that span DAGs (e.g. `GET /dags`) fan in across
+//!   shards: each shard contributes its slice in key order and
+//!   [`kway_merge`] reassembles the global order — byte-identical with
+//!   the un-sharded scan, because keys are unique across shards and the
+//!   merge is by the same total order the single table iterated in.
 
 use crate::api::error::ApiError;
 use crate::api::router::Query;
@@ -56,6 +75,52 @@ pub enum Cursor {
     Start,
     /// `?cursor=<key>`: resume strictly after the last-seen key.
     After(u64),
+}
+
+/// A cursor position bound to the control-plane shard that owns the
+/// walked collection — the sharded form of a resume point. Every cursor
+/// endpoint walks a per-DAG collection and a DAG's rows live on exactly
+/// one shard, so the shard component is recoverable from the request
+/// path (the resolved dag id names its shard); it is therefore never
+/// encoded on the wire — [`Cursor`] stays the bare key — but it pins
+/// the range scan to one shard's table slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardedCursor {
+    /// The owning control-plane shard (`dag.shard_of(n_shards)`).
+    pub shard: usize,
+    /// The wire-visible resume position within that shard's slice.
+    pub pos: Cursor,
+}
+
+/// Merge per-shard sorted slices into one globally ordered collection —
+/// the fan-in step of the cross-DAG offset lists: each shard yields its
+/// slice in key order and the merge reproduces the global order
+/// byte-identically with the un-sharded scan. Keys are unique across
+/// shards (a dag id hashes to one shard), so ties cannot occur; if they
+/// did, the lower shard index would win deterministically.
+pub fn kway_merge<T, K: Ord>(parts: Vec<Vec<T>>, mut key: impl FnMut(&T) -> K) -> Vec<T> {
+    let total: usize = parts.iter().map(Vec::len).sum();
+    let mut iters: Vec<std::iter::Peekable<std::vec::IntoIter<T>>> =
+        parts.into_iter().map(|p| p.into_iter().peekable()).collect();
+    let mut out = Vec::with_capacity(total);
+    // Repeated min over the k fronts: k is the shard count (single
+    // digits), so the simple scan beats a heap and stays obviously
+    // deterministic.
+    loop {
+        let mut best: Option<(usize, K)> = None;
+        for (i, it) in iters.iter_mut().enumerate() {
+            if let Some(front) = it.peek() {
+                let k = key(front);
+                if best.as_ref().map(|(_, bk)| k < *bk).unwrap_or(true) {
+                    best = Some((i, k));
+                }
+            }
+        }
+        match best {
+            None => return out,
+            Some((i, _)) => out.push(iters[i].next().unwrap()),
+        }
+    }
 }
 
 /// A resolved pagination window.
@@ -110,6 +175,14 @@ impl Page {
     /// A plain window (no cursor) — test/internal convenience.
     pub fn window(limit: usize, offset: usize) -> Page {
         Page { limit, offset, cursor: None }
+    }
+
+    /// Bind the request's cursor (if any) to the shard that owns the
+    /// walked collection. The handlers pass `dag.shard_of(n_shards)` —
+    /// deriving the shard rather than decoding it keeps the wire cursor
+    /// a bare key (byte-identical with the un-sharded protocol).
+    pub fn cursor_in(&self, shard: usize) -> Option<ShardedCursor> {
+        self.cursor.map(|pos| ShardedCursor { shard, pos })
     }
 
     /// Apply the window to a fully-filtered collection; returns the page
@@ -265,6 +338,37 @@ mod tests {
         let (items, next) = p.cursor_page(std::iter::empty::<&u64>(), 100, |_| true, |r| **r);
         assert!(items.is_empty());
         assert_eq!(next, None);
+    }
+
+    #[test]
+    fn cursor_binds_to_shard_without_changing_wire_format() {
+        let p = Page::from_query(&q("cursor=17&limit=2")).unwrap();
+        let c = p.cursor_in(3).unwrap();
+        assert_eq!(c, ShardedCursor { shard: 3, pos: Cursor::After(17) });
+        // The wire-visible part is the bare key — the shard never leaks
+        // into the cursor value.
+        assert_eq!(c.pos, Cursor::After(17));
+        assert_eq!(Page::window(2, 0).cursor_in(1), None, "no cursor, no binding");
+    }
+
+    #[test]
+    fn kway_merge_reproduces_global_order() {
+        // Partition a sorted collection by an arbitrary "shard" function,
+        // then merge: the result must be the original order exactly —
+        // the invariant the sharded list endpoints rely on.
+        let all: Vec<u64> = (0..50).map(|i| i * 7 % 101).collect();
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        for n in [1usize, 2, 4, 8] {
+            let mut parts: Vec<Vec<u64>> = vec![Vec::new(); n];
+            for &v in &sorted {
+                parts[(v % n as u64) as usize].push(v);
+            }
+            assert_eq!(kway_merge(parts, |v| *v), sorted, "n={n}");
+        }
+        // Degenerate shapes: all-empty parts, no parts.
+        assert_eq!(kway_merge(vec![Vec::<u64>::new(); 4], |v| *v), Vec::<u64>::new());
+        assert_eq!(kway_merge(Vec::<Vec<u64>>::new(), |v| *v), Vec::<u64>::new());
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! with tenant namespaces: every resource path exists both un-prefixed
 //! (the backward-compatible surface, owned by the `default` tenant) and
 //! under `/api/v1/tenants/{tenant}/...`, plus a small tenant admin
-//! surface (`GET|POST /api/v1/tenants`, `GET /api/v1/tenants/{id}`).
+//! surface (`GET|POST /api/v1/tenants`, `GET /api/v1/tenants/{id}`) and
+//! a shard operator surface (`GET /api/v1/shards`,
+//! `GET /api/v1/shards/{shard}` — the sharded control plane's topology
+//! and per-shard gauges; shards are infrastructure, so there is no
+//! tenant-namespaced variant).
 //! [`resolve`] therefore returns the addressed tenant alongside the
 //! endpoint — tenant resolution happens *before* dispatch, so auth and
 //! admission control gate the request at the routing layer.
@@ -97,6 +101,11 @@ pub enum Endpoint {
     PutTenant,
     /// `GET /api/v1/tenants/{tenant_id}`
     GetTenant { tenant_id: String },
+    /// `GET /api/v1/shards` (operator surface: shard topology — count
+    /// plus every shard's table-slice/WAL/checkpoint/pass gauges)
+    ListShards,
+    /// `GET /api/v1/shards/{shard}` (one shard's gauges)
+    GetShard { shard: usize },
 }
 
 /// Parsed query string (`?limit=10&state=success`).
@@ -125,6 +134,11 @@ impl Query {
 
 fn parse_run_id(raw: &str) -> Result<u64, ApiError> {
     raw.parse::<u64>().map_err(|_| ApiError::bad_request(format!("invalid run_id '{raw}'")))
+}
+
+fn parse_shard_id(raw: &str) -> Result<usize, ApiError> {
+    raw.parse::<usize>()
+        .map_err(|_| ApiError::bad_request(format!("invalid shard id '{raw}'")))
 }
 
 /// Decode a `dag_id` path segment, rejecting the reserved tenant
@@ -220,7 +234,8 @@ pub fn resolve(method: Method, target: &str) -> Result<(String, Endpoint, Query)
     let segs: Vec<&str> = rest.split('/').filter(|s| !s.is_empty()).collect();
 
     use Method::*;
-    // Tenant admin surface first: `tenants` with no resource suffix.
+    // Operator surfaces first: `tenants` with no resource suffix, and
+    // `shards` (which has no tenant-namespaced variant at all).
     match (method, segs.as_slice()) {
         (Get, ["tenants"]) => {
             return Ok((DEFAULT_TENANT.to_string(), Endpoint::ListTenants, query))
@@ -236,6 +251,22 @@ pub fn resolve(method: Method, target: &str) -> Result<(String, Endpoint, Query)
             ));
         }
         (m, ["tenants"] | ["tenants", _]) => {
+            return Err(ApiError::method_not_allowed(format!("{m} not allowed on '{path}'")));
+        }
+        // Shard operator surface: topology + per-shard gauges of the
+        // sharded control plane. Shards are infrastructure, not tenant
+        // resources — the paths exist only un-prefixed.
+        (Get, ["shards"]) => {
+            return Ok((DEFAULT_TENANT.to_string(), Endpoint::ListShards, query))
+        }
+        (Get, ["shards", s]) => {
+            return Ok((
+                DEFAULT_TENANT.to_string(),
+                Endpoint::GetShard { shard: parse_shard_id(s)? },
+                query,
+            ));
+        }
+        (m, ["shards"] | ["shards", _]) => {
             return Err(ApiError::method_not_allowed(format!("{m} not allowed on '{path}'")));
         }
         _ => {}
@@ -398,6 +429,25 @@ mod tests {
         assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
         let e = resolve(Method::Patch, "/api/v1/tenants").unwrap_err();
         assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+    }
+
+    #[test]
+    fn shard_operator_surface() {
+        let (t, ep, _) = resolve(Method::Get, "/api/v1/shards").unwrap();
+        assert_eq!((t.as_str(), ep), (DEFAULT_TENANT, Endpoint::ListShards));
+        let (t, ep, _) = resolve(Method::Get, "/api/v1/shards/3").unwrap();
+        assert_eq!(t, DEFAULT_TENANT, "operator surface, default tenant");
+        assert_eq!(ep, Endpoint::GetShard { shard: 3 });
+        // Known path, wrong method → 405; garbage id → 400.
+        let e = resolve(Method::Post, "/api/v1/shards").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+        let e = resolve(Method::Delete, "/api/v1/shards/0").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::MethodNotAllowed);
+        let e = resolve(Method::Get, "/api/v1/shards/three").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        // Shards are infrastructure: no tenant-namespaced variant.
+        let e = resolve(Method::Get, "/api/v1/tenants/acme/shards").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::NotFound);
     }
 
     #[test]

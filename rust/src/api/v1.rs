@@ -41,9 +41,16 @@
 //! bounded page, not the prefix, even under a sparse state filter. Plain
 //! `limit`/`offset` requests are served exactly as before, bit-for-bit;
 //! list endpoints without cursor support reject the parameter (400).
+//!
+//! On the sharded control plane a cursor is logically a `(shard, key)`
+//! pair: the handlers bind each walk to the resolved dag's owning shard
+//! ([`Page::cursor_in`]) — derived, never encoded, so wire cursors stay
+//! bare keys — while the cross-DAG offset lists fan in across shards
+//! with [`kway_merge`]. The shard operator surface (`/shards`) and the
+//! operator-health `shards` block are the only other cross-shard reads.
 
 use crate::api::error::{ApiError, ApiResult};
-use crate::api::page::{Cursor, Page};
+use crate::api::page::{kway_merge, Cursor, Page};
 use crate::api::router::{self, Endpoint, Method, Query};
 use crate::cloud::db::{DagRunRow, MetaDb, TenantRow, TiRow, Txn, Write};
 use crate::dag::state::{
@@ -201,6 +208,8 @@ fn dispatch_inner(
         Endpoint::ListTenants => list_tenants(w, &query),
         Endpoint::PutTenant => put_tenant(sim, w, body, authorization),
         Endpoint::GetTenant { tenant_id } => get_tenant(w, &tenant_id),
+        Endpoint::ListShards => Ok(list_shards(w)),
+        Endpoint::GetShard { shard } => get_shard(w, shard),
     }
 }
 
@@ -339,13 +348,22 @@ fn list_dags(w: &World, tenant: &str, q: &Query) -> ApiResult {
     // are even considered, so a foreign DAG can never appear in the page
     // or inflate `total_entries`. `tenant()` is a field read of the
     // intern entry, not a separator scan.
-    let ids: Vec<DagId> = db
+    //
+    // A cross-DAG list is a cross-shard fan-in: each shard contributes
+    // its slice in key order and the k-way merge reassembles the global
+    // order, byte-identical with a single-table scan (dag ids are
+    // unique, so the merge order is total).
+    let n = db.n_shards();
+    let mut parts: Vec<Vec<DagId>> = vec![Vec::new(); n];
+    for d in db
         .dags
         .values()
         .filter(|d| d.dag_id.tenant() == tenant)
         .filter(|d| paused_filter.map(|p| d.is_paused == p).unwrap_or(true))
-        .map(|d| d.dag_id)
-        .collect();
+    {
+        parts[d.dag_id.shard_of(n)].push(d.dag_id);
+    }
+    let ids: Vec<DagId> = kway_merge(parts, |id| *id);
     let (ids, total) = page.apply(ids);
     let dags: Vec<Json> = ids.into_iter().map(|id| dag_json(db, id)).collect();
     Ok(page.envelope("dags", dags, total))
@@ -392,14 +410,17 @@ fn list_dag_runs(w: &World, tenant: &str, dag_id: &str, q: &Query) -> ApiResult 
         state.map(|s| r.state == s).unwrap_or(true)
             && run_type.map(|t| r.run_type == t).unwrap_or(true)
     };
-    if let Some(cursor) = page.cursor {
+    // The cursor binds to the dag's owning shard: the whole walk ranges
+    // over that one shard's table slice, so the bare wire key names a
+    // unique global position (see `page::ShardedCursor`).
+    if let Some(cur) = page.cursor_in(dag.shard_of(db.n_shards())) {
         // Cursor walk: a range scan from the cursor key downwards (runs
         // list most recent first), with `Copy` bounds — deep pages never
         // re-scan the prefix the way `offset` does, and the per-page work
         // is bounded by `MAX_CURSOR_SCAN` even under a sparse filter
         // (`Page::cursor_page` resumes after the last row *examined*,
         // not the last one returned).
-        let iter = match cursor {
+        let iter = match cur.pos {
             Cursor::Start => db.dag_runs.of_dag(dag),
             Cursor::After(last) => db.dag_runs.of_dag_below(dag, last),
         }
@@ -444,12 +465,14 @@ fn list_task_instances(
     let db = w.db.read();
     let (dag, _) = require_run(db, dag, dag_id, run_id)?;
     let keep = |t: &TiRow| state.map(|s| t.state == s).unwrap_or(true);
-    if let Some(cursor) = page.cursor {
+    // Shard-bound cursor, as in `list_dag_runs`: one run's task
+    // instances live on the dag's shard, so the walk is shard-confined.
+    if let Some(cur) = page.cursor_in(dag.shard_of(db.n_shards())) {
         // Cursor walk: task instances list in task-id order, so the page
         // is a range scan from just above the cursor key (`Copy` bounds),
         // with the same `MAX_CURSOR_SCAN` per-page bound as run walks.
         use std::ops::Bound;
-        let lower = match cursor {
+        let lower = match cur.pos {
             Cursor::Start => Bound::Included((dag, run_id, 0u32)),
             // A cursor past u32 range excludes everything (empty page),
             // never wraps onto a wrong key.
@@ -476,6 +499,78 @@ fn list_task_instances(
         .envelope("task_instances", items, total)
         .set("dag_id", dag_id)
         .set("run_id", run_id))
+}
+
+// ---- shard operator surface ------------------------------------------------
+//
+// The sharded control plane's designated cross-shard fan-in point (with
+// the health aggregate below): these handlers read *every* shard's
+// gauges. Everything else in this module addresses one shard at a time —
+// a dag's rows live on exactly one shard, `hash(DagId) % n_shards`.
+
+/// Serialize one shard's gauges: table-slice sizes, the un-checkpointed
+/// WAL tail of its stream, the checkpoint epoch (advanced atomically
+/// across shards, so it is the same value on each) and the
+/// scheduling-pass telemetry.
+fn shard_json(w: &World, shard: usize) -> Json {
+    let db = w.db.read();
+    let (dags, runs, tis) = db.shard_table_counts(shard);
+    let p = w.shard_passes.get(shard).copied().unwrap_or_default();
+    Json::obj()
+        .set("shard", shard)
+        .set("n_dags", dags)
+        .set("n_runs", runs)
+        .set("n_task_instances", tis)
+        .set("wal_tail_len", db.shard_wal_tail_len(shard) as u64)
+        .set("checkpoint_epoch", w.dur.epoch)
+        .set("last_pass_at", Json::Num(as_secs(p.last_at)))
+        .set("last_pass_duration", Json::Num(as_secs(p.last_duration)))
+        .set("passes", p.passes)
+}
+
+fn list_shards(w: &World) -> Json {
+    let n = w.db.read().n_shards();
+    let shards: Vec<Json> = (0..n).map(|s| shard_json(w, s)).collect();
+    Json::obj().set("n_shards", n).set("shards", Json::Arr(shards))
+}
+
+fn get_shard(w: &World, shard: usize) -> ApiResult {
+    let n = w.db.read().n_shards();
+    if shard >= n {
+        return Err(ApiError::not_found(format!(
+            "no shard {shard} (the control plane has {n})"
+        )));
+    }
+    Ok(Json::obj().set("shard", shard_json(w, shard)))
+}
+
+/// The `shards` block of operator health: the cross-shard `aggregate`
+/// plus the `per_shard` breakdown, nested under one top-level key so the
+/// legacy shim strips it wholesale (bit-compat).
+fn shards_health_json(w: &World) -> Json {
+    let db = w.db.read();
+    let n = db.n_shards();
+    let mut per_shard = Vec::with_capacity(n);
+    let (mut dags, mut runs, mut tis, mut tail) = (0u64, 0u64, 0u64, 0u64);
+    for s in 0..n {
+        let (d, r, t) = db.shard_table_counts(s);
+        dags += d as u64;
+        runs += r as u64;
+        tis += t as u64;
+        tail += db.shard_wal_tail_len(s) as u64;
+        per_shard.push(shard_json(w, s));
+    }
+    Json::obj()
+        .set("n_shards", n)
+        .set(
+            "aggregate",
+            Json::obj()
+                .set("n_dags", dags)
+                .set("n_runs", runs)
+                .set("n_task_instances", tis)
+                .set("wal_tail_len", tail),
+        )
+        .set("per_shard", Json::Arr(per_shard))
 }
 
 fn health(w: &World, tenant: &str) -> Json {
@@ -575,7 +670,8 @@ fn health(w: &World, tenant: &str) -> Json {
             .set("last_checkpoint_lsn", w.dur.last_checkpoint_lsn)
             .set("recoveries", w.dur.recoveries)
             .set("interned_dag_ids", DagId::interned_count() as u64)
-            .set("live_dag_ids", DagId::live_count() as u64);
+            .set("live_dag_ids", DagId::live_count() as u64)
+            .set("shards", shards_health_json(w));
     }
     resp
 }

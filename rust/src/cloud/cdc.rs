@@ -8,11 +8,15 @@
 //! database change and the event reaching the router — a delay that shows
 //! up as sAirflow's per-task overhead on chain DAGs (§6.2).
 //!
-//! The model: each committed change batch is handed to the stream
-//! transport after a sampled capture delay; hand-offs preserve commit
-//! order (DMS replicates the WAL sequentially). The stream itself (the
-//! [`kinesis`](crate::cloud::kinesis) module) adds per-shard serialized
-//! consumption on top.
+//! The model: each committed change batch is partitioned by owning
+//! control-plane shard (`hash(DagId) % n_shards` — the same routing the
+//! metadata DB uses for its WAL slices) and each shard's part is handed
+//! to the stream transport after a sampled capture delay; hand-offs
+//! preserve commit order *within a shard* (DMS replicates each shard's
+//! WAL sequentially), while shards progress independently. The stream
+//! itself (the [`kinesis`](crate::cloud::kinesis) module) adds per-shard
+//! serialized consumption on top — control-plane shard i maps onto
+//! stream shard i.
 //!
 //! The stream is shared across tenants — one control plane, one WAL —
 //! but every [`Change`] record carries a tenant-qualified DAG id, so
@@ -41,45 +45,82 @@ pub struct Cdc {
     /// Whether CDC is running (it can be switched off for sporadic loads —
     /// §6.4 cost discussion).
     pub enabled: bool,
-    /// Single-shard ordering: no delivery may overtake an earlier one.
-    last_delivery: SimTime,
+    /// Per-shard ordering chains: on each shard no delivery may overtake
+    /// an earlier one; deliveries on different shards are unordered
+    /// relative to each other.
+    last_delivery: Vec<SimTime>,
     pub stats: CdcStats,
 }
 
 impl Default for Cdc {
     fn default() -> Cdc {
-        Cdc { delay: (1.0, 1.5), enabled: true, last_delivery: 0, stats: CdcStats::default() }
+        Cdc::with_shards(1)
     }
 }
 
-/// World types with a CDC pipeline. `on_cdc_batch` receives the change
-/// batch at delivery time — in sAirflow this invokes the pre-parse lambda,
-/// which feeds the event router.
-pub trait CdcHost: Sized + 'static {
-    fn cdc(&mut self) -> &mut Cdc;
-    fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>);
+impl Cdc {
+    /// A CDC pipeline feeding an `n`-shard control plane (clamped to
+    /// >= 1). The single-shard pipeline is bit-compatible with the
+    /// pre-sharding one: one ordering chain, one delivery per commit.
+    pub fn with_shards(n: usize) -> Cdc {
+        Cdc {
+            delay: (1.0, 1.5),
+            enabled: true,
+            last_delivery: vec![0; n.max(1)],
+            stats: CdcStats::default(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.last_delivery.len()
+    }
 }
 
-/// Forward a committed change batch through the CDC pipeline. Called from
-/// the world's `DbHost::on_committed`.
+/// World types with a CDC pipeline. `on_cdc_batch` receives one shard's
+/// part of a committed batch at delivery time — in sAirflow this invokes
+/// the pre-parse lambda, which feeds the event router; `shard` is the
+/// owning control-plane shard (and the Kinesis stream shard it maps to).
+pub trait CdcHost: Sized + 'static {
+    fn cdc(&mut self) -> &mut Cdc;
+    fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, shard: usize, changes: Vec<Change>);
+}
+
+/// Forward a committed change batch through the CDC pipeline: partition
+/// it by owning shard (commit order preserved within each part) and
+/// schedule one delivery per involved shard, chained on that shard's
+/// ordering chain. Called from the world's `DbHost::on_committed`.
 pub fn on_commit<W: CdcHost>(sim: &mut Sim<W>, w: &mut W, changes: Vec<Change>) {
     let cdc = w.cdc();
     if !cdc.enabled || changes.is_empty() {
         return;
     }
+    let n = cdc.n_shards();
+    let (lo, hi) = cdc.delay;
     let now = sim.now();
-    let delay = secs(sim.rng.uniform(cdc.delay.0, cdc.delay.1));
-    // Preserve shard order: never deliver before a previously-scheduled
-    // batch.
-    let cdc = w.cdc();
-    let at = (now + delay).max(cdc.last_delivery);
-    cdc.last_delivery = at;
-    cdc.stats.records += changes.len() as u64;
-    cdc.stats.deliveries += 1;
-    cdc.stats.latency_total += at - now;
-    sim.at(at, "cdc.deliver", move |sim, w| {
-        W::on_cdc_batch(sim, w, changes);
-    });
+    let mut parts: Vec<Vec<Change>> = Vec::new();
+    parts.resize_with(n, Vec::new);
+    for c in changes {
+        parts[c.dag_id().shard_of(n)].push(c);
+    }
+    // Deterministic: shards are visited in index order, so the RNG draw
+    // sequence depends only on which shards the batch touched.
+    for (shard, part) in parts.into_iter().enumerate() {
+        if part.is_empty() {
+            continue;
+        }
+        let delay = secs(sim.rng.uniform(lo, hi));
+        // Preserve shard order: never deliver before a previously-scheduled
+        // batch on the same shard.
+        let cdc = w.cdc();
+        let at = (now + delay).max(cdc.last_delivery[shard]);
+        cdc.last_delivery[shard] = at;
+        cdc.stats.records += part.len() as u64;
+        cdc.stats.deliveries += 1;
+        cdc.stats.latency_total += at - now;
+        sim.at(at, "cdc.deliver", move |sim, w| {
+            W::on_cdc_batch(sim, w, shard, part);
+        });
+    }
 }
 
 #[cfg(test)]
@@ -90,14 +131,14 @@ mod tests {
 
     struct World {
         cdc: Cdc,
-        got: Vec<(SimTime, Vec<Change>)>,
+        got: Vec<(SimTime, usize, Vec<Change>)>,
     }
     impl CdcHost for World {
         fn cdc(&mut self) -> &mut Cdc {
             &mut self.cdc
         }
-        fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>) {
-            w.got.push((sim.now(), changes));
+        fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, shard: usize, changes: Vec<Change>) {
+            w.got.push((sim.now(), shard, changes));
         }
     }
 
@@ -129,13 +170,13 @@ mod tests {
         let order: Vec<u32> = w
             .got
             .iter()
-            .map(|(_, c)| match &c[0] {
+            .map(|(_, _, c)| match &c[0] {
                 Change::Ti { task_id, .. } => *task_id,
                 _ => unreachable!(),
             })
             .collect();
         assert_eq!(order, (0..20).collect::<Vec<_>>());
-        let times: Vec<SimTime> = w.got.iter().map(|(t, _)| *t).collect();
+        let times: Vec<SimTime> = w.got.iter().map(|(t, _, _)| *t).collect();
         assert!(times.windows(2).all(|p| p[0] <= p[1]));
     }
 
@@ -146,6 +187,42 @@ mod tests {
         on_commit(&mut sim, &mut w, vec![change(0)]);
         sim.run(&mut w, 100);
         assert!(w.got.is_empty());
+    }
+
+    #[test]
+    fn multi_shard_partitions_by_dag_and_orders_within_shard() {
+        const N: usize = 4;
+        let mut sim: Sim<World> = Sim::new(9);
+        let mut w = World { cdc: Cdc::with_shards(N), got: Vec::new() };
+        // 12 commits, each touching two DAGs that may live on different
+        // shards; every delivered part must contain only its shard's
+        // changes, and each shard must see its changes in commit order.
+        let mut expected: Vec<Vec<u32>> = vec![Vec::new(); N];
+        for i in 0..12u32 {
+            let a: crate::dag::state::DagId = format!("dag_{}", i % 5).as_str().into();
+            let b: crate::dag::state::DagId = format!("dag_{}", (i + 2) % 5).as_str().into();
+            expected[a.shard_of(N)].push(2 * i);
+            expected[b.shard_of(N)].push(2 * i + 1);
+            on_commit(
+                &mut sim,
+                &mut w,
+                vec![
+                    Change::Ti { dag_id: a, run_id: 1, task_id: 2 * i, state: TiState::Queued },
+                    Change::Ti { dag_id: b, run_id: 1, task_id: 2 * i + 1, state: TiState::Queued },
+                ],
+            );
+        }
+        sim.run(&mut w, 10_000);
+        let mut seen: Vec<Vec<u32>> = vec![Vec::new(); N];
+        for (_, shard, part) in &w.got {
+            for c in part {
+                let Change::Ti { dag_id, task_id, .. } = c else { unreachable!() };
+                assert_eq!(dag_id.shard_of(N), *shard, "change delivered on wrong shard");
+                seen[*shard].push(*task_id);
+            }
+        }
+        assert_eq!(seen, expected, "per-shard commit order must be preserved");
+        assert_eq!(w.cdc.stats.records, 24);
     }
 
     #[test]

@@ -376,6 +376,30 @@ impl Write {
             | Write::DeleteDag { .. } => None,
         }
     }
+
+    /// The control-plane shard that owns this write: its DAG's shard, or
+    /// shard 0 for tenant-table writes (tenant records are not DAG-keyed;
+    /// shard 0 owns them by convention, matching
+    /// [`MetaDb::snapshot_shard`]). The durability layer uses this to
+    /// split a transaction's write set into per-shard WAL objects.
+    pub fn shard_of(&self, n_shards: usize) -> usize {
+        match self {
+            Write::UpsertTenant { .. } => 0,
+            Write::UpsertDag(r) => r.dag_id.shard_of(n_shards),
+            Write::PutSerializedDag(s) => s.dag_id.shard_of(n_shards),
+            Write::InsertDagRun(r) => r.dag_id.shard_of(n_shards),
+            Write::InsertTi(t) => t.dag_id.shard_of(n_shards),
+            Write::SetRunState { dag_id, .. }
+            | Write::PromoteRun { dag_id, .. }
+            | Write::SetDagPaused { dag_id, .. }
+            | Write::DeleteDag { dag_id } => dag_id.shard_of(n_shards),
+            Write::SetTiState { key, .. }
+            | Write::SetTiReady { key, .. }
+            | Write::SetTiHost { key, .. }
+            | Write::ClearTi { key }
+            | Write::ResetOrphanTi { key } => key.0.shard_of(n_shards),
+        }
+    }
 }
 
 /// A transaction: an ordered write set applied atomically at commit.
@@ -467,13 +491,21 @@ pub struct MetaDb {
     pub serialized: BTreeMap<DagId, DagSpec>,
     pub dag_runs: RunTable,
     pub task_instances: BTreeMap<TiKey, TiRow>,
-    /// Write-ahead log window: (lsn, commit time, change). Bounded to the
-    /// most recent `wal_retain` records (checkpoint + truncate on apply);
-    /// LSNs stay monotonic across truncation. Private: the durability
-    /// layer is the only consumer of the log (enforced by the
-    /// `wal-access` lint rule); everything else reads the
+    /// Per-shard write-ahead log windows: (lsn, commit time, change),
+    /// one deque per control-plane shard, routed by
+    /// `change.dag_id().shard_of(n_shards)`. LSNs are assigned from the
+    /// single global counter, so within each shard the deque is sorted by
+    /// LSN and across shards the union is the global log. Bounded to the
+    /// most recent `wal_retain` records *in total* (checkpoint + truncate
+    /// on apply, dropping the globally-oldest record first); LSNs stay
+    /// monotonic across truncation. Private: the durability layer is the
+    /// only consumer of the log (enforced by the `wal-access` lint rule);
+    /// everything else reads the
     /// [`MetaDb::wal_retained_len`]/[`MetaDb::wal_tail_len`] gauges.
-    wal: VecDeque<(u64, SimTime, Change)>,
+    wal: Vec<VecDeque<(u64, SimTime, Change)>>,
+    /// Control-plane shard count the tables and WAL are partitioned by
+    /// (see [`MetaDb::with_shards`]). Static for the life of the database.
+    n_shards: usize,
     /// Retained WAL window size ([`DEFAULT_WAL_RETAIN`] by default).
     pub wal_retain: usize,
     next_lsn: u64,
@@ -519,7 +551,8 @@ impl Default for MetaDb {
             serialized: BTreeMap::new(),
             dag_runs: RunTable::default(),
             task_instances: BTreeMap::new(),
-            wal: VecDeque::new(),
+            wal: vec![VecDeque::new()],
+            n_shards: 1,
             wal_retain: DEFAULT_WAL_RETAIN,
             next_lsn: 0,
             durable_lsn: None,
@@ -535,10 +568,56 @@ impl Default for MetaDb {
 }
 
 impl MetaDb {
+    /// Database at the ambient shard count
+    /// ([`crate::sairflow::config::default_shards`]: `SAIRFLOW_SHARDS`,
+    /// else 1).
     pub fn new() -> MetaDb {
-        let mut db = MetaDb::default();
+        MetaDb::with_shards(crate::sairflow::config::default_shards())
+    }
+
+    /// Database partitioned into `n_shards` control-plane shards (clamped
+    /// to >= 1). The tables stay single `BTreeMap`s — `DagId`'s `Ord`
+    /// follows the string, so a shard's "table slice" is the subset of
+    /// keys with `dag_id.shard_of(n_shards) == shard`, reachable without
+    /// moving rows — but the WAL window is physically one deque per
+    /// shard, so a shard's log tail can be shipped, replayed, and lost
+    /// independently of its peers.
+    pub fn with_shards(n_shards: usize) -> MetaDb {
+        let n = n_shards.max(1);
+        let mut db = MetaDb {
+            wal: vec![VecDeque::new(); n],
+            n_shards: n,
+            ..MetaDb::default()
+        };
         db.tenants.insert(DEFAULT_TENANT.to_string(), TenantRow::default_tenant());
         db
+    }
+
+    /// Re-partition the WAL into `n` shards (clamped to >= 1). Retained
+    /// records are re-routed by their change's shard under the new count;
+    /// used by world construction to align a freshly-restored database
+    /// with the deployment's configured shard count.
+    pub fn set_shards(&mut self, n: usize) {
+        let n = n.max(1);
+        if n == self.n_shards {
+            return;
+        }
+        let mut all: Vec<(u64, SimTime, Change)> =
+            self.wal.iter().flat_map(|q| q.iter().copied()).collect();
+        all.sort_by_key(|&(lsn, _, _)| lsn);
+        self.n_shards = n;
+        self.wal = vec![VecDeque::new(); n];
+        for rec in all {
+            let shard = rec.2.dag_id().shard_of(n);
+            if let Some(q) = self.wal.get_mut(shard) {
+                q.push_back(rec);
+            }
+        }
+    }
+
+    /// The control-plane shard count this database is partitioned by.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
     }
 
     /// Apply a transaction atomically at `commit_ts`. Returns the change
@@ -853,7 +932,13 @@ impl MetaDb {
             let lsn = self.next_lsn;
             self.next_lsn += 1;
             self.stats.wal_records += 1;
-            self.wal.push_back((lsn, commit_ts, *c));
+            // Route the record into its owning shard's window. LSNs come
+            // from the one global counter, so each shard's deque stays
+            // sorted by LSN and the union of the deques is the global log.
+            let shard = c.dag_id().shard_of(self.n_shards);
+            if let Some(q) = self.wal.get_mut(shard) {
+                q.push_back((lsn, commit_ts, *c));
+            }
         }
         // Checkpoint + truncate: the WAL is a bounded window. CDC already
         // received every change (the return value below); truncation only
@@ -869,12 +954,26 @@ impl MetaDb {
     /// `wal_retain`, but only up to the durable checkpoint LSN: a record
     /// not yet covered by a checkpoint is never dropped, whatever the
     /// window pressure (the satellite property test pins this invariant).
+    /// The retention window is global (summed over shards), and records
+    /// drop in global LSN order: the shard holding the globally-oldest
+    /// retained record gives it up first, whichever shard the window
+    /// pressure came from.
     fn truncate_wal(&mut self) {
-        while self.wal.len() > self.wal_retain {
-            match self.wal.front() {
-                Some(&(lsn, _, _)) if self.durable_lsn.map_or(true, |d| lsn < d) => {
-                    self.wal.pop_front();
+        let mut total: usize = self.wal.iter().map(|q| q.len()).sum();
+        while total > self.wal_retain {
+            let oldest = self
+                .wal
+                .iter()
+                .enumerate()
+                .filter_map(|(s, q)| q.front().map(|&(lsn, _, _)| (lsn, s)))
+                .min();
+            match oldest {
+                Some((lsn, s)) if self.durable_lsn.map_or(true, |d| lsn < d) => {
+                    if let Some(q) = self.wal.get_mut(s) {
+                        q.pop_front();
+                    }
                     self.stats.wal_truncated += 1;
+                    total -= 1;
                 }
                 _ => break,
             }
@@ -903,28 +1002,56 @@ impl MetaDb {
         self.truncate_wal();
     }
 
-    /// Records currently held in the in-memory WAL window (the
-    /// `wal_retained` health gauge).
+    /// Records currently held in the in-memory WAL window, summed over
+    /// shards (the `wal_retained` health gauge).
     pub fn wal_retained_len(&self) -> usize {
-        self.wal.len()
+        self.wal.iter().map(|q| q.len()).sum()
     }
 
     /// Records appended since the last durable checkpoint — the tail a
-    /// recovery would replay. Without an attached durability subsystem
-    /// this is the whole retained window.
+    /// recovery would replay, summed over shards. Without an attached
+    /// durability subsystem this is the whole retained window.
     pub fn wal_tail_len(&self) -> usize {
         match self.durable_lsn {
             Some(d) => (self.next_lsn - d) as usize,
-            None => self.wal.len(),
+            None => self.wal_retained_len(),
         }
     }
 
-    /// `(front, back)` LSNs of the retained window, if non-empty. WAL LSNs
-    /// are contiguous, so this fully describes the retained set — the
-    /// accessor the no-un-replayable-gap property test reads.
+    /// Records appended to one shard's window since the last durable
+    /// checkpoint — the per-shard `wal_tail_len` gauge of the shards API.
+    /// Each shard's deque is LSN-sorted, so the tail is a suffix.
+    pub fn shard_wal_tail_len(&self, shard: usize) -> usize {
+        let Some(q) = self.wal.get(shard) else { return 0 };
+        match self.durable_lsn {
+            Some(d) => q.len() - q.partition_point(|&(lsn, _, _)| lsn < d),
+            None => q.len(),
+        }
+    }
+
+    /// Per-shard table-slice sizes `(dags, dag_runs, task_instances)` —
+    /// the shards-API counters. An on-demand filtered count (operator
+    /// surface, not a hot path).
+    pub fn shard_table_counts(&self, shard: usize) -> (usize, usize, usize) {
+        let n = self.n_shards;
+        (
+            self.dags.keys().filter(|d| d.shard_of(n) == shard).count(),
+            self.dag_runs.keys().filter(|(d, _)| d.shard_of(n) == shard).count(),
+            self.task_instances.keys().filter(|(d, _, _)| d.shard_of(n) == shard).count(),
+        )
+    }
+
+    /// `(front, back)` LSNs of the retained window, if non-empty: the
+    /// minimum front / maximum back over the per-shard deques. The union
+    /// of the shards' LSNs is contiguous (one global counter, truncation
+    /// drops the global minimum first), so this fully describes the
+    /// retained set — the accessor the no-un-replayable-gap property test
+    /// reads.
     pub fn wal_lsn_range(&self) -> Option<(u64, u64)> {
-        match (self.wal.front(), self.wal.back()) {
-            (Some(&(f, _, _)), Some(&(b, _, _))) => Some((f, b)),
+        let front = self.wal.iter().filter_map(|q| q.front().map(|&(l, _, _)| l)).min();
+        let back = self.wal.iter().filter_map(|q| q.back().map(|&(l, _, _)| l)).max();
+        match (front, back) {
+            (Some(f), Some(b)) => Some((f, b)),
             _ => None,
         }
     }
@@ -945,6 +1072,54 @@ impl MetaDb {
         }
     }
 
+    /// One shard's slice of a checkpoint: the rows whose `DagId` hashes
+    /// to `shard`, plus — in shard 0's image only — the tenant table
+    /// (tenant records are not DAG-keyed, so shard 0 owns them by
+    /// convention). The global scalars (`next_lsn`, `next_backfill_seq`,
+    /// `wal_retain`) are carried in *every* shard image: recovery merges
+    /// the per-shard images back into one [`RestoreImage`] and takes
+    /// their max, so a shard whose checkpoint lags cannot regress the
+    /// global log position.
+    pub fn snapshot_shard(&self, shard: usize) -> RestoreImage {
+        let n = self.n_shards;
+        RestoreImage {
+            tenants: if shard == 0 { self.tenants.clone() } else { BTreeMap::new() },
+            dags: self
+                .dags
+                .values()
+                .filter(|r| r.dag_id.shard_of(n) == shard)
+                .cloned()
+                .collect(),
+            serialized: self
+                .serialized
+                .values()
+                .filter(|s| s.dag_id.shard_of(n) == shard)
+                .cloned()
+                .collect(),
+            dag_runs: self
+                .dag_runs
+                .values()
+                .filter(|r| r.dag_id.shard_of(n) == shard)
+                .copied()
+                .collect(),
+            task_instances: self
+                .task_instances
+                .values()
+                .filter(|t| t.dag_id.shard_of(n) == shard)
+                .cloned()
+                .collect(),
+            next_lsn: self.next_lsn,
+            next_backfill_seq: self.next_backfill_seq,
+            backfill_arrival: self
+                .backfill_seq
+                .iter()
+                .filter(|(k, _)| k.0.shard_of(n) == shard)
+                .map(|(k, v)| (*k, *v))
+                .collect(),
+            wal_retain: self.wal_retain,
+        }
+    }
+
     /// Rebuild a `MetaDb` from a checkpoint image. The row tables are
     /// loaded verbatim; every private index is recomputed from them —
     /// except the backfill promotion FIFO, whose arrival order comes from
@@ -954,12 +1129,15 @@ impl MetaDb {
     /// contains *is* the checkpoint) and an empty WAL window; the caller
     /// then replays the durable log tail through [`MetaDb::apply`].
     pub fn restore(image: RestoreImage) -> MetaDb {
+        let n = crate::sairflow::config::default_shards();
         let mut db = MetaDb {
             tenants: image.tenants,
             next_lsn: image.next_lsn,
             next_backfill_seq: image.next_backfill_seq,
             wal_retain: image.wal_retain,
             durable_lsn: Some(image.next_lsn),
+            wal: vec![VecDeque::new(); n],
+            n_shards: n,
             ..MetaDb::default()
         };
         if !db.tenants.contains_key(DEFAULT_TENANT) {
@@ -1385,6 +1563,15 @@ mod tests {
         }
     }
 
+    /// All retained WAL records across shards, in global LSN order — the
+    /// test-side view of the log the per-shard deques partition.
+    fn wal_entries(db: &MetaDb) -> Vec<(u64, SimTime, Change)> {
+        let mut all: Vec<(u64, SimTime, Change)> =
+            db.wal.iter().flat_map(|q| q.iter().copied()).collect();
+        all.sort_by_key(|&(lsn, _, _)| lsn);
+        all
+    }
+
     #[test]
     fn apply_emits_changes_in_order() {
         let mut db = MetaDb::new();
@@ -1397,8 +1584,9 @@ mod tests {
         assert_eq!(changes.len(), 2);
         assert!(matches!(&changes[0], Change::Ti { state: TiState::Scheduled, .. }));
         assert!(matches!(&changes[1], Change::Ti { state: TiState::Queued, .. }));
-        assert_eq!(db.wal.len(), 2);
-        assert_eq!(db.wal[0].0 + 1, db.wal[1].0);
+        let wal = wal_entries(&db);
+        assert_eq!(wal.len(), 2);
+        assert_eq!(wal[0].0 + 1, wal[1].0);
     }
 
     #[test]
@@ -1415,13 +1603,65 @@ mod tests {
             txn.push(Write::SetTiState { key: ("d".into(), i, 0), state: TiState::Scheduled });
             db.apply(txn, i);
         }
-        assert_eq!(db.wal.len(), 8, "window truncated to retain");
+        assert_eq!(db.wal_retained_len(), 8, "window truncated to retain");
         assert_eq!(db.stats.wal_records, 30, "every change was logged");
         assert_eq!(db.stats.wal_truncated, 22, "truncation counted");
         // LSNs are monotonic and continue past truncation.
-        let lsns: Vec<u64> = db.wal.iter().map(|(l, _, _)| *l).collect();
+        let lsns: Vec<u64> = wal_entries(&db).iter().map(|(l, _, _)| *l).collect();
         assert!(lsns.windows(2).all(|p| p[0] + 1 == p[1]));
         assert_eq!(*lsns.last().unwrap(), 29);
+    }
+
+    #[test]
+    fn wal_routes_per_shard_and_truncates_in_global_order() {
+        // Two DAGs on (usually) different shards of a 4-way split: each
+        // record lands in its owning shard's deque, the retention window
+        // is the global sum, and truncation drops the globally-oldest
+        // record regardless of which shard overflowed.
+        let mut db = MetaDb::with_shards(4);
+        assert_eq!(db.n_shards(), 4);
+        db.wal_retain = 6;
+        let mut setup = Txn::new();
+        setup.push(dag_row("shard-a"));
+        setup.push(dag_row("shard-b"));
+        db.apply(setup, 0);
+        for i in 0..5u64 {
+            let mut txn = Txn::new();
+            txn.push(Write::InsertTi(ti("shard-a", i, 0)));
+            txn.push(Write::SetTiState {
+                key: ("shard-a".into(), i, 0),
+                state: TiState::Scheduled,
+            });
+            txn.push(Write::InsertTi(ti("shard-b", i, 0)));
+            txn.push(Write::SetTiState {
+                key: ("shard-b".into(), i, 0),
+                state: TiState::Scheduled,
+            });
+            db.apply(txn, i);
+        }
+        // 10 changes through a retain-6 window.
+        assert_eq!(db.stats.wal_records, 10);
+        assert_eq!(db.wal_retained_len(), 6, "retention is the global sum");
+        assert_eq!(db.stats.wal_truncated, 4);
+        // Every record sits in the deque its change's shard owns...
+        for (s, q) in db.wal.iter().enumerate() {
+            for (_, _, c) in q {
+                assert_eq!(c.dag_id().shard_of(4), s, "misrouted record {c:?}");
+            }
+        }
+        // ...and the survivors are exactly the globally-newest records.
+        let lsns: Vec<u64> = wal_entries(&db).iter().map(|(l, _, _)| *l).collect();
+        assert_eq!(lsns, vec![4, 5, 6, 7, 8, 9], "oldest records dropped first");
+        assert_eq!(db.wal_lsn_range(), Some((4, 9)));
+        // Per-shard tail gauges sum to the aggregate gauge.
+        let per_shard: usize = (0..4).map(|s| db.shard_wal_tail_len(s)).sum();
+        assert_eq!(per_shard, db.wal_tail_len().min(db.wal_retained_len()));
+        // Per-shard table counts partition the tables.
+        let totals = (0..4).fold((0, 0, 0), |acc, s| {
+            let (d, r, t) = db.shard_table_counts(s);
+            (acc.0 + d, acc.1 + r, acc.2 + t)
+        });
+        assert_eq!(totals, (db.dags.len(), db.dag_runs.len(), db.task_instances.len()));
     }
 
     #[test]

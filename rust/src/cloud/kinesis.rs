@@ -4,8 +4,10 @@
 //! consumes them and feeds the event router. Kinesis semantics modeled:
 //!
 //! * **shards** — records are partitioned by key; ordering is guaranteed
-//!   *within* a shard only. sAirflow uses a single shard so the control
-//!   plane sees changes in commit order (§4.3's consistency argument);
+//!   *within* a shard only. The sharded control plane maps control-plane
+//!   shard i onto stream shard i, so each shard's consumers see that
+//!   shard's changes in commit order (§4.3's consistency argument holds
+//!   per shard; the single-shard deployment recovers the paper's layout);
 //! * **sequence numbers** — strictly increasing per shard;
 //! * **ordered delivery** — a shard delivers one batch at a time to its
 //!   consumer; the next batch waits for the previous one (Kinesis event
@@ -65,7 +67,8 @@ pub trait KinesisHost: Sized + 'static {
 }
 
 impl<R> KinesisStream<R> {
-    /// A stream with `nshards` shards (sAirflow deploys 1).
+    /// A stream with `nshards` shards (the deployment allocates one per
+    /// control-plane shard, `Config::n_shards`).
     pub fn new(nshards: usize) -> KinesisStream<R> {
         KinesisStream {
             shards: (0..nshards.max(1))

@@ -120,6 +120,13 @@ pub struct DagIdEntry {
     full: &'static str,
     tenant: &'static str,
     local: &'static str,
+    /// FNV-1a hash of the full qualified string, computed once at intern
+    /// time — the control plane's shard key. Stored rather than derived
+    /// from the pointer: a pointer hash would vary with allocation order
+    /// across processes, while the string hash makes shard placement a
+    /// pure function of the identifier (recovery and replay land every
+    /// row on the shard that owns it).
+    shard_hash: u64,
     /// Liveness epoch this entry was last marked in (see
     /// [`DagId::begin_live_epoch`]). Entries are never removed — pointer
     /// identity is the whole point — so "garbage collection" is an
@@ -135,6 +142,18 @@ pub struct DagIdEntry {
 /// concurrency and lifetime story.
 #[derive(Clone, Copy)]
 pub struct DagId(&'static DagIdEntry);
+
+/// FNV-1a over the qualified id — the same constants as the Kinesis
+/// partition-key hash, so "control-plane shard i" and "stream shard i"
+/// agree on placement by construction.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
 
 fn interner() -> &'static Mutex<HashMap<&'static str, &'static DagIdEntry>> {
     static TABLE: OnceLock<Mutex<HashMap<&'static str, &'static DagIdEntry>>> = OnceLock::new();
@@ -161,6 +180,7 @@ impl DagId {
             full,
             tenant,
             local,
+            shard_hash: fnv1a(full.as_bytes()),
             // A freshly interned id is live in the current epoch: new
             // symbols appearing after a census must not read as garbage.
             live_epoch: AtomicU64::new(LIVE_EPOCH.load(Ordering::Relaxed)),
@@ -256,6 +276,21 @@ impl DagId {
     /// Tenant-local id (what API payloads show) — precomputed.
     pub fn local(self) -> &'static str {
         self.0.local
+    }
+
+    /// FNV-1a hash of the qualified id — precomputed at intern time, so
+    /// shard routing is a field read (allocation-free, no byte scan).
+    /// Deterministic across processes: the same identifier always maps to
+    /// the same shard, which is what lets recovery replay each shard's
+    /// log independently.
+    pub fn shard_hash(self) -> u64 {
+        self.0.shard_hash
+    }
+
+    /// The control-plane shard (of `n_shards`) that owns every row keyed
+    /// by this id. Total: any id maps to a valid shard for any `n >= 1`.
+    pub fn shard_of(self, n_shards: usize) -> usize {
+        (self.0.shard_hash % n_shards.max(1) as u64) as usize
     }
 }
 
@@ -626,6 +661,27 @@ mod tests {
         assert_eq!(DagId::lookup("sym_lookup_hit"), Some(s));
         assert!(DagId::lookup_scoped("ghost-tenant", "sym_lookup_hit").is_none());
         assert_eq!(DagId::lookup_scoped(DEFAULT_TENANT, "sym_lookup_hit"), Some(s));
+    }
+
+    #[test]
+    fn shard_hash_is_a_stable_function_of_the_string() {
+        // The hash is the documented FNV-1a of the qualified bytes —
+        // stable across intern order and processes, never the pointer.
+        let a = DagId::intern("sym_shard_etl");
+        assert_eq!(a.shard_hash(), fnv1a("sym_shard_etl".as_bytes()));
+        assert_eq!(a.shard_hash(), DagId::intern("sym_shard_etl").shard_hash());
+        // Tenant-scoped ids hash the full qualified string, so two
+        // tenants' same-named DAGs shard independently.
+        let s = DagId::scoped("acme", "sym_shard_etl");
+        assert_eq!(s.shard_hash(), fnv1a(s.as_str().as_bytes()));
+        // shard_of is total and in range for any shard count.
+        for n in [1usize, 2, 3, 4, 8] {
+            assert!(a.shard_of(n) < n);
+            assert_eq!(a.shard_of(n), (a.shard_hash() % n as u64) as usize);
+        }
+        // Degenerate n=0 clamps to a single shard instead of dividing by
+        // zero.
+        assert_eq!(a.shard_of(0), 0);
     }
 
     #[test]

@@ -47,6 +47,15 @@ pub struct Config {
     pub caas_task_overhead: (f64, f64),
     /// Virtual-time horizon guard for experiment loops.
     pub max_events: u64,
+    /// Control-plane shard count: the metadata DB's table slices, WAL +
+    /// checkpoint streams, CDC→Kinesis hand-off and the scheduling pass
+    /// are all partitioned by `hash(DagId) % n_shards`. Defaults to the
+    /// `SAIRFLOW_SHARDS` environment variable (CI runs the suite at 1 and
+    /// 4), else 1 — the single-shard layout is bit-compatible with the
+    /// pre-sharding control plane. Static for the life of a deployment:
+    /// recovery must run at the same shard count that wrote the durable
+    /// state (see docs/SHARDING.md).
+    pub n_shards: usize,
     /// Checkpoint + durable-WAL settings. Disabled by default: the armed
     /// checkpoint tick keeps the event heap non-empty, so worlds that
     /// `run()` to quiescence must opt in (and drive with `run_until`).
@@ -72,9 +81,22 @@ impl Default for Config {
             faas_task_overhead: (0.7, 1.2),
             caas_task_overhead: (0.1, 0.4),
             max_events: 50_000_000,
+            n_shards: default_shards(),
             durability: DurabilityConfig::default(),
         }
     }
+}
+
+/// The ambient shard count: `SAIRFLOW_SHARDS` (clamped to >= 1) when set
+/// and parseable, else 1. Read once per construction, not cached — the
+/// variable is fixed for the life of a test process, and reading the
+/// environment is deterministic within a run (no wall clock, no RNG).
+pub fn default_shards() -> usize {
+    std::env::var("SAIRFLOW_SHARDS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(1)
 }
 
 impl Config {
@@ -93,6 +115,13 @@ impl Config {
     /// Builder-style: keep-alive for worker environments.
     pub fn keep_alive(mut self, d: SimDuration) -> Config {
         self.worker.keep_alive = d;
+        self
+    }
+
+    /// Builder-style: set the control-plane shard count explicitly
+    /// (overrides the `SAIRFLOW_SHARDS` default).
+    pub fn shards(mut self, n: usize) -> Config {
+        self.n_shards = n.max(1);
         self
     }
 }

@@ -26,7 +26,7 @@ use crate::cloud::db::{self, Change, DbHost, DbService, Txn, Write};
 use crate::cloud::eventbridge::{
     self, BusEvent, CronHost, CronService, EventRouter, Matcher,
 };
-use crate::cloud::faas::{self, FaasHost, FaasPlatform, FnId, Invocation};
+use crate::cloud::faas::{self, FaasHost, FaasPlatform, FnId, InvId, Invocation};
 use crate::cloud::kinesis::{self, KinesisHost, KinesisStream};
 use crate::cloud::mq::{self, Esm, EsmConfig, SqsQueue};
 use crate::cloud::stepfn::{StepFnHost, StepFunctions};
@@ -36,7 +36,7 @@ use crate::durability::{self, Durability, DurabilityHost};
 use crate::executor::{self, TaskRef};
 use crate::parser::{self, UploadEvent};
 use crate::sairflow::config::Config;
-use crate::scheduler::{scheduling_pass, SchedMsg};
+use crate::scheduler::{scheduling_pass_sharded, SchedMsg};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimTime};
 use crate::worker;
@@ -63,6 +63,20 @@ pub enum FnPayload {
     ExecForward(TaskRef),
     Worker(TaskRef),
     FailureHandle(TaskRef),
+}
+
+/// Per-shard scheduling-pass telemetry for the operator API
+/// (`GET /api/v1/shards`): every pass of the scheduler lambda visits all
+/// shards' slices, so the lambda's sampled CPU is attributed to each
+/// shard it visited.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardPassStats {
+    /// When the last pass over this shard's slice completed (sim time).
+    pub last_at: SimTime,
+    /// Duration of that pass (the scheduler lambda's CPU share).
+    pub last_duration: SimTime,
+    /// Total passes that visited this shard.
+    pub passes: u64,
 }
 
 /// Handles of the registered functions.
@@ -103,6 +117,8 @@ pub struct World {
     pub gateway: Gateway,
     /// Checkpoint + durable-WAL state ([`crate::durability`]).
     pub dur: Durability,
+    /// Per-shard scheduling-pass telemetry (operator shards API).
+    pub shard_passes: Vec<ShardPassStats>,
     /// Optional PJRT engine for `Compute` task payloads (the data plane).
     pub engine: Option<crate::runtime::Engine>,
 }
@@ -151,11 +167,12 @@ impl CdcHost for World {
     fn cdc(&mut self) -> &mut Cdc {
         &mut self.cdc
     }
-    fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, changes: Vec<Change>) {
-        // DMS pushes captured changes into the Kinesis stream; sAirflow
-        // deploys a single shard so the control plane consumes changes in
-        // commit order.
-        kinesis::put_records(sim, w, 0, changes);
+    fn on_cdc_batch(sim: &mut Sim<Self>, w: &mut Self, shard: usize, changes: Vec<Change>) {
+        // DMS pushes each shard's captured changes into the matching
+        // Kinesis stream shard (control-plane shard i → stream shard i),
+        // so every shard's consumers see its changes in commit order while
+        // shards progress independently.
+        kinesis::put_records(sim, w, shard, changes);
     }
 }
 
@@ -309,17 +326,45 @@ fn scheduler_body(sim: &mut Sim<World>, w: &mut World, ctx: Invocation<FnPayload
     let cpu = secs(sim.rng.uniform(w.cfg.sched_cpu.0, w.cfg.sched_cpu.1));
     let inv = ctx.inv;
     sim.after(cpu, "sched.pass", move |sim, w| {
-        let out = scheduling_pass(w.db.read(), sim.now(), &batch, &w.cfg.limits);
-        if out.txn.is_empty() {
-            faas::complete(sim, w, inv, true);
-            return;
+        let n_shards = w.cfg.n_shards.max(1);
+        let outs = scheduling_pass_sharded(w.db.read(), sim.now(), &batch, &w.cfg.limits, n_shards);
+        let now = sim.now();
+        for s in 0..n_shards {
+            if let Some(p) = w.shard_passes.get_mut(s) {
+                p.last_at = now;
+                p.last_duration = cpu;
+                p.passes += 1;
+            }
         }
-        db::commit(sim, w, out.txn, move |sim, w| {
-            // Completion releases the FIFO gate through the invocation
-            // callback in sched_handler (also the redelivery path).
-            faas::complete(sim, w, inv, true);
-        });
+        // One transaction — and thus one `db::commit` — per shard that
+        // produced writes: a kill between two shard commits leaves every
+        // shard either fully applied or untouched (the WAL/checkpoint
+        // streams are per shard, docs/SHARDING.md), so recovery replays
+        // shards independently. Commits are chained in shard order, which
+        // keeps the CDC hand-off deterministic.
+        let txns: std::collections::VecDeque<Txn> =
+            outs.into_iter().map(|o| o.txn).filter(|t| !t.is_empty()).collect();
+        commit_shard_txns(sim, w, txns, inv);
     });
+}
+
+/// Commit each shard's transaction in shard order, then complete the
+/// scheduler invocation (releasing the FIFO gate through the invocation
+/// callback in `sched_handler` — also the redelivery path). Separate
+/// commits per shard are the crash-isolation boundary of the sharded
+/// control plane.
+fn commit_shard_txns(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    mut txns: std::collections::VecDeque<Txn>,
+    inv: InvId,
+) {
+    match txns.pop_front() {
+        None => faas::complete(sim, w, inv, true),
+        Some(txn) => {
+            db::commit(sim, w, txn, move |sim, w| commit_shard_txns(sim, w, txns, inv));
+        }
+    }
 }
 
 fn preparse_body(sim: &mut Sim<World>, _w: &mut World, ctx: Invocation<FnPayload>) {
@@ -502,13 +547,19 @@ impl World {
         router.rule("dag-deleted", Matcher::DagDeleted, Target::Updater);
         router.rule("dag-resumed", Matcher::DagUnpaused, Target::Scheduler);
 
-        let mut cdc = Cdc::default();
+        // Every shard-count consumer is aligned to `cfg.n_shards`: the
+        // metadata DB's table/WAL slices, the CDC hand-off chains and the
+        // Kinesis stream (control-plane shard i → stream shard i).
+        let n_shards = cfg.n_shards.max(1);
+        let mut cdc = Cdc::with_shards(n_shards);
         cdc.delay = cfg.cdc_delay;
+        let mut db = DbService::new(cfg.db.clone());
+        db.meta.set_shards(n_shards);
 
         World {
-            db: DbService::new(cfg.db.clone()),
+            db,
             cdc,
-            kinesis: KinesisStream::new(1),
+            kinesis: KinesisStream::new(n_shards),
             router,
             cron: CronService::new(),
             blob: BlobStore::new(),
@@ -531,6 +582,7 @@ impl World {
             fns,
             gateway: Gateway::new(),
             dur: Durability::new(cfg.durability.clone()),
+            shard_passes: vec![ShardPassStats::default(); n_shards],
             engine: None,
             faas: faas_platform,
             caas: caas_platform,

@@ -60,6 +60,25 @@ pub enum SchedMsg {
     TaskFinished { dag_id: DagId, run_id: u64, task_id: u32, state: TiState },
 }
 
+impl SchedMsg {
+    /// The DAG this message is about — every scheduler message is
+    /// DAG-addressed, which is what makes the batch partitionable by
+    /// control-plane shard.
+    pub fn dag_id(&self) -> DagId {
+        match *self {
+            SchedMsg::Trigger { dag_id, .. }
+            | SchedMsg::DagResumed { dag_id }
+            | SchedMsg::RunChanged { dag_id, .. }
+            | SchedMsg::TaskFinished { dag_id, .. } => dag_id,
+        }
+    }
+
+    /// The control-plane shard that owns this message's DAG.
+    pub fn shard_of(&self, n_shards: usize) -> usize {
+        self.dag_id().shard_of(n_shards)
+    }
+}
+
 /// Scheduler limits, matching the paper's deployment (§5): both systems
 /// support at most 125 concurrent task instances.
 #[derive(Debug, Clone)]
@@ -123,13 +142,160 @@ fn next_run_id(db: &MetaDb, dag_id: DagId) -> u64 {
 /// predecessor end time is unknown). The returned transaction must be
 /// committed by the caller; because passes are serialized by the FIFO
 /// feed, the snapshot cannot race with another pass.
+///
+/// This is the single-shard facade over [`scheduling_pass_sharded`]: at
+/// `n_shards = 1` the shard loop degenerates to one iteration over the
+/// whole batch, so the output transaction is byte-identical to the
+/// pre-sharding pass.
 pub fn scheduling_pass(
     db: &MetaDb,
     now: SimTime,
     batch: &[SchedMsg],
     limits: &SchedLimits,
 ) -> PassOutput {
-    let mut out = PassOutput::default();
+    scheduling_pass_sharded(db, now, batch, limits, 1).pop().unwrap_or_default()
+}
+
+/// Execute one scheduling pass partitioned into `n_shards` control-plane
+/// shards: element `i` of the returned vector is shard `i`'s transaction
+/// and statistics, touching only rows whose `DagId` hashes to shard `i` —
+/// the caller commits each shard's transaction independently, so a kill
+/// between commits leaves every other shard's writes either fully applied
+/// or fully absent.
+///
+/// The batch is partitioned *stably* (shard 0's messages in batch order,
+/// then shard 1's, ...), and three pieces of budget state are deliberately
+/// shared across the shard loop rather than sharded:
+///
+/// * the global `parallelism` limit — the 125 worker slots are physical
+///   and shard-blind;
+/// * per-tenant backfill budgets — a tenant's DAGs hash across shards,
+///   and budgets must hold per tenant, not per (tenant, shard);
+/// * the backfill promotion FIFO — drained globally by arrival sequence
+///   across shards (cross-DAG, cross-shard fairness), with each
+///   promotion write routed into the owning shard's transaction.
+///
+/// Everything else (run-id allocation, `max_active_runs` gates, dirty-run
+/// scheduling, graphs, dedup probe sets) is per-DAG and therefore
+/// naturally shard-confined.
+pub fn scheduling_pass_sharded(
+    db: &MetaDb,
+    now: SimTime,
+    batch: &[SchedMsg],
+    limits: &SchedLimits,
+    n_shards: usize,
+) -> Vec<PassOutput> {
+    let n = n_shards.max(1);
+    let mut outs: Vec<PassOutput> = Vec::new();
+    outs.resize_with(n, PassOutput::default);
+
+    // Current global active count for the parallelism limit; queue
+    // decisions anywhere in this pass immediately consume budget. Shared
+    // across shards: the worker slots are physical.
+    let mut active = db.active_ti_count();
+    // Backfill completions this pass detects free their *tenant's* budget
+    // for the global promotion step below. Shared across shards: a
+    // tenant's DAGs span shards. Tenant keys are the interned `'static`
+    // strings (field reads, no allocation).
+    let mut backfill_freed: BTreeMap<&'static str, usize> = BTreeMap::new();
+    // Backfill runs created by this pass — `(batch index, run key)` so
+    // the global promotion step below considers them in true batch
+    // arrival order even though the shard loop visits them shard-grouped.
+    let mut created_backfill: Vec<(usize, RunKey)> = Vec::new();
+
+    for (shard, out) in outs.iter_mut().enumerate() {
+        scheduling_pass_shard(
+            db,
+            now,
+            batch,
+            limits,
+            (shard, n),
+            out,
+            &mut active,
+            &mut backfill_freed,
+            &mut created_backfill,
+        );
+    }
+
+    // Backfill promotion: drain queued backfill runs into `Running` while
+    // their *tenant's* budget allows. Budgets are strictly per tenant
+    // (record override or the deployment default) — a saturated tenant is
+    // skipped, never allowed to block another tenant's promotions. Runs
+    // completed by *this* pass free budget immediately (their terminal
+    // write commits in this same pass's transactions), which keeps the
+    // pipeline moving without routing terminal run changes back to the
+    // scheduler. The snapshot queue drains FIFO by arrival sequence —
+    // globally across shards (cross-DAG, cross-shard fairness) — then
+    // the runs created above in batch order; each promotion write is
+    // routed into the transaction of the shard that owns its DAG.
+    fn bf_budget_left(
+        db: &MetaDb,
+        limits: &SchedLimits,
+        freed: &BTreeMap<&'static str, usize>,
+        tenant: &str,
+    ) -> usize {
+        let cap = db.backfill_cap_of(tenant, limits.max_active_backfill_runs);
+        let active = db
+            .active_backfill_count_of(tenant)
+            .saturating_sub(freed.get(tenant).copied().unwrap_or(0));
+        cap.saturating_sub(active)
+    }
+    let mut bf_remaining: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for &key in db.queued_backfill() {
+        // Skip runs whose DAG vanished (the dirty loop fails them).
+        if !db.serialized.contains_key(&key.0) {
+            continue;
+        }
+        let tenant = key.0.tenant();
+        let rem = bf_remaining
+            .entry(tenant)
+            .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
+        if *rem == 0 {
+            continue; // this tenant is saturated; others still drain
+        }
+        *rem -= 1;
+        if let Some(out) = outs.get_mut(key.0.shard_of(n)) {
+            out.txn.push(Write::PromoteRun { dag_id: key.0, run_id: key.1 });
+            out.stats.runs_promoted += 1;
+        }
+    }
+    // Stable by construction *within* a shard; the sort restores global
+    // batch order across shards (batch indices are unique).
+    created_backfill.sort_by_key(|&(idx, _)| idx);
+    for (_, (dag_id, run_id)) in created_backfill {
+        let tenant = dag_id.tenant();
+        let rem = bf_remaining
+            .entry(tenant)
+            .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
+        if *rem == 0 {
+            continue;
+        }
+        *rem -= 1;
+        if let Some(out) = outs.get_mut(dag_id.shard_of(n)) {
+            out.txn.push(Write::PromoteRun { dag_id, run_id });
+            out.stats.runs_promoted += 1;
+        }
+    }
+    outs
+}
+
+/// One shard's slice of a scheduling pass: steps 1–3 of the paper's
+/// algorithm plus foreground promotion, over only the messages and parked
+/// runs whose DAG hashes to `shard` (of `n_shards`). Writes go to `out`;
+/// `active`, `backfill_freed` and `created_backfill` are the cross-shard
+/// state shared with [`scheduling_pass_sharded`]'s global promotion step.
+#[allow(clippy::too_many_arguments)]
+fn scheduling_pass_shard(
+    db: &MetaDb,
+    now: SimTime,
+    batch: &[SchedMsg],
+    limits: &SchedLimits,
+    (shard, n_shards): (usize, usize),
+    out: &mut PassOutput,
+    active: &mut usize,
+    backfill_freed: &mut BTreeMap<&'static str, usize>,
+    created_backfill: &mut Vec<(usize, RunKey)>,
+) {
     // Runs that this pass must (re)examine. `Copy` keys: inserting per
     // message copies 16 bytes, never a heap string.
     let mut dirty_runs: BTreeSet<RunKey> = BTreeSet::new();
@@ -151,9 +317,6 @@ pub fn scheduling_pass(
         snapshot_active_fg: u64,
     }
     let mut pass_dags: BTreeMap<DagId, PassDag> = BTreeMap::new();
-    // Backfill runs created by this pass, candidates for same-pass
-    // promotion under the backfill budget (below).
-    let mut created_backfill: Vec<RunKey> = Vec::new();
     // Backfill dedup probe sets, one per DAG, seeded lazily from the
     // snapshot (one range scan per DAG per pass — not one per trigger)
     // and extended with the dates this pass creates, so overlapping
@@ -161,8 +324,13 @@ pub fn scheduling_pass(
     // still in this very batch.
     let mut bf_dates: BTreeMap<DagId, BTreeSet<SimTime>> = BTreeMap::new();
 
-    // Step 1: create DAG runs for triggers.
-    for msg in batch {
+    // Step 1: create DAG runs for triggers. The enumerate index is the
+    // message's position in the *full* batch — the global promotion step
+    // uses it to restore batch arrival order across shards.
+    for (batch_idx, msg) in batch.iter().enumerate() {
+        if msg.shard_of(n_shards) != shard {
+            continue;
+        }
         match *msg {
             SchedMsg::Trigger { dag_id, logical_ts, run_type } => {
                 let Some(spec) = db.serialized.get(&dag_id) else { continue };
@@ -247,7 +415,7 @@ pub fn scheduling_pass(
                 }
                 st.created += 1;
                 if run_type == RunType::Backfill {
-                    created_backfill.push((dag_id, run_id));
+                    created_backfill.push((batch_idx, (dag_id, run_id)));
                 } else {
                     st.created_fg += 1;
                 }
@@ -268,10 +436,6 @@ pub fn scheduling_pass(
         }
     }
 
-    // Current global active count for the parallelism limit; queue decisions
-    // in this pass immediately consume budget.
-    let mut active = db.active_ti_count();
-
     // Runs created in this pass are NOT scheduled here: the DAG-run
     // insertion flows through CDC back to the scheduler (§4.1 "A DAG run
     // event is routed to the scheduler"), and the *next* pass schedules
@@ -279,11 +443,10 @@ pub fn scheduling_pass(
     // iteration.) Root ready times are therefore the run's start.
 
     // Runs this pass moves Running -> terminal free capacity for the
-    // promotion steps below: backfill completions free their *tenant's*
-    // backfill budget, foreground completions free their DAG's
-    // `max_active_runs` capacity. Tenant keys are the interned `'static`
-    // strings (field reads, no allocation).
-    let mut backfill_freed: BTreeMap<&'static str, usize> = BTreeMap::new();
+    // promotion steps: backfill completions free their *tenant's*
+    // backfill budget (accumulated into the cross-shard `backfill_freed`
+    // for the global promotion step), foreground completions free their
+    // DAG's `max_active_runs` capacity (per-DAG, hence shard-local).
     let mut fg_freed: BTreeMap<DagId, u64> = BTreeMap::new();
 
     // Steps 2+3 for existing dirty runs, plus run-completion detection.
@@ -394,23 +557,23 @@ pub fn scheduling_pass(
                         out.txn.push(Write::SetTiReady { key, ts: ready_at });
                         out.txn.push(Write::SetTiState { key, state: TiState::Scheduled });
                         out.stats.tis_scheduled += 1;
-                        if active < limits.parallelism {
+                        if *active < limits.parallelism {
                             out.txn.push(Write::SetTiState { key, state: TiState::Queued });
                             out.stats.tis_queued += 1;
-                            active += 1;
+                            *active += 1;
                         }
                     }
                 }
                 TiState::Scheduled => {
                     // Left over from an earlier pass that hit the
                     // parallelism limit.
-                    if active < limits.parallelism {
+                    if *active < limits.parallelism {
                         out.txn.push(Write::SetTiState {
                             key: (dag_id, run_id, ti.task_id),
                             state: TiState::Queued,
                         });
                         out.stats.tis_queued += 1;
-                        active += 1;
+                        *active += 1;
                     }
                 }
                 TiState::UpForRetry => {
@@ -418,10 +581,10 @@ pub fn scheduling_pass(
                     let key = (dag_id, run_id, ti.task_id);
                     out.txn.push(Write::SetTiState { key, state: TiState::Scheduled });
                     out.stats.retries += 1;
-                    if active < limits.parallelism {
+                    if *active < limits.parallelism {
                         out.txn.push(Write::SetTiState { key, state: TiState::Queued });
                         out.stats.tis_queued += 1;
-                        active += 1;
+                        *active += 1;
                     }
                 }
                 _ => {}
@@ -438,6 +601,11 @@ pub fn scheduling_pass(
     let mut fg_capacity: BTreeMap<DagId, u64> = BTreeMap::new();
     for &key in db.queued_foreground() {
         let dag_id = key.0;
+        // Foreground promotion is per-DAG policy (pause flag, per-DAG
+        // capacity), so each shard's slice promotes only its own DAGs.
+        if dag_id.shard_of(n_shards) != shard {
+            continue;
+        }
         let Some(spec) = db.serialized.get(&dag_id) else { continue };
         if db.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(false) {
             continue;
@@ -463,60 +631,9 @@ pub fn scheduling_pass(
         out.txn.push(Write::PromoteRun { dag_id, run_id: key.1 });
         out.stats.runs_promoted += 1;
     }
-
-    // Backfill promotion: drain queued backfill runs into `Running` while
-    // their *tenant's* budget allows. Budgets are strictly per tenant
-    // (record override or the deployment default) — a saturated tenant is
-    // skipped, never allowed to block another tenant's promotions. Runs
-    // completed by *this* pass free budget immediately (their terminal
-    // write commits in this same txn), which keeps the pipeline moving
-    // without routing terminal run changes back to the scheduler. The
-    // snapshot queue drains FIFO by arrival sequence (cross-DAG
-    // fairness), then runs created above; the promotion's `Running`
-    // change routes back through CDC and the next pass launches the
-    // roots.
-    fn bf_budget_left(
-        db: &MetaDb,
-        limits: &SchedLimits,
-        freed: &BTreeMap<&'static str, usize>,
-        tenant: &str,
-    ) -> usize {
-        let cap = db.backfill_cap_of(tenant, limits.max_active_backfill_runs);
-        let active = db
-            .active_backfill_count_of(tenant)
-            .saturating_sub(freed.get(tenant).copied().unwrap_or(0));
-        cap.saturating_sub(active)
-    }
-    let mut bf_remaining: BTreeMap<&'static str, usize> = BTreeMap::new();
-    for &key in db.queued_backfill() {
-        // Skip runs whose DAG vanished (the dirty loop fails them).
-        if !db.serialized.contains_key(&key.0) {
-            continue;
-        }
-        let tenant = key.0.tenant();
-        let rem = bf_remaining
-            .entry(tenant)
-            .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
-        if *rem == 0 {
-            continue; // this tenant is saturated; others still drain
-        }
-        *rem -= 1;
-        out.txn.push(Write::PromoteRun { dag_id: key.0, run_id: key.1 });
-        out.stats.runs_promoted += 1;
-    }
-    for (dag_id, run_id) in created_backfill {
-        let tenant = dag_id.tenant();
-        let rem = bf_remaining
-            .entry(tenant)
-            .or_insert_with(|| bf_budget_left(db, limits, &backfill_freed, tenant));
-        if *rem == 0 {
-            continue;
-        }
-        *rem -= 1;
-        out.txn.push(Write::PromoteRun { dag_id, run_id });
-        out.stats.runs_promoted += 1;
-    }
-    out
+    // Backfill promotion happens in [`scheduling_pass_sharded`]'s global
+    // step, after every shard's slice ran: the promotion FIFO and the
+    // per-tenant budgets span shards.
 }
 
 #[cfg(test)]

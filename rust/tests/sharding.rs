@@ -1,0 +1,555 @@
+//! Integration tests of the sharded control plane (PR 9).
+//!
+//! The sharding contract has three observable faces, one test family per
+//! face:
+//!
+//! 1. **Interleaving equivalence** — `scheduling_pass_sharded` at any
+//!    shard count commits the same logical state and the same summed
+//!    statistics as the single-shard pass, whatever order the per-shard
+//!    transactions land in. Sharding is a partition of the *work*, never
+//!    of the *semantics*.
+//! 2. **Independent recovery** — each shard owns its WAL + checkpoint
+//!    stream. Losing one shard's post-checkpoint WAL tail must not
+//!    disturb the surviving shards' recovered rows, and the lost shard
+//!    must reconverge from its checkpoint + redelivered inputs.
+//! 3. **Tenancy & operator API at `shards=4`** — namespace isolation is
+//!    orthogonal to the shard key (tenant-scoped DAGs hash like any
+//!    other), and the `/api/v1/shards` surface reports a breakdown whose
+//!    aggregate equals the unsharded totals.
+
+use sairflow::api::{dispatch, dispatch_auth, Method};
+use sairflow::cloud::db::{DagRow, MetaDb, Txn, Write};
+use sairflow::dag::spec::DagSpec;
+use sairflow::dag::state::{DagId, RunType, TiState};
+use sairflow::durability::{self, recover, wal_prefix};
+use sairflow::sairflow::{backfill_dag, trigger_dag, upload_dag, Config, World};
+use sairflow::scheduler::{
+    scheduling_pass, scheduling_pass_sharded, PassOutput, PassStats, SchedLimits, SchedMsg,
+};
+use sairflow::sim::engine::Sim;
+use sairflow::sim::time::{mins, secs, SimTime, MINUTE, SECOND};
+use sairflow::util::json::Json;
+use sairflow::util::prop::{check, Gen};
+use sairflow::workloads::synthetic::chain_dag;
+use std::collections::BTreeMap;
+
+const MAX_EVENTS: u64 = 10_000_000;
+
+/// A chain DAG without a schedule (manual/backfill triggering only, so
+/// recovery never shifts cron fire times relative to a reference run).
+fn manual_chain(dag_id: &str, n: u32, p_secs: f64) -> DagSpec {
+    let mut spec = chain_dag(dag_id, n, p_secs, 5.0);
+    spec.period = None;
+    spec
+}
+
+/// Logical run outcomes keyed `(dag, logical_ts, run_type)` → run state +
+/// task states, excluding timestamps/hosts/try numbers (same shape as the
+/// recovery suite: what must survive shard-count changes and crashes).
+type Outcomes = BTreeMap<(String, SimTime, String), (String, Vec<String>)>;
+
+fn outcomes(w: &World) -> Outcomes {
+    let db = w.db.read();
+    db.dag_runs
+        .values()
+        .map(|r| {
+            let tis: Vec<String> = db
+                .tis_of_run(r.dag_id, r.run_id)
+                .iter()
+                .map(|t| t.state.to_string())
+                .collect();
+            (
+                (r.dag_id.to_string(), r.logical_ts, r.run_type.to_string()),
+                (r.state.to_string(), tis),
+            )
+        })
+        .collect()
+}
+
+// ---- 1. interleaving equivalence (property) --------------------------------
+
+/// Random DAG: tasks with random backward dependencies (the
+/// prop_scheduler generator, parameterized by id so one case spans
+/// several shards).
+fn gen_dag(g: &mut Gen, id: &str) -> DagSpec {
+    let n = g.sized(1, 6) as u32;
+    let mut d = DagSpec::new(id);
+    for i in 0..n {
+        let mut deps = Vec::new();
+        if i > 0 {
+            let k = g.u64_in(0, 2.min(i as u64)) as usize;
+            let mut cand: Vec<u32> = (0..i).collect();
+            g.rng.shuffle(&mut cand);
+            deps = cand[..k].to_vec();
+            deps.sort_unstable();
+        }
+        let p = g.f64_in(0.5, 10.0);
+        d.sleep_task(&format!("t{i}"), p, &deps);
+    }
+    d
+}
+
+/// A database holding `specs` at `n` control-plane shards.
+fn db_for(specs: &[DagSpec], n: usize) -> MetaDb {
+    let mut db = MetaDb::with_shards(n);
+    let mut txn = Txn::new();
+    for spec in specs {
+        txn.push(Write::UpsertDag(DagRow {
+            dag_id: spec.dag_id,
+            fileloc: String::new(),
+            period: spec.period,
+            is_paused: false,
+        }));
+        txn.push(Write::PutSerializedDag(spec.clone()));
+    }
+    db.apply(txn, 0);
+    db
+}
+
+/// Canonical table state: every run and task-instance row, Debug-printed
+/// and sorted. Two databases with equal canon are logically identical.
+fn canon(db: &MetaDb) -> Vec<String> {
+    let mut v: Vec<String> = db.dag_runs.values().map(|r| format!("{r:?}")).collect();
+    v.extend(db.task_instances.values().map(|t| format!("{t:?}")));
+    v.sort();
+    v
+}
+
+fn add_stats(into: &mut PassStats, s: &PassStats) {
+    into.runs_created += s.runs_created;
+    into.runs_skipped += s.runs_skipped;
+    into.runs_promoted += s.runs_promoted;
+    into.backfill_deduped += s.backfill_deduped;
+    into.tis_scheduled += s.tis_scheduled;
+    into.tis_queued += s.tis_queued;
+    into.runs_completed += s.runs_completed;
+    into.retries += s.retries;
+}
+
+/// Apply a sharded pass's transactions in **reverse** shard order (the
+/// adversarial interleaving — the production commit path goes forward),
+/// verifying each shard's transaction is confined to its own rows, and
+/// return the summed statistics.
+fn apply_reversed(db: &mut MetaDb, outs: Vec<PassOutput>, now: SimTime) -> Result<PassStats, String> {
+    let n = outs.len();
+    let mut sum = PassStats::default();
+    for (s, out) in outs.iter().enumerate() {
+        for wr in &out.txn.writes {
+            if wr.shard_of(n) != s {
+                return Err(format!(
+                    "confinement: shard {s}'s txn carries a write for shard {} ({wr:?})",
+                    wr.shard_of(n)
+                ));
+            }
+        }
+    }
+    for out in outs.into_iter().rev() {
+        add_stats(&mut sum, &out.stats);
+        db.apply(out.txn, now);
+    }
+    Ok(sum)
+}
+
+/// Flip every queued task to Success (via Running) and return the
+/// `TaskFinished` batch — deterministic given equal table state, so every
+/// shard count derives the identical second-round input.
+fn finish_queued(db: &mut MetaDb, now: SimTime) -> Vec<SchedMsg> {
+    let queued: Vec<_> = db
+        .task_instances
+        .values()
+        .filter(|t| t.state == TiState::Queued)
+        .map(|t| (t.dag_id, t.run_id, t.task_id))
+        .collect();
+    let mut msgs = Vec::new();
+    for key in queued {
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key, state: TiState::Running });
+        db.apply(t, now);
+        let mut t = Txn::new();
+        t.push(Write::SetTiState { key, state: TiState::Success });
+        db.apply(t, now);
+        msgs.push(SchedMsg::TaskFinished {
+            dag_id: key.0,
+            run_id: key.1,
+            task_id: key.2,
+            state: TiState::Success,
+        });
+    }
+    msgs
+}
+
+#[test]
+fn sharded_pass_equals_single_shard_pass() {
+    check("sharded pass ≡ 1-shard pass (any shard count, reversed commits)", 60, |g| {
+        let n_dags = g.sized(3, 6);
+        let specs: Vec<DagSpec> =
+            (0..n_dags).map(|i| gen_dag(g, &format!("p{i}"))).collect();
+        // A shuffled trigger mix: manual, cron and backfill provenance,
+        // several logical dates per DAG (same-date collisions exercise
+        // the backfill dedup, which is per-DAG and thus per-shard).
+        let mut batch = Vec::new();
+        for spec in &specs {
+            for j in 0..g.sized(1, 3) {
+                let run_type = match g.u64_in(0, 2) {
+                    0 => RunType::Manual,
+                    1 => RunType::Scheduled,
+                    _ => RunType::Backfill,
+                };
+                batch.push(SchedMsg::Trigger {
+                    dag_id: spec.dag_id,
+                    logical_ts: (j as u64 + 1) * SECOND,
+                    run_type,
+                });
+            }
+        }
+        g.rng.shuffle(&mut batch);
+        let limits = SchedLimits::default();
+
+        // Reference: the single-shard facade.
+        let mut ref_db = db_for(&specs, 1);
+        let PassOutput { txn, stats: ref1 } = scheduling_pass(&ref_db, 5, &batch, &limits);
+        ref_db.apply(txn, 5);
+        let want1 = canon(&ref_db);
+        let msgs2 = finish_queued(&mut ref_db, 6);
+        let PassOutput { txn, stats: ref2 } = scheduling_pass(&ref_db, 7, &msgs2, &limits);
+        ref_db.apply(txn, 7);
+        let want2 = canon(&ref_db);
+
+        for n in [2usize, 3, 4, 8] {
+            let mut db = db_for(&specs, n);
+            let outs = scheduling_pass_sharded(&db, 5, &batch, &limits, n);
+            if outs.len() != n {
+                return Err(format!("n={n}: got {} shard outputs", outs.len()));
+            }
+            let got1 = apply_reversed(&mut db, outs, 5)?;
+            if got1 != ref1 {
+                return Err(format!("n={n}: round-1 stats {got1:?} != {ref1:?}"));
+            }
+            if canon(&db) != want1 {
+                return Err(format!("n={n}: round-1 table state diverged"));
+            }
+            // Round 2: task completions flow back through the fabric.
+            let msgs = finish_queued(&mut db, 6);
+            if msgs != msgs2 {
+                return Err(format!("n={n}: derived a different completion batch"));
+            }
+            let outs = scheduling_pass_sharded(&db, 7, &msgs, &limits, n);
+            let got2 = apply_reversed(&mut db, outs, 7)?;
+            if got2 != ref2 {
+                return Err(format!("n={n}: round-2 stats {got2:?} != {ref2:?}"));
+            }
+            if canon(&db) != want2 {
+                return Err(format!("n={n}: round-2 table state diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 2. whole-world equivalence + independent recovery ---------------------
+
+/// Six DAGs spread over the shard space, each triggered once, one
+/// backfilled twice: 8 runs total.
+const WORLD_DAGS: [&str; 6] = ["etl", "ops", "ml", "rpt", "web", "iot"];
+
+fn world_script(sim: &mut Sim<World>) {
+    sim.at(0, "script.upload", |sim, w| {
+        for name in WORLD_DAGS {
+            upload_dag(sim, w, &manual_chain(name, 2, 1.0));
+        }
+    });
+    sim.at(10 * SECOND, "script.trigger", |sim, w| {
+        for name in WORLD_DAGS {
+            trigger_dag(sim, w, name);
+        }
+    });
+    sim.at(12 * SECOND, "script.backfill", |sim, w| {
+        backfill_dag(sim, w, "etl", &[SECOND, 2 * SECOND]);
+    });
+}
+
+#[test]
+fn outcomes_identical_across_shard_counts() {
+    let horizon = 4 * MINUTE;
+    let mut want: Option<Outcomes> = None;
+    for n in [1usize, 2, 4, 8] {
+        let w = World::new(Config::seeded(911).shards(n));
+        let mut sim = w.sim();
+        let mut w = w;
+        world_script(&mut sim);
+        sim.run_until(&mut w, horizon, MAX_EVENTS);
+        let got = outcomes(&w);
+        assert!(got.values().all(|(state, _)| state == "success"), "shards={n}: {got:?}");
+        match &want {
+            None => {
+                assert_eq!(got.len(), 8, "6 manual + 2 backfill runs: {got:?}");
+                want = Some(got);
+            }
+            Some(reference) => assert_eq!(&got, reference, "shards={n} diverged"),
+        }
+        // Shard bookkeeping is a partition of the unsharded totals.
+        let db = w.db.read();
+        assert_eq!(db.n_shards(), n);
+        let sums = (0..n)
+            .map(|s| db.shard_table_counts(s))
+            .fold((0, 0, 0), |a, c| (a.0 + c.0, a.1 + c.1, a.2 + c.2));
+        assert_eq!(
+            sums,
+            (db.dags.len(), db.dag_runs.len(), db.task_instances.len()),
+            "shards={n}: slice counts must partition the tables"
+        );
+        // The scheduler lambda sweeps every slice each pass: uniform
+        // pass telemetry across shards.
+        assert_eq!(w.shard_passes.len(), n);
+        let p0 = w.shard_passes[0].passes;
+        assert!(p0 > 0, "shards={n}: passes recorded");
+        assert!(
+            w.shard_passes.iter().all(|p| p.passes == p0),
+            "shards={n}: uneven pass counts {:?}",
+            w.shard_passes.iter().map(|p| p.passes).collect::<Vec<_>>()
+        );
+    }
+}
+
+/// Eight long chains (3 × 6 s tasks) so execution straddles the 15 s
+/// checkpoint and the 20 s kill: the epoch-1 WAL tail is non-trivial on
+/// every shard that owns a DAG.
+const KILL_DAGS: [&str; 8] = ["s-etl", "s-ops", "s-ml", "s-rpt", "s-web", "s-iot", "s-bi", "s-qa"];
+
+fn kill_script(sim: &mut Sim<World>) {
+    sim.at(0, "script.upload", |sim, w| {
+        for name in KILL_DAGS {
+            upload_dag(sim, w, &manual_chain(name, 3, 6.0));
+        }
+    });
+    sim.at(10 * SECOND, "script.trigger", |sim, w| {
+        for name in KILL_DAGS {
+            trigger_dag(sim, w, name);
+        }
+    });
+    sim.at(12 * SECOND, "script.backfill", |sim, w| {
+        backfill_dag(sim, w, "s-etl", &[SECOND, 2 * SECOND]);
+    });
+}
+
+fn durable_sharded_world(seed: u64, n: usize) -> (Sim<World>, World) {
+    let mut cfg = Config::seeded(seed).shards(n);
+    cfg.durability.enabled = true;
+    cfg.durability.checkpoint_interval = secs(15.0);
+    let w = World::new(cfg);
+    let mut sim = w.sim();
+    let mut w = w;
+    durability::arm(&mut sim, &mut w);
+    (sim, w)
+}
+
+#[test]
+fn losing_one_shards_wal_tail_leaves_the_others_untouched() {
+    const N: usize = 4;
+    let horizon = 4 * MINUTE;
+    let kill_at = 20 * SECOND;
+
+    // Uninterrupted reference.
+    let (mut sim, mut w) = durable_sharded_world(912, N);
+    kill_script(&mut sim);
+    sim.run_until(&mut w, horizon, MAX_EVENTS);
+    let want = outcomes(&w);
+    assert_eq!(want.len(), 10, "8 manual + 2 backfill runs: {want:?}");
+    assert!(want.values().all(|(state, _)| state == "success"), "{want:?}");
+    drop(w);
+
+    // Sweep the lost shard over the whole shard space.
+    for lost in 0..N {
+        let owned: Vec<&str> = KILL_DAGS
+            .iter()
+            .copied()
+            .filter(|d| DagId::from(*d).shard_of(N) == lost)
+            .collect();
+        let (mut sim, mut w) = durable_sharded_world(912, N);
+        kill_script(&mut sim);
+        sim.run_until(&mut w, kill_at, MAX_EVENTS);
+        drop(sim); // the kill
+
+        let at_kill = outcomes(&w);
+        let epoch = w.dur.epoch;
+        assert!(epoch >= 1, "the 15 s checkpoint preceded the 20 s kill");
+        // Lose shard `lost`'s post-checkpoint WAL tail — its peers' logs
+        // are separate blob prefixes and stay intact.
+        let dropped = w.blob.list(&wal_prefix(lost, epoch));
+        for key in &dropped {
+            w.blob.remove(key);
+        }
+        if !owned.is_empty() {
+            assert!(
+                !dropped.is_empty(),
+                "shard {lost} owns {owned:?} mid-execution; its tail must be non-empty"
+            );
+        }
+
+        let (mut sim, mut w) = recover(w, kill_at).expect("3 intact shards + 1 checkpoint");
+        assert_eq!(w.dur.recoveries, 1);
+        // Independence, *before* re-driving: every surviving shard's rows
+        // are exactly its at-kill state — only the lost shard regressed
+        // to its checkpoint.
+        let survivors = |o: &Outcomes| -> Outcomes {
+            o.iter()
+                .filter(|((dag, _, _), _)| DagId::from(dag.as_str()).shard_of(N) != lost)
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect()
+        };
+        assert_eq!(
+            survivors(&outcomes(&w)),
+            survivors(&at_kill),
+            "lost shard {lost} ({} WAL objects): surviving shards disturbed",
+            dropped.len()
+        );
+        // The lost shard reconverges: its inputs (uploads, triggers,
+        // backfill) were durable before the checkpoint, so re-execution
+        // from the checkpoint reaches the uninterrupted outcome.
+        sim.run_until(&mut w, horizon, MAX_EVENTS);
+        assert_eq!(
+            outcomes(&w),
+            want,
+            "lost shard {lost} (dags {owned:?}) failed to reconverge"
+        );
+        assert_eq!(w.db.read().dag_runs.len(), want.len(), "no doubled runs");
+    }
+}
+
+// ---- 3. tenancy isolation + operator shard API at shards=4 -----------------
+
+fn status(resp: &Json) -> u64 {
+    resp.get("status").unwrap().as_u64().unwrap()
+}
+
+#[test]
+fn tenancy_isolation_and_shard_api_at_four_shards() {
+    const N: usize = 4;
+    let w = World::new(Config::seeded(913).shards(N));
+    let mut sim = w.sim();
+    let mut w = w;
+    for t in ["acme", "globex"] {
+        let body = Json::obj().set("tenant_id", t).set("token", format!("{t}-token"));
+        let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/tenants", Some(&body));
+        assert_eq!(status(&resp), 200, "mint {t}: {resp}");
+        sim.run_until(&mut w, sim.now() + mins(0.5), MAX_EVENTS);
+    }
+    for t in ["acme", "globex"] {
+        for name in ["etl", "ops", "ml"] {
+            let body = Json::obj()
+                .set("file_text", manual_chain(name, 2, 1.0).to_json().to_string_pretty());
+            let auth = format!("Bearer {t}-token");
+            let resp = dispatch_auth(
+                &mut sim,
+                &mut w,
+                Method::Post,
+                &format!("/api/v1/tenants/{t}/dags"),
+                Some(&body),
+                Some(auth.as_str()),
+            );
+            assert_eq!(status(&resp), 200, "upload {name} under {t}: {resp}");
+        }
+    }
+    sim.run_until(&mut w, 2 * MINUTE, MAX_EVENTS);
+
+    let acme = Some("Bearer acme-token");
+    let globex = Some("Bearer globex-token");
+
+    // Namespace isolation is unchanged by sharding: each tenant sees
+    // exactly its three DAGs, cross-tenant tokens are rejected, the
+    // default namespace is empty.
+    for (t, auth) in [("acme", acme), ("globex", globex)] {
+        let resp = dispatch_auth(
+            &mut sim,
+            &mut w,
+            Method::Get,
+            &format!("/api/v1/tenants/{t}/dags"),
+            None,
+            auth,
+        );
+        assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(3), "{t}: {resp}");
+    }
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/globex/dags",
+        None,
+        acme,
+    );
+    assert_eq!(status(&resp), 401, "acme token in globex namespace: {resp}");
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/dags", None);
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(0));
+
+    // Trigger acme's etl only; globex's etl (same unqualified name,
+    // possibly the same shard) must stay untouched.
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), MAX_EVENTS);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(1), "{resp}");
+    let runs = resp.get("dag_runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs[0].get("state").unwrap().as_str(), Some("success"));
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Get,
+        "/api/v1/tenants/globex/dags/etl/dagRuns",
+        None,
+        globex,
+    );
+    assert_eq!(resp.get("total_entries").unwrap().as_u64(), Some(0), "globex unaffected");
+
+    // The shard listing partitions the totals: 6 DAGs, 1 run.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/shards", None);
+    assert_eq!(status(&resp), 200, "{resp}");
+    assert_eq!(resp.get("n_shards").unwrap().as_u64(), Some(N as u64));
+    let shards = resp.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), N);
+    let sum = |key: &str| -> u64 {
+        shards.iter().map(|s| s.get(key).unwrap().as_u64().unwrap()).sum()
+    };
+    assert_eq!(sum("n_dags"), 6, "{resp}");
+    assert_eq!(sum("n_runs"), 1, "{resp}");
+    for (i, s) in shards.iter().enumerate() {
+        assert_eq!(s.get("shard").unwrap().as_u64(), Some(i as u64));
+    }
+
+    // Detail endpoint: in-range is the same object, out-of-range is a
+    // 404, and the collection rejects writes.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/shards/0", None);
+    assert_eq!(status(&resp), 200, "{resp}");
+    assert_eq!(resp.get("shard").unwrap().get("shard").unwrap().as_u64(), Some(0));
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/shards/99", None);
+    assert_eq!(status(&resp), 404, "{resp}");
+    let resp = dispatch(&mut sim, &mut w, Method::Post, "/api/v1/shards", None);
+    assert_eq!(status(&resp), 405, "{resp}");
+
+    // Operator health carries the same breakdown under one strippable
+    // key, and its aggregate equals the per-shard sums.
+    let resp = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/health", None);
+    let sh = resp.get("shards").expect("operator health has a shards block");
+    assert_eq!(sh.get("n_shards").unwrap().as_u64(), Some(N as u64));
+    let agg = sh.get("aggregate").unwrap();
+    let per = sh.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), N);
+    for key in ["n_dags", "n_runs", "n_task_instances", "wal_tail_len"] {
+        let total: u64 = per.iter().map(|s| s.get(key).unwrap().as_u64().unwrap()).sum();
+        assert_eq!(agg.get(key).unwrap().as_u64(), Some(total), "{key}: {sh}");
+    }
+    assert_eq!(agg.get("n_dags").unwrap().as_u64(), Some(6));
+}

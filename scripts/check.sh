@@ -19,6 +19,15 @@ echo "== kill-the-scheduler recovery scenarios =="
 # reproduce uninterrupted runs exactly-once at every swept crash point.
 cargo test -q --test recovery
 
+echo "== integration suites at SAIRFLOW_SHARDS=4 =="
+# The shard count is a deployment parameter (docs/SHARDING.md): the
+# `cargo test` above ran the whole suite at the default single shard;
+# this leg re-runs the API, tenancy, recovery and sharding contracts at 4
+# control-plane shards — they must hold unmodified at both points of the
+# matrix.
+SAIRFLOW_SHARDS=4 cargo test -q \
+  --test api_v1 --test tenancy --test recovery --test sharding
+
 echo "== sairflow-lint (determinism + event fabric) =="
 # The linter's own tests first (they include the HEAD-is-clean check),
 # then the negative control — the gate must *fail* on the seeded fixture

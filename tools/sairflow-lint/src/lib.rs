@@ -26,13 +26,19 @@
 //! * **matrix rules** — every variant of a listed enum must appear in each
 //!   required function span (`write-matrix`: `MetaDb::apply`,
 //!   `Write::hot_key` and both durability codec directions for `Write`),
-//!   catching "added a Write, forgot the WAL codec/lock scope".
+//!   catching "added a Write, forgot the WAL codec/lock scope";
+//! * **confinement rules** — shard confinement for the partitioned
+//!   control plane: outside the fan-in modules named in `lint.toml`, no
+//!   function may hold borrows into two shards' table slices at once
+//!   (`shard-confinement` — cross-shard reads belong to the declared
+//!   router/aggregation/recovery points, so a scheduling path can never
+//!   observe, let alone corrupt, another shard's state).
 //!
 //! All scanning skips `//`/`/* */` comments, string-literal contents and
 //! `#[cfg(test)]` regions, and the output is deterministic: violations are
 //! sorted by (path, line, rule).
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -80,24 +86,45 @@ pub struct Matrix {
     pub requires: Vec<String>,
 }
 
+/// A shard-confinement rule: outside the declared fan-in modules, no
+/// function may hold borrows into two different shards' table slices at
+/// once. The accessor methods (`.snapshot_shard(s)`-style) are the only
+/// ways to reach one shard's slice, so the shard-argument text of each
+/// call identifies which slice a function is holding.
+#[derive(Debug, Clone, Default)]
+pub struct Confinement {
+    pub id: String,
+    pub message: String,
+    /// Method names that hand out a borrow into (or an image of) one
+    /// shard's table slices; matched only in `.name(` method-call
+    /// position, so definitions and doc mentions never count.
+    pub accessors: Vec<String>,
+    /// Path prefixes (relative to the scan root) where cross-shard fan-in
+    /// is the point: the operator-API aggregates, the checkpoint writer,
+    /// the table owner itself.
+    pub fanin: Vec<String>,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct Config {
     pub rules: Vec<TokenRule>,
     pub fabrics: Vec<Fabric>,
     pub matrices: Vec<Matrix>,
+    pub confinements: Vec<Confinement>,
 }
 
 /// Parse the TOML subset used by `lint.toml`: `[[rule]]` / `[[fabric]]` /
-/// `[[matrix]]` tables with `key = "string"`, `key = ["a", "b"]` and
-/// `key = true` entries, `#` comments. Hand-rolled so the tool stays
-/// dependency-free. Every malformed input is a `Err` (the CLI's exit-code-2
-/// path), never a panic.
+/// `[[matrix]]` / `[[confinement]]` tables with `key = "string"`,
+/// `key = ["a", "b"]` and `key = true` entries, `#` comments. Hand-rolled
+/// so the tool stays dependency-free. Every malformed input is a `Err`
+/// (the CLI's exit-code-2 path), never a panic.
 pub fn parse_config(text: &str) -> Result<Config, String> {
     enum Cur {
         None,
         Rule,
         Fabric,
         Matrix,
+        Confinement,
     }
     let mut cfg = Config::default();
     let mut cur = Cur::None;
@@ -120,6 +147,11 @@ pub fn parse_config(text: &str) -> Result<Config, String> {
         if line == "[[matrix]]" {
             cfg.matrices.push(Matrix::default());
             cur = Cur::Matrix;
+            continue;
+        }
+        if line == "[[confinement]]" {
+            cfg.confinements.push(Confinement::default());
+            cur = Cur::Confinement;
             continue;
         }
         if line.starts_with('[') {
@@ -167,6 +199,18 @@ pub fn parse_config(text: &str) -> Result<Config, String> {
                     k => return Err(format!("lint.toml:{}: unknown matrix key {k}", idx + 1)),
                 }
             }
+            Cur::Confinement => {
+                let con = cfg.confinements.last_mut().ok_or_else(no_table)?;
+                match key {
+                    "id" => con.id = toml_str(val, idx)?,
+                    "message" => con.message = toml_str(val, idx)?,
+                    "accessors" => con.accessors = toml_arr(val, idx)?,
+                    "fanin" => con.fanin = toml_arr(val, idx)?,
+                    k => {
+                        return Err(format!("lint.toml:{}: unknown confinement key {k}", idx + 1))
+                    }
+                }
+            }
         }
     }
     for r in &cfg.rules {
@@ -177,6 +221,11 @@ pub fn parse_config(text: &str) -> Result<Config, String> {
     for f in &cfg.fabrics {
         if f.name.is_empty() || f.decl.is_empty() {
             return Err(format!("fabric '{}' needs name and decl", f.name));
+        }
+    }
+    for c in &cfg.confinements {
+        if c.id.is_empty() || c.message.is_empty() || c.accessors.is_empty() {
+            return Err(format!("confinement '{}' needs id, message and accessors", c.id));
         }
     }
     for m in &cfg.matrices {
@@ -522,6 +571,100 @@ fn scan_tokens(rel: &str, lines: &[String], mask: &[bool], cfg: &Config, out: &m
     }
 }
 
+// ---- shard confinement -----------------------------------------------------
+
+/// The argument text of a call whose `(` sits at byte offset `open`: the
+/// balanced-paren substring, or the rest of the line when the call wraps.
+/// Whitespace collapses so formatting cannot split one shard expression
+/// into two.
+fn call_args(line: &str, open: usize) -> String {
+    let lb = line.as_bytes();
+    let mut depth = 0i32;
+    let mut end = lb.len();
+    for (i, &b) in lb.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    line[open + 1..end].split_whitespace().collect::<Vec<_>>().join(" ")
+}
+
+/// Check the shard-confinement rules over one file: collect every
+/// shard-slice accessor call (`.accessor(shard_expr)` method-call form),
+/// group the calls by enclosing function, and flag any function whose
+/// calls name two distinct shard expressions — it holds borrows into two
+/// shards' table slices at once. A per-shard loop
+/// (`for s in 0..n { db.snapshot_shard(s) }`) stays clean: its single
+/// binding re-borrows one shard at a time. Files under a declared `fanin`
+/// prefix — the router/aggregation/recovery modules where cross-shard
+/// reads are the point — are exempt, and every exemption lives in
+/// `lint.toml` where it can be reviewed.
+fn scan_confinement(
+    rel: &str,
+    lines: &[String],
+    mask: &[bool],
+    idx: &items::ItemIndex,
+    cfg: &Config,
+    out: &mut Vec<Violation>,
+) {
+    for rule in &cfg.confinements {
+        if rule.fanin.iter().any(|p| !p.is_empty() && rel.starts_with(p)) {
+            continue;
+        }
+        let mut sites: Vec<(usize, String)> = Vec::new();
+        for (li, line) in lines.iter().enumerate() {
+            if mask[li] {
+                continue;
+            }
+            let lb = line.as_bytes();
+            for acc in &rule.accessors {
+                for pos in find_token_positions(line, acc) {
+                    let open = pos + acc.len();
+                    if pos > 0 && lb[pos - 1] == b'.' && lb.get(open) == Some(&b'(') {
+                        sites.push((li + 1, call_args(line, open)));
+                    }
+                }
+            }
+        }
+        // Sites were collected accessor-by-accessor; restore source order
+        // so "first differing shard" is deterministic and reads naturally.
+        sites.sort();
+        let mut groups: BTreeMap<(usize, String), Vec<(usize, String)>> = BTreeMap::new();
+        for (lineno, arg) in sites {
+            let key = match idx.enclosing_fn(lineno) {
+                Some(f) => (f.start, f.qual.clone()),
+                None => (0, format!("<{rel}>")),
+            };
+            groups.entry(key).or_default().push((lineno, arg));
+        }
+        for ((_, qual), calls) in groups {
+            let (first_line, first_arg) = &calls[0];
+            if let Some((line, arg)) =
+                calls.iter().find(|(_, a)| a != first_arg)
+            {
+                out.push(Violation {
+                    path: rel.to_string(),
+                    line: *line,
+                    rule: rule.id.clone(),
+                    message: format!(
+                        "{} (fn `{qual}` holds shard `{first_arg}` (line {first_line}) and \
+                         shard `{arg}` slices at once)",
+                        rule.message
+                    ),
+                });
+            }
+        }
+    }
+}
+
 // ---- fabric rules ----------------------------------------------------------
 
 fn indent_of(l: &str) -> usize {
@@ -773,9 +916,10 @@ pub fn analyze(root: &Path, cfg: &Config) -> Result<Analysis, String> {
     let indices: Vec<items::ItemIndex> =
         sources.iter().map(|s| items::index_items(&s.lines, &s.mask)).collect();
     let mut out = Vec::new();
-    for s in &sources {
+    for (s, idx) in sources.iter().zip(&indices) {
         scan_tokens(&s.rel, &s.lines, &s.mask, cfg, &mut out);
         scan_wildcards(&s.rel, &s.lines, &s.mask, cfg, &mut out);
+        scan_confinement(&s.rel, &s.lines, &s.mask, idx, cfg, &mut out);
     }
     let graph = graph::build(&sources, &indices, &cfg.fabrics)?;
     out.extend(graph::flow_violations(&graph));
@@ -867,6 +1011,60 @@ mod tests {
     }
 
     #[test]
+    fn parses_confinement_tables() {
+        let cfg = parse_config(
+            "[[confinement]]\nid = \"shard-confinement\"\nmessage = \"m\"\n\
+             accessors = [\"snapshot_shard\", \"shard_wal_tail_len\"]\nfanin = [\"api/v1.rs\"]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.confinements.len(), 1);
+        assert_eq!(cfg.confinements[0].accessors, vec!["snapshot_shard", "shard_wal_tail_len"]);
+        assert_eq!(cfg.confinements[0].fanin, vec!["api/v1.rs"]);
+        // Accessors are mandatory; unknown keys are config errors.
+        assert!(parse_config("[[confinement]]\nid = \"x\"\nmessage = \"m\"\n").is_err());
+        assert!(parse_config(
+            "[[confinement]]\nid = \"x\"\nmessage = \"m\"\n\
+             accessors = [\"a\"]\nallow = [\"b\"]\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn confinement_flags_two_shard_borrows_outside_fanin() {
+        let src = "pub fn merge(db: &Db) -> u32 {\n    let a = db.snapshot_shard(0);\n    \
+                   let b = db.snapshot_shard(1);\n    a + b\n}\n\
+                   pub fn sweep(db: &Db) -> u32 {\n    let mut t = 0;\n    \
+                   for s in 0..4 {\n        t += db.snapshot_shard(s);\n    }\n    t\n}\n\
+                   pub fn snapshot_shard(x: usize) -> usize {\n    x\n}\n";
+        let lines = strip_source(src);
+        let mask = test_mask(&lines);
+        let idx = items::index_items(&lines, &mask);
+        let cfg = Config {
+            confinements: vec![Confinement {
+                id: "shard-confinement".into(),
+                message: "cross-shard borrow outside a fan-in module".into(),
+                accessors: vec!["snapshot_shard".into()],
+                fanin: vec!["api/v1.rs".into()],
+            }],
+            ..Config::default()
+        };
+        let mut out = Vec::new();
+        scan_confinement("scheduler/mod.rs", &lines, &mask, &idx, &cfg, &mut out);
+        // `merge` holds shards 0 and 1 at once; the per-shard loop in
+        // `sweep` re-borrows one shard per iteration and stays clean; the
+        // free fn *named* snapshot_shard is a definition, not a call.
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 3);
+        assert!(out[0].message.contains("`merge`"), "{out:?}");
+        assert!(out[0].message.contains("shard `0`"), "{out:?}");
+        assert!(out[0].message.contains("shard `1`"), "{out:?}");
+
+        let mut silent = Vec::new();
+        scan_confinement("api/v1.rs", &lines, &mask, &idx, &cfg, &mut silent);
+        assert!(silent.is_empty(), "fan-in module is exempt: {silent:?}");
+    }
+
+    #[test]
     fn direct_index_detector() {
         assert!(has_direct_index("self.free_at[idx] = finish;"));
         assert!(has_direct_index("let a = v[0].as_f64();"));
@@ -916,9 +1114,8 @@ mod tests {
         let lines = strip_source(src);
         let mask = test_mask(&lines);
         let cfg = Config {
-            rules: Vec::new(),
             fabrics: vec![Fabric { name: "Change".into(), decl: "x.rs".into() }],
-            matrices: Vec::new(),
+            ..Config::default()
         };
         let mut out = Vec::new();
         scan_wildcards("x.rs", &lines, &mask, &cfg, &mut out);

@@ -33,6 +33,7 @@ fn each_rule_fires_on_its_bad_fixture() {
     assert!(has("bad/flow_dead.rs", "fabric-dead"), "{vs:#?}");
     assert!(has("bad/codec.rs", "write-matrix"), "{vs:#?}");
     assert!(has("bad/durability/unwrap.rs", "panic-freedom"), "{vs:#?}");
+    assert!(has("bad/cross_shard.rs", "shard-confinement"), "{vs:#?}");
 }
 
 #[test]
@@ -63,6 +64,15 @@ fn diagnostics_carry_the_expected_details() {
         .collect();
     // unwrap, expect and the two direct-index reads (one line).
     assert_eq!(panics, vec![6, 7, 11], "{vs:#?}");
+    let shards: Vec<&Violation> =
+        vs.iter().filter(|v| v.rule == "shard-confinement").collect();
+    // Exactly one: merge_two. The per-shard loop and the accessor
+    // definition in the same file must not fire.
+    assert_eq!(shards.len(), 1, "{vs:#?}");
+    assert_eq!(shards[0].path, "bad/cross_shard.rs");
+    assert!(shards[0].message.contains("`merge_two`"), "{shards:?}");
+    assert!(shards[0].message.contains("shard `0`"), "{shards:?}");
+    assert!(shards[0].message.contains("shard `1`"), "{shards:?}");
 }
 
 #[test]

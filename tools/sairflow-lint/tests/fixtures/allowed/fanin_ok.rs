@@ -1,0 +1,17 @@
+//! Cross-shard fan-in on an allowlisted path: this directory is named in
+//! the fixture lint.toml's `fanin` list, so aggregating every shard's
+//! slice here is the shard-confinement rule's sanctioned exception.
+
+pub struct SliceDb {
+    totals: Vec<u32>,
+}
+
+impl SliceDb {
+    pub fn snapshot_shard(&self, shard: usize) -> u32 {
+        self.totals.get(shard).copied().unwrap_or(0)
+    }
+}
+
+pub fn aggregate(db: &SliceDb) -> u32 {
+    db.snapshot_shard(0) + db.snapshot_shard(1)
+}

@@ -1,0 +1,28 @@
+//! Seeds the shard-confinement rule: `merge_two` holds borrows into two
+//! different shards' table slices in one scope. The per-shard sweep below
+//! it re-borrows one shard per loop iteration and must stay clean, as
+//! must the accessor *definition* (a `fn` header is not a call site).
+
+pub struct SliceDb {
+    totals: Vec<u32>,
+}
+
+impl SliceDb {
+    pub fn snapshot_shard(&self, shard: usize) -> u32 {
+        self.totals.get(shard).copied().unwrap_or(0)
+    }
+}
+
+pub fn merge_two(db: &SliceDb) -> u32 {
+    let a = db.snapshot_shard(0);
+    let b = db.snapshot_shard(1);
+    a + b
+}
+
+pub fn per_shard_sweep(db: &SliceDb) -> u32 {
+    let mut total = 0;
+    for shard in 0..4 {
+        total += db.snapshot_shard(shard);
+    }
+    total
+}

@@ -21,7 +21,16 @@
 //!      vs critical-path pass latency at 1/2/4/8 control-plane shards on
 //!      the multi-tenant workload. Run with `--bench9` to save the summary
 //!      as `rust/reports/BENCH_9.json` and copy the cells into the
-//!      committed trajectory file `reports/BENCH_9.json`.
+//!      committed trajectory file `reports/BENCH_9.json`;
+//!   8. the dataflow fast path (PR 10, docs/FASTPATH.md): a warm 10-task
+//!      chain run end-to-end with the per-DAG fast path on vs off, in the
+//!      same world. Reports both simulated makespans, the counter-verified
+//!      fraction of non-root tasks dispatched directly by workers (the
+//!      acceptance bar is ≥ 80%), and the per-edge latency saved against
+//!      the modeled CDC → scheduler hop (CDC delay midpoint + scheduler
+//!      invoke). Run with `--bench10` to save the summary as
+//!      `rust/reports/BENCH_10.json` and copy the cells into the committed
+//!      trajectory file `reports/BENCH_10.json`.
 //!
 //! Cells 2/3/3b are the payoff metric of the symbolized identifier
 //! fabric (PR 5): every key the DB commit and the scheduling pass touch
@@ -128,6 +137,7 @@ fn bench_db_commits(n: u64) -> f64 {
             start: None,
             end: None,
             host: None,
+            fast_dispatched: false,
         }));
         sairflow::cloud::db::commit(&mut sim, &mut w, t, |_s, _w| {});
     }
@@ -325,6 +335,63 @@ fn bench_cdc_handoff(total: u64) -> (f64, f64, f64) {
     (allocs / deliveries, allocs / recs, recs / dt)
 }
 
+/// Cell 8: the dataflow fast path (PR 10, docs/FASTPATH.md) on a warm
+/// n-task chain — the workload whose every edge is unambiguous, i.e. the
+/// fast path's best case and the paper's Fig. 4a shape. The same world
+/// runs the chain with the per-DAG flag off (every hand-off pays the
+/// CDC → Kinesis → scheduler-pass hop) and on (workers queue the
+/// successor from the completion callback). Returns
+/// `(makespan_off_s, makespan_on_s, dispatched, dispatch_frac)`; the
+/// dispatch counters come from the per-shard operator gauges, so the
+/// reported fraction is exactly what `/api/v1/health` would show.
+fn bench_fastpath_chain(n: u32) -> (f64, f64, u64, f64) {
+    use sairflow::dag::state::RunState;
+    use sairflow::sairflow::{trigger_dag, upload_dag, Config, World};
+    use sairflow::sim::time::{as_secs, MINUTE};
+    use sairflow::workloads::synthetic::chain_dag;
+
+    fn run_chain(n: u32, fast: bool) -> (f64, u64, u64) {
+        let w = World::new(Config::seeded(11));
+        let mut sim = w.sim();
+        let mut w = w;
+        let mut spec = chain_dag("fp_chain", n, 1.0, 5.0).fastpath(fast);
+        spec.period = None; // manual trigger only: one run, clean makespan
+        upload_dag(&mut sim, &mut w, &spec);
+        sim.run_until(&mut w, MINUTE, 10_000_000);
+        trigger_dag(&mut sim, &mut w, "fp_chain");
+        sim.run_until(&mut w, 60 * MINUTE, 10_000_000);
+        let run = w
+            .db
+            .read()
+            .dag_runs
+            .values()
+            .next()
+            .cloned()
+            .expect("the triggered run exists");
+        assert_eq!(run.state, RunState::Success, "chain must finish (fast={fast})");
+        let makespan = as_secs(run.end.unwrap() - run.start.unwrap());
+        let dispatched = w.shard_passes.iter().map(|p| p.fastpath_dispatched).sum();
+        let fallback = w.shard_passes.iter().map(|p| p.fastpath_fallback).sum();
+        (makespan, dispatched, fallback)
+    }
+
+    let (off_s, off_disp, _) = run_chain(n, false);
+    assert_eq!(off_disp, 0, "fast path off must never dispatch directly");
+    let (on_s, on_disp, on_fb) = run_chain(n, true);
+    let edges = (n - 1) as f64;
+    let frac = on_disp as f64 / edges.max(1.0);
+    assert!(
+        frac >= 0.8,
+        "fast path must dispatch >= 80% of non-root tasks directly: \
+         {on_disp}/{edges} dispatched, {on_fb} fallbacks"
+    );
+    assert!(
+        on_s < off_s,
+        "fast path must shorten the chain: on {on_s:.2} s vs off {off_s:.2} s"
+    );
+    (off_s, on_s, on_disp, frac)
+}
+
 fn bench_e2e(n_tasks: u32) -> (f64, f64) {
     let spec = ExperimentSpec {
         label: "hotpath-e2e".into(),
@@ -346,6 +413,7 @@ fn main() {
     let ci = std::env::args().any(|a| a == "--test" || a == "--ci-smoke");
     let bench5 = std::env::args().any(|a| a == "--bench5");
     let bench9 = std::env::args().any(|a| a == "--bench9");
+    let bench10 = std::env::args().any(|a| a == "--bench10");
     let (des_target, db_n, pass_iters, e2e_tasks) =
         if ci { (100_000, 5_000, 5, 16) } else { (2_000_000, 100_000, 200, 125) };
     if ci {
@@ -399,6 +467,26 @@ fn main() {
         ho_per_delivery < 4.0,
         "per-delivery allocations regressed: {ho_per_delivery} (expected ~1: the event closure)"
     );
+    // Cell 8: the dataflow fast path on a warm 10-task chain. Simulated
+    // time, so it runs in full even in CI smoke — the cell lands in
+    // BENCH_ci.json on every merge.
+    let fp_n = 10u32;
+    let (fp_off_s, fp_on_s, fp_disp, fp_frac) = bench_fastpath_chain(fp_n);
+    let fp_edges = (fp_n - 1) as f64;
+    let fp_per_edge = (fp_off_s - fp_on_s) / fp_edges;
+    // The modeled hop the fast path removes per edge: the CDC delivery
+    // delay plus the scheduling-pass CPU, at their distribution midpoints
+    // (the scheduler lambda is warm mid-chain, so invoke latency ~0).
+    let cfgm = sairflow::sairflow::Config::seeded(11);
+    let fp_model =
+        (cfgm.cdc_delay.0 + cfgm.cdc_delay.1) / 2.0 + (cfgm.sched_cpu.0 + cfgm.sched_cpu.1) / 2.0;
+    println!(
+        "fast path chain n={fp_n}    : off {fp_off_s:>7.2} s, on {fp_on_s:>7.2} s \
+         ({fp_disp}/{fp_edges:.0} = {:.0}% direct, {fp_per_edge:.2} s/edge saved, \
+         modeled hop {fp_model:.2} s)",
+        fp_frac * 100.0
+    );
+
     let (e2e_wall, mk) = bench_e2e(e2e_tasks);
     println!("e2e n={e2e_tasks} cold experiment : {e2e_wall:>9.3} s wall (sim makespan {mk:.1} s)");
 
@@ -419,7 +507,14 @@ fn main() {
             "shard_scaling_workload",
             format!("{mt_tenants} tenants x {mt_dags} dags x 30 tasks"),
         )
-        .set("shard_scaling", Json::Arr(scaling_json));
+        .set("shard_scaling", Json::Arr(scaling_json))
+        .set("fastpath_chain_n", fp_n as u64)
+        .set("fastpath_makespan_off_s", fp_off_s)
+        .set("fastpath_makespan_on_s", fp_on_s)
+        .set("fastpath_dispatched", fp_disp)
+        .set("fastpath_dispatch_frac", fp_frac)
+        .set("fastpath_per_edge_saved_s", fp_per_edge)
+        .set("fastpath_modeled_hop_s", fp_model);
 
     // L1/L2: PJRT execution latency (skipped without artifacts).
     match sairflow::runtime::Engine::load_dir(&sairflow::runtime::default_artifacts_dir()) {
@@ -438,6 +533,8 @@ fn main() {
     }
     let report = if ci {
         "BENCH_ci"
+    } else if bench10 {
+        "BENCH_10"
     } else if bench9 {
         "BENCH_9"
     } else if bench5 {

@@ -18,7 +18,7 @@
 //! | GET    | `/api/v1/dags` | list DAGs (`limit`, `offset`, `paused=true\|false`) |
 //! | POST   | `/api/v1/dags` | upload a DAG file (body `{"file_text": ...}`) |
 //! | GET    | `/api/v1/dags/{dag_id}` | DAG detail |
-//! | PATCH  | `/api/v1/dags/{dag_id}` | pause/unpause (body `{"is_paused": bool}`) |
+//! | PATCH  | `/api/v1/dags/{dag_id}` | pause/unpause and/or toggle the dataflow fast path (body `{"is_paused": bool}` and/or `{"fastpath": bool}` — the opt-in for workers dispatching unambiguous successors directly, docs/FASTPATH.md) |
 //! | DELETE | `/api/v1/dags/{dag_id}` | delete the DAG and all its rows |
 //! | GET    | `/api/v1/dags/{dag_id}/dagRuns` | list runs (`limit`, `offset`, `cursor`, `state=<run state>`, `run_type=scheduled\|manual\|backfill`) |
 //! | POST   | `/api/v1/dags/{dag_id}/dagRuns` | trigger a manual run — never dropped: on a paused DAG or past `max_active_runs` the run is created `queued` and promoted later (Airflow parity, not a 409) |
@@ -362,6 +362,9 @@ pub fn handle(sim: &mut Sim<World>, w: &mut World, req: Request) -> Json {
                     "interned_dag_ids",
                     "live_dag_ids",
                     "shards",
+                    "fastpath_dispatched",
+                    "fastpath_fallback",
+                    "fastpath_reconciled_noop",
                 ],
             )
             .set("active_runs", legacy_active)

@@ -118,7 +118,9 @@ pub fn kway_merge<T, K: Ord>(parts: Vec<Vec<T>>, mut key: impl FnMut(&T) -> K) -
         }
         match best {
             None => return out,
-            Some((i, _)) => out.push(iters[i].next().unwrap()),
+            // peek() was Some for the winner, so next() yields exactly
+            // one element; extend keeps the handler surface panic-free.
+            Some((i, _)) => out.extend(iters.get_mut(i).and_then(|it| it.next())),
         }
     }
 }

@@ -526,6 +526,9 @@ fn shard_json(w: &World, shard: usize) -> Json {
         .set("last_pass_at", Json::Num(as_secs(p.last_at)))
         .set("last_pass_duration", Json::Num(as_secs(p.last_duration)))
         .set("passes", p.passes)
+        .set("fastpath_dispatched", p.fastpath_dispatched)
+        .set("fastpath_fallback", p.fastpath_fallback)
+        .set("fastpath_reconciled_noop", p.fastpath_reconciled_noop)
 }
 
 fn list_shards(w: &World) -> Json {
@@ -671,6 +674,20 @@ fn health(w: &World, tenant: &str) -> Json {
             .set("recoveries", w.dur.recoveries)
             .set("interned_dag_ids", DagId::interned_count() as u64)
             .set("live_dag_ids", DagId::live_count() as u64)
+            // Dataflow fast-path totals (docs/FASTPATH.md), summed across
+            // shards; the per-shard breakdown lives in the `shards` block.
+            .set(
+                "fastpath_dispatched",
+                w.shard_passes.iter().map(|p| p.fastpath_dispatched).sum::<u64>(),
+            )
+            .set(
+                "fastpath_fallback",
+                w.shard_passes.iter().map(|p| p.fastpath_fallback).sum::<u64>(),
+            )
+            .set(
+                "fastpath_reconciled_noop",
+                w.shard_passes.iter().map(|p| p.fastpath_reconciled_noop).sum::<u64>(),
+            )
             .set("shards", shards_health_json(w));
     }
     resp
@@ -821,15 +838,54 @@ fn patch_dag(
 ) -> ApiResult {
     let dag = resolve_dag(tenant, dag_id);
     let body = require_body(body)?;
-    let paused = body
-        .get("is_paused")
-        .and_then(|v| v.as_bool())
-        .ok_or_else(|| ApiError::bad_request("body must set boolean field 'is_paused'"))?;
+    let paused = match body.get("is_paused") {
+        None => None,
+        Some(v) => Some(v.as_bool().ok_or_else(|| {
+            ApiError::bad_request("'is_paused' must be a boolean")
+        })?),
+    };
+    let fastpath = match body.get("fastpath") {
+        None => None,
+        Some(v) => Some(v.as_bool().ok_or_else(|| {
+            ApiError::bad_request("'fastpath' must be a boolean")
+        })?),
+    };
+    if paused.is_none() && fastpath.is_none() {
+        return Err(ApiError::bad_request(
+            "body must set boolean field 'is_paused' and/or 'fastpath'",
+        ));
+    }
     let Some(dag) = dag.filter(|d| w.db.read().dags.contains_key(d)) else {
         return Err(ApiError::unknown_dag(dag_id));
     };
-    sairflow::set_dag_paused(sim, w, dag, paused);
-    Ok(Json::obj().set("dag_id", dag_id).set("is_paused", paused))
+    if let Some(paused) = paused {
+        sairflow::set_dag_paused(sim, w, dag, paused);
+    }
+    if let Some(on) = fastpath {
+        // The dataflow fast-path opt-in (docs/FASTPATH.md) lives on the
+        // serialized DAG, so it is persisted through the same
+        // `PutSerializedDag` transaction path as a re-upload — CDC-visible
+        // like every other mutation, and effective for runs whose workers
+        // read the spec after the commit applies.
+        let spec = w.db.read().serialized.get(&dag).cloned();
+        let Some(mut spec) = spec else {
+            return Err(ApiError::unknown_dag(dag_id));
+        };
+        if spec.fastpath != on {
+            spec.fastpath = on;
+            let mut txn = Txn::new();
+            txn.push(Write::PutSerializedDag(spec));
+            crate::cloud::db::commit(sim, w, txn, |_sim, _w| {});
+        }
+    }
+    let mut resp = Json::obj().set("dag_id", dag_id);
+    if let Some(p) = paused {
+        resp = resp.set("is_paused", p);
+    }
+    if let Some(f) = fastpath {
+        resp = resp.set("fastpath", f);
+    }
+    Ok(resp)
 }
 
 fn delete_dag(sim: &mut Sim<World>, w: &mut World, tenant: &str, dag_id: &str) -> ApiResult {

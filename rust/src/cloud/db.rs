@@ -249,6 +249,14 @@ pub struct TiRow {
     pub end: Option<SimTime>,
     /// Worker identity (Airflow's `hostname` column) — set when running.
     pub host: Option<String>,
+    /// Dataflow fast-path marker ([`Write::MarkTiFastPath`]): the row was
+    /// queued *and* handed to an executor directly by a finishing
+    /// worker's completion callback, so the CDC-driven executor dispatch
+    /// of the same `Queued` change must no-op (consumed via
+    /// [`MetaDb::consume_fastpath_marker`]). Swept by recovery: a marked
+    /// row's fast enqueue died with the process, so the row is treated
+    /// like an orphan and re-driven through the normal path.
+    pub fast_dispatched: bool,
 }
 
 /// A change record captured in the write-ahead log — the unit CDC forwards
@@ -327,6 +335,13 @@ pub enum Write {
     /// Record the ready time of a task instance (when its last dependency
     /// completed) without a state transition.
     SetTiReady { key: TiKey, ts: SimTime },
+    /// Dataflow fast-path dispatch record (docs/FASTPATH.md): stamped in
+    /// the same transaction that queues an unambiguous successor from a
+    /// worker's completion callback. Applies only while the row is
+    /// `Queued` (apply-time guard — a raced clear/reset must not leave a
+    /// stale marker) and emits **no** change record: the marker is
+    /// control metadata for the CDC-driven dispatch dedup, not an event.
+    MarkTiFastPath { key: TiKey },
     /// Pause / unpause a DAG (the `PATCH /api/v1/dags/{id}` write).
     SetDagPaused { dag_id: DagId, paused: bool },
     /// Reset a task instance for re-execution (Airflow "clear"): state back
@@ -364,6 +379,7 @@ impl Write {
             Write::SetTiState { key, .. }
             | Write::SetTiReady { key, .. }
             | Write::SetTiHost { key, .. }
+            | Write::MarkTiFastPath { key }
             | Write::ClearTi { key }
             | Write::ResetOrphanTi { key } => Some((key.0, key.1)),
             // DAG- and tenant-level writes contend on no single run; they
@@ -396,6 +412,7 @@ impl Write {
             Write::SetTiState { key, .. }
             | Write::SetTiReady { key, .. }
             | Write::SetTiHost { key, .. }
+            | Write::MarkTiFastPath { key }
             | Write::ClearTi { key }
             | Write::ResetOrphanTi { key } => key.0.shard_of(n_shards),
         }
@@ -805,6 +822,20 @@ impl MetaDb {
                         row.host = Some(host);
                     }
                 }
+                Write::MarkTiFastPath { key } => {
+                    // Apply-time guard: the marker only lands on a row
+                    // still in `Queued` — the state the fast-path txn
+                    // itself put it in. A raced clear/reset/delete leaves
+                    // the row unmarked (the normal CDC-driven dispatch
+                    // then handles it), and a replayed marker on an
+                    // already-progressed row is a no-op. No change record:
+                    // nothing in the event fabric reacts to the marker.
+                    if let Some(row) = self.task_instances.get_mut(&key) {
+                        if row.state == TiState::Queued {
+                            row.fast_dispatched = true;
+                        }
+                    }
+                }
                 Write::SetDagPaused { dag_id, paused } => {
                     if let Some(row) = self.dags.get_mut(&dag_id) {
                         if row.is_paused != paused {
@@ -835,6 +866,7 @@ impl MetaDb {
                         row.start = None;
                         row.end = None;
                         row.host = None;
+                        row.fast_dispatched = false;
                         // The `None`-state change is CDC-routed to the
                         // scheduler ("task-cleared" rule) so the next pass
                         // re-schedules and re-queues the task.
@@ -876,6 +908,12 @@ impl MetaDb {
                 }
                 Write::ResetOrphanTi { key } => {
                     if let Some(row) = self.task_instances.get_mut(&key) {
+                        // A fast-path marker is always stale by the time a
+                        // repair transaction applies (the fast enqueue and
+                        // any undelivered CDC batch died with the
+                        // process), so it is dropped whatever the row's
+                        // state — clearing a bool twice is idempotent.
+                        row.fast_dispatched = false;
                         // Only rows a dead worker owned are reset; a
                         // non-active row (never started, already terminal,
                         // or reset by an earlier replay of this repair) is
@@ -1188,6 +1226,24 @@ impl MetaDb {
             .range((dag_id, run_id, 0)..=(dag_id, run_id, u32::MAX))
             .map(|(_, v)| v)
             .collect()
+    }
+
+    /// Consume a task instance's fast-path dispatch marker: returns
+    /// whether it was set, clearing it either way. The executor-dispatch
+    /// path calls this on every CDC-delivered `Queued` change — a `true`
+    /// means a worker's completion callback already enqueued this task
+    /// directly (dataflow fast path), so the CDC-driven enqueue must
+    /// no-op to keep the task exactly-once. In-memory only by design: the
+    /// durable marker is replayed from the WAL on recovery, where the
+    /// orphan sweep re-drives marked rows through the normal path.
+    pub fn consume_fastpath_marker(&mut self, key: TiKey) -> bool {
+        match self.task_instances.get_mut(&key) {
+            Some(row) if row.fast_dispatched => {
+                row.fast_dispatched = false;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Count of task instances in active (queued/running) state across all
@@ -1537,6 +1593,7 @@ mod tests {
             start: None,
             end: None,
             host: None,
+            fast_dispatched: false,
         }
     }
 
@@ -1675,6 +1732,55 @@ mod tests {
         assert!(changes.is_empty());
         assert_eq!(db.stats.illegal_transitions, 1);
         assert_eq!(db.task_instances[&("d".into(), 1, 0)].state, TiState::None);
+    }
+
+    #[test]
+    fn fastpath_marker_lands_only_on_queued_rows_and_consumes_once() {
+        let mut db = MetaDb::new();
+        let key: TiKey = ("d".into(), 1, 0);
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        // Marker on a non-Queued row is dropped at apply time.
+        txn.push(Write::MarkTiFastPath { key });
+        let changes = db.apply(txn, 1);
+        assert!(!db.task_instances[&key].fast_dispatched, "marker needs Queued");
+        assert_eq!(changes.len(), 1, "marker emits no change record");
+
+        // The fast-path shape: queue + mark in one transaction.
+        let mut txn = Txn::new();
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
+        txn.push(Write::MarkTiFastPath { key });
+        let changes = db.apply(txn, 2);
+        assert_eq!(changes.len(), 1, "only the Queued transition is CDC-visible");
+        assert!(db.task_instances[&key].fast_dispatched);
+
+        // Consume is one-shot.
+        assert!(db.consume_fastpath_marker(key));
+        assert!(!db.consume_fastpath_marker(key), "second consume is a miss");
+        assert!(!db.consume_fastpath_marker(("ghost".into(), 1, 0)));
+    }
+
+    #[test]
+    fn reset_orphan_drops_stale_fastpath_marker() {
+        let mut db = MetaDb::new();
+        let key: TiKey = ("d".into(), 1, 0);
+        let mut txn = Txn::new();
+        txn.push(dag_row("d"));
+        txn.push(Write::InsertTi(ti("d", 1, 0)));
+        txn.push(Write::SetTiState { key, state: TiState::Scheduled });
+        txn.push(Write::SetTiState { key, state: TiState::Queued });
+        txn.push(Write::MarkTiFastPath { key });
+        db.apply(txn, 1);
+        assert!(db.task_instances[&key].fast_dispatched);
+        // Recovery repair: the marked row is reset and the marker swept.
+        let mut repair = Txn::new();
+        repair.push(Write::ResetOrphanTi { key });
+        db.apply(repair, 2);
+        let row = &db.task_instances[&key];
+        assert_eq!(row.state, TiState::None);
+        assert!(!row.fast_dispatched, "repair sweeps the marker");
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub struct DagGraph {
     pub indegree: Vec<u32>,
     /// Task durations (nominal payload duration), microseconds.
     pub dur: Vec<SimDuration>,
+    /// `unambiguous[i]` = downstream tasks of `i` whose *only* upstream is
+    /// `i`. These are the edges the dataflow fast path may dispatch
+    /// directly from a worker's completion callback (docs/FASTPATH.md):
+    /// the finished task alone decides readiness, so no cross-task join
+    /// has to be evaluated by a scheduling pass.
+    pub unambiguous: Vec<Vec<u32>>,
 }
 
 impl DagGraph {
@@ -38,7 +44,16 @@ impl DagGraph {
                 indegree[t.id as usize] += 1;
             }
         }
-        DagGraph { n, downstream, upstream, indegree, dur }
+        let unambiguous = (0..n)
+            .map(|i| {
+                downstream[i]
+                    .iter()
+                    .copied()
+                    .filter(|&s| upstream[s as usize].len() == 1)
+                    .collect()
+            })
+            .collect();
+        DagGraph { n, downstream, upstream, indegree, dur, unambiguous }
     }
 
     /// Root tasks (no dependencies).
@@ -166,6 +181,27 @@ mod tests {
         assert_eq!(g.max_parallelism(), 2);
         assert_eq!(g.longest_path_nodes(), 3);
         assert_eq!(g.critical_path_duration(), 3_000_000);
+    }
+
+    #[test]
+    fn unambiguous_edges() {
+        // Chain: every non-root is the unambiguous successor of its
+        // predecessor.
+        let c = chain_dag("c", 4, 1.0, 5.0);
+        let g = DagGraph::of(&c);
+        assert_eq!(g.unambiguous, vec![vec![1], vec![2], vec![3], vec![]]);
+
+        // Diamond: the fan-out edges a->b, a->c are unambiguous (b and c
+        // each have one upstream); the join edges b->e, c->e are not.
+        let mut d = DagSpec::new("diamond");
+        let a = d.sleep_task("a", 1.0, &[]);
+        let b = d.sleep_task("b", 1.0, &[a]);
+        let c2 = d.sleep_task("c", 1.0, &[a]);
+        let _e = d.sleep_task("e", 1.0, &[b, c2]);
+        let g = DagGraph::of(&d);
+        assert_eq!(g.unambiguous[a as usize], vec![b, c2]);
+        assert!(g.unambiguous[b as usize].is_empty());
+        assert!(g.unambiguous[c2 as usize].is_empty());
     }
 
     #[test]

@@ -86,13 +86,23 @@ pub struct DagSpec {
     /// DAG (the Appendix D protocol "prevents DAG runs from overlapping"
     /// by choosing T > critical path; this enforces it structurally).
     pub max_active_runs: u32,
+    /// Opt into the dataflow fast path (docs/FASTPATH.md): a finishing
+    /// worker dispatches unambiguous successors directly, skipping the
+    /// CDC → scheduler hop; the scheduling pass reconciles from CDC.
+    pub fastpath: bool,
     pub tasks: Vec<TaskSpec>,
 }
 
 impl DagSpec {
     /// Create an unscheduled DAG (string callers intern here).
     pub fn new(dag_id: impl Into<DagId>) -> DagSpec {
-        DagSpec { dag_id: dag_id.into(), period: None, max_active_runs: 16, tasks: Vec::new() }
+        DagSpec {
+            dag_id: dag_id.into(),
+            period: None,
+            max_active_runs: 16,
+            fastpath: false,
+            tasks: Vec::new(),
+        }
     }
 
     /// Builder-style: set schedule period in minutes (the paper's `T`).
@@ -104,6 +114,12 @@ impl DagSpec {
     /// Builder-style: limit concurrent runs (Airflow `max_active_runs`).
     pub fn max_active_runs(mut self, n: u32) -> DagSpec {
         self.max_active_runs = n;
+        self
+    }
+
+    /// Builder-style: opt into the dataflow fast path (docs/FASTPATH.md).
+    pub fn fastpath(mut self, on: bool) -> DagSpec {
+        self.fastpath = on;
         self
     }
 
@@ -191,6 +207,7 @@ impl DagSpec {
         let mut obj = Json::obj()
             .set("dag_id", self.dag_id.as_str())
             .set("max_active_runs", self.max_active_runs as u64)
+            .set("fastpath", self.fastpath)
             .set("tasks", Json::Arr(tasks));
         obj = match self.period {
             Some(p) => obj.set("period_secs", p as f64 / 1e6),
@@ -247,7 +264,10 @@ impl DagSpec {
             .and_then(|v| v.as_f64())
             .map(|v| v as u32)
             .unwrap_or(16);
-        let spec = DagSpec { dag_id, period, max_active_runs, tasks };
+        // Tolerant like `max_active_runs`: DAG files predating the fast
+        // path parse with the flag off.
+        let fastpath = doc.get("fastpath").and_then(Json::as_bool).unwrap_or(false);
+        let spec = DagSpec { dag_id, period, max_active_runs, fastpath, tasks };
         spec.validate()?;
         Ok(spec)
     }

@@ -77,6 +77,16 @@ pub struct ShardPassStats {
     pub last_duration: SimTime,
     /// Total passes that visited this shard.
     pub passes: u64,
+    /// Successors dispatched directly by worker completion callbacks on
+    /// this shard's DAGs (docs/FASTPATH.md) — counted at the dispatch
+    /// site in `worker::local_task_job`, not by a pass.
+    pub fastpath_dispatched: u64,
+    /// Successors of fast-path DAGs the worker had to leave to the normal
+    /// pass (ambiguous edge, paused DAG, parked run, no headroom).
+    pub fastpath_fallback: u64,
+    /// Fast-dispatched task instances the reconciling pass encountered
+    /// and correctly left alone (folded from `PassStats` per shard).
+    pub fastpath_reconciled_noop: u64,
 }
 
 /// Handles of the registered functions.
@@ -329,11 +339,12 @@ fn scheduler_body(sim: &mut Sim<World>, w: &mut World, ctx: Invocation<FnPayload
         let n_shards = w.cfg.n_shards.max(1);
         let outs = scheduling_pass_sharded(w.db.read(), sim.now(), &batch, &w.cfg.limits, n_shards);
         let now = sim.now();
-        for s in 0..n_shards {
+        for (s, out) in outs.iter().enumerate() {
             if let Some(p) = w.shard_passes.get_mut(s) {
                 p.last_at = now;
                 p.last_duration = cpu;
                 p.passes += 1;
+                p.fastpath_reconciled_noop += out.stats.fastpath_reconciled_noop as u64;
             }
         }
         // One transaction — and thus one `db::commit` — per shard that
@@ -413,6 +424,15 @@ fn dispatch(sim: &mut Sim<World>, w: &mut World, target: Target, change: Change)
             mq::pump(sim, w, sched_acc, sched_handler);
         }
         (Target::Executor, Change::Ti { dag_id, run_id, task_id, .. }) => {
+            // A fast-path marker on the row means a worker's completion
+            // callback already enqueued this task instance directly
+            // (docs/FASTPATH.md); this CDC delivery of the same `Queued`
+            // change is the duplicate. Consume the marker (one-shot) and
+            // drop the enqueue — the change still flowed through the
+            // fabric for every other consumer.
+            if w.db.meta.consume_fastpath_marker((dag_id, run_id, task_id)) {
+                return;
+            }
             let tr = TaskRef { dag_id, run_id, task_id };
             // Resolve the executor kind from the serialized DAG (§4.4).
             let kind = w

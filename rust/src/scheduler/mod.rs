@@ -120,6 +120,19 @@ pub struct PassStats {
     pub tis_queued: usize,
     pub runs_completed: usize,
     pub retries: usize,
+    /// Successors dispatched directly by a worker's completion callback
+    /// (docs/FASTPATH.md). Counted at the dispatch site, not here — the
+    /// field lives in `PassStats` so one struct carries the whole
+    /// scheduling picture into operator health.
+    pub fastpath_dispatched: usize,
+    /// Successors a fast-path-enabled DAG could *not* dispatch directly
+    /// (ambiguous edge, paused DAG, parked run, no parallelism headroom);
+    /// the normal pass handles them. Counted at the dispatch site.
+    pub fastpath_fallback: usize,
+    /// Fast-dispatched task instances this pass encountered and left
+    /// alone: the apply-time marker proves a worker already queued them,
+    /// so reconciliation is a no-op (fast-path on/off outcome parity).
+    pub fastpath_reconciled_noop: usize,
 }
 
 /// Output of a scheduling pass: the transaction to commit plus statistics.
@@ -411,6 +424,7 @@ fn scheduling_pass_shard(
                         start: None,
                         end: None,
                         host: None,
+                        fast_dispatched: false,
                     }));
                 }
                 st.created += 1;
@@ -587,7 +601,16 @@ fn scheduling_pass_shard(
                         *active += 1;
                     }
                 }
-                _ => {}
+                _ => {
+                    // A fast-dispatched successor (docs/FASTPATH.md) shows
+                    // up here already `Queued`/`Running`: the worker beat
+                    // this pass to it, and the pass reconciles by doing
+                    // nothing — which is exactly the fast path's
+                    // exactly-once contract.
+                    if ti.fast_dispatched {
+                        out.stats.fastpath_reconciled_noop += 1;
+                    }
+                }
             }
         }
     }

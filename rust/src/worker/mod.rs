@@ -18,12 +18,13 @@
 //! handler instead (§4.4, component (12.2)).
 
 use crate::cloud::blob::BlobStore;
-use crate::cloud::db::{self, Txn, Write};
-use crate::cloud::{caas, faas};
-use crate::dag::spec::Payload;
-use crate::dag::state::TiState;
+use crate::cloud::db::{self, TiKey, Txn, Write};
+use crate::cloud::{caas, faas, mq};
+use crate::dag::graph::DagGraph;
+use crate::dag::spec::{ExecKind, Payload};
+use crate::dag::state::{RunState, TiState};
 use crate::executor::TaskRef;
-use crate::sairflow::world::World;
+use crate::sairflow::world::{self, World};
 use crate::sim::engine::Sim;
 use crate::sim::time::{secs, SimDuration};
 
@@ -167,7 +168,30 @@ pub fn local_task_job(
                 // (§6.1's 10 s task taking 17 s at n=125).
                 txn.scan_rows = w.db.read().tis_of_run(key.0, key.1).len() as u32;
                 txn.push(Write::SetTiState { key, state: TiState::Success });
-                db::commit(sim, w, txn, move |sim, w| on_exit(sim, w, true));
+                // Dataflow fast path (docs/FASTPATH.md): queue eligible
+                // unambiguous successors in the *same* transaction as the
+                // terminal write. ready/scheduled/queued mirrors the write
+                // chain a pass would emit, and the marker makes the pass's
+                // own later dispatch of the same TI a no-op. The ready time
+                // is the payload end; the slow path would use the
+                // predecessor's commit-time `end`, one DB commit later.
+                let fast = fastpath_successors(w, key);
+                let now = sim.now();
+                for &s in &fast {
+                    let skey = (key.0, key.1, s);
+                    txn.push(Write::SetTiReady { key: skey, ts: now });
+                    txn.push(Write::SetTiState { key: skey, state: TiState::Scheduled });
+                    txn.push(Write::SetTiState { key: skey, state: TiState::Queued });
+                    txn.push(Write::MarkTiFastPath { key: skey });
+                }
+                db::commit(sim, w, txn, move |sim, w| {
+                    // The successors are durably `Queued` (and the CDC
+                    // capture of that change is scheduled): hand them to
+                    // the executor feeds right now — this direct hand-off
+                    // is the CDC → scheduler hop the fast path skips.
+                    fastpath_enqueue(sim, w, key, &fast);
+                    on_exit(sim, w, true)
+                });
             } else {
                 // Crash: the terminal write never happens; Step Functions'
                 // monitor sees the failure.
@@ -175,4 +199,95 @@ pub fn local_task_job(
             }
         });
     });
+}
+
+/// Successors of `key` the dataflow fast path may dispatch directly
+/// (docs/FASTPATH.md): the DAG opted in, the edge is unambiguous (the
+/// finished task is the successor's only upstream — same DAG, hence same
+/// control-plane shard), the DAG is not paused, the run is still
+/// `Running`, no pass has touched the successor yet, and the global
+/// parallelism limit has headroom. Ineligible successors of an opted-in
+/// DAG count as fallbacks: the normal scheduling pass picks them up from
+/// the CDC-delivered `TaskFinished` event as if the fast path were off.
+fn fastpath_successors(w: &mut World, key: TiKey) -> Vec<u32> {
+    let (dag_id, run_id, task_id) = key;
+    let shard = dag_id.shard_of(w.cfg.n_shards.max(1));
+    let mut eligible = Vec::new();
+    let mut fallback = 0u64;
+    {
+        let db = w.db.read();
+        let Some(spec) = db.serialized.get(&dag_id) else { return eligible };
+        if !spec.fastpath {
+            return eligible;
+        }
+        let graph = DagGraph::of(spec);
+        let downstream = &graph.downstream[task_id as usize];
+        if downstream.is_empty() {
+            return eligible;
+        }
+        let paused = db.dags.get(&dag_id).map(|d| d.is_paused).unwrap_or(true);
+        let running = db
+            .dag_runs
+            .get(&(dag_id, run_id))
+            .map(|r| r.state == RunState::Running)
+            .unwrap_or(false);
+        // The finishing task leaves the active set in this very
+        // transaction, so its parallelism slot is already free for a
+        // successor; each dispatch decision consumes budget immediately,
+        // like the pass's own queue loop.
+        let mut active = db.active_ti_count().saturating_sub(1);
+        for &s in downstream {
+            let unambiguous = graph.unambiguous[task_id as usize].contains(&s);
+            let untouched = db
+                .task_instances
+                .get(&(dag_id, run_id, s))
+                .map(|r| r.state == TiState::None)
+                .unwrap_or(false);
+            if unambiguous
+                && untouched
+                && !paused
+                && running
+                && active < w.cfg.limits.parallelism
+            {
+                active += 1;
+                eligible.push(s);
+            } else {
+                fallback += 1;
+            }
+        }
+    }
+    if let Some(p) = w.shard_passes.get_mut(shard) {
+        p.fastpath_dispatched += eligible.len() as u64;
+        p.fastpath_fallback += fallback;
+    }
+    eligible
+}
+
+/// Enqueue fast-path successors onto the executor feeds — the same queues
+/// and pumps the CDC dispatch path uses — immediately after the commit
+/// that durably queued them. The CDC delivery of the same `Queued` change
+/// arrives a hop later and is suppressed by the marker consume in
+/// [`crate::sairflow::world`]'s dispatch (exactly-once either way).
+fn fastpath_enqueue(sim: &mut Sim<World>, w: &mut World, key: TiKey, tasks: &[u32]) {
+    for &t in tasks {
+        let tr = TaskRef { dag_id: key.0, run_id: key.1, task_id: t };
+        let kind = w
+            .db
+            .read()
+            .serialized
+            .get(&key.0)
+            .and_then(|s| s.tasks.get(t as usize))
+            .map(|t| t.executor)
+            .unwrap_or(ExecKind::Faas);
+        match kind {
+            ExecKind::Faas => {
+                w.fexec_q.send(tr);
+                mq::pump(sim, w, world::fexec_acc, world::fexec_handler);
+            }
+            ExecKind::Caas => {
+                w.cexec_q.send(tr);
+                mq::pump(sim, w, world::cexec_acc, world::cexec_handler);
+            }
+        }
+    }
 }

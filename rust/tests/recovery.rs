@@ -393,6 +393,68 @@ fn durability_counters_after_recovery() {
     assert_eq!(db.wal_tail_len() as u64, db.next_lsn() - w.dur.last_checkpoint_lsn);
 }
 
+#[test]
+fn kill_between_fast_dispatch_and_cdc_delivery() {
+    let _g = lock();
+    // Dataflow fast path (docs/FASTPATH.md): the worker's completion
+    // callback queues the unambiguous successor in the terminal commit
+    // and hands it to the executor directly; the CDC delivery of the
+    // same `Queued` change arrives 0.8–1.25 s later and is consumed as a
+    // marker no-op. This sweep kills the process inside and around that
+    // window. The marker rides the write-ahead terminal commit, so at
+    // every kill point recovery must neither lose the directly-queued
+    // successor (the WAL-replayed `Queued` row is swept back to `None`
+    // and re-dispatched) nor run it twice (the replayed marker is
+    // cleared with it).
+    let script: fn(&mut Sim<World>) = |sim| {
+        sim.at(0, "script.upload", |sim, w| {
+            let mut spec = manual_chain("fp", 3, 1.0);
+            spec.fastpath = true;
+            upload_dag(sim, w, &spec);
+        });
+        sim.at(10 * SECOND, "script.trigger", |sim, w| trigger_dag(sim, w, "fp"));
+    };
+    let horizon = 3 * MINUTE;
+    let reference = uninterrupted(907, script, horizon);
+    let want = outcomes(&reference);
+    assert_eq!(want.len(), 1, "one manual run: {want:?}");
+    assert!(
+        want.values().all(|(s, tis)| s == "success" && tis.iter().all(|t| t == "success")),
+        "{want:?}"
+    );
+    // The fast path actually fired on both chain edges in the reference…
+    let disp: u64 = reference.shard_passes.iter().map(|p| p.fastpath_dispatched).sum();
+    assert_eq!(disp, 2, "both non-root tasks fast-dispatched");
+    // …and is outcome-identical to the same script with the flag off.
+    let slow: fn(&mut Sim<World>) = |sim| {
+        sim.at(0, "script.upload", |sim, w| {
+            upload_dag(sim, w, &manual_chain("fp", 3, 1.0));
+        });
+        sim.at(10 * SECOND, "script.trigger", |sim, w| trigger_dag(sim, w, "fp"));
+    };
+    assert_eq!(outcomes(&uninterrupted(907, slow, horizon)), want);
+
+    // Dense half-second sweep from before the first task's terminal
+    // commit (~15 s: trigger at 10 s + pass, invoke, blob pulls, task
+    // overhead, 1 s payload) to past the last CDC delivery — every
+    // dispatch→delivery window of the chain is killed mid-flight at some
+    // sweep point.
+    for k in 0..14u64 {
+        let kill_at = 14 * SECOND + k * SECOND / 2;
+        let w = killed_and_recovered(907, script, kill_at, horizon);
+        let got = outcomes(&w);
+        assert_eq!(got, want, "kill at {kill_at}us diverged");
+        // No doubled runs behind the keyed map, and no marker outlives
+        // the run: each was consumed by its CDC delivery or swept by
+        // recovery's orphan pass.
+        assert_eq!(w.db.read().dag_runs.len(), 1, "kill at {kill_at}us");
+        assert!(
+            w.db.read().task_instances.values().all(|t| !t.fast_dispatched),
+            "kill at {kill_at}us leaked a fast-path marker"
+        );
+    }
+}
+
 /// Satellite property: the checkpoint (durable) LSN always dominates the
 /// truncated WAL tail — after any interleaving of commits, checkpoints
 /// and `wal_retain` pressure, every LSN in `[durable_lsn, next_lsn)` is

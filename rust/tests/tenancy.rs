@@ -541,6 +541,79 @@ fn rate_limited_tenant_still_within_budget_runs_dags() {
 }
 
 #[test]
+fn fastpath_counters_never_leak_cross_tenant() {
+    let (mut sim, mut w) = two_tenants();
+    let acme = Some("Bearer acme-token");
+    // Opt acme's etl into the dataflow fast path through its own
+    // namespace (docs/FASTPATH.md), then run it so the counters move.
+    let body = Json::obj().set("fastpath", true);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Patch,
+        "/api/v1/tenants/acme/dags/etl",
+        Some(&body),
+        acme,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    assert_eq!(resp.get("fastpath").unwrap().as_bool(), Some(true), "{resp}");
+    assert!(resp.get("is_paused").is_none(), "pause state untouched: {resp}");
+    sim.run_until(&mut w, sim.now() + mins(1.0), 10_000_000);
+    let resp = dispatch_auth(
+        &mut sim,
+        &mut w,
+        Method::Post,
+        "/api/v1/tenants/acme/dags/etl/dagRuns",
+        None,
+        acme,
+    );
+    assert_eq!(status(&resp), 200, "{resp}");
+    sim.run_until(&mut w, sim.now() + mins(10.0), 10_000_000);
+    let total: u64 = w.shard_passes.iter().map(|p| p.fastpath_dispatched).sum();
+    assert_eq!(total, 1, "the 2-task chain's one unambiguous edge fast-dispatched");
+
+    // The counters are deployment-wide operator gauges: they appear on
+    // the default tenant's health (top level + per-shard block)…
+    let h = dispatch(&mut sim, &mut w, Method::Get, "/api/v1/health", None);
+    assert_eq!(h.get("fastpath_dispatched").unwrap().as_u64(), Some(1), "{h}");
+    assert!(h.get("fastpath_fallback").is_some());
+    assert!(h.get("fastpath_reconciled_noop").is_some());
+    let per_shard = h.get("shards").unwrap().get("per_shard").unwrap().as_arr().unwrap();
+    assert!(
+        per_shard.iter().all(|s| s.get("fastpath_dispatched").is_some()
+            && s.get("fastpath_fallback").is_some()
+            && s.get("fastpath_reconciled_noop").is_some()),
+        "{h}"
+    );
+
+    // …and NEVER on tenant-scoped health — acme's counter value would
+    // leak one tenant's workflow activity to another.
+    for (t, tok) in [("acme", acme), ("globex", Some("Bearer globex-token"))] {
+        let h = dispatch_auth(
+            &mut sim,
+            &mut w,
+            Method::Get,
+            &format!("/api/v1/tenants/{t}/health"),
+            None,
+            tok,
+        );
+        assert_eq!(status(&h), 200, "{t}: {h}");
+        assert!(h.get("fastpath_dispatched").is_none(), "{t} leaked: {h}");
+        assert!(h.get("fastpath_fallback").is_none(), "{t} leaked: {h}");
+        assert!(h.get("fastpath_reconciled_noop").is_none(), "{t} leaked: {h}");
+        assert!(h.get("shards").is_none(), "{t} leaked the shard block: {h}");
+    }
+
+    // The legacy shim strips them bit-compatibly (strict legacy
+    // deserializers reject unknown fields).
+    let h = api::handle_text(&mut sim, &mut w, r#"{"op": "health"}"#);
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true));
+    assert!(h.get("fastpath_dispatched").is_none());
+    assert!(h.get("fastpath_fallback").is_none());
+    assert!(h.get("fastpath_reconciled_noop").is_none());
+}
+
+#[test]
 fn legacy_shim_stays_bit_compatible_on_default_tenant() {
     let (mut sim, mut w) = two_tenants();
     // Upload one default-tenant DAG through the legacy op.

@@ -27,6 +27,7 @@ fn each_rule_fires_on_its_bad_fixture() {
     assert!(has("bad/hash_collections.rs", "hash-collections"), "{vs:#?}");
     assert!(has("bad/string_dag_id.rs", "string-dag-id"), "{vs:#?}");
     assert!(has("bad/wal_access.rs", "wal-access"), "{vs:#?}");
+    assert!(has("bad/fastpath.rs", "fastpath-confinement"), "{vs:#?}");
     assert!(has("bad/api/handlers.rs", "unwrap-in-handlers"), "{vs:#?}");
     assert!(has("bad/fabric.rs", "fabric-wildcard"), "{vs:#?}");
     assert!(has("bad/fabric.rs", "fabric-coverage"), "{vs:#?}");

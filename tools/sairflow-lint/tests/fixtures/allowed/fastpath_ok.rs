@@ -1,0 +1,7 @@
+//! Allowlisted fixture (mirrors rust/src/worker/mod.rs): the worker's
+//! completion callback is one of the three modules allowed to mint the
+//! fast-path marker, so this must not fire.
+
+pub fn append_fast_dispatch(txn: &mut Txn, key: TiKey) {
+    txn.push(Write::MarkTiFastPath { key });
+}

@@ -1,0 +1,9 @@
+//! Known-bad fixture for the `fastpath-confinement` rule: an operator
+//! endpoint minting the exactly-once marker itself instead of leaving it
+//! to the worker's completion callback.
+
+pub fn force_fast_dispatch(sim: &mut Sim, w: &mut World, key: TiKey) {
+    let mut txn = Txn::new();
+    txn.push(Write::MarkTiFastPath { key });
+    commit(sim, w, txn, |_sim, _w| {});
+}
